@@ -1,0 +1,59 @@
+//! Benchmarks for the discrete-event pipeline simulator — the inner loop
+//! of the profiled partition search (it runs C(l-1,s-1) x batch x stages
+//! times per sweep point).
+
+use std::time::Duration;
+
+use tpu_pipeline::config::SystemConfig;
+use tpu_pipeline::link::Link;
+use tpu_pipeline::model::synthetic::fc_model;
+use tpu_pipeline::pipeline::{simulate, simulate_partition, SimOptions, StageSpec};
+use tpu_pipeline::segment::uniform_cuts;
+use tpu_pipeline::util::bench::{black_box, Bencher};
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let link = Link::new(cfg.link.clone());
+    let mut b = Bencher::new().with_budget(Duration::from_millis(300), Duration::from_millis(80));
+
+    let stages: Vec<StageSpec> = (0..4)
+        .map(|i| StageSpec { exec_s: 1e-3 * (i + 1) as f64, in_bytes: 4096, out_bytes: 4096 })
+        .collect();
+
+    for batch in [1usize, 50, 500] {
+        b.bench(&format!("simulate/4stages_batch{batch}"), || {
+            simulate(
+                black_box(&stages),
+                &link,
+                &SimOptions { batch, queue_capacity: None, record_gantt: false },
+            )
+        });
+    }
+    b.bench("simulate/4stages_batch50_gantt", || {
+        simulate(
+            black_box(&stages),
+            &link,
+            &SimOptions { batch: 50, queue_capacity: None, record_gantt: true },
+        )
+    });
+    b.bench("simulate/4stages_batch50_bounded2", || {
+        simulate(
+            black_box(&stages),
+            &link,
+            &SimOptions { batch: 50, queue_capacity: Some(2), record_gantt: false },
+        )
+    });
+
+    let m = fc_model(2100);
+    let part = uniform_cuts(5, 3);
+    b.bench("simulate_partition/fc_n2100_3seg_batch50", || {
+        simulate_partition(
+            black_box(&m),
+            &part,
+            &cfg,
+            &SimOptions { batch: 50, ..Default::default() },
+        )
+    });
+
+    b.report("pipeline");
+}

@@ -1,0 +1,36 @@
+//! Benchmarks for the compiler placement model and memory reports
+//! (the substrate behind Tables I–VI).
+
+use std::time::Duration;
+
+use tpu_pipeline::compiler::{place, place_partition};
+use tpu_pipeline::config::SystemConfig;
+use tpu_pipeline::model::synthetic::{conv_model, fc_model};
+use tpu_pipeline::segment::uniform_cuts;
+use tpu_pipeline::util::bench::{black_box, Bencher};
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let mut b = Bencher::new().with_budget(Duration::from_millis(300), Duration::from_millis(80));
+
+    let fc = fc_model(2100);
+    let conv = conv_model(652);
+    b.bench("place/fc_n2100", || place(black_box(&fc.layers), &cfg.device));
+    b.bench("place/conv_f652", || place(black_box(&conv.layers), &cfg.device));
+
+    let part = uniform_cuts(5, 4);
+    b.bench("place_partition/fc_4seg", || {
+        let segs = part.segments(&fc);
+        place_partition(black_box(&segs), &cfg.device)
+    });
+
+    // a long-chain model (placement is O(L))
+    let deep = tpu_pipeline::model::synthetic::fc_model_custom(512, 64, 64, 10);
+    b.bench("place/fc_deep_64layers", || place(black_box(&deep.layers), &cfg.device));
+
+    b.bench("sweep/single_tpu_fc_full_grid", || {
+        tpu_pipeline::sweep::single_tpu_sweep(tpu_pipeline::sweep::Kind::Fc, &cfg)
+    });
+
+    b.report("placement");
+}

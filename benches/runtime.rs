@@ -1,0 +1,50 @@
+//! Benchmarks for the PJRT hot path: artifact load/compile (startup cost)
+//! and per-inference execution (the L3 serving inner loop).
+//!
+//! Requires `make artifacts`; prints a notice and exits cleanly otherwise.
+
+use std::time::Duration;
+
+use tpu_pipeline::runtime::{run_chain, TpuRuntime};
+use tpu_pipeline::serving::default_artifact_dir;
+use tpu_pipeline::util::bench::{black_box, Bencher};
+use tpu_pipeline::util::rng::Rng;
+
+fn main() {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        println!("runtime bench skipped: no artifacts at {dir:?} (run `make artifacts`)");
+        return;
+    }
+    let rt = TpuRuntime::new(&dir).expect("PJRT CPU client");
+    let manifest = rt.manifest().unwrap();
+    let mut b = Bencher::new().with_budget(Duration::from_millis(400), Duration::from_millis(100));
+
+    let entry = manifest.model("fc_n256").unwrap();
+    let seg_meta = entry.segment(0, 5).unwrap();
+    b.bench("compile/fc_n256_whole", || rt.load_segment(black_box(seg_meta)).unwrap());
+
+    let whole = rt.load_segment(seg_meta).unwrap();
+    let mut rng = Rng::new(5);
+    let input = rng.i8_vec(64);
+    b.bench("execute/fc_n256_whole", || whole.run(black_box(&input)).unwrap());
+
+    let big = manifest.model("fc_n512").unwrap();
+    let big_whole = rt.load_segment(big.segment(0, 5).unwrap()).unwrap();
+    b.bench("execute/fc_n512_whole", || big_whole.run(black_box(&input)).unwrap());
+
+    let segs: Vec<_> = big
+        .segments_for_cuts(&[1, 2, 3])
+        .unwrap()
+        .into_iter()
+        .map(|s| rt.load_segment(s).unwrap())
+        .collect();
+    b.bench("execute/fc_n512_4seg_chain", || run_chain(black_box(&segs), &input).unwrap());
+
+    let conv = manifest.model("conv_f32").unwrap();
+    let conv_whole = rt.load_segment(conv.segment(0, 5).unwrap()).unwrap();
+    let conv_input = rng.i8_vec(32 * 32 * 3);
+    b.bench("execute/conv_f32_whole", || conv_whole.run(black_box(&conv_input)).unwrap());
+
+    b.report("runtime (PJRT CPU)");
+}

@@ -1,0 +1,45 @@
+//! Benchmarks for the segmentation strategies, especially the exhaustive
+//! profiled search (the paper's contribution) and its scaling with chain
+//! length — the search space is C(l-1, s-1).
+
+use std::time::Duration;
+
+use tpu_pipeline::config::SystemConfig;
+use tpu_pipeline::model::synthetic::{conv_model, fc_model, fc_model_custom};
+use tpu_pipeline::profiler::{best_partition, threshold_search, SegmentCostTable};
+use tpu_pipeline::segment::strategy::Strategy;
+use tpu_pipeline::util::bench::{black_box, Bencher};
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let mut b = Bencher::new().with_budget(Duration::from_millis(300), Duration::from_millis(80));
+
+    let fc = fc_model(2100);
+    let conv = conv_model(652);
+
+    b.bench("cost_table/fc_5layers", || SegmentCostTable::build(black_box(&fc), &cfg));
+
+    for s in [2usize, 3, 4] {
+        b.bench(&format!("profiled_exhaustive/fc_5layers_s{s}"), || {
+            best_partition(black_box(&fc), &cfg, s, 50)
+        });
+    }
+    b.bench("profiled_exhaustive/conv_5layers_s4", || {
+        best_partition(black_box(&conv), &cfg, 4, 50)
+    });
+    b.bench("threshold_search/fc_5layers_s3", || {
+        threshold_search(black_box(&fc), &cfg, 3, 50, 1e-3)
+    });
+
+    // search-space scaling: 20-layer chain, s=4 -> C(19,3) = 969 partitions
+    let deep = fc_model_custom(256, 20, 64, 10);
+    b.bench("profiled_exhaustive/fc_20layers_s4_969parts", || {
+        best_partition(black_box(&deep), &cfg, 4, 50)
+    });
+
+    b.bench("memory_balanced/fc_5layers_s3", || {
+        Strategy::MemoryBalanced.partition(black_box(&fc), 3, &cfg)
+    });
+
+    b.report("segmentation");
+}

@@ -1,0 +1,28 @@
+//! One benchmark per paper table/figure: times the full regeneration of
+//! each experiment through the harness (ensures `repro all` stays cheap
+//! and pins the cost of every reproduction path).
+
+use std::time::Duration;
+
+use tpu_pipeline::cli::{self, Args};
+use tpu_pipeline::util::bench::{black_box, Bencher};
+
+fn run(cmd: &str) -> String {
+    let argv: Vec<String> = cmd.split_whitespace().map(String::from).collect();
+    cli::run(&Args::parse(&argv).unwrap()).unwrap()
+}
+
+fn main() {
+    let mut b = Bencher::new().with_budget(Duration::from_millis(250), Duration::from_millis(60));
+    for cmd in [
+        "fig2a", "fig2a --kind conv", "fig2b", "fig2c", "table1", "table2",
+        "fig4", "fig4 --kind conv", "fig-batch", "fig-batch --kind conv",
+        "table3", "table3b", "table4", "table5", "table6",
+        "fig5", "fig5 --kind conv", "fig6", "fig6 --kind conv", "headline",
+    ] {
+        b.bench(&format!("repro/{}", cmd.replace(" --kind ", "_").replace(" --", "_")), || {
+            run(black_box(cmd))
+        });
+    }
+    b.report("tables & figures regeneration");
+}

@@ -1,0 +1,84 @@
+//! Profiled segmentation under the microscope (paper §V-C): exhaustively
+//! profile every contiguous partition of one model, print the full ranking
+//! with per-stage times and memory placement, and draw the pipeline
+//! schedule of the default vs the winning split.
+//!
+//! Run: `cargo run --release --example profile_partitions [fc_n|conv_f] [x] [tpus]`
+//! e.g.: `cargo run --release --example profile_partitions conv_f 652 4`
+
+use tpu_pipeline::compiler::place;
+use tpu_pipeline::config::SystemConfig;
+use tpu_pipeline::model::synthetic::{conv_model, fc_model};
+use tpu_pipeline::pipeline::{simulate_partition, SimOptions};
+use tpu_pipeline::profiler::{exhaustive_search, profile_partition, SegmentCostTable};
+use tpu_pipeline::report::Table;
+use tpu_pipeline::segment::uniform_cuts;
+use tpu_pipeline::trace::gantt_ascii;
+use tpu_pipeline::util::fmt_seconds;
+
+fn main() {
+    let mut args = std::env::args().skip(1);
+    let family = args.next().unwrap_or_else(|| "fc_n".into());
+    let x: u64 = args.next().and_then(|v| v.parse().ok()).unwrap_or(2100);
+    let tpus: usize = args.next().and_then(|v| v.parse().ok()).unwrap_or(3);
+    let batch = 50;
+
+    let model = match family.as_str() {
+        "conv_f" => conv_model(x),
+        _ => fc_model(x),
+    };
+    let cfg = SystemConfig::default();
+    println!(
+        "profiling all partitions of {} ({} layers) into {} segments, batch {}\n",
+        model.name,
+        model.len(),
+        tpus,
+        batch
+    );
+
+    let profiles = exhaustive_search(&model, &cfg, tpus, batch);
+    let mut t = Table::new(
+        "partition ranking (best first)",
+        &["split", "per-inf", "single-input", "stage-times", "host?", "delta"],
+    );
+    for p in &profiles {
+        t.row(vec![
+            p.partition.label(),
+            fmt_seconds(p.per_item_s),
+            fmt_seconds(p.single_latency_s),
+            p.stage_exec_s.iter().map(|&e| fmt_seconds(e)).collect::<Vec<_>>().join(" "),
+            if p.uses_host { "HOST".into() } else { "-".into() },
+            fmt_seconds(p.stage_delta_s()),
+        ]);
+    }
+    print!("{}", t.render());
+
+    // memory placement of default vs best
+    let table = SegmentCostTable::build(&model, &cfg);
+    let default = uniform_cuts(model.len(), tpus);
+    let default_prof = profile_partition(&model, &table, &default, &cfg, batch);
+    let best = &profiles[0];
+    for (name, p) in [("default", &default_prof), ("best", best)] {
+        println!("\n{name} split {}:", p.partition.label());
+        for (i, (a, b)) in p.partition.bounds().iter().enumerate() {
+            let placement = place(&model.layers[*a..*b], &cfg.device);
+            println!(
+                "  TPU{i} layers [{a},{b}): device {:.2} MiB, host {:.2} MiB",
+                placement.device_mib(),
+                placement.host_mib()
+            );
+        }
+    }
+
+    // schedules
+    for (name, part) in [("default", &default), ("best", &best.partition)] {
+        let r = simulate_partition(
+            &model,
+            part,
+            &cfg,
+            &SimOptions { batch: 8, queue_capacity: None, record_gantt: true },
+        );
+        println!("\n{name} split {} pipeline schedule (batch 8):", part.label());
+        print!("{}", gantt_ascii(&r, 100));
+    }
+}

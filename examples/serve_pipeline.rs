@@ -1,0 +1,140 @@
+//! END-TO-END DRIVER: load a real (small) quantized model from AOT
+//! artifacts and serve batched requests through the full three-layer
+//! stack, proving all layers compose:
+//!
+//!   L1 Pallas kernels -> L2 jax segment graphs -> HLO text artifacts ->
+//!   L3 Rust coordinator: PJRT stage workers + host queues + batcher.
+//!
+//! Reports REAL latency/throughput (PJRT CPU wall clock) alongside the
+//! calibrated simulated-Edge-TPU clock, and verifies the pipelined
+//! numerics equal the single-TPU reference bit-for-bit.
+//!
+//! Two scenarios:
+//!  * `fc_n512` on the paper's 8 MiB device — fits on one TPU, so
+//!    segmentation should NOT help (the paper's "use the minimum number
+//!    of TPUs" rule).
+//!  * `fc_n512` on a scaled-down 0.29 MiB device — the single TPU spills
+//!    3 of 5 layers to host memory and pipelined segmentation wins big
+//!    (the paper's headline effect, at artifact-friendly scale).
+//!
+//! Run: `make artifacts && cargo run --release --example serve_pipeline`
+//! Recorded in EXPERIMENTS.md §End-to-end.
+
+use anyhow::{Context, Result};
+use tpu_pipeline::config::SystemConfig;
+use tpu_pipeline::coordinator::batcher::{BatchPolicy, Batcher};
+use tpu_pipeline::coordinator::queue::bounded;
+use tpu_pipeline::runtime::{run_chain, TpuRuntime};
+use tpu_pipeline::segment::strategy::Strategy;
+use tpu_pipeline::serving;
+use tpu_pipeline::util::fmt_seconds;
+
+fn main() -> Result<()> {
+    let dir = serving::default_artifact_dir();
+    let manifest = serving::load_manifest(&dir)
+        .context("run `make artifacts` first")?;
+    let entry = manifest.model("fc_n512")?;
+    let batch = 50;
+
+    println!("=== scenario 1: paper-scale device (8 MiB) — model fits ===");
+    run_scenario(&dir, entry, SystemConfig::default(), batch, 1)?;
+    run_scenario(&dir, entry, SystemConfig::default(), batch, 3)?;
+
+    println!("\n=== scenario 2: scaled device (0.29 MiB) — 3 of 5 layers spill ===");
+    let mut small = SystemConfig::default();
+    small.device.usable_mem_bytes = 300_000;
+    small.device.per_layer_fixed_bytes = 1024;
+    run_scenario(&dir, entry, small.clone(), batch, 1)?;
+    run_scenario(&dir, entry, small.clone(), batch, 2)?;
+    run_scenario(&dir, entry, small, batch, 4)?;
+
+    println!("\n=== numeric equivalence: pipeline vs single-TPU reference ===");
+    verify_numerics(&dir, entry, batch)?;
+
+    println!("\n=== dynamic batcher demo (open arrival stream) ===");
+    batcher_demo()?;
+    Ok(())
+}
+
+fn run_scenario(
+    dir: &std::path::Path,
+    entry: &tpu_pipeline::runtime::ModelEntry,
+    cfg: SystemConfig,
+    batch: usize,
+    n_tpus: usize,
+) -> Result<()> {
+    let strategy = Strategy::ProfiledExhaustive { batch };
+    let plan = serving::plan(entry, n_tpus, strategy, &cfg)?;
+    let pipeline = serving::spawn_pipeline(dir, entry, &plan, 64)?;
+    let report = serving::serve_batch(&pipeline, &plan, serving::synth_requests(&plan, batch, 7))?;
+    println!(
+        "  {} TPU(s) split {:7}: real {:>9}/batch ({:>5.0} inf/s) | sim/inf {:>9} | sim speedup vs 1 TPU {:>5.1}x",
+        n_tpus,
+        report.partition_label,
+        fmt_seconds(report.wall_s),
+        report.real_throughput,
+        fmt_seconds(report.sim_per_item_s),
+        report.sim_speedup_vs_one_tpu,
+    );
+    pipeline.shutdown();
+    Ok(())
+}
+
+fn verify_numerics(
+    dir: &std::path::Path,
+    entry: &tpu_pipeline::runtime::ModelEntry,
+    batch: usize,
+) -> Result<()> {
+    let cfg = SystemConfig::default();
+    let plan = serving::plan(entry, 4, Strategy::Uniform, &cfg)?;
+    let pipeline = serving::spawn_pipeline(dir, entry, &plan, 16)?;
+    let requests = serving::synth_requests(&plan, batch, 99);
+
+    let rt = TpuRuntime::new(dir)?;
+    let whole = rt.load_segment(entry.segment(0, entry.layers.len()).unwrap())?;
+    let expected: Vec<Vec<i8>> = requests
+        .iter()
+        .map(|r| run_chain(std::slice::from_ref(&whole), &r.data))
+        .collect::<Result<_>>()?;
+
+    let responses = pipeline.serve_batch(requests)?;
+    let mut ok = 0;
+    for (r, e) in responses.iter().zip(&expected) {
+        assert_eq!(r.data, *e, "pipelined numerics drifted on request {}", r.id);
+        ok += 1;
+    }
+    println!("  {ok}/{batch} pipelined outputs == single-TPU reference (int8-exact)");
+    // and the golden vector from the Python oracle
+    let out = whole.run(&entry.golden.input)?;
+    assert_eq!(out, entry.golden.output);
+    println!("  golden vector from the Python oracle reproduced exactly");
+    pipeline.shutdown();
+    Ok(())
+}
+
+fn batcher_demo() -> Result<()> {
+    use tpu_pipeline::coordinator::Request;
+    let (tx, rx) = bounded::<Request>(256);
+    let producer = std::thread::spawn(move || {
+        for i in 0..120u64 {
+            tx.send(Request { id: i, data: vec![0; 8] }).unwrap();
+            std::thread::sleep(std::time::Duration::from_micros(200));
+        }
+        tx.close();
+    });
+    let batcher = Batcher::new(
+        rx,
+        BatchPolicy { max_batch: 50, max_wait: std::time::Duration::from_millis(4) },
+    );
+    let mut batches = Vec::new();
+    while let Some(b) = batcher.next_batch() {
+        batches.push(b.len());
+    }
+    producer.join().unwrap();
+    println!(
+        "  120 requests @5k/s -> {} batches (sizes {:?}) under a 50-max/4ms policy",
+        batches.len(),
+        batches
+    );
+    Ok(())
+}

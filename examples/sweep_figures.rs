@@ -1,0 +1,74 @@
+//! Regenerate every figure/table of the paper as CSV files (for plotting)
+//! plus a human-readable summary — the batch version of the `repro` CLI.
+//!
+//! Run: `cargo run --release --example sweep_figures [out_dir]`
+//! Writes: out/fig2a_fc.csv, out/fig2a_conv.csv, ... out/table6.csv
+
+use std::fs;
+use std::path::PathBuf;
+
+use tpu_pipeline::cli::{self, Args};
+use tpu_pipeline::config::SystemConfig;
+use tpu_pipeline::segment::strategy::Strategy;
+use tpu_pipeline::sweep::{headline, Kind};
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::env::args().nth(1).map(PathBuf::from).unwrap_or_else(|| "out".into());
+    fs::create_dir_all(&out_dir)?;
+    let cfg = SystemConfig::default();
+
+    let csv_cmds: &[(&str, &str)] = &[
+        ("fig2a_fc", "fig2a --kind fc --csv"),
+        ("fig2a_conv", "fig2a --kind conv --csv"),
+        ("fig2b_fc", "fig2b --kind fc --csv"),
+        ("fig2b_conv", "fig2b --kind conv --csv"),
+        ("fig2c_fc", "fig2c --kind fc --csv"),
+        ("fig2c_conv", "fig2c --kind conv --csv"),
+        ("table1", "table1 --csv"),
+        ("table2", "table2 --csv"),
+        ("fig4_fc", "fig4 --kind fc --csv"),
+        ("fig4_conv", "fig4 --kind conv --csv"),
+        ("figbatch_fc", "fig-batch --kind fc --csv"),
+        ("figbatch_conv", "fig-batch --kind conv --csv"),
+        ("table3", "table3 --csv"),
+        ("table3b", "table3b --csv"),
+        ("table4", "table4 --csv"),
+        ("table5", "table5 --csv"),
+        ("table6", "table6 --csv"),
+        ("fig5_fc", "fig5 --kind fc --csv"),
+        ("fig5_conv", "fig5 --kind conv --csv"),
+        ("fig6_fc", "fig6 --kind fc --csv"),
+        ("fig6_conv", "fig6 --kind conv --csv"),
+    ];
+    for (name, cmd) in csv_cmds {
+        let argv: Vec<String> = cmd.split_whitespace().map(String::from).collect();
+        let out = cli::run(&Args::parse(&argv)?)?;
+        let path = out_dir.join(format!("{name}.csv"));
+        fs::write(&path, &out)?;
+        println!("wrote {} ({} rows)", path.display(), out.lines().count() - 1);
+    }
+
+    println!("\nheadline speedups vs 1 TPU (batch 50):");
+    for kind in [Kind::Fc, Kind::Conv] {
+        for (name, strat) in [
+            ("default ", Strategy::Uniform),
+            ("profiled", Strategy::ProfiledExhaustive { batch: 50 }),
+        ] {
+            let h = headline(kind, &cfg, strat, 50);
+            println!(
+                "  {:4} {name}: {:5.1}x (at x={}, {} TPUs)  [paper: {}]",
+                kind.label(),
+                h.best_speedup,
+                h.at_x,
+                h.n_tpus,
+                match (kind, name.trim()) {
+                    (Kind::Fc, "default") => "36x",
+                    (Kind::Fc, "profiled") => "46x",
+                    (Kind::Conv, "profiled") => "6x",
+                    _ => "n/a",
+                }
+            );
+        }
+    }
+    Ok(())
+}

@@ -1,0 +1,166 @@
+"""AOT driver: lower every contiguous segment of every manifest model to
+HLO **text** artifacts + a metadata manifest for the Rust runtime.
+
+Interchange is HLO text, NOT ``.serialize()``: jax >= 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (the
+version behind the published ``xla`` 0.1.6 crate) rejects
+(``proto.id() <= INT_MAX``); the text parser reassigns ids and round-trips
+cleanly.  See /opt/xla-example/README.md.
+
+For an L-layer model every contiguous sub-run ``[i, j)`` is lowered
+separately (L*(L+1)/2 artifacts), so the Rust coordinator can realize *any*
+contiguous partition — including everything the profiled-exhaustive
+segmenter may pick — from prebuilt artifacts.
+
+Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import pathlib
+from typing import List
+
+import numpy as np
+
+from . import model as model_mod
+from .specs import (
+    QuantLayer,
+    conv_model,
+    fc_model,
+    model_macs,
+    quantize_model,
+)
+
+
+def _build_layers(entry: dict):
+    if entry["kind"] == "fc":
+        return fc_model(
+            entry["n"],
+            layers=entry.get("layers", 5),
+            inp=entry.get("input", 64),
+            out=entry.get("output", 10),
+        )
+    if entry["kind"] == "conv":
+        return conv_model(
+            entry["f"],
+            layers=entry.get("layers", 5),
+            c=entry.get("c", 3),
+            h=entry.get("h", 64),
+            w=entry.get("w", 64),
+        )
+    raise ValueError(f"unknown model kind {entry['kind']!r}")
+
+
+def _qparams_json(q) -> dict:
+    return {"scale": q.scale, "zero_point": q.zero_point}
+
+
+def _layer_json(ql: QuantLayer) -> dict:
+    spec = ql.spec
+    base = {
+        "macs": spec.macs,
+        "weight_bytes": spec.weight_bytes,
+        "in_q": _qparams_json(ql.in_q),
+        "out_q": _qparams_json(ql.out_q),
+    }
+    if hasattr(spec, "in_features"):
+        base.update(kind="fc", in_features=spec.in_features, out_features=spec.out_features)
+    else:
+        base.update(
+            kind="conv",
+            height=spec.height,
+            width=spec.width,
+            cin=spec.cin,
+            filters=spec.filters,
+            ksize=spec.ksize,
+        )
+    return base
+
+
+def _golden(qlayers: List[QuantLayer], seed: int) -> dict:
+    """Reference input/output vectors (int8) for the whole model, computed
+    through the pure-jnp oracle — the Rust integration tests replay these
+    against the PJRT-loaded artifacts."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(seed ^ 0xBEEF)
+    first = qlayers[0].spec
+    shape = (
+        (first.in_features,)
+        if hasattr(first, "in_features")
+        else (first.height, first.width, first.cin)
+    )
+    x = rng.integers(-128, 128, shape, dtype=np.int8)
+    fwd = model_mod.segment_forward(qlayers, use_pallas=False)
+    (y,) = fwd(jnp.asarray(x))
+    return {
+        "input": np.asarray(x).flatten().tolist(),
+        "input_shape": list(shape),
+        "output": np.asarray(y).flatten().tolist(),
+        "output_shape": list(np.asarray(y).shape),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    ap.add_argument(
+        "--manifest",
+        default=str(pathlib.Path(__file__).parent / "manifest.json"),
+        help="input manifest (models to build)",
+    )
+    ap.add_argument(
+        "--models", nargs="*", default=None, help="subset of model names to build"
+    )
+    args = ap.parse_args()
+
+    out_dir = pathlib.Path(args.out)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    with open(args.manifest) as f:
+        manifest_in = json.load(f)
+
+    out_manifest: dict = {"models": {}}
+    for entry in manifest_in["models"]:
+        name = entry["name"]
+        if args.models and name not in args.models:
+            continue
+        layers = _build_layers(entry)
+        qlayers = quantize_model(layers, entry["seed"])
+        nl = len(qlayers)
+        segs = []
+        for i in range(nl):
+            for j in range(i + 1, nl + 1):
+                seg = qlayers[i:j]
+                fname = f"{name}_seg{i}_{j}.hlo.txt"
+                hlo = model_mod.lower_segment(seg, use_pallas=True)
+                (out_dir / fname).write_text(hlo)
+                segs.append(
+                    {
+                        "start": i,
+                        "end": j,
+                        "file": fname,
+                        "input_shape": list(model_mod.segment_input_struct(seg).shape),
+                        "output_shape": list(model_mod.segment_output_shape(seg)),
+                        "in_q": _qparams_json(seg[0].in_q),
+                        "out_q": _qparams_json(seg[-1].out_q),
+                    }
+                )
+                print(f"  wrote {fname} ({len(hlo)} chars)")
+        out_manifest["models"][name] = {
+            "kind": entry["kind"],
+            "seed": entry["seed"],
+            "macs": model_macs(layers),
+            "layers": [_layer_json(ql) for ql in qlayers],
+            "segments": segs,
+            "golden": _golden(qlayers, entry["seed"]),
+        }
+        print(f"{name}: {len(segs)} segment artifacts")
+
+    (out_dir / "manifest.json").write_text(json.dumps(out_manifest, indent=1))
+    print(f"manifest: {out_dir / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,125 @@
+"""L1 Pallas kernel: quantized 3x3 stride-1 SAME conv (int8 -> int8).
+
+TPU adaptation of the paper's CONV workload: the convolution is expressed
+as an **im2col contraction** feeding the MXU — each (dy, dx) filter tap is
+a ``(H*W, bc) @ (bc, bf)`` int8 matmul accumulated in an int32 VMEM
+scratch.  The grid walks output-filter blocks (``bf``) and input-channel
+blocks (``bc``); the BlockSpec pipeline expresses the HBM->VMEM schedule
+that the paper's device performs with its weight-stationary systolic flow.
+
+The input arrives pre-padded (SAME, pad value = input zero-point) from the
+L2 model so the kernel body stays a pure contraction.
+
+``interpret=True`` — see fc.py for why.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+QMIN = -128
+QMAX = 127
+
+BF = 64  # output-filter tile
+BC = 64  # input-channel tile
+
+
+def _conv_kernel(
+    x_ref, w_ref, b_ref, o_ref, acc_ref, *, h, w, ksize, nc, zp_in, mult, zp_out
+):
+    c = pl.program_id(1)
+
+    @pl.when(c == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # one im2col contraction instead of ksize^2 small per-tap dots: the
+    # patch matrix is (H*W, ksize^2*bc) and the filter block reshapes to
+    # (ksize^2*bc, bf) in matching (dy, dx, c) order.  Identical integer
+    # math, but a single large MXU-shaped matmul (and, on the CPU proxy,
+    # one well-vectorized dot) — see EXPERIMENTS.md §Perf L1.
+    patches = [
+        x_ref[dy : dy + h, dx : dx + w, :].reshape(h * w, -1)
+        for dy in range(ksize)
+        for dx in range(ksize)
+    ]
+    pat = jnp.concatenate(patches, axis=1).astype(jnp.int32) - zp_in
+    tap = w_ref[...].reshape(-1, w_ref.shape[-1]).astype(jnp.int32)
+    acc_ref[...] += jnp.dot(pat, tap, preferred_element_type=jnp.int32)
+
+    @pl.when(c == nc - 1)
+    def _finish():
+        out = acc_ref[...] + b_ref[...].astype(jnp.int32)
+        scaled = jnp.round(out.astype(jnp.float32) * jnp.float32(mult))
+        q = scaled.astype(jnp.int32) + zp_out
+        o_ref[...] = jnp.clip(q, QMIN, QMAX).astype(jnp.int8).reshape(h, w, -1)
+
+
+def _pick(block: int, dim: int) -> int:
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def conv_quant(
+    x_padded: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    zp_in: int,
+    mult: float,
+    zp_out: int,
+    bf: int = BF,
+    bc: int = BC,
+) -> jnp.ndarray:
+    """Quantized conv: ``(H+k-1, W+k-1, C) int8 * (k, k, C, F) -> (H, W, F)``.
+
+    ``x_padded`` must already carry SAME padding filled with ``zp_in``.
+    """
+    hp, wp, cin = x_padded.shape
+    ksize, k2, c2, f = w.shape
+    assert ksize == k2 and c2 == cin and b.shape == (f,)
+    h, wdim = hp - ksize + 1, wp - ksize + 1
+    bf, bc = _pick(bf, f), _pick(bc, cin)
+    grid = (f // bf, cin // bc)
+    kernel = partial(
+        _conv_kernel,
+        h=h,
+        w=wdim,
+        ksize=ksize,
+        nc=grid[1],
+        zp_in=zp_in,
+        mult=float(mult),
+        zp_out=zp_out,
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((hp, wp, bc), lambda j, c: (0, 0, c)),
+            pl.BlockSpec((ksize, ksize, bc, bf), lambda j, c: (0, 0, c, j)),
+            pl.BlockSpec((bf,), lambda j, c: (j,)),
+        ],
+        out_specs=pl.BlockSpec((h, wdim, bf), lambda j, c: (0, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((h, wdim, f), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((h * wdim, bf), jnp.int32)],
+        interpret=True,
+    )(x_padded, w, b)
+
+
+def conv_vmem_bytes(h: int, w: int, ksize: int, bc: int, bf: int) -> int:
+    """Static VMEM footprint estimate for a block shape (DESIGN.md §Perf)."""
+    hp, wp = h + ksize - 1, w + ksize - 1
+    return (
+        hp * wp * bc  # input tile, int8
+        + ksize * ksize * bc * bf  # weight tile, int8
+        + bf * 4  # bias
+        + h * w * bf * 4  # acc scratch, i32
+        + h * w * bf  # out tile, int8
+    )

@@ -1,0 +1,112 @@
+"""L1 Pallas kernel: quantized fully-connected layer (int8 x int8 -> int8).
+
+This is the Edge TPU's bread-and-butter op: the systolic MXU consumes int8
+weights/activations and accumulates int32.  The kernel is tiled for the
+MXU: a ``(bm, bk) @ (bk, bn)`` contraction per grid step with the int32
+accumulator held in VMEM scratch across the K grid dimension
+(double-buffered HBM->VMEM streaming is implied by the BlockSpec pipeline).
+
+``interpret=True`` everywhere: real-TPU lowering would emit a Mosaic
+custom-call the CPU PJRT plugin cannot execute; interpret mode lowers to
+plain HLO, which is what ``aot.py`` ships to the Rust runtime.
+
+VMEM footprint per step (int8 unless noted):
+``bm*bk + bk*bn + bm*bn*4 (acc, i32) + bn*4 (bias) + bm*bn (out)`` —
+see DESIGN.md §Perf for the block-shape sweep.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+QMIN = -128
+QMAX = 127
+
+# Default MXU-shaped tiles; shrunk automatically for small operands.
+BM, BK, BN = 128, 256, 128
+
+
+def _fc_kernel(x_ref, w_ref, b_ref, o_ref, acc_ref, *, nk, zp_in, mult, zp_out):
+    """One (i, j, k) grid step of the blocked quantized matmul."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    xi = x_ref[...].astype(jnp.int32) - zp_in
+    wi = w_ref[...].astype(jnp.int32)
+    acc_ref[...] += jnp.dot(xi, wi, preferred_element_type=jnp.int32)
+
+    @pl.when(k == nk - 1)
+    def _finish():
+        acc = acc_ref[...] + b_ref[...].astype(jnp.int32)
+        scaled = jnp.round(acc.astype(jnp.float32) * jnp.float32(mult))
+        q = scaled.astype(jnp.int32) + zp_out
+        o_ref[...] = jnp.clip(q, QMIN, QMAX).astype(jnp.int8)
+
+
+def _pick(block: int, dim: int) -> int:
+    """Largest divisor of ``dim`` that is <= block (tile must divide)."""
+    b = min(block, dim)
+    while dim % b:
+        b -= 1
+    return b
+
+
+def fc_quant(
+    x: jnp.ndarray,
+    w: jnp.ndarray,
+    b: jnp.ndarray,
+    *,
+    zp_in: int,
+    mult: float,
+    zp_out: int,
+    bm: int = BM,
+    bk: int = BK,
+    bn: int = BN,
+) -> jnp.ndarray:
+    """Quantized dense layer: ``(M, K) int8 @ (K, N) int8 + b -> (M, N) int8``.
+
+    ``mult`` / ``zp_out`` follow the scheme in ``compile.quantize``; ReLU for
+    hidden layers falls out of the output clamp when ``zp_out == -128``.
+    """
+    m, kdim = x.shape
+    k2, n = w.shape
+    assert kdim == k2 and b.shape == (n,)
+    bm, bk, bn = _pick(bm, m), _pick(bk, kdim), _pick(bn, n)
+    grid = (m // bm, n // bn, kdim // bk)
+    kernel = partial(
+        _fc_kernel, nk=grid[2], zp_in=zp_in, mult=float(mult), zp_out=zp_out
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.int8),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
+        interpret=True,
+    )(x, w, b)
+
+
+def fc_vmem_bytes(bm: int, bk: int, bn: int) -> int:
+    """Static VMEM footprint estimate for a block shape (DESIGN.md §Perf)."""
+    return bm * bk + bk * bn + bn * 4 + bm * bn * 4 + bm * bn
+
+
+def fc_mxu_utilization(bm: int, bk: int, bn: int, mxu: int = 64) -> float:
+    """Fraction of MXU lanes busy for a (bm,bk)x(bk,bn) tile on an
+    ``mxu x mxu`` systolic array (Edge TPU: 64x64)."""
+    eff_m = min(bm, mxu) / mxu if bm < mxu else 1.0
+    eff_n = min(bn, mxu) / mxu if bn < mxu else 1.0
+    return eff_m * eff_n

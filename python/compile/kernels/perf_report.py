@@ -1,0 +1,82 @@
+"""L1 structural perf analysis: VMEM footprint and MXU utilization of the
+Pallas kernels across candidate BlockSpecs, at the paper's model scales.
+
+interpret=True gives CPU-numpy timings only — NOT a TPU proxy — so kernel
+optimization here is structural: pick block shapes that (a) fit the Edge
+TPU-class VMEM budget with double buffering, (b) keep the 64x64 MXU
+systolic array fully populated, (c) minimize HBM re-reads of the weight
+tile.  Results are recorded in EXPERIMENTS.md §Perf (L1).
+
+Usage: cd python && python -m compile.kernels.perf_report
+"""
+
+from __future__ import annotations
+
+from .conv import conv_vmem_bytes
+from .fc import fc_mxu_utilization, fc_vmem_bytes
+
+# Edge TPU-class on-chip budget for kernel working set (weights live in
+# the 8 MiB pool too; leave room for 2x double-buffering).
+VMEM_BUDGET = 2 * 1024 * 1024
+MXU = 64
+
+
+def fc_table(m: int, k: int, n: int):
+    print(f"\nFC layer ({m}x{k})@({k}x{n}) int8 — block-shape candidates")
+    print(f"{'bm':>4} {'bk':>5} {'bn':>5} {'vmem_KiB':>9} {'2xbuf_ok':>9} "
+          f"{'mxu_util':>9} {'k_steps':>8}")
+    best = None
+    for bm in (1, 8, 64, 128):
+        for bk in (64, 128, 256, 512):
+            for bn in (64, 128, 256):
+                if bm > m or bk > k or bn > n:
+                    continue
+                v = fc_vmem_bytes(bm, bk, bn)
+                ok = 2 * v <= VMEM_BUDGET
+                util = fc_mxu_utilization(bm, bk, bn, MXU)
+                steps = -(-k // bk)
+                print(f"{bm:>4} {bk:>5} {bn:>5} {v/1024:>9.1f} {str(ok):>9} "
+                      f"{util:>9.2f} {steps:>8}")
+                # prefer: fits, max util, then fewest K steps (fewest
+                # accumulator flushes), then smallest vmem
+                key = (ok, util, -steps, -v)
+                if best is None or key > best[0]:
+                    best = (key, (bm, bk, bn))
+    print(f"-> chosen: bm,bk,bn = {best[1]}")
+    return best[1]
+
+
+def conv_table(h: int, w: int, cin: int, f: int, ksize: int = 3):
+    print(f"\nCONV layer {h}x{w}x{cin} -> {f} filters ({ksize}x{ksize}) — candidates")
+    print(f"{'bc':>4} {'bf':>4} {'vmem_KiB':>9} {'2xbuf_ok':>9} {'mxu_util':>9}")
+    best = None
+    for bc in (16, 32, 64, 128):
+        for bf in (16, 32, 64, 128):
+            if bc > cin or bf > f:
+                continue
+            v = conv_vmem_bytes(h, w, ksize, bc, bf)
+            ok = 2 * v <= VMEM_BUDGET
+            # contraction dim = ksize^2*bc, output dim = bf
+            util = min(1.0, ksize * ksize * bc / MXU) * min(1.0, bf / MXU)
+            print(f"{bc:>4} {bf:>4} {v/1024:>9.1f} {str(ok):>9} {util:>9.2f}")
+            key = (ok, util, -v)
+            if best is None or key > best[0]:
+                best = (key, (bc, bf))
+    print(f"-> chosen: bc,bf = {best[1]}")
+    return best[1]
+
+
+def main():
+    print("=== L1 BlockSpec analysis (Edge TPU-class budget:",
+          f"{VMEM_BUDGET // 1024} KiB working set, {MXU}x{MXU} MXU) ===")
+    # paper-scale FC hidden layer (n ~ 2048) on a 1-row activation
+    fc_table(1, 2048, 2048)
+    # paper-scale CONV inner layer (f = 442 pre-spill peak)
+    conv_table(64, 64, 442, 442)
+    # artifact-scale layers (what aot.py ships)
+    fc_table(1, 512, 512)
+    conv_table(32, 32, 32, 32)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Pure-jnp oracle for the Pallas kernels.
+
+Computes the same integer arithmetic as ``fc.py`` / ``conv.py`` without
+Pallas; kernel outputs must match **exactly** (int8 equality), since both
+paths perform identical int32 accumulation and identical f32 requantization.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+QMIN = -128
+QMAX = 127
+
+
+def _requant(acc: jnp.ndarray, b: jnp.ndarray, mult: float, zp_out: int):
+    acc = acc + b.astype(jnp.int32)
+    scaled = jnp.round(acc.astype(jnp.float32) * jnp.float32(mult))
+    q = scaled.astype(jnp.int32) + zp_out
+    return jnp.clip(q, QMIN, QMAX).astype(jnp.int8)
+
+
+def fc_quant_ref(x, w, b, *, zp_in: int, mult: float, zp_out: int):
+    """Oracle for :func:`compile.kernels.fc.fc_quant`."""
+    acc = jnp.dot(
+        x.astype(jnp.int32) - zp_in,
+        w.astype(jnp.int32),
+        preferred_element_type=jnp.int32,
+    )
+    return _requant(acc, b, mult, zp_out)
+
+
+def conv_quant_ref(x_padded, w, b, *, zp_in: int, mult: float, zp_out: int):
+    """Oracle for :func:`compile.kernels.conv.conv_quant` (pre-padded input)."""
+    hp, wp, cin = x_padded.shape
+    ksize = w.shape[0]
+    h, wdim = hp - ksize + 1, wp - ksize + 1
+    xi = x_padded.astype(jnp.int32) - zp_in
+    acc = jnp.zeros((h * wdim, w.shape[3]), jnp.int32)
+    for dy in range(ksize):
+        for dx in range(ksize):
+            patch = xi[dy : dy + h, dx : dx + wdim, :].reshape(h * wdim, cin)
+            acc = acc + jnp.dot(
+                patch, w[dy, dx].astype(jnp.int32), preferred_element_type=jnp.int32
+            )
+    return _requant(acc, b, mult, zp_out).reshape(h, wdim, -1)

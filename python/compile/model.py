@@ -1,0 +1,111 @@
+"""L2: JAX forward graphs for (segments of) the paper's synthetic models.
+
+A *segment* is a contiguous run of layers of one model — exactly what one
+Edge TPU executes in the paper's pipeline.  ``segment_forward`` builds a
+jittable int8 -> int8 function whose quantized weights are baked in as HLO
+constants (the artifact is self-contained; the Rust runtime feeds only the
+int8 activation tensor).  All layer math goes through the L1 Pallas kernels.
+
+Python runs only at build time: ``aot.py`` lowers these functions to HLO
+text that ``rust/src/runtime`` loads via PJRT.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, List, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import conv as conv_k
+from .kernels import fc as fc_k
+from .kernels import ref as ref_k
+from .specs import ConvLayer, FcLayer, QuantLayer
+
+
+def _apply_layer(x: jnp.ndarray, ql: QuantLayer, use_pallas: bool) -> jnp.ndarray:
+    w = jnp.asarray(ql.w_q)
+    b = jnp.asarray(ql.b_q)
+    kw = dict(zp_in=ql.in_q.zero_point, mult=ql.mult, zp_out=ql.out_q.zero_point)
+    if isinstance(ql.spec, FcLayer):
+        if use_pallas:
+            # Perf (EXPERIMENTS.md §Perf L2): size blocks so the artifact
+            # models lower to a single grid step — interpret-mode grid
+            # loops dominate the lowered HLO's runtime otherwise.  The
+            # paper-scale BlockSpec analysis uses the MXU defaults
+            # (see kernels/perf_report.py).
+            return fc_k.fc_quant(
+                x.reshape(1, -1), w, b, bk=512, bn=512, **kw
+            ).reshape(-1)
+        return ref_k.fc_quant_ref(x.reshape(1, -1), w, b, **kw).reshape(-1)
+    assert isinstance(ql.spec, ConvLayer)
+    pad = ql.spec.ksize // 2
+    xp = jnp.pad(
+        x,
+        ((pad, pad), (pad, pad), (0, 0)),
+        constant_values=np.int8(ql.in_q.zero_point),
+    )
+    fn = conv_k.conv_quant if use_pallas else ref_k.conv_quant_ref
+    return fn(xp, w, b, **kw)
+
+
+def segment_forward(
+    qlayers: Sequence[QuantLayer], use_pallas: bool = True
+) -> Callable[[jnp.ndarray], Tuple[jnp.ndarray]]:
+    """Build the int8->int8 forward for a contiguous layer run.
+
+    Returns a 1-tuple (lowered with ``return_tuple=True``; the Rust side
+    unwraps with ``to_tuple1``).
+    """
+
+    def fwd(x: jnp.ndarray) -> Tuple[jnp.ndarray]:
+        for ql in qlayers:
+            x = _apply_layer(x, ql, use_pallas)
+        return (x,)
+
+    return fwd
+
+
+def segment_input_struct(qlayers: Sequence[QuantLayer]) -> jax.ShapeDtypeStruct:
+    first = qlayers[0].spec
+    if isinstance(first, FcLayer):
+        return jax.ShapeDtypeStruct((first.in_features,), jnp.int8)
+    return jax.ShapeDtypeStruct((first.height, first.width, first.cin), jnp.int8)
+
+
+def segment_output_shape(qlayers: Sequence[QuantLayer]) -> Tuple[int, ...]:
+    last = qlayers[-1].spec
+    if isinstance(last, FcLayer):
+        return (last.out_features,)
+    return (last.height, last.width, last.filters)
+
+
+def split_segments(
+    qlayers: Sequence[QuantLayer], cuts: Sequence[int]
+) -> List[List[QuantLayer]]:
+    """Split by cut positions (indices between layers, ascending)."""
+    bounds = [0, *cuts, len(qlayers)]
+    assert list(bounds) == sorted(set(bounds)), f"bad cuts {cuts}"
+    return [list(qlayers[a:b]) for a, b in zip(bounds, bounds[1:])]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO *text* (xla_extension 0.5.1
+    rejects jax>=0.5 serialized protos with 64-bit ids; text round-trips)."""
+    from jax._src.lib import xla_client as xc
+
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    # print_large_constants: the baked int8 weights must survive the text
+    # interchange (default printing elides them as `constant({...})`).
+    return comp.as_hlo_text(print_large_constants=True)
+
+
+def lower_segment(qlayers: Sequence[QuantLayer], use_pallas: bool = True) -> str:
+    """Lower one segment to HLO text."""
+    fwd = segment_forward(qlayers, use_pallas=use_pallas)
+    lowered = jax.jit(fwd).lower(segment_input_struct(qlayers))
+    return to_hlo_text(lowered)

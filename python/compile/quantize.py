@@ -1,0 +1,84 @@
+"""Uniform affine int8 quantization, mirroring the TFLite scheme the Edge TPU
+consumes and the Rust implementation in ``rust/src/quant/``.
+
+Conventions (kept bit-identical between Python/JAX/XLA and Rust):
+
+* ``real = scale * (q - zero_point)``
+* weights: per-tensor **symmetric** int8 (``zero_point = 0``)
+* activations: per-tensor asymmetric int8 (``zero_point`` in [-128, 127])
+* accumulation: int32
+* requantization: ``q_out = clip(rint(acc_f32 * mult_f32) + zp_out)`` with
+  round-ties-to-even — XLA's ``round_nearest_even`` and Rust's
+  ``f32::round_ties_even`` produce identical bits for identical inputs.
+
+The float32 requantization multiplier (instead of TFLite's fixed-point
+doubling-high-mul) is a deliberate simplification: it is exactly
+reproducible across all three layers of this stack, which is what the
+correctness story needs.  Cross-language test vectors live in
+``python/tests/test_quantize.py`` and ``rust/src/quant/mod.rs``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+QMIN = -128
+QMAX = 127
+
+
+@dataclasses.dataclass(frozen=True)
+class QParams:
+    """Per-tensor affine quantization parameters."""
+
+    scale: float
+    zero_point: int
+
+    def quantize(self, real: np.ndarray) -> np.ndarray:
+        q = np.rint(real / self.scale).astype(np.int64) + self.zero_point
+        return np.clip(q, QMIN, QMAX).astype(np.int8)
+
+    def dequantize(self, q: np.ndarray) -> np.ndarray:
+        return (q.astype(np.float32) - self.zero_point) * np.float32(self.scale)
+
+
+def weight_qparams(w: np.ndarray) -> QParams:
+    """Symmetric per-tensor parameters for a weight tensor."""
+    amax = float(np.max(np.abs(w)))
+    amax = max(amax, 1e-8)
+    return QParams(scale=amax / 127.0, zero_point=0)
+
+
+def activation_qparams(lo: float, hi: float) -> QParams:
+    """Asymmetric parameters covering [lo, hi] (must straddle 0)."""
+    lo, hi = min(lo, 0.0), max(hi, 0.0)
+    scale = max((hi - lo) / (QMAX - QMIN), 1e-8)
+    zp = int(np.clip(np.rint(QMIN - lo / scale), QMIN, QMAX))
+    return QParams(scale=scale, zero_point=zp)
+
+
+def bias_quantize(b: np.ndarray, in_scale: float, w_scale: float) -> np.ndarray:
+    """Bias is stored int32 at scale ``in_scale * w_scale`` (zp = 0)."""
+    return np.rint(b / (in_scale * w_scale)).astype(np.int32)
+
+
+def requant_multiplier(in_scale: float, w_scale: float, out_scale: float) -> float:
+    """The combined rescale factor applied to the int32 accumulator."""
+    return float(np.float32(in_scale) * np.float32(w_scale) / np.float32(out_scale))
+
+
+def requantize_jnp(acc: jnp.ndarray, mult: float, zp_out: int) -> jnp.ndarray:
+    """int32 accumulator -> int8 output.  Must match ``quant::requantize``
+    in Rust bit-for-bit (f32 multiply, round-ties-even, clamp)."""
+    scaled = jnp.round(acc.astype(jnp.float32) * jnp.float32(mult))
+    q = scaled.astype(jnp.int32) + zp_out
+    return jnp.clip(q, QMIN, QMAX).astype(jnp.int8)
+
+
+def requantize_np(acc: np.ndarray, mult: float, zp_out: int) -> np.ndarray:
+    """NumPy oracle for :func:`requantize_jnp` (np.rint is ties-to-even)."""
+    scaled = np.rint(acc.astype(np.float32) * np.float32(mult))
+    q = scaled.astype(np.int32) + zp_out
+    return np.clip(q, QMIN, QMAX).astype(np.int8)

@@ -1,0 +1,149 @@
+"""Synthetic model specs mirroring §III-A of the paper and
+``rust/src/model/synthetic.rs``.
+
+FC models: ``L_FC`` dense layers; input ``I=64``, hidden width ``n``,
+output ``O=10``.  CONV models: ``L_CONV`` conv layers, stride 1, SAME
+padding, ``C=3`` input channels, ``W x H = 64 x 64`` images, ``3 x 3``
+filters, ``f`` filters per layer.
+
+Weights are generated deterministically from a seed so that the Rust side
+(and EXPERIMENTS.md) can refer to models by name alone.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence, Tuple
+
+import numpy as np
+
+from .quantize import (
+    QParams,
+    activation_qparams,
+    bias_quantize,
+    requant_multiplier,
+    weight_qparams,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class FcLayer:
+    """Dense layer: ``(in_features,) -> (out_features,)``."""
+
+    in_features: int
+    out_features: int
+
+    @property
+    def macs(self) -> int:
+        return self.in_features * self.out_features
+
+    @property
+    def weight_bytes(self) -> int:
+        return self.in_features * self.out_features  # int8
+
+
+@dataclasses.dataclass(frozen=True)
+class ConvLayer:
+    """3x3 stride-1 SAME conv: ``(h, w, cin) -> (h, w, filters)``."""
+
+    height: int
+    width: int
+    cin: int
+    filters: int
+    ksize: int = 3
+
+    @property
+    def macs(self) -> int:
+        return self.height * self.width * self.cin * self.filters * self.ksize**2
+
+    @property
+    def weight_bytes(self) -> int:
+        return self.ksize * self.ksize * self.cin * self.filters
+
+
+Layer = FcLayer | ConvLayer
+
+
+def fc_model(n: int, layers: int = 5, inp: int = 64, out: int = 10) -> List[FcLayer]:
+    """The paper's FC generator: I -> n -> ... -> n -> O."""
+    if layers < 2:
+        raise ValueError("need >= 2 layers")
+    widths = [inp] + [n] * (layers - 1) + [out]
+    return [FcLayer(widths[i], widths[i + 1]) for i in range(layers)]
+
+
+def conv_model(
+    f: int, layers: int = 5, c: int = 3, h: int = 64, w: int = 64
+) -> List[ConvLayer]:
+    """The paper's CONV generator: C -> f -> ... -> f channels."""
+    cins = [c] + [f] * (layers - 1)
+    return [ConvLayer(h, w, cins[i], f) for i in range(layers)]
+
+
+def model_macs(layers: Sequence[Layer]) -> int:
+    return sum(l.macs for l in layers)
+
+
+def input_shape(layers: Sequence[Layer]) -> Tuple[int, ...]:
+    first = layers[0]
+    if isinstance(first, FcLayer):
+        return (first.in_features,)
+    return (first.height, first.width, first.cin)
+
+
+@dataclasses.dataclass(frozen=True)
+class QuantLayer:
+    """A layer with concrete quantized weights and requant parameters."""
+
+    spec: Layer
+    w_q: np.ndarray  # int8; FC: (in, out); CONV: (kh, kw, cin, f)
+    b_q: np.ndarray  # int32, (out,)
+    in_q: QParams
+    out_q: QParams
+    mult: float  # requant multiplier in_scale*w_scale/out_scale
+
+
+def _gen_float_weights(rng: np.random.Generator, spec: Layer):
+    if isinstance(spec, FcLayer):
+        shape = (spec.in_features, spec.out_features)
+        fan_in = spec.in_features
+        nout = spec.out_features
+    else:
+        shape = (spec.ksize, spec.ksize, spec.cin, spec.filters)
+        fan_in = spec.ksize * spec.ksize * spec.cin
+        nout = spec.filters
+    w = rng.normal(0.0, 1.0 / np.sqrt(fan_in), shape).astype(np.float32)
+    b = rng.normal(0.0, 0.05, (nout,)).astype(np.float32)
+    return w, b
+
+
+def quantize_model(
+    layers: Sequence[Layer], seed: int, act_range: float = 4.0
+) -> List[QuantLayer]:
+    """Deterministically materialize + quantize a synthetic model.
+
+    Activation ranges use a fixed symmetric-ish calibration window
+    ``[-act_range, act_range]`` (plus ReLU clamping at 0 for hidden layers),
+    which is what a calibration pass over the synthetic normal inputs
+    produces to within noise; fixing it keeps Python/Rust in lockstep.
+    """
+    rng = np.random.default_rng(seed)
+    out: List[QuantLayer] = []
+    in_q = activation_qparams(-act_range, act_range)  # model input window
+    n = len(layers)
+    for i, spec in enumerate(layers):
+        w, b = _gen_float_weights(rng, spec)
+        wq_params = weight_qparams(w)
+        w_q = wq_params.quantize(w)
+        b_q = bias_quantize(b, in_q.scale, wq_params.scale)
+        last = i == n - 1
+        # hidden layers are ReLU-clamped -> [0, act_range); output is linear
+        out_q = (
+            activation_qparams(-act_range, act_range)
+            if last
+            else activation_qparams(0.0, act_range)
+        )
+        mult = requant_multiplier(in_q.scale, wq_params.scale, out_q.scale)
+        out.append(QuantLayer(spec, w_q, b_q, in_q, out_q, mult))
+        in_q = out_q
+    return out

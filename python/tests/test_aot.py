@@ -1,0 +1,76 @@
+"""AOT driver tests: artifact set completeness, manifest metadata, and that
+emitted HLO text carries full (non-elided) weight constants."""
+
+import json
+import subprocess
+import sys
+import pathlib
+
+import pytest
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+
+
+@pytest.fixture(scope="module")
+def built(tmp_path_factory):
+    out = tmp_path_factory.mktemp("artifacts")
+    manifest = tmp_path_factory.mktemp("cfg") / "manifest.json"
+    manifest.write_text(
+        json.dumps(
+            {
+                "models": [
+                    {
+                        "name": "t_fc",
+                        "kind": "fc",
+                        "n": 24,
+                        "layers": 3,
+                        "input": 8,
+                        "output": 4,
+                        "seed": 3,
+                    }
+                ]
+            }
+        )
+    )
+    subprocess.run(
+        [sys.executable, "-m", "compile.aot", "--out", str(out), "--manifest", str(manifest)],
+        cwd=ROOT,
+        check=True,
+        capture_output=True,
+    )
+    return out
+
+
+def test_artifact_count(built):
+    # L=3 -> L*(L+1)/2 = 6 contiguous segments
+    assert len(list(built.glob("t_fc_seg*.hlo.txt"))) == 6
+
+
+def test_manifest_metadata(built):
+    m = json.loads((built / "manifest.json").read_text())
+    info = m["models"]["t_fc"]
+    assert info["macs"] == 8 * 24 + 24 * 24 + 24 * 4
+    assert len(info["layers"]) == 3
+    segs = {(s["start"], s["end"]) for s in info["segments"]}
+    assert segs == {(i, j) for i in range(3) for j in range(i + 1, 4)}
+    whole = next(s for s in info["segments"] if (s["start"], s["end"]) == (0, 3))
+    assert whole["input_shape"] == [8] and whole["output_shape"] == [4]
+    g = info["golden"]
+    assert len(g["input"]) == 8 and len(g["output"]) == 4
+
+
+def test_no_elided_constants(built):
+    for f in built.glob("*.hlo.txt"):
+        text = f.read_text()
+        assert "{...}" not in text, f"{f.name} has elided constants"
+        assert "HloModule" in text
+
+
+def test_boundary_consistency(built):
+    """out_q of segment [i,j) must equal in_q of segment [j,k)."""
+    m = json.loads((built / "manifest.json").read_text())
+    segs = m["models"]["t_fc"]["segments"]
+    by_range = {(s["start"], s["end"]): s for s in segs}
+    assert by_range[(0, 1)]["out_q"] == by_range[(1, 2)]["in_q"]
+    assert by_range[(1, 2)]["out_q"] == by_range[(2, 3)]["in_q"]
+    assert by_range[(0, 2)]["out_q"] == by_range[(2, 3)]["in_q"]

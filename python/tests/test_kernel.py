@@ -1,0 +1,140 @@
+"""Kernel-vs-oracle correctness: the CORE signal for L1.
+
+The Pallas kernels and the pure-jnp oracle perform identical integer math,
+so outputs must match **exactly** (int8 equality), across a hypothesis
+sweep of shapes, block sizes and quantization parameters.
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv as conv_k
+from compile.kernels import fc as fc_k
+from compile.kernels import ref as ref_k
+
+settings.register_profile("kernels", deadline=None, max_examples=25)
+settings.load_profile("kernels")
+
+
+def _rand(rng, shape, dtype=np.int8):
+    return jnp.asarray(rng.integers(-128, 128, shape, dtype=dtype))
+
+
+# ---------------------------------------------------------------- FC
+
+
+@given(
+    m=st.integers(1, 9),
+    k=st.integers(1, 300),
+    n=st.integers(1, 200),
+    zp_in=st.integers(-128, 127),
+    zp_out=st.integers(-128, 127),
+    mult=st.floats(1e-6, 0.1, allow_nan=False, allow_infinity=False),
+    seed=st.integers(0, 2**31),
+)
+def test_fc_matches_ref(m, k, n, zp_in, zp_out, mult, seed):
+    rng = np.random.default_rng(seed)
+    x, w = _rand(rng, (m, k)), _rand(rng, (k, n))
+    b = jnp.asarray(rng.integers(-(2**15), 2**15, (n,), dtype=np.int32))
+    kw = dict(zp_in=zp_in, mult=mult, zp_out=zp_out)
+    got = fc_k.fc_quant(x, w, b, **kw)
+    want = ref_k.fc_quant_ref(x, w, b, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bm,bk,bn", [(1, 1, 1), (2, 8, 4), (128, 256, 128), (3, 7, 5)])
+def test_fc_block_shapes(bm, bk, bn):
+    rng = np.random.default_rng(0)
+    m, k, n = 6, 56, 40
+    x, w = _rand(rng, (m, k)), _rand(rng, (k, n))
+    b = jnp.asarray(rng.integers(-1000, 1000, (n,), dtype=np.int32))
+    kw = dict(zp_in=7, mult=0.004, zp_out=-3)
+    got = fc_k.fc_quant(x, w, b, bm=bm, bk=bk, bn=bn, **kw)
+    want = ref_k.fc_quant_ref(x, w, b, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_fc_saturates():
+    """Large accumulators must clamp to the int8 range, not wrap."""
+    x = jnp.full((1, 64), 127, jnp.int8)
+    w = jnp.full((64, 8), 127, jnp.int8)
+    b = jnp.zeros((8,), jnp.int32)
+    hi = fc_k.fc_quant(x, w, b, zp_in=0, mult=1.0, zp_out=0)
+    lo = fc_k.fc_quant(x, -w, b, zp_in=0, mult=1.0, zp_out=0)
+    assert np.all(np.asarray(hi) == 127) and np.all(np.asarray(lo) == -128)
+
+
+def test_fc_relu_via_zero_point():
+    """zp_out = -128 implements quantized ReLU through the clamp."""
+    rng = np.random.default_rng(3)
+    x, w = _rand(rng, (4, 32)), _rand(rng, (32, 16))
+    b = jnp.zeros((16,), jnp.int32)
+    out = fc_k.fc_quant(x, w, b, zp_in=0, mult=1e-4, zp_out=-128)
+    assert np.all(np.asarray(out) >= -128)  # trivially true; exactness below
+    want = ref_k.fc_quant_ref(x, w, b, zp_in=0, mult=1e-4, zp_out=-128)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+# ---------------------------------------------------------------- CONV
+
+
+@given(
+    h=st.integers(2, 12),
+    w=st.integers(2, 12),
+    cin=st.integers(1, 20),
+    f=st.integers(1, 24),
+    zp_in=st.integers(-128, 127),
+    zp_out=st.integers(-128, 127),
+    mult=st.floats(1e-6, 0.05, allow_nan=False, allow_infinity=False),
+    seed=st.integers(0, 2**31),
+)
+def test_conv_matches_ref(h, w, cin, f, zp_in, zp_out, mult, seed):
+    rng = np.random.default_rng(seed)
+    xp = _rand(rng, (h + 2, w + 2, cin))
+    wt = _rand(rng, (3, 3, cin, f))
+    b = jnp.asarray(rng.integers(-(2**15), 2**15, (f,), dtype=np.int32))
+    kw = dict(zp_in=zp_in, mult=mult, zp_out=zp_out)
+    got = conv_k.conv_quant(xp, wt, b, **kw)
+    want = ref_k.conv_quant_ref(xp, wt, b, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bf,bc", [(1, 1), (4, 2), (64, 64), (3, 5)])
+def test_conv_block_shapes(bf, bc):
+    rng = np.random.default_rng(1)
+    h, w, cin, f = 8, 8, 10, 12
+    xp = _rand(rng, (h + 2, w + 2, cin))
+    wt = _rand(rng, (3, 3, cin, f))
+    b = jnp.asarray(rng.integers(-500, 500, (f,), dtype=np.int32))
+    kw = dict(zp_in=-5, mult=0.002, zp_out=11)
+    got = conv_k.conv_quant(xp, wt, b, bf=bf, bc=bc, **kw)
+    want = ref_k.conv_quant_ref(xp, wt, b, **kw)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_conv_identity_filter():
+    """A delta filter with unit multiplier reproduces the (shifted) input."""
+    h, w, c = 6, 6, 1
+    x = np.arange(h * w, dtype=np.int8).reshape(h, w, 1) % 100
+    xp = jnp.asarray(np.pad(x, ((1, 1), (1, 1), (0, 0))))
+    wt = np.zeros((3, 3, 1, 1), np.int8)
+    wt[1, 1, 0, 0] = 1  # center tap
+    out = conv_k.conv_quant(
+        jnp.asarray(xp), jnp.asarray(wt), jnp.zeros((1,), jnp.int32),
+        zp_in=0, mult=1.0, zp_out=0,
+    )
+    np.testing.assert_array_equal(np.asarray(out), x)
+
+
+# ------------------------------------------------- VMEM/MXU estimators
+
+
+def test_fc_vmem_estimate_monotone():
+    assert fc_k.fc_vmem_bytes(128, 256, 128) > fc_k.fc_vmem_bytes(64, 128, 64)
+
+
+def test_mxu_utilization_bounds():
+    assert fc_k.fc_mxu_utilization(128, 256, 128) == 1.0
+    assert 0 < fc_k.fc_mxu_utilization(1, 256, 1) < 0.01

@@ -1,0 +1,119 @@
+"""L2 model tests: synthetic generators match the paper's closed forms;
+segment chaining is exactly equivalent to whole-model execution (the
+property the multi-TPU pipeline relies on)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as model_mod
+from compile.specs import (
+    conv_model,
+    fc_model,
+    model_macs,
+    quantize_model,
+)
+
+
+def test_fc_macs_formula():
+    # paper: 64n + 3n^2 + 10n for L=5, I=64, O=10
+    for n in (100, 1140, 2640):
+        assert model_macs(fc_model(n)) == 64 * n + 3 * n * n + 10 * n
+
+
+def test_conv_macs_formula():
+    # paper: #MACs(f) = W*H*f*Fw*Fh*(C + f*(L-1))
+    for f in (32, 292, 702):
+        want = 64 * 64 * f * 3 * 3 * (3 + f * 4)
+        assert model_macs(conv_model(f)) == want
+
+
+def test_weight_bytes():
+    layers = fc_model(100)
+    assert [l.weight_bytes for l in layers] == [6400, 10000, 10000, 10000, 1000]
+    cl = conv_model(8, h=16, w=16)
+    assert [l.weight_bytes for l in cl] == [3 * 3 * 3 * 8] + [3 * 3 * 8 * 8] * 4
+
+
+def test_quantize_deterministic():
+    a = quantize_model(fc_model(32), seed=5)
+    b = quantize_model(fc_model(32), seed=5)
+    for la, lb in zip(a, b):
+        np.testing.assert_array_equal(la.w_q, lb.w_q)
+        np.testing.assert_array_equal(la.b_q, lb.b_q)
+    c = quantize_model(fc_model(32), seed=6)
+    assert any(not np.array_equal(la.w_q, lc.w_q) for la, lc in zip(a, c))
+
+
+def test_boundary_qparams_chain():
+    qls = quantize_model(fc_model(16), seed=1)
+    for prev, nxt in zip(qls, qls[1:]):
+        assert prev.out_q == nxt.in_q
+
+
+@pytest.mark.parametrize(
+    "layers,seed",
+    [(fc_model(48, layers=5, inp=16, out=6), 11), (conv_model(6, c=3, h=10, w=10), 12)],
+)
+@pytest.mark.parametrize("cuts", [[], [1], [2, 4], [1, 2, 3], [1, 2, 3, 4]])
+def test_segment_chain_equals_whole(layers, seed, cuts):
+    """Chaining segment outputs int8->int8 must reproduce the un-segmented
+    model exactly: this is why pipelining preserves numerics in the paper."""
+    qls = quantize_model(layers, seed=seed)
+    rng = np.random.default_rng(seed)
+    shape = (
+        (layers[0].in_features,)
+        if hasattr(layers[0], "in_features")
+        else (layers[0].height, layers[0].width, layers[0].cin)
+    )
+    x = jnp.asarray(rng.integers(-128, 128, shape, dtype=np.int8))
+
+    (whole,) = model_mod.segment_forward(qls, use_pallas=True)(x)
+    y = x
+    for seg in model_mod.split_segments(qls, cuts):
+        (y,) = model_mod.segment_forward(seg, use_pallas=True)(y)
+    np.testing.assert_array_equal(np.asarray(whole), np.asarray(y))
+
+
+def test_pallas_vs_ref_whole_model():
+    qls = quantize_model(fc_model(40, layers=4, inp=12, out=5), seed=9)
+    x = jnp.asarray(np.random.default_rng(0).integers(-128, 128, (12,), np.int8))
+    (a,) = model_mod.segment_forward(qls, use_pallas=True)(x)
+    (b,) = model_mod.segment_forward(qls, use_pallas=False)(x)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_quantized_model_tracks_float_model():
+    """End-to-end sanity: the int8 path approximates the float32 path."""
+    layers = fc_model(64, layers=3, inp=16, out=8)
+    qls = quantize_model(layers, seed=21)
+    rng = np.random.default_rng(21)
+    xf = rng.normal(0, 1, (16,)).astype(np.float32)
+    xq = qls[0].in_q.quantize(xf)
+
+    (yq,) = model_mod.segment_forward(qls, use_pallas=False)(jnp.asarray(xq))
+    y_deq = qls[-1].out_q.dequantize(np.asarray(yq))
+
+    # float reference with the SAME (quantized-then-dequantized) weights
+    h = qls[0].in_q.dequantize(xq)
+    for i, ql in enumerate(qls):
+        w_deq = ql.w_q.astype(np.float32) * np.float32(
+            ql.mult * ql.out_q.scale / ql.in_q.scale
+        )
+        b_deq = ql.b_q.astype(np.float32) * np.float32(ql.in_q.scale) * np.float32(
+            ql.mult * ql.out_q.scale / ql.in_q.scale
+        )
+        h = h @ w_deq + b_deq
+        if i < len(qls) - 1:
+            h = np.maximum(h, 0.0)
+    # quantization noise grows with depth; demand agreement within a few LSB
+    tol = 4 * qls[-1].out_q.scale
+    assert np.max(np.abs(y_deq - h)) <= tol
+
+
+def test_hlo_text_lowering_smoke():
+    qls = quantize_model(fc_model(16, layers=2, inp=8, out=4), seed=2)
+    hlo = model_mod.lower_segment(qls, use_pallas=True)
+    assert "HloModule" in hlo and "ENTRY" in hlo
+    # baked weights appear as constants; entry takes only the activation
+    assert "s8[8]" in hlo.replace(" ", "")[:20000] or "s8[8]{0}" in hlo

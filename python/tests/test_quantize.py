@@ -1,0 +1,72 @@
+"""Quantizer properties + the cross-language test vectors shared with
+``rust/src/quant/mod.rs`` (keep both sides in sync)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile.quantize import (
+    QMAX,
+    QMIN,
+    QParams,
+    activation_qparams,
+    bias_quantize,
+    requant_multiplier,
+    requantize_np,
+    weight_qparams,
+)
+
+settings.register_profile("quant", deadline=None, max_examples=200)
+settings.load_profile("quant")
+
+
+@given(st.floats(1e-6, 1e3), st.floats(1e-6, 1e3))
+def test_activation_range_covers_zero(lo_mag, hi_mag):
+    q = activation_qparams(-lo_mag, hi_mag)
+    # zero must be exactly representable (required for zero padding)
+    assert QMIN <= q.zero_point <= QMAX
+    assert abs(q.dequantize(np.array([q.zero_point], np.int8))[0]) == 0.0
+
+
+@given(
+    st.lists(st.floats(-100, 100, allow_nan=False), min_size=1, max_size=64),
+)
+def test_weight_quant_roundtrip_error_bounded(vals):
+    w = np.asarray(vals, np.float32)
+    q = weight_qparams(w)
+    err = np.abs(q.dequantize(q.quantize(w)) - w)
+    assert np.all(err <= q.scale * 0.5 + 1e-6)
+
+
+@given(st.integers(-(2**20), 2**20), st.floats(1e-6, 0.5), st.integers(QMIN, QMAX))
+def test_requantize_in_range(acc, mult, zp):
+    out = requantize_np(np.array([acc]), mult, zp)
+    assert QMIN <= out[0] <= QMAX
+
+
+def test_requantize_ties_to_even():
+    # acc * mult == 0.5 and 1.5 exactly: ties-to-even -> 0 and 2
+    out = requantize_np(np.array([1, 3], np.int32), 0.5, 0)
+    np.testing.assert_array_equal(out, np.array([0, 2], np.int8))
+
+
+def test_cross_language_vectors():
+    """Golden vectors mirrored in rust/src/quant/mod.rs::cross_language_vectors.
+    If these change, change the Rust test too."""
+    got = requantize_np(
+        np.array([0, 1000, -1000, 123456, -123456, 2**30], np.int32),
+        0.00390625,  # 1/256, exact in f32
+        3,
+    )
+    np.testing.assert_array_equal(
+        got, np.array([3, 7, -1, 127, -128, 127], np.int8)
+    )
+    q = QParams(scale=0.05, zero_point=-10)
+    np.testing.assert_array_equal(
+        q.quantize(np.array([-1.0, 0.0, 0.024, 0.026, 7.0], np.float32)),
+        np.array([-30, -10, -10, -9, 127], np.int8),
+    )
+    np.testing.assert_array_equal(
+        bias_quantize(np.array([0.5, -0.25], np.float32), 0.1, 0.02),
+        np.array([250, -125], np.int32),
+    )
+    assert abs(requant_multiplier(0.1, 0.02, 0.05) - 0.04) < 1e-7  # f32 math

@@ -1,0 +1,232 @@
+//! Ablations beyond the paper's main evaluation, implementing the
+//! alternatives its §V-C/§VI discussion raises:
+//!
+//! * **Replication (data parallelism)** — "replicating the model and
+//!   partitioning the input batch might be more efficient": k whole-model
+//!   replicas, each on its own TPU (each paying its own host spill).
+//! * **Hybrid CPU-TPU** — §VI future work: run the layers that would
+//!   spill to host memory on the host *CPU* instead, as an extra pipeline
+//!   stage.
+//! * **Energy** — §VI future work: first-order energy model (2 W TPU at
+//!   the paper's datasheet, host DRAM/PCIe power during streaming, CPU
+//!   package power for the baseline) -> J/inference and EDP.
+
+use crate::compiler::{place, Location};
+use crate::config::SystemConfig;
+use crate::device::CostModel;
+use crate::hostexec::cpu_time_s;
+use crate::link::Link;
+use crate::model::Model;
+use crate::pipeline::{simulate, single_tpu_latency_s, SimOptions, StageSpec};
+use crate::profiler::best_partition;
+
+/// Batched per-inference time of k whole-model replicas fed round-robin.
+///
+/// Each replica behaves like an independent single TPU (including its own
+/// host-memory streaming); the host dispatch overhead is still
+/// GIL-serialized across replicas, so k replicas saturate at one item per
+/// `overhead` regardless of k.
+pub fn replicate_per_item_s(model: &Model, k: usize, cfg: &SystemConfig, batch: usize) -> f64 {
+    assert!(k >= 1);
+    let t1 = single_tpu_latency_s(model, cfg);
+    let oh = cfg.link.stage_overhead_s;
+    let per_replica = (batch as f64 / k as f64).ceil();
+    // replica-parallel service, host-serialized dispatch
+    let service_bound = per_replica * (t1 + oh);
+    let host_bound = batch as f64 * oh;
+    service_bound.max(host_bound) / batch as f64
+}
+
+/// Segmentation (profiled, s TPUs) vs replication (k=s replicas) — the
+/// paper's closing comparison, resolved quantitatively.
+#[derive(Debug, Clone, Copy)]
+pub struct ReplicationVsSegmentation {
+    pub seg_per_item_s: f64,
+    pub rep_per_item_s: f64,
+    /// > 1 means segmentation wins.
+    pub seg_advantage: f64,
+}
+
+pub fn replication_vs_segmentation(
+    model: &Model,
+    n_tpus: usize,
+    cfg: &SystemConfig,
+    batch: usize,
+) -> ReplicationVsSegmentation {
+    let seg = best_partition(model, cfg, n_tpus, batch).per_item_s;
+    let rep = replicate_per_item_s(model, n_tpus, cfg, batch);
+    ReplicationVsSegmentation {
+        seg_per_item_s: seg,
+        rep_per_item_s: rep,
+        seg_advantage: rep / seg,
+    }
+}
+
+/// Hybrid CPU-TPU pipeline (§VI future work): device-resident layers stay
+/// on one TPU; the layers the compiler would spill to host memory run on
+/// the host CPU as a second pipeline stage (no PCIe weight streaming at
+/// all — the weights already live in host DRAM).
+///
+/// Returns batched per-inference time, or `None` if nothing spills (the
+/// hybrid reduces to the single TPU).
+pub fn hybrid_cpu_tpu_per_item_s(
+    model: &Model,
+    cfg: &SystemConfig,
+    batch: usize,
+) -> Option<f64> {
+    let placement = place(&model.layers, &cfg.device);
+    let first_host = placement.layers.iter().position(|l| l.location == Location::Host)?;
+    // contiguous suffix split: TPU runs [0, first_host), CPU the rest
+    // (host layers are a suffix for the paper's homogeneous chains,
+    // modulo the tiny output layer which we also hand to the CPU)
+    let tpu_layers = &model.layers[..first_host];
+    let cpu_layers = Model::new("cpu_part", model.layers[first_host..].to_vec());
+    if tpu_layers.is_empty() {
+        return Some(cpu_time_s(&cpu_layers, &cfg.cpu) + cfg.link.stage_overhead_s);
+    }
+    let cm = CostModel::new(cfg.clone());
+    let tpu_placement = place(tpu_layers, &cfg.device);
+    let stages = vec![
+        StageSpec {
+            exec_s: cm.stage_cost(&tpu_placement).exec_s(),
+            in_bytes: tpu_layers[0].input_elems(),
+            out_bytes: tpu_layers.last().unwrap().output_elems(),
+        },
+        StageSpec {
+            // CPU stage: no PCIe DMA in its service (data already on host)
+            exec_s: cpu_time_s(&cpu_layers, &cfg.cpu),
+            in_bytes: 0,
+            out_bytes: 0,
+        },
+    ];
+    let r = simulate(
+        &stages,
+        &Link::new(cfg.link.clone()),
+        &SimOptions { batch, ..Default::default() },
+    );
+    Some(r.per_item_s(batch))
+}
+
+/// First-order energy model.
+#[derive(Debug, Clone, Copy)]
+pub struct EnergyReport {
+    /// J per inference on a single Edge TPU (incl. host streaming power).
+    pub single_tpu_j: f64,
+    /// J per inference on s TPUs with the profiled split.
+    pub pipeline_j: f64,
+    /// J per inference on the host CPU baseline.
+    pub cpu_j: f64,
+    pub n_tpus: usize,
+}
+
+/// Power constants (datasheet / typical): TPU 2 W busy, 0.5 W idle;
+/// host side (DRAM + PCIe + dispatch thread) 8 W while streaming/handling;
+/// CPU package 65 W under load.
+const TPU_BUSY_W: f64 = 2.0;
+const TPU_IDLE_W: f64 = 0.5;
+const HOST_IO_W: f64 = 8.0;
+const CPU_W: f64 = 65.0;
+
+pub fn energy(model: &Model, n_tpus: usize, cfg: &SystemConfig, batch: usize) -> EnergyReport {
+    let cm = CostModel::new(cfg.clone());
+    let p1 = place(&model.layers, &cfg.device);
+    let c1 = cm.stage_cost(&p1);
+    let single_tpu_j =
+        c1.exec_s() * TPU_BUSY_W + (c1.host_stream_s + cfg.link.stage_overhead_s) * HOST_IO_W;
+
+    let prof = best_partition(model, cfg, n_tpus, batch);
+    let per_item = prof.per_item_s;
+    // per item: each stage busy exec_i at 2 W; idle TPUs at 0.5 W for the
+    // rest of the per-item window; host overhead at 8 W per stage handoff
+    let busy: f64 = prof.stage_exec_s.iter().sum();
+    let idle = (per_item * n_tpus as f64 - busy).max(0.0);
+    let pipeline_j = busy * TPU_BUSY_W
+        + idle * TPU_IDLE_W
+        + n_tpus as f64 * cfg.link.stage_overhead_s * HOST_IO_W;
+
+    let cpu_j = cpu_time_s(model, &cfg.cpu) * CPU_W;
+    EnergyReport { single_tpu_j, pipeline_j, cpu_j, n_tpus }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::{conv_model, fc_model};
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    /// Pre-spill models: replication scales near-ideally and beats
+    /// segmentation (no hops, no imbalance) — the paper's conjecture.
+    #[test]
+    fn replication_wins_pre_spill() {
+        let cfg = cfg();
+        for m in [fc_model(1000), conv_model(200)] {
+            let r = replication_vs_segmentation(&m, 4, &cfg, 50);
+            assert!(
+                r.seg_advantage < 1.0,
+                "{}: seg {:.2e} rep {:.2e}",
+                m.name,
+                r.seg_per_item_s,
+                r.rep_per_item_s
+            );
+        }
+    }
+
+    /// Post-spill FC: every replica pays the full host-streaming penalty,
+    /// while segmentation eliminates it -> segmentation wins big.
+    #[test]
+    fn segmentation_wins_post_spill() {
+        let cfg = cfg();
+        let m = fc_model(2100);
+        let r = replication_vs_segmentation(&m, 3, &cfg, 50);
+        assert!(r.seg_advantage > 4.0, "{r:?}");
+    }
+
+    #[test]
+    fn replication_throughput_bounds() {
+        let cfg = cfg();
+        let m = fc_model(1000);
+        let t1 = single_tpu_latency_s(&m, &cfg);
+        let one = replicate_per_item_s(&m, 1, &cfg, 50);
+        let four = replicate_per_item_s(&m, 4, &cfg, 48);
+        assert!(one >= t1 / 1.001);
+        // 4 replicas: at most 4x better, at least host-overhead-bound
+        assert!(four >= cfg.link.stage_overhead_s - 1e-12);
+        assert!(four >= one / 4.0 - 1e-12);
+        assert!(four < one, "replication must help pre-spill");
+    }
+
+    #[test]
+    fn hybrid_only_exists_post_spill() {
+        let cfg = cfg();
+        assert!(hybrid_cpu_tpu_per_item_s(&fc_model(1000), &cfg, 50).is_none());
+        assert!(hybrid_cpu_tpu_per_item_s(&fc_model(2100), &cfg, 50).is_some());
+    }
+
+    /// Hybrid CPU-TPU beats the spilled single TPU for FC (CPU executes
+    /// the spilled layers faster than PCIe can stream their weights).
+    #[test]
+    fn hybrid_beats_spilled_single_tpu_fc() {
+        let cfg = cfg();
+        let m = fc_model(2100);
+        let t1 = single_tpu_latency_s(&m, &cfg);
+        let hybrid = hybrid_cpu_tpu_per_item_s(&m, &cfg, 50).unwrap();
+        assert!(hybrid < t1 / 2.0, "hybrid {hybrid} vs t1 {t1}");
+    }
+
+    #[test]
+    fn energy_sanity() {
+        let cfg = cfg();
+        let m = conv_model(442); // fits on device, compute-heavy
+        let e = energy(&m, 4, &cfg, 50);
+        // TPU pipeline far more efficient than the 65 W CPU
+        assert!(e.cpu_j > 10.0 * e.pipeline_j, "{e:?}");
+        assert!(e.single_tpu_j > 0.0 && e.pipeline_j > 0.0);
+        // FC post-spill: pipelining also saves energy (no PCIe streaming)
+        let m = fc_model(2620);
+        let e = energy(&m, 3, &cfg, 50);
+        assert!(e.pipeline_j < e.single_tpu_j, "{e:?}");
+    }
+}

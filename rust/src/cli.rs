@@ -1,0 +1,534 @@
+//! Command-line interface for the `repro` binary (hand-rolled: clap is not
+//! in the offline vendor set).
+//!
+//! Commands map 1:1 to the paper's tables and figures — see DESIGN.md §4.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::config::SystemConfig;
+use crate::report::{f2, ms, speedup, Table};
+use crate::segment::strategy::Strategy;
+use crate::sweep::{
+    batch_sweep, headline, memory_rows, single_input_sweep, single_tpu_sweep, step_rows, Kind,
+    MAX_TPUS,
+};
+use crate::util::fmt_macs;
+
+/// Parsed command line.
+#[derive(Debug, Clone)]
+pub struct Args {
+    pub command: String,
+    pub flags: BTreeMap<String, String>,
+}
+
+impl Args {
+    /// Parse `argv[1..]`: first positional is the command, `--key value`
+    /// (or `--key=value`) pairs follow; bare `--flag` means `"true"`.
+    pub fn parse(argv: &[String]) -> Result<Args> {
+        let mut command = String::new();
+        let mut flags = BTreeMap::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            if let Some(key) = a.strip_prefix("--") {
+                if let Some((k, v)) = key.split_once('=') {
+                    flags.insert(k.to_string(), v.to_string());
+                } else if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                    flags.insert(key.to_string(), argv[i + 1].clone());
+                    i += 1;
+                } else {
+                    flags.insert(key.to_string(), "true".to_string());
+                }
+            } else if command.is_empty() {
+                command = a.clone();
+            } else {
+                anyhow::bail!("unexpected positional argument {a:?}");
+            }
+            i += 1;
+        }
+        Ok(Args { command, flags })
+    }
+
+    pub fn kind(&self) -> Result<Kind> {
+        match self.flags.get("kind").map(String::as_str) {
+            None | Some("fc") => Ok(Kind::Fc),
+            Some("conv") => Ok(Kind::Conv),
+            Some(k) => anyhow::bail!("unknown --kind {k:?} (fc|conv)"),
+        }
+    }
+
+    pub fn batch(&self) -> Result<usize> {
+        self.usize_flag("batch", 50)
+    }
+
+    pub fn usize_flag(&self, key: &str, default: usize) -> Result<usize> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("bad --{key} {v:?}")),
+        }
+    }
+
+    pub fn str_flag(&self, key: &str, default: &str) -> String {
+        self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
+    }
+
+    pub fn csv(&self) -> bool {
+        self.flags.get("csv").map(String::as_str) == Some("true")
+    }
+
+    pub fn config(&self) -> Result<SystemConfig> {
+        match self.flags.get("config") {
+            None => Ok(SystemConfig::default()),
+            Some(p) => SystemConfig::from_file(&PathBuf::from(p)),
+        }
+    }
+
+    pub fn strategy(&self) -> Result<Strategy> {
+        let batch = self.batch()?;
+        match self.str_flag("strategy", "profiled").as_str() {
+            "uniform" => Ok(Strategy::Uniform),
+            "memory" => Ok(Strategy::MemoryBalanced),
+            "profiled" => Ok(Strategy::ProfiledExhaustive { batch }),
+            "threshold" => Ok(Strategy::ProfiledThreshold {
+                batch,
+                max_delta_s: self.flags.get("delta-ms").map(|v| v.parse::<f64>().unwrap_or(1.0) / 1e3).unwrap_or(1e-3),
+            }),
+            s => anyhow::bail!("unknown --strategy {s:?} (uniform|memory|profiled|threshold)"),
+        }
+    }
+}
+
+fn emit(table: Table, csv: bool) -> String {
+    if csv {
+        table.csv()
+    } else {
+        table.render()
+    }
+}
+
+/// Fig 2a: inference time + memory vs #MACs for one family.
+pub fn fig2a(kind: Kind, cfg: &SystemConfig, csv: bool) -> String {
+    let mut t = Table::new(
+        format!("Fig 2a ({}) — single-TPU inference time & memory", kind.label()),
+        &["x", "macs", "time_ms", "device_mib", "host_mib"],
+    );
+    for p in single_tpu_sweep(kind, cfg) {
+        t.row(vec![
+            p.x.to_string(),
+            p.macs.to_string(),
+            ms(p.time_s),
+            f2(p.device_mib),
+            f2(p.host_mib),
+        ]);
+    }
+    emit(t, csv)
+}
+
+/// Fig 2b: GOPS vs #MACs.
+pub fn fig2b(kind: Kind, cfg: &SystemConfig, csv: bool) -> String {
+    let mut t = Table::new(
+        format!("Fig 2b ({}) — attained GOPS", kind.label()),
+        &["x", "macs", "gops"],
+    );
+    for p in single_tpu_sweep(kind, cfg) {
+        t.row(vec![p.x.to_string(), p.macs.to_string(), f2(p.gops)]);
+    }
+    emit(t, csv)
+}
+
+/// Fig 2c: TPU vs CPU inference time.
+pub fn fig2c(kind: Kind, cfg: &SystemConfig, csv: bool) -> String {
+    let mut t = Table::new(
+        format!("Fig 2c ({}) — Edge TPU vs host CPU", kind.label()),
+        &["x", "macs", "tpu_ms", "cpu_ms"],
+    );
+    for p in single_tpu_sweep(kind, cfg) {
+        t.row(vec![p.x.to_string(), p.macs.to_string(), ms(p.time_s), ms(p.cpu_time_s)]);
+    }
+    emit(t, csv)
+}
+
+/// Tables I/II: memory + latency around each step.
+pub fn table_steps(kind: Kind, cfg: &SystemConfig, csv: bool) -> String {
+    let which = if kind == Kind::Fc { "Table I" } else { "Table II" };
+    let mut t = Table::new(
+        format!("{which} ({}) — before/after each host-memory step", kind.label()),
+        &["step", "x", "#MACs", "device_mib", "host_mib", "time_ms"],
+    );
+    let pts = single_tpu_sweep(kind, cfg);
+    for (i, (before, after)) in step_rows(&pts).iter().enumerate() {
+        for p in [before, after] {
+            t.row(vec![
+                (i + 1).to_string(),
+                p.x.to_string(),
+                fmt_macs(p.macs),
+                f2(p.device_mib),
+                f2(p.host_mib),
+                ms(p.time_s),
+            ]);
+        }
+    }
+    emit(t, csv)
+}
+
+/// Fig 4: single-input latency across 1..4 TPUs (default split).
+pub fn fig4(kind: Kind, cfg: &SystemConfig, strategy: Strategy, csv: bool) -> String {
+    let mut t = Table::new(
+        format!(
+            "Fig 4 ({}) — single-input inference time, 1..{MAX_TPUS} TPUs ({})",
+            kind.label(),
+            strategy.name()
+        ),
+        &["x", "macs", "t1_ms", "t2_ms", "t3_ms", "t4_ms"],
+    );
+    for p in single_input_sweep(kind, cfg, strategy) {
+        let mut row = vec![p.x.to_string(), p.macs.to_string()];
+        row.extend(p.per_s.iter().map(|&v| ms(v)));
+        t.row(row);
+    }
+    emit(t, csv)
+}
+
+/// §V-B figure: batched speedups (vs single input / vs one TPU).
+pub fn fig_batch(
+    kind: Kind,
+    cfg: &SystemConfig,
+    strategy: Strategy,
+    batch: usize,
+    csv: bool,
+) -> String {
+    let mut t = Table::new(
+        format!(
+            "§V-B ({}) — {batch}-input batch speedups ({})",
+            kind.label(),
+            strategy.name()
+        ),
+        &[
+            "x", "macs", "vs_single_s2", "vs_single_s3", "vs_single_s4", "vs_1tpu_s2",
+            "vs_1tpu_s3", "vs_1tpu_s4",
+        ],
+    );
+    for p in batch_sweep(kind, cfg, strategy, batch) {
+        let mut row = vec![p.x.to_string(), p.macs.to_string()];
+        row.extend(p.speedup_vs_single_input[1..].iter().map(|&v| speedup(v)));
+        row.extend(p.speedup_vs_one_tpu[1..].iter().map(|&v| speedup(v)));
+        t.row(row);
+    }
+    emit(t, csv)
+}
+
+/// Tables III–VI: per-device memory usage.
+pub fn table_memory(
+    kind: Kind,
+    cfg: &SystemConfig,
+    n_segments: usize,
+    strategy: Strategy,
+    xs: &[u64],
+    title: &str,
+    csv: bool,
+) -> String {
+    let mut headers: Vec<String> = vec!["x".into(), "#MACs".into(), "split".into()];
+    for i in 1..=n_segments {
+        headers.push(format!("dev{i}_mib"));
+    }
+    for i in 1..=n_segments {
+        headers.push(format!("host{i}_mib"));
+    }
+    let hrefs: Vec<&str> = headers.iter().map(String::as_str).collect();
+    let mut t = Table::new(title, &hrefs);
+    for r in memory_rows(kind, cfg, n_segments, strategy, xs) {
+        let mut row = vec![r.x.to_string(), fmt_macs(r.macs), r.label.clone()];
+        row.extend(r.dev_mib.iter().map(|&v| f2(v)));
+        row.extend(r.host_mib.iter().map(|&v| f2(v)));
+        t.row(row);
+    }
+    emit(t, csv)
+}
+
+/// Fig 5: batched per-inference times with profiled splits.
+pub fn fig5(kind: Kind, cfg: &SystemConfig, batch: usize, csv: bool) -> String {
+    let strategy = Strategy::ProfiledExhaustive { batch };
+    let mut t = Table::new(
+        format!("Fig 5 ({}) — profiled splits, {batch}-input batch", kind.label()),
+        &["x", "macs", "t1_ms", "t2_ms", "t3_ms", "t4_ms"],
+    );
+    for p in batch_sweep(kind, cfg, strategy, batch) {
+        let mut row = vec![p.x.to_string(), p.macs.to_string()];
+        row.extend(p.per_item_s.iter().map(|&v| ms(v)));
+        t.row(row);
+    }
+    emit(t, csv)
+}
+
+/// Fig 6: speedups vs one TPU with profiled splits (headline figure).
+pub fn fig6(kind: Kind, cfg: &SystemConfig, batch: usize, csv: bool) -> String {
+    let strategy = Strategy::ProfiledExhaustive { batch };
+    let mut t = Table::new(
+        format!("Fig 6 ({}) — profiled speedup vs 1 TPU", kind.label()),
+        &["x", "macs", "s2", "s3", "s4"],
+    );
+    for p in batch_sweep(kind, cfg, strategy, batch) {
+        let mut row = vec![p.x.to_string(), p.macs.to_string()];
+        row.extend(p.speedup_vs_one_tpu[1..].iter().map(|&v| speedup(v)));
+        t.row(row);
+    }
+    let h = headline(kind, cfg, strategy, batch);
+    let mut out = emit(t, csv);
+    if !csv {
+        out.push_str(&format!(
+            "headline: {:.1}x at {}={} with {} TPUs (paper: {})\n",
+            h.best_speedup,
+            if kind == Kind::Fc { "n" } else { "f" },
+            h.at_x,
+            h.n_tpus,
+            if kind == Kind::Fc { "46x" } else { "6x" },
+        ));
+    }
+    out
+}
+
+/// Paper x-grids for Tables III–VI.
+pub const TABLE3_XS: [u64; 7] = [1140, 1380, 1620, 1860, 2100, 2340, 2580];
+pub const TABLE4_XS: [u64; 7] = [292, 352, 412, 472, 532, 592, 652];
+
+/// Dispatch a parsed command; returns the rendered output.
+pub fn run(args: &Args) -> Result<String> {
+    let cfg = args.config()?;
+    let csv = args.csv();
+    let batch = args.batch()?;
+    let out = match args.command.as_str() {
+        "fig2a" => fig2a(args.kind()?, &cfg, csv),
+        "fig2b" => fig2b(args.kind()?, &cfg, csv),
+        "fig2c" => fig2c(args.kind()?, &cfg, csv),
+        "table1" => table_steps(Kind::Fc, &cfg, csv),
+        "table2" => table_steps(Kind::Conv, &cfg, csv),
+        "fig4" => fig4(args.kind()?, &cfg, Strategy::Uniform, csv),
+        "fig-batch" => fig_batch(args.kind()?, &cfg, Strategy::Uniform, batch, csv),
+        "table3" => table_memory(
+            Kind::Fc, &cfg, 2, Strategy::Uniform, &TABLE3_XS,
+            "Table III (left) — FC, 2 segments, default split", csv,
+        ),
+        "table3b" => table_memory(
+            Kind::Fc, &cfg, 3, Strategy::Uniform, &TABLE3_XS,
+            "Table III (right) — FC, 3 segments, default split", csv,
+        ),
+        "table4" => table_memory(
+            Kind::Conv, &cfg, 4, Strategy::Uniform, &TABLE4_XS,
+            "Table IV — CONV, 4 segments, default split", csv,
+        ),
+        "table5" => table_memory(
+            Kind::Fc, &cfg, 3, Strategy::ProfiledExhaustive { batch }, &TABLE3_XS,
+            "Table V — FC, 3 segments, profiled split", csv,
+        ),
+        "table6" => table_memory(
+            Kind::Conv, &cfg, 4, Strategy::ProfiledExhaustive { batch }, &TABLE4_XS,
+            "Table VI — CONV, 4 segments, profiled split", csv,
+        ),
+        "fig5" => fig5(args.kind()?, &cfg, batch, csv),
+        "fig6" => fig6(args.kind()?, &cfg, batch, csv),
+        "headline" => {
+            let mut s = String::new();
+            for kind in [Kind::Fc, Kind::Conv] {
+                for (name, strat) in [
+                    ("uniform", Strategy::Uniform),
+                    ("profiled", Strategy::ProfiledExhaustive { batch }),
+                ] {
+                    let h = headline(kind, &cfg, strat, batch);
+                    s.push_str(&format!(
+                        "{:4} {:9}: {:5.1}x at x={} ({} TPUs)\n",
+                        kind.label(),
+                        name,
+                        h.best_speedup,
+                        h.at_x,
+                        h.n_tpus
+                    ));
+                }
+            }
+            s
+        }
+        "all" => {
+            let mut s = String::new();
+            for kind in [Kind::Fc, Kind::Conv] {
+                s.push_str(&fig2a(kind, &cfg, csv));
+                s.push('\n');
+                s.push_str(&fig2b(kind, &cfg, csv));
+                s.push('\n');
+                s.push_str(&fig2c(kind, &cfg, csv));
+                s.push('\n');
+                s.push_str(&fig4(kind, &cfg, Strategy::Uniform, csv));
+                s.push('\n');
+                s.push_str(&fig_batch(kind, &cfg, Strategy::Uniform, batch, csv));
+                s.push('\n');
+                s.push_str(&fig5(kind, &cfg, batch, csv));
+                s.push('\n');
+                s.push_str(&fig6(kind, &cfg, batch, csv));
+                s.push('\n');
+            }
+            for c in ["table1", "table2", "table3", "table3b", "table4", "table5", "table6"] {
+                let sub = Args { command: c.to_string(), flags: args.flags.clone() };
+                s.push_str(&run(&sub)?);
+                s.push('\n');
+            }
+            s
+        }
+        "ablation-replicate" => ablation_replicate(args.kind()?, &cfg, batch),
+        "ablation-hybrid" => ablation_hybrid(&cfg, batch),
+        "ablation-energy" => ablation_energy(args.kind()?, &cfg, batch),
+        "" | "help" | "--help" => USAGE.to_string(),
+        other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
+    };
+    Ok(out)
+}
+
+/// Replication (data parallelism) vs profiled segmentation (§V-C remark).
+fn ablation_replicate(kind: Kind, cfg: &SystemConfig, batch: usize) -> String {
+    let mut t = Table::new(
+        format!("Ablation ({}) — profiled segmentation vs k-replica data parallelism", kind.label()),
+        &["x", "seg_ms", "rep_ms", "seg_advantage"],
+    );
+    for m in kind.models().iter().step_by(4) {
+        let r = crate::ablation::replication_vs_segmentation(m, 4, cfg, batch);
+        t.row(vec![
+            kind.x_of(m).to_string(),
+            ms(r.seg_per_item_s),
+            ms(r.rep_per_item_s),
+            speedup(r.seg_advantage),
+        ]);
+    }
+    t.render()
+}
+
+/// Hybrid CPU-TPU pipeline (§VI future work).
+fn ablation_hybrid(cfg: &SystemConfig, batch: usize) -> String {
+    let mut t = Table::new(
+        "Ablation (FC) — hybrid CPU-TPU pipeline vs spilled single TPU",
+        &["x", "single_tpu_ms", "hybrid_ms", "hybrid_speedup"],
+    );
+    for m in Kind::Fc.models().iter().step_by(2) {
+        if let Some(h) = crate::ablation::hybrid_cpu_tpu_per_item_s(m, cfg, batch) {
+            let t1 = crate::pipeline::single_tpu_latency_s(m, cfg);
+            t.row(vec![
+                Kind::Fc.x_of(m).to_string(),
+                ms(t1),
+                ms(h),
+                speedup(t1 / h),
+            ]);
+        }
+    }
+    t.render()
+}
+
+/// Energy ablation (§VI future work).
+fn ablation_energy(kind: Kind, cfg: &SystemConfig, batch: usize) -> String {
+    let mut t = Table::new(
+        format!("Ablation ({}) — energy per inference (mJ)", kind.label()),
+        &["x", "single_tpu_mJ", "pipeline4_mJ", "cpu_mJ"],
+    );
+    for m in kind.models().iter().step_by(8) {
+        let e = crate::ablation::energy(m, 4, cfg, batch);
+        t.row(vec![
+            kind.x_of(m).to_string(),
+            format!("{:.2}", e.single_tpu_j * 1e3),
+            format!("{:.2}", e.pipeline_j * 1e3),
+            format!("{:.2}", e.cpu_j * 1e3),
+        ]);
+    }
+    t.render()
+}
+
+pub const USAGE: &str = "\
+repro — reproduction harness for 'Improving inference time in multi-TPU
+systems with profiled model segmentation' (PDP 2023)
+
+USAGE: repro <command> [--kind fc|conv] [--batch N] [--csv]
+             [--config cfg.json] [--strategy uniform|memory|profiled|threshold]
+
+paper experiments (cost-model simulator):
+  fig2a fig2b fig2c      single-TPU sweeps (time / GOPS / vs CPU)
+  table1 table2          memory+latency around each host-memory step
+  fig4                   single-input latency on 1..4 TPUs (default split)
+  fig-batch              batched speedups, default split (§V-B figure)
+  table3 table3b table4  per-device memory, default splits
+  table5 table6          per-device memory, profiled splits (§V-C)
+  fig5 fig6              profiled batched times + headline speedups
+  headline               the abstract's 46x / 6x numbers
+  all                    everything above
+
+ablations (beyond the paper; §V-C/§VI discussion made quantitative):
+  ablation-replicate     profiled segmentation vs data-parallel replicas
+  ablation-hybrid        hybrid CPU-TPU pipeline for spilled FC models
+  ablation-energy        J/inference: 1 TPU vs 4-TPU pipeline vs CPU
+
+serving (real numerics over PJRT; needs `make artifacts`):
+  serve --model fc_n512 --tpus 4 [--strategy profiled] [--batch 50]
+  gantt --kind fc --x 2100 --tpus 3    ASCII pipeline schedule
+";
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &str) -> Vec<String> {
+        s.split_whitespace().map(String::from).collect()
+    }
+
+    #[test]
+    fn parse_flags() {
+        let a = Args::parse(&argv("fig2a --kind conv --batch 25 --csv")).unwrap();
+        assert_eq!(a.command, "fig2a");
+        assert_eq!(a.kind().unwrap(), Kind::Conv);
+        assert_eq!(a.batch().unwrap(), 25);
+        assert!(a.csv());
+        let a = Args::parse(&argv("serve --model=fc_n256")).unwrap();
+        assert_eq!(a.str_flag("model", ""), "fc_n256");
+    }
+
+    #[test]
+    fn parse_rejects_stray_positional() {
+        assert!(Args::parse(&argv("fig2a extra")).is_err());
+    }
+
+    #[test]
+    fn fig2a_renders() {
+        let out = fig2a(Kind::Fc, &SystemConfig::default(), false);
+        assert!(out.contains("Fig 2a"));
+        assert!(out.lines().count() > 60); // 64 sweep points + header
+    }
+
+    #[test]
+    fn table1_has_step_pairs() {
+        let out = table_steps(Kind::Fc, &SystemConfig::default(), false);
+        // at least two steps -> at least 4 data rows
+        assert!(out.lines().count() >= 6, "{out}");
+        assert!(out.contains("Table I"));
+    }
+
+    #[test]
+    fn csv_mode_is_parseable() {
+        let out = fig2b(Kind::Fc, &SystemConfig::default(), true);
+        let first = out.lines().next().unwrap();
+        assert_eq!(first, "x,macs,gops");
+    }
+
+    #[test]
+    fn run_dispatches_all_sim_commands() {
+        for c in [
+            "fig2a", "fig2b", "fig2c", "table1", "table2", "fig4", "fig-batch", "table3",
+            "table3b", "table4", "table5", "table6", "fig5", "fig6", "headline",
+        ] {
+            let a = Args::parse(&argv(c)).unwrap();
+            let out = run(&a).unwrap();
+            assert!(!out.is_empty(), "{c}");
+        }
+    }
+
+    #[test]
+    fn unknown_command_errors_with_usage() {
+        let a = Args::parse(&argv("nope")).unwrap();
+        let err = run(&a).unwrap_err().to_string();
+        assert!(err.contains("USAGE"));
+    }
+}

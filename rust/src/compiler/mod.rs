@@ -1,0 +1,271 @@
+//! The `edgetpu_compiler` placement model.
+//!
+//! The real compiler stores weights **whole-layer-at-a-time**: it walks the
+//! layers in order and parks each one in on-chip memory until the next
+//! layer no longer fits, after which that layer (and, layer-by-layer, any
+//! later one that does not fit in the remaining space) lives in **host**
+//! memory and is streamed over PCIe on every inference (paper §IV: "the
+//! neural layer is the minimum storage unit").  The compile report (device
+//! MiB / host MiB per TPU) is what Tables I–IV print.
+
+use crate::config::DeviceConfig;
+use crate::model::Layer;
+use crate::util::mib;
+
+/// Where a layer's weights live during inference.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Location {
+    Device,
+    Host,
+}
+
+/// One layer's placement decision.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PlacedLayer {
+    pub layer: Layer,
+    pub location: Location,
+    /// Storage footprint: raw weight bytes x metadata ratio + fixed
+    /// per-layer overhead (this is also what the compile report prints).
+    pub footprint_bytes: u64,
+}
+
+/// Placement of one contiguous segment onto one TPU.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Placement {
+    pub layers: Vec<PlacedLayer>,
+}
+
+impl Placement {
+    pub fn device_bytes(&self) -> u64 {
+        self.sum(Location::Device)
+    }
+
+    pub fn host_bytes(&self) -> u64 {
+        self.sum(Location::Host)
+    }
+
+    fn sum(&self, loc: Location) -> u64 {
+        self.layers
+            .iter()
+            .filter(|p| p.location == loc)
+            .map(|p| p.footprint_bytes)
+            .sum()
+    }
+
+    pub fn device_mib(&self) -> f64 {
+        mib(self.device_bytes())
+    }
+
+    pub fn host_mib(&self) -> f64 {
+        mib(self.host_bytes())
+    }
+
+    pub fn uses_host(&self) -> bool {
+        self.layers.iter().any(|p| p.location == Location::Host)
+    }
+
+    /// Raw (un-inflated) weight bytes by location — the device cost model
+    /// streams these.
+    pub fn raw_weight_bytes(&self, loc: Location) -> u64 {
+        self.layers
+            .iter()
+            .filter(|p| p.location == loc)
+            .map(|p| p.layer.weight_bytes())
+            .sum()
+    }
+}
+
+/// Per-layer storage footprint (compiler metadata + instructions).
+pub fn layer_footprint(layer: &Layer, cfg: &DeviceConfig) -> u64 {
+    (layer.weight_bytes() as f64 * cfg.footprint_ratio).ceil() as u64
+        + cfg.per_layer_fixed_bytes
+}
+
+/// Greedy whole-layer placement of a segment onto one TPU, in layer order —
+/// the observed `edgetpu_compiler` behaviour.
+///
+/// The segment's **input activation tensor** is reserved on-chip before any
+/// weights are placed: a pipelined segment must buffer the tensor it
+/// receives from the previous TPU.  This is negligible for FC (n bytes)
+/// but large for CONV (`W·H·f` bytes) and is what makes the paper's
+/// Table IV spill at f=592 with only ~6.5 MiB of weights.
+pub fn place(layers: &[Layer], cfg: &DeviceConfig) -> Placement {
+    let mut used = layers.first().map_or(0, |l| l.input_elems());
+    let placed = layers
+        .iter()
+        .map(|l| {
+            let fp = layer_footprint(l, cfg);
+            let location = if used + fp <= cfg.usable_mem_bytes {
+                used += fp;
+                Location::Device
+            } else {
+                Location::Host
+            };
+            PlacedLayer { layer: *l, location, footprint_bytes: fp }
+        })
+        .collect();
+    Placement { layers: placed }
+}
+
+/// Compile report for a whole partition: one placement per TPU/segment.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompileReport {
+    pub segments: Vec<Placement>,
+}
+
+impl CompileReport {
+    pub fn total_host_mib(&self) -> f64 {
+        self.segments.iter().map(Placement::host_mib).sum()
+    }
+
+    pub fn uses_host(&self) -> bool {
+        self.segments.iter().any(Placement::uses_host)
+    }
+}
+
+/// Place each segment of a partition on its own TPU.
+pub fn place_partition(segments: &[&[Layer]], cfg: &DeviceConfig) -> CompileReport {
+    CompileReport { segments: segments.iter().map(|s| place(s, cfg)).collect() }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::DeviceConfig;
+    use crate::model::synthetic::{conv_model, fc_model};
+
+    fn cfg() -> DeviceConfig {
+        DeviceConfig::default()
+    }
+
+    #[test]
+    fn small_model_all_on_device() {
+        let m = fc_model(100);
+        let p = place(&m.layers, &cfg());
+        assert!(!p.uses_host());
+        assert_eq!(p.layers.len(), 5);
+    }
+
+    /// Table I row 1: n~1580 (0.76e7 MACs) fits, reported ~7.43 MiB device.
+    #[test]
+    fn table1_pre_spill() {
+        let p = place(&fc_model(1580).layers, &cfg());
+        assert!(!p.uses_host(), "must fit on device");
+        assert!((p.device_mib() - 7.43).abs() < 0.15, "dev={}", p.device_mib());
+    }
+
+    /// Table I row 2: n~1620 spills exactly one big layer (~2.63 MiB host).
+    #[test]
+    fn table1_first_spill() {
+        let p = place(&fc_model(1620).layers, &cfg());
+        assert!(p.uses_host());
+        assert!((p.host_mib() - 2.63).abs() < 0.15, "host={}", p.host_mib());
+        assert!((p.device_mib() - 5.27).abs() < 0.2, "dev={}", p.device_mib());
+        // the spilled layer is L4 (greedy keeps L1..L3, L5 still fits)
+        let locs: Vec<_> = p.layers.iter().map(|l| l.location).collect();
+        assert_eq!(
+            locs,
+            vec![
+                Location::Device,
+                Location::Device,
+                Location::Device,
+                Location::Host,
+                Location::Device
+            ]
+        );
+    }
+
+    /// Table I row 3: n~1974, device keeps TWO big layers (7.66 MiB),
+    /// ONE big layer on host (3.82 MiB).  (Our greedy also parks the tiny
+    /// 10n output layer on the host — 0.02 MiB, invisible in the report.)
+    #[test]
+    fn table1_second_step() {
+        let p = place(&fc_model(1980).layers, &cfg());
+        let host_big = p
+            .layers
+            .iter()
+            .filter(|l| l.location == Location::Host && l.footprint_bytes > 1_000_000)
+            .count();
+        assert_eq!(host_big, 1, "exactly one big host layer");
+        assert!((p.device_mib() - 7.66).abs() < 0.35, "dev={}", p.device_mib());
+        assert!((p.host_mib() - 3.82).abs() < 0.3, "host={}", p.host_mib());
+    }
+
+    /// Table I row 4: n~2016, two layers on host (~8.04 MiB), device ~4.04.
+    #[test]
+    fn table1_third_step() {
+        let p = place(&fc_model(2020).layers, &cfg());
+        let host = p.layers.iter().filter(|l| l.location == Location::Host).count();
+        assert_eq!(host, 2);
+        assert!((p.host_mib() - 8.04).abs() < 0.4, "host={}", p.host_mib());
+        assert!((p.device_mib() - 4.04).abs() < 0.3, "dev={}", p.device_mib());
+    }
+
+    /// Table II row 1: f~442 (2.88e10 MACs) still fits on device (~6.86 MiB).
+    #[test]
+    fn table2_pre_spill() {
+        let p = place(&conv_model(442).layers, &cfg());
+        assert!(!p.uses_host());
+        assert!((p.device_mib() - 6.86).abs() < 0.2, "dev={}", p.device_mib());
+    }
+
+    /// CONV spill begins one step later than FC in relative terms; by
+    /// f=492 the model must use host memory (paper: between 2.88e10 and
+    /// 3.01e10 MACs; our calibrated capacity puts it within ~8%).
+    #[test]
+    fn table2_spill_onset_nearby() {
+        let spill_f = (442..520)
+            .step_by(10)
+            .find(|&f| place(&conv_model(f).layers, &cfg()).uses_host());
+        let f = spill_f.expect("spill must occur in range");
+        let macs = conv_model(f).macs() as f64;
+        assert!(
+            (macs - 3.01e10).abs() / 3.01e10 < 0.15,
+            "spill at f={f}, macs={macs:.3e}"
+        );
+    }
+
+    #[test]
+    fn footprint_exceeding_capacity_goes_host_even_alone() {
+        let big = Layer::Fc { in_features: 4000, out_features: 4000 };
+        let p = place(&[big], &cfg());
+        assert!(p.uses_host());
+        assert_eq!(p.device_bytes(), 0);
+    }
+
+    #[test]
+    fn partition_report_sums() {
+        let m = fc_model(2100);
+        let segs: Vec<&[Layer]> = vec![&m.layers[..2], &m.layers[2..]];
+        let rep = place_partition(&segs, &cfg());
+        assert_eq!(rep.segments.len(), 2);
+        // segmentation across 2 TPUs reduces host usage vs single TPU
+        let single = place(&m.layers, &cfg());
+        assert!(rep.total_host_mib() < single.host_mib());
+    }
+
+    #[test]
+    fn property_placement_never_exceeds_capacity() {
+        crate::util::proptest::forall(128, |rng| {
+            let c = cfg();
+            let nlayers = rng.below(8) as usize + 1;
+            let layers: Vec<Layer> = (0..nlayers)
+                .map(|_| Layer::Fc {
+                    in_features: rng.below(3000) + 1,
+                    out_features: rng.below(3000) + 1,
+                })
+                .collect();
+            // fabricate a consistent chain (placement ignores shapes)
+            let p = place(&layers, &c);
+            let dev: u64 = p
+                .layers
+                .iter()
+                .filter(|l| l.location == Location::Device)
+                .map(|l| l.footprint_bytes)
+                .sum();
+            crate::check!(dev <= c.usable_mem_bytes, "dev={dev}");
+            crate::check!(p.layers.len() == nlayers, "len");
+            Ok(())
+        });
+    }
+}

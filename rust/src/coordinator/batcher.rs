@@ -1,0 +1,113 @@
+//! Dynamic batcher: groups incoming requests into batches bounded by size
+//! and wait time before injection into the pipeline.  The paper's workload
+//! is a closed 50-input batch; a serving deployment sees an open arrival
+//! stream, which this component adapts.
+
+use std::time::{Duration, Instant};
+
+use super::queue::Receiver;
+use super::Request;
+
+/// Batching policy.
+#[derive(Debug, Clone, Copy)]
+pub struct BatchPolicy {
+    /// Flush when this many requests are pending.
+    pub max_batch: usize,
+    /// Flush when the oldest pending request has waited this long.
+    pub max_wait: Duration,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy { max_batch: 50, max_wait: Duration::from_millis(5) }
+    }
+}
+
+/// Pull-based batcher over a request queue.
+pub struct Batcher {
+    rx: Receiver<Request>,
+    policy: BatchPolicy,
+}
+
+impl Batcher {
+    pub fn new(rx: Receiver<Request>, policy: BatchPolicy) -> Self {
+        assert!(policy.max_batch >= 1);
+        Batcher { rx, policy }
+    }
+
+    /// Collect the next batch.  Blocks for the first request, then fills
+    /// until `max_batch` or `max_wait`.  `None` when the queue is closed
+    /// and drained.
+    pub fn next_batch(&self) -> Option<Vec<Request>> {
+        let first = self.rx.recv()?;
+        let deadline = Instant::now() + self.policy.max_wait;
+        let mut batch = vec![first];
+        while batch.len() < self.policy.max_batch {
+            if Instant::now() >= deadline {
+                break;
+            }
+            match self.rx.try_recv() {
+                Some(r) => batch.push(r),
+                None => std::thread::sleep(Duration::from_micros(50)),
+            }
+        }
+        Some(batch)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::queue::bounded;
+
+    fn reqs(n: usize) -> Vec<Request> {
+        (0..n).map(|i| Request { id: i as u64, data: vec![0; 4] }).collect()
+    }
+
+    #[test]
+    fn flushes_at_max_batch() {
+        let (tx, rx) = bounded(128);
+        for r in reqs(25) {
+            tx.send(r).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 10, max_wait: Duration::from_secs(1) });
+        assert_eq!(b.next_batch().unwrap().len(), 10);
+        assert_eq!(b.next_batch().unwrap().len(), 10);
+        assert_eq!(b.next_batch().unwrap().len(), 5);
+    }
+
+    #[test]
+    fn flushes_at_deadline_with_partial_batch() {
+        let (tx, rx) = bounded(16);
+        tx.send(Request { id: 0, data: vec![] }).unwrap();
+        let b = Batcher::new(
+            rx,
+            BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(10) },
+        );
+        let t0 = Instant::now();
+        let batch = b.next_batch().unwrap();
+        assert_eq!(batch.len(), 1);
+        assert!(t0.elapsed() < Duration::from_millis(500));
+    }
+
+    #[test]
+    fn none_after_close() {
+        let (tx, rx) = bounded::<Request>(4);
+        tx.close();
+        let b = Batcher::new(rx, BatchPolicy::default());
+        assert!(b.next_batch().is_none());
+    }
+
+    #[test]
+    fn ids_preserved_in_order() {
+        let (tx, rx) = bounded(64);
+        for r in reqs(30) {
+            tx.send(r).unwrap();
+        }
+        tx.close();
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 30, max_wait: Duration::from_millis(20) });
+        let batch = b.next_batch().unwrap();
+        let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
+        assert_eq!(ids, (0..30).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,173 @@
+//! Edge TPU cost model: converts a placed segment into per-inference time.
+//!
+//! Model (DESIGN.md §6):
+//!
+//! ```text
+//! t_exec = max(t_compute, t_dev_stream) + t_host_stream + t_invoke
+//!   t_compute     = MACs / mxu_rate            (systolic array)
+//!   t_dev_stream  = device-resident weight bytes / dev_weight_bw
+//!   t_host_stream = Σ host-resident layer bytes / host_bw(layer kind)
+//! ```
+//!
+//! Compute overlaps the on-chip weight stream (weight-stationary systolic
+//! flow); host streaming over PCIe serializes with execution — that
+//! non-overlap is exactly the cliff the paper measures (Table I: 0.17 ms ->
+//! 7.42 ms the moment 2.63 MiB of weights move to the host).
+
+pub mod calib;
+
+use crate::compiler::{Location, Placement};
+use crate::config::SystemConfig;
+use crate::model::LayerKind;
+
+/// Per-inference cost breakdown for one segment on one TPU.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StageCost {
+    pub compute_s: f64,
+    pub dev_stream_s: f64,
+    pub host_stream_s: f64,
+    pub invoke_s: f64,
+}
+
+impl StageCost {
+    /// Total on-TPU execution time for one inference.
+    pub fn exec_s(&self) -> f64 {
+        self.compute_s.max(self.dev_stream_s) + self.host_stream_s + self.invoke_s
+    }
+
+    /// Attained performance in MAC/s given the segment's MAC count.
+    pub fn gops(&self, macs: u64) -> f64 {
+        macs as f64 / self.exec_s() / 1e9
+    }
+}
+
+/// The device cost model, parameterized by the system config.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    pub cfg: SystemConfig,
+}
+
+impl CostModel {
+    pub fn new(cfg: SystemConfig) -> Self {
+        CostModel { cfg }
+    }
+
+    /// Cost of executing a placed segment once.
+    pub fn stage_cost(&self, placement: &Placement) -> StageCost {
+        let d = &self.cfg.device;
+        let macs: u64 = placement.layers.iter().map(|p| p.layer.macs()).sum();
+        let dev_bytes = placement.raw_weight_bytes(Location::Device);
+        let host_stream_s: f64 = placement
+            .layers
+            .iter()
+            .filter(|p| p.location == Location::Host)
+            .map(|p| {
+                let bw = match p.layer.kind() {
+                    LayerKind::Fc => self.cfg.link.host_weight_bw_fc,
+                    LayerKind::Conv => self.cfg.link.host_weight_bw_conv,
+                };
+                p.layer.weight_bytes() as f64 / bw
+            })
+            .sum();
+        StageCost {
+            compute_s: macs as f64 / d.mxu_rate,
+            dev_stream_s: dev_bytes as f64 / d.dev_weight_bw,
+            host_stream_s,
+            invoke_s: d.invoke_overhead_s,
+        }
+    }
+
+    /// Fraction of theoretical peak attained (roofline position).
+    pub fn peak_fraction(&self, placement: &Placement) -> f64 {
+        let macs: u64 = placement.layers.iter().map(|p| p.layer.macs()).sum();
+        let cost = self.stage_cost(placement);
+        (macs as f64 / cost.exec_s()) / self.cfg.device.peak_macs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::place;
+    use crate::model::synthetic::{conv_model, fc_model};
+
+    fn model() -> CostModel {
+        CostModel::new(SystemConfig::default())
+    }
+
+    #[test]
+    fn exec_composition() {
+        let c = StageCost { compute_s: 2.0, dev_stream_s: 3.0, host_stream_s: 1.0, invoke_s: 0.5 };
+        assert_eq!(c.exec_s(), 3.0 + 1.0 + 0.5);
+    }
+
+    #[test]
+    fn fc_is_weight_stream_bound() {
+        let m = model();
+        let p = place(&fc_model(1500).layers, &m.cfg.device);
+        let c = m.stage_cost(&p);
+        assert!(c.dev_stream_s > c.compute_s, "{c:?}");
+        assert_eq!(c.host_stream_s, 0.0);
+    }
+
+    #[test]
+    fn conv_is_compute_bound() {
+        let m = model();
+        let p = place(&conv_model(400).layers, &m.cfg.device);
+        let c = m.stage_cost(&p);
+        assert!(c.compute_s > c.dev_stream_s, "{c:?}");
+    }
+
+    #[test]
+    fn conv_gops_much_higher_than_fc() {
+        // paper §III-B: peak CONV GOPS ~17x FC GOPS
+        let m = model();
+        let fc = place(&fc_model(1580).layers, &m.cfg.device);
+        let conv = place(&conv_model(442).layers, &m.cfg.device);
+        let fc_gops = m.stage_cost(&fc).gops(fc_model(1580).macs());
+        let conv_gops = m.stage_cost(&conv).gops(conv_model(442).macs());
+        let ratio = conv_gops / fc_gops;
+        assert!((10.0..25.0).contains(&ratio), "ratio={ratio}");
+    }
+
+    #[test]
+    fn host_spill_causes_cliff() {
+        let m = model();
+        let before = place(&fc_model(1580).layers, &m.cfg.device);
+        let after = place(&fc_model(1620).layers, &m.cfg.device);
+        let t0 = m.stage_cost(&before).exec_s();
+        let t1 = m.stage_cost(&after).exec_s();
+        assert!(t1 / t0 > 20.0, "cliff missing: {t0} -> {t1}");
+    }
+
+    #[test]
+    fn attained_far_below_peak() {
+        // paper §III-B: attained performance dramatically below 4 TOPS
+        let m = model();
+        let p = place(&conv_model(442).layers, &m.cfg.device);
+        let frac = m.peak_fraction(&p);
+        assert!(frac < 0.5, "frac={frac}");
+        assert!(frac > 0.1, "frac={frac}");
+    }
+
+    #[test]
+    fn property_cost_monotone_in_model_size() {
+        crate::util::proptest::forall(64, |rng| {
+            let m = model();
+            let n1 = 100 + rng.below(1000);
+            let n2 = n1 + 40 + rng.below(1000);
+            let p1 = place(&fc_model(n1).layers, &m.cfg.device);
+            let p2 = place(&fc_model(n2).layers, &m.cfg.device);
+            // same host-layer count => strictly more time for bigger model
+            let h1 = p1.layers.iter().filter(|l| l.location == Location::Host).count();
+            let h2 = p2.layers.iter().filter(|l| l.location == Location::Host).count();
+            if h1 == h2 {
+                crate::check!(
+                    m.stage_cost(&p2).exec_s() >= m.stage_cost(&p1).exec_s(),
+                    "n1={n1} n2={n2}"
+                );
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,264 @@
+//! Host-CPU baseline (paper Fig 2c): an analytic timing model for the
+//! sweep plots plus a *real* int8 executor (GEMM + 3x3 conv with int32
+//! accumulation and the shared requantization) so the baseline is an
+//! implementation, not just a formula.  The real executor also serves as a
+//! native oracle for the quantized layer math.
+
+use crate::config::CpuConfig;
+use crate::model::{LayerKind, Model};
+use crate::quant::requantize;
+
+/// Analytic CPU inference time for a model (Fig 2c series).
+pub fn cpu_time_s(model: &Model, cfg: &CpuConfig) -> f64 {
+    let t: f64 = model
+        .layers
+        .iter()
+        .map(|l| {
+            let rate = match l.kind() {
+                LayerKind::Fc => cfg.rate_fc,
+                LayerKind::Conv => cfg.rate_conv,
+            };
+            l.macs() as f64 / rate
+        })
+        .sum();
+    t + cfg.overhead_s
+}
+
+/// Quantized dense layer on the CPU: `y = requant((x - zp_in) @ w + b)`.
+///
+/// `x`: `(k,)`, `w`: `(k, n)` row-major, `b`: `(n,)`.
+pub fn fc_i8(
+    x: &[i8],
+    w: &[i8],
+    b: &[i32],
+    k: usize,
+    n: usize,
+    zp_in: i32,
+    mult: f32,
+    zp_out: i32,
+) -> Vec<i8> {
+    assert_eq!(x.len(), k);
+    assert_eq!(w.len(), k * n);
+    assert_eq!(b.len(), n);
+    let mut acc = b.to_vec();
+    // ikj loop order: stream rows of w, accumulate into acc (cache friendly)
+    for i in 0..k {
+        let xi = x[i] as i32 - zp_in;
+        if xi == 0 {
+            continue;
+        }
+        let row = &w[i * n..(i + 1) * n];
+        for (a, &wv) in acc.iter_mut().zip(row) {
+            *a += xi * wv as i32;
+        }
+    }
+    acc.into_iter().map(|a| requantize(a, mult, zp_out)).collect()
+}
+
+/// Quantized 3x3 stride-1 SAME conv on the CPU.
+///
+/// `x`: `(h, w, cin)` HWC, `wt`: `(3, 3, cin, f)`, `b`: `(f,)`.
+#[allow(clippy::too_many_arguments)]
+pub fn conv3x3_i8(
+    x: &[i8],
+    wt: &[i8],
+    b: &[i32],
+    h: usize,
+    w: usize,
+    cin: usize,
+    f: usize,
+    zp_in: i32,
+    mult: f32,
+    zp_out: i32,
+) -> Vec<i8> {
+    assert_eq!(x.len(), h * w * cin);
+    assert_eq!(wt.len(), 9 * cin * f);
+    assert_eq!(b.len(), f);
+    let mut out = vec![0i8; h * w * f];
+    let mut acc = vec![0i32; f];
+    for oy in 0..h {
+        for ox in 0..w {
+            acc.copy_from_slice(b);
+            for dy in 0..3usize {
+                let iy = oy as isize + dy as isize - 1;
+                if iy < 0 || iy >= h as isize {
+                    continue; // SAME padding contributes (pad - zp_in) = 0
+                }
+                for dx in 0..3usize {
+                    let ix = ox as isize + dx as isize - 1;
+                    if ix < 0 || ix >= w as isize {
+                        continue;
+                    }
+                    let xbase = (iy as usize * w + ix as usize) * cin;
+                    let wbase = (dy * 3 + dx) * cin * f;
+                    for c in 0..cin {
+                        let xv = x[xbase + c] as i32 - zp_in;
+                        if xv == 0 {
+                            continue;
+                        }
+                        let wrow = &wt[wbase + c * f..wbase + (c + 1) * f];
+                        for (a, &wv) in acc.iter_mut().zip(wrow) {
+                            *a += xv * wv as i32;
+                        }
+                    }
+                }
+            }
+            let obase = (oy * w + ox) * f;
+            for (j, &a) in acc.iter().enumerate() {
+                out[obase + j] = requantize(a, mult, zp_out);
+            }
+        }
+    }
+    out
+}
+
+/// Execute a full quantized FC chain natively (weights supplied per layer).
+pub struct NativeFcLayer {
+    pub w: Vec<i8>,
+    pub b: Vec<i32>,
+    pub k: usize,
+    pub n: usize,
+    pub zp_in: i32,
+    pub mult: f32,
+    pub zp_out: i32,
+}
+
+pub fn run_fc_chain(layers: &[NativeFcLayer], input: &[i8]) -> Vec<i8> {
+    let mut x = input.to_vec();
+    for l in layers {
+        x = fc_i8(&x, &l.w, &l.b, l.k, l.n, l.zp_in, l.mult, l.zp_out);
+    }
+    x
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::{conv_model, fc_model};
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn analytic_model_shapes() {
+        let cfg = CpuConfig::default();
+        // slowest FC model ~ 3 ms on the CPU (paper §IV)
+        let t = cpu_time_s(&fc_model(2640), &cfg) * 1e3;
+        assert!((2.0..5.0).contains(&t), "t={t}");
+        // big CONV models are seconds on the CPU
+        let t = cpu_time_s(&conv_model(600), &cfg);
+        assert!(t > 1.0, "t={t}");
+    }
+
+    /// Naive triple-loop oracle for fc_i8.
+    fn fc_naive(
+        x: &[i8], w: &[i8], b: &[i32], k: usize, n: usize,
+        zp_in: i32, mult: f32, zp_out: i32,
+    ) -> Vec<i8> {
+        (0..n)
+            .map(|j| {
+                let mut a = b[j];
+                for i in 0..k {
+                    a += (x[i] as i32 - zp_in) * w[i * n + j] as i32;
+                }
+                requantize(a, mult, zp_out)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn fc_matches_naive() {
+        crate::util::proptest::forall(64, |rng| {
+            let k = rng.below(50) as usize + 1;
+            let n = rng.below(40) as usize + 1;
+            let x = rng.i8_vec(k);
+            let w = rng.i8_vec(k * n);
+            let b: Vec<i32> = (0..n).map(|_| rng.range_i64(-1000, 1000) as i32).collect();
+            let zp_in = rng.range_i64(-128, 127) as i32;
+            let zp_out = rng.range_i64(-128, 127) as i32;
+            let mult = rng.f64_range(1e-5, 0.05) as f32;
+            let got = fc_i8(&x, &w, &b, k, n, zp_in, mult, zp_out);
+            let want = fc_naive(&x, &w, &b, k, n, zp_in, mult, zp_out);
+            crate::check!(got == want, "k={k} n={n}");
+            Ok(())
+        });
+    }
+
+    /// Padding contributes zero because pad value == zp_in.
+    #[test]
+    fn conv_identity_center_tap() {
+        let (h, w, cin, f) = (5, 4, 1, 1);
+        let mut rng = Rng::new(2);
+        let x = rng.i8_vec(h * w);
+        let mut wt = vec![0i8; 9];
+        wt[4] = 1; // center tap
+        let out = conv3x3_i8(&x, &wt, &[0], h, w, cin, f, 0, 1.0, 0);
+        assert_eq!(out, x);
+    }
+
+    /// Dense oracle with explicit zero-padded input.
+    #[test]
+    fn conv_matches_padded_naive() {
+        crate::util::proptest::forall(24, |rng| {
+            let h = rng.below(6) as usize + 2;
+            let w = rng.below(6) as usize + 2;
+            let cin = rng.below(4) as usize + 1;
+            let f = rng.below(5) as usize + 1;
+            let zp_in = rng.range_i64(-100, 100) as i32;
+            let zp_out = rng.range_i64(-100, 100) as i32;
+            let mult = rng.f64_range(1e-4, 0.02) as f32;
+            let x = rng.i8_vec(h * w * cin);
+            let wt = rng.i8_vec(9 * cin * f);
+            let b: Vec<i32> = (0..f).map(|_| rng.range_i64(-500, 500) as i32).collect();
+
+            let got = conv3x3_i8(&x, &wt, &b, h, w, cin, f, zp_in, mult, zp_out);
+
+            // oracle: pad with zp_in (so xv - zp_in = 0 in the halo)
+            let hp = h + 2;
+            let wp = w + 2;
+            let mut xp = vec![zp_in as i8; hp * wp * cin];
+            for y in 0..h {
+                for xcol in 0..w {
+                    for c in 0..cin {
+                        xp[((y + 1) * wp + xcol + 1) * cin + c] = x[(y * w + xcol) * cin + c];
+                    }
+                }
+            }
+            let mut want = vec![0i8; h * w * f];
+            for oy in 0..h {
+                for ox in 0..w {
+                    for j in 0..f {
+                        let mut a = b[j];
+                        for dy in 0..3 {
+                            for dx in 0..3 {
+                                for c in 0..cin {
+                                    let xv =
+                                        xp[((oy + dy) * wp + ox + dx) * cin + c] as i32 - zp_in;
+                                    let wv = wt[((dy * 3 + dx) * cin + c) * f + j] as i32;
+                                    a += xv * wv;
+                                }
+                            }
+                        }
+                        want[(oy * w + ox) * f + j] = requantize(a, mult, zp_out);
+                    }
+                }
+            }
+            crate::check!(got == want, "h={h} w={w} cin={cin} f={f} zp_in={zp_in}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn chain_runs() {
+        let mut rng = Rng::new(1);
+        let l1 = NativeFcLayer {
+            w: rng.i8_vec(8 * 6), b: vec![0; 6], k: 8, n: 6,
+            zp_in: 0, mult: 0.01, zp_out: -128,
+        };
+        let l2 = NativeFcLayer {
+            w: rng.i8_vec(6 * 3), b: vec![10; 3], k: 6, n: 3,
+            zp_in: -128, mult: 0.02, zp_out: 0,
+        };
+        let x = rng.i8_vec(8);
+        let y = run_fc_chain(&[l1, l2], &x);
+        assert_eq!(y.len(), 3);
+    }
+}

@@ -1,0 +1,42 @@
+//! # tpu-pipeline
+//!
+//! Reproduction of *"Improving inference time in multi-TPU systems with
+//! profiled model segmentation"* (Villarrubia, Costero, Igual, Olcoz — PDP
+//! 2023) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **L3 (this crate)** — the coordination contribution: the Edge TPU
+//!   placement/cost simulator, segmentation strategies (uniform /
+//!   memory-balanced / profiled-exhaustive), the pipelined multi-TPU
+//!   executor, and a thread-per-TPU serving runtime that executes real
+//!   numerics via PJRT.
+//! * **L2 (`python/compile/model.py`)** — JAX forward graphs of the paper's
+//!   synthetic FC/CONV models, AOT-lowered per segment to HLO text.
+//! * **L1 (`python/compile/kernels/`)** — quantized Pallas kernels (int8
+//!   matmul, 3x3 conv) the L2 graphs call.
+//!
+//! Python never runs on the request path: `make artifacts` lowers the
+//! segments once; [`runtime`] loads them through the PJRT C API.
+//!
+//! See DESIGN.md for the full system inventory and the experiment index
+//! mapping every paper table/figure to a harness entry point.
+
+pub mod compiler;
+pub mod config;
+pub mod device;
+pub mod hostexec;
+pub mod link;
+pub mod model;
+pub mod quant;
+pub mod util;
+pub mod pipeline;
+pub mod profiler;
+pub mod runtime;
+pub mod segment;
+pub mod coordinator;
+pub mod metrics;
+pub mod report;
+pub mod sweep;
+pub mod trace;
+pub mod cli;
+pub mod serving;
+pub mod ablation;

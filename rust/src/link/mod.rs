@@ -1,0 +1,78 @@
+//! PCIe link model: host<->device DMA for inputs, outputs and the
+//! inter-TPU intermediate tensors that pipelined segmentation introduces.
+//!
+//! In the paper's implementation every inter-TPU handoff goes *through the
+//! host* (device A -> host queue -> device B).  The byte movement occupies
+//! the devices themselves (DMA does not overlap compute on the Edge TPU),
+//! so it is charged to the producing/consuming stage's service time; what
+//! remains between stages is the host-queue latency.
+
+use crate::config::LinkConfig;
+
+/// The PCIe link + host-queue relay model.
+#[derive(Debug, Clone)]
+pub struct Link {
+    pub cfg: LinkConfig,
+}
+
+impl Link {
+    pub fn new(cfg: LinkConfig) -> Self {
+        Link { cfg }
+    }
+
+    /// One-direction activation DMA time (charged to the device that
+    /// sources or sinks the tensor).
+    pub fn xfer_s(&self, bytes: u64) -> f64 {
+        bytes as f64 / self.cfg.act_bw
+    }
+
+    /// Host-queue handoff latency between consecutive stages.
+    pub fn hop_latency_s(&self) -> f64 {
+        self.cfg.hop_latency_s
+    }
+
+    /// End-to-end byte cost of one inter-TPU hop (both DMAs + latency) —
+    /// the single-input view of a handoff.
+    pub fn hop_s(&self, bytes: u64) -> f64 {
+        2.0 * self.xfer_s(bytes) + self.cfg.hop_latency_s
+    }
+
+    /// Host-side per-item pipeline stage overhead (GIL-serialized).
+    pub fn stage_overhead_s(&self) -> f64 {
+        self.cfg.stage_overhead_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LinkConfig;
+
+    fn link() -> Link {
+        Link::new(LinkConfig::default())
+    }
+
+    #[test]
+    fn hop_is_two_transfers_plus_latency() {
+        let l = link();
+        let b = 1_000_000;
+        assert!((l.hop_s(b) - (2.0 * l.xfer_s(b) + l.hop_latency_s())).abs() < 1e-12);
+    }
+
+    #[test]
+    fn fc_intermediates_negligible_conv_not() {
+        // paper §V: FC intermediate (n ints) is tiny vs CONV (W*H*f bytes)
+        let l = link();
+        let fc_hop = l.hop_s(2100); // n=2100 int8 activations
+        let conv_hop = l.hop_s(64 * 64 * 500); // f=500 feature map
+        assert!(fc_hop < 0.3e-3, "fc_hop={fc_hop}");
+        assert!(conv_hop > 5e-3, "conv_hop={conv_hop}");
+    }
+
+    #[test]
+    fn latency_floor() {
+        let l = link();
+        assert!(l.hop_s(0) >= l.cfg.hop_latency_s);
+        assert_eq!(l.xfer_s(0), 0.0);
+    }
+}

@@ -1,0 +1,117 @@
+//! `repro` — the leader binary: paper-reproduction harness + serving
+//! entrypoints.  Run `repro help` for the command list.
+
+use anyhow::Result;
+
+use tpu_pipeline::cli::{self, Args};
+use tpu_pipeline::config::SystemConfig;
+use tpu_pipeline::model::synthetic::{conv_model, fc_model};
+use tpu_pipeline::pipeline::{simulate_partition, SimOptions};
+use tpu_pipeline::serving;
+use tpu_pipeline::sweep::Kind;
+use tpu_pipeline::trace;
+use tpu_pipeline::util::fmt_seconds;
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let args = match Args::parse(&argv) {
+        Ok(a) => a,
+        Err(e) => {
+            eprintln!("{e}\n{}", cli::USAGE);
+            std::process::exit(2);
+        }
+    };
+    let result = match args.command.as_str() {
+        "serve" => cmd_serve(&args),
+        "gantt" => cmd_gantt(&args),
+        _ => cli::run(&args).map(|out| print!("{out}")),
+    };
+    if let Err(e) = result {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+/// `repro serve`: pipelined serving of a real artifact model over PJRT.
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = args.config()?;
+    let artifact_dir = std::path::PathBuf::from(
+        args.str_flag("artifacts", serving::default_artifact_dir().to_str().unwrap()),
+    );
+    let model_name = args.str_flag("model", "fc_n256");
+    let n_tpus = args.usize_flag("tpus", 3)?;
+    let batch = args.batch()?;
+    let strategy = args.strategy()?;
+
+    let manifest = serving::load_manifest(&artifact_dir)?;
+    let entry = manifest.model(&model_name)?;
+    let plan = serving::plan(entry, n_tpus, strategy, &cfg)?;
+    println!(
+        "model {} on {} simulated TPUs, split {} ({})",
+        model_name,
+        n_tpus,
+        plan.partition.label(),
+        strategy.name()
+    );
+
+    let pipeline = serving::spawn_pipeline(&artifact_dir, entry, &plan, 64)?;
+    let requests = serving::synth_requests(&plan, batch, 0xC0FFEE);
+    let report = serving::serve_batch(&pipeline, &plan, requests)?;
+
+    println!("batch {} served:", report.batch);
+    println!("  real wall (PJRT CPU):  {}", fmt_seconds(report.wall_s));
+    println!("  real throughput:       {:.0} inf/s", report.real_throughput);
+    println!("  sim Edge TPU makespan: {}", fmt_seconds(report.sim_makespan_s));
+    println!("  sim per-inference:     {}", fmt_seconds(report.sim_per_item_s));
+    println!("  sim single-TPU baseline: {}", fmt_seconds(plan.single_tpu_s));
+    println!("  sim speedup vs 1 TPU:  {:.1}x", report.sim_speedup_vs_one_tpu);
+    for (i, sm) in pipeline.stage_metrics.iter().enumerate() {
+        let s = sm.snapshot();
+        println!(
+            "  stage {i}: {} items, mean exec {} (real)",
+            s.items,
+            fmt_seconds(s.mean_exec_s)
+        );
+    }
+    pipeline.shutdown();
+    Ok(())
+}
+
+/// `repro gantt`: ASCII pipeline schedule for a simulated configuration.
+fn cmd_gantt(args: &Args) -> Result<()> {
+    let cfg: SystemConfig = args.config()?;
+    let kind = args.kind()?;
+    let x = args.usize_flag("x", 2100)? as u64;
+    let n_tpus = args.usize_flag("tpus", 3)?;
+    let batch = args.usize_flag("batch", 8)?;
+    let model = match kind {
+        Kind::Fc => fc_model(x),
+        Kind::Conv => conv_model(x),
+    };
+    let strategy = args.strategy()?;
+    let part = if n_tpus == 1 {
+        tpu_pipeline::segment::Partition::whole(model.len())
+    } else {
+        strategy.partition(&model, n_tpus, &cfg)
+    };
+    let result = simulate_partition(
+        &model,
+        &part,
+        &cfg,
+        &SimOptions { batch, queue_capacity: None, record_gantt: true },
+    );
+    println!(
+        "{} split {} over {n_tpus} TPUs, batch {batch} (strategy {}):",
+        model.name,
+        part.label(),
+        strategy.name()
+    );
+    print!("{}", trace::gantt_ascii(&result, 100));
+    println!(
+        "makespan {} | per-item {} | bottleneck stage {}",
+        fmt_seconds(result.makespan_s),
+        fmt_seconds(result.makespan_s / batch as f64),
+        result.bottleneck()
+    );
+    Ok(())
+}

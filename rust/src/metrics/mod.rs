@@ -1,0 +1,150 @@
+//! Serving metrics: per-stage counters/timers and end-to-end latency
+//! histograms, shared across worker threads.
+
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::util::stats::{LatencyHistogram, Summary};
+
+/// Metrics for one pipeline stage (one TPU worker).
+#[derive(Debug, Default)]
+pub struct StageMetrics {
+    inner: Mutex<StageInner>,
+}
+
+#[derive(Debug, Default)]
+struct StageInner {
+    items: u64,
+    busy_s: f64,
+    exec: Summary,
+}
+
+impl StageMetrics {
+    pub fn record(&self, exec: Duration) {
+        let mut g = self.inner.lock().unwrap();
+        g.items += 1;
+        g.busy_s += exec.as_secs_f64();
+        g.exec.add(exec.as_secs_f64());
+    }
+
+    pub fn snapshot(&self) -> StageSnapshot {
+        let g = self.inner.lock().unwrap();
+        StageSnapshot {
+            items: g.items,
+            busy_s: g.busy_s,
+            mean_exec_s: g.exec.mean(),
+            p95_exec_s: if g.exec.is_empty() { f64::NAN } else { g.exec.p95() },
+        }
+    }
+}
+
+/// Immutable view of one stage's counters.
+#[derive(Debug, Clone, Copy)]
+pub struct StageSnapshot {
+    pub items: u64,
+    pub busy_s: f64,
+    pub mean_exec_s: f64,
+    pub p95_exec_s: f64,
+}
+
+/// End-to-end serving metrics.
+#[derive(Debug, Default)]
+pub struct ServeMetrics {
+    inner: Mutex<ServeInner>,
+}
+
+#[derive(Debug)]
+struct ServeInner {
+    completed: u64,
+    real_latency: LatencyHistogram,
+    sim_latency: LatencyHistogram,
+}
+
+impl Default for ServeInner {
+    fn default() -> Self {
+        ServeInner {
+            completed: 0,
+            real_latency: LatencyHistogram::new(),
+            sim_latency: LatencyHistogram::new(),
+        }
+    }
+}
+
+impl ServeMetrics {
+    pub fn record(&self, real_s: f64, sim_s: f64) {
+        let mut g = self.inner.lock().unwrap();
+        g.completed += 1;
+        g.real_latency.record(real_s);
+        g.sim_latency.record(sim_s);
+    }
+
+    pub fn snapshot(&self) -> ServeSnapshot {
+        let g = self.inner.lock().unwrap();
+        ServeSnapshot {
+            completed: g.completed,
+            real_p50_s: g.real_latency.percentile(50.0),
+            real_p95_s: g.real_latency.percentile(95.0),
+            real_mean_s: g.real_latency.mean(),
+            sim_p50_s: g.sim_latency.percentile(50.0),
+            sim_mean_s: g.sim_latency.mean(),
+        }
+    }
+}
+
+/// Immutable view of serving totals.
+#[derive(Debug, Clone, Copy)]
+pub struct ServeSnapshot {
+    pub completed: u64,
+    pub real_p50_s: f64,
+    pub real_p95_s: f64,
+    pub real_mean_s: f64,
+    pub sim_p50_s: f64,
+    pub sim_mean_s: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_metrics_accumulate() {
+        let m = StageMetrics::default();
+        m.record(Duration::from_millis(2));
+        m.record(Duration::from_millis(4));
+        let s = m.snapshot();
+        assert_eq!(s.items, 2);
+        assert!((s.busy_s - 0.006).abs() < 1e-9);
+        assert!((s.mean_exec_s - 0.003).abs() < 1e-9);
+    }
+
+    #[test]
+    fn serve_metrics_histograms() {
+        let m = ServeMetrics::default();
+        for i in 1..=100 {
+            m.record(i as f64 * 1e-3, i as f64 * 2e-3);
+        }
+        let s = m.snapshot();
+        assert_eq!(s.completed, 100);
+        assert!(s.real_p50_s > 0.03 && s.real_p50_s < 0.08, "{s:?}");
+        assert!(s.sim_mean_s > s.real_mean_s);
+    }
+
+    #[test]
+    fn concurrent_recording() {
+        let m = std::sync::Arc::new(StageMetrics::default());
+        let handles: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..250 {
+                        m.record(Duration::from_micros(10));
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        assert_eq!(m.snapshot().items, 1000);
+    }
+}

@@ -1,0 +1,188 @@
+//! Model IR: the layer graph the compiler places and the pipeline executes.
+//!
+//! Mirrors `python/compile/specs.py` (the build-time twin that materializes
+//! weights): linear chains of FC or 3x3/stride-1/SAME CONV layers, with the
+//! paper's MAC and weight-byte accounting as methods.
+
+pub mod synthetic;
+
+/// Layer kind + dimensions.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Layer {
+    /// Dense: `(in_features,) -> (out_features,)`.
+    Fc { in_features: u64, out_features: u64 },
+    /// 3x3 stride-1 SAME conv: `(h, w, cin) -> (h, w, filters)`.
+    Conv { height: u64, width: u64, cin: u64, filters: u64, ksize: u64 },
+}
+
+/// Layer family, used where cost constants differ (arithmetic intensity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum LayerKind {
+    Fc,
+    Conv,
+}
+
+impl Layer {
+    pub fn kind(&self) -> LayerKind {
+        match self {
+            Layer::Fc { .. } => LayerKind::Fc,
+            Layer::Conv { .. } => LayerKind::Conv,
+        }
+    }
+
+    /// MAC operations for one inference (paper §III-A).
+    pub fn macs(&self) -> u64 {
+        match *self {
+            Layer::Fc { in_features, out_features } => in_features * out_features,
+            Layer::Conv { height, width, cin, filters, ksize } => {
+                height * width * cin * filters * ksize * ksize
+            }
+        }
+    }
+
+    /// int8 weight bytes (biases excluded, as in the paper's accounting —
+    /// they grow linearly and are asymptotically negligible).
+    pub fn weight_bytes(&self) -> u64 {
+        match *self {
+            Layer::Fc { in_features, out_features } => in_features * out_features,
+            Layer::Conv { cin, filters, ksize, .. } => ksize * ksize * cin * filters,
+        }
+    }
+
+    /// int8 elements of the layer's input activation tensor.
+    pub fn input_elems(&self) -> u64 {
+        match *self {
+            Layer::Fc { in_features, .. } => in_features,
+            Layer::Conv { height, width, cin, .. } => height * width * cin,
+        }
+    }
+
+    /// int8 elements of the layer's output activation tensor.
+    pub fn output_elems(&self) -> u64 {
+        match *self {
+            Layer::Fc { out_features, .. } => out_features,
+            Layer::Conv { height, width, filters, .. } => height * width * filters,
+        }
+    }
+
+    /// Arithmetic intensity: MACs per weight byte (FC = 1; CONV = H·W —
+    /// the reuse that makes CONV ~17x faster on the device, §III-B).
+    pub fn intensity(&self) -> f64 {
+        self.macs() as f64 / self.weight_bytes() as f64
+    }
+}
+
+/// A model: a linear chain of layers (all the paper's synthetic models and
+/// its segmentation machinery operate on chains).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Model {
+    pub name: String,
+    pub layers: Vec<Layer>,
+}
+
+impl Model {
+    pub fn new(name: impl Into<String>, layers: Vec<Layer>) -> Self {
+        let m = Model { name: name.into(), layers };
+        m.validate();
+        m
+    }
+
+    /// Chains must be shape-consistent: each layer consumes its
+    /// predecessor's output.
+    pub fn validate(&self) {
+        for (i, pair) in self.layers.windows(2).enumerate() {
+            let (a, b) = (&pair[0], &pair[1]);
+            assert_eq!(
+                a.output_elems(),
+                b.input_elems(),
+                "{}: layer {} output {} != layer {} input {}",
+                self.name,
+                i,
+                a.output_elems(),
+                i + 1,
+                b.input_elems()
+            );
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.layers.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.layers.is_empty()
+    }
+
+    pub fn macs(&self) -> u64 {
+        self.layers.iter().map(Layer::macs).sum()
+    }
+
+    pub fn weight_bytes(&self) -> u64 {
+        self.layers.iter().map(Layer::weight_bytes).sum()
+    }
+
+    /// Dominant layer kind (the synthetic models are homogeneous; for
+    /// mixed models this picks the kind holding the most weight bytes,
+    /// which is what the host-streaming constant keys off).
+    pub fn dominant_kind(&self) -> LayerKind {
+        let conv: u64 = self
+            .layers
+            .iter()
+            .filter(|l| l.kind() == LayerKind::Conv)
+            .map(Layer::weight_bytes)
+            .sum();
+        if conv * 2 >= self.weight_bytes() {
+            LayerKind::Conv
+        } else {
+            LayerKind::Fc
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fc_layer_accounting() {
+        let l = Layer::Fc { in_features: 64, out_features: 100 };
+        assert_eq!(l.macs(), 6400);
+        assert_eq!(l.weight_bytes(), 6400);
+        assert_eq!(l.input_elems(), 64);
+        assert_eq!(l.output_elems(), 100);
+        assert_eq!(l.intensity(), 1.0);
+    }
+
+    #[test]
+    fn conv_layer_accounting() {
+        let l = Layer::Conv { height: 64, width: 64, cin: 3, filters: 32, ksize: 3 };
+        assert_eq!(l.macs(), 64 * 64 * 3 * 32 * 9);
+        assert_eq!(l.weight_bytes(), 9 * 3 * 32);
+        assert_eq!(l.intensity(), (64 * 64) as f64);
+    }
+
+    #[test]
+    #[should_panic(expected = "output")]
+    fn inconsistent_chain_panics() {
+        Model::new(
+            "bad",
+            vec![
+                Layer::Fc { in_features: 8, out_features: 16 },
+                Layer::Fc { in_features: 17, out_features: 4 },
+            ],
+        );
+    }
+
+    #[test]
+    fn dominant_kind_mixed() {
+        let m = Model::new(
+            "mix",
+            vec![
+                Layer::Conv { height: 8, width: 8, cin: 3, filters: 4, ksize: 3 },
+                // flatten boundary isn't modeled; craft matching dims
+                Layer::Fc { in_features: 8 * 8 * 4, out_features: 10_000 },
+            ],
+        );
+        assert_eq!(m.dominant_kind(), LayerKind::Fc);
+    }
+}

@@ -1,0 +1,182 @@
+//! The paper's synthetic model generators and sweep grids (§III-A/B).
+//!
+//! FC: `L_FC = 5`, `I = 64`, `O = 10`, `n` in `[100, 2640]` step 40.
+//! CONV: `L_CONV = 5`, `C = 3`, `W x H = 64 x 64`, `3 x 3` filters,
+//! `f` in `[32, 702]` step 10.
+
+use super::{Layer, Model};
+
+/// Paper FC sweep parameters.
+pub const FC_LAYERS: usize = 5;
+pub const FC_INPUT: u64 = 64;
+pub const FC_OUTPUT: u64 = 10;
+pub const FC_N_MIN: u64 = 100;
+pub const FC_N_MAX: u64 = 2640;
+pub const FC_N_STEP: u64 = 40;
+
+/// Paper CONV sweep parameters.
+pub const CONV_LAYERS: usize = 5;
+pub const CONV_C: u64 = 3;
+pub const CONV_H: u64 = 64;
+pub const CONV_W: u64 = 64;
+pub const CONV_K: u64 = 3;
+pub const CONV_F_MIN: u64 = 32;
+pub const CONV_F_MAX: u64 = 702;
+pub const CONV_F_STEP: u64 = 10;
+
+/// `I -> n -> n -> n -> n -> O` dense chain.
+pub fn fc_model(n: u64) -> Model {
+    fc_model_custom(n, FC_LAYERS, FC_INPUT, FC_OUTPUT)
+}
+
+pub fn fc_model_custom(n: u64, layers: usize, input: u64, output: u64) -> Model {
+    assert!(layers >= 2, "need >= 2 layers");
+    let mut widths = vec![input];
+    widths.extend(std::iter::repeat(n).take(layers - 1));
+    widths.push(output);
+    let layers = widths
+        .windows(2)
+        .map(|w| Layer::Fc { in_features: w[0], out_features: w[1] })
+        .collect();
+    Model::new(format!("fc_n{n}"), layers)
+}
+
+/// `C -> f -> f -> f -> f` channel conv chain over 64x64 images.
+pub fn conv_model(f: u64) -> Model {
+    conv_model_custom(f, CONV_LAYERS, CONV_C, CONV_H, CONV_W)
+}
+
+pub fn conv_model_custom(f: u64, layers: usize, c: u64, h: u64, w: u64) -> Model {
+    assert!(layers >= 1);
+    let mut cins = vec![c];
+    cins.extend(std::iter::repeat(f).take(layers - 1));
+    let layers = cins
+        .iter()
+        .map(|&cin| Layer::Conv { height: h, width: w, cin, filters: f, ksize: CONV_K })
+        .collect();
+    Model::new(format!("conv_f{f}"), layers)
+}
+
+/// The FC sweep grid (Fig 2, Fig 4–6 x-axes).
+pub fn fc_sweep() -> Vec<Model> {
+    (FC_N_MIN..=FC_N_MAX).step_by(FC_N_STEP as usize).map(fc_model).collect()
+}
+
+/// The CONV sweep grid.
+pub fn conv_sweep() -> Vec<Model> {
+    (CONV_F_MIN..=CONV_F_MAX).step_by(CONV_F_STEP as usize).map(conv_model).collect()
+}
+
+/// Heterogeneous dense chain from an explicit width list (paper §VI:
+/// "more complex models, possibly with heterogeneous layers both in type
+/// and number of nodes").  `widths = [i, h1, h2, ..., o]` gives
+/// `len(widths) - 1` layers.
+pub fn hetero_fc_model(name: &str, widths: &[u64]) -> Model {
+    assert!(widths.len() >= 2);
+    let layers = widths
+        .windows(2)
+        .map(|w| Layer::Fc { in_features: w[0], out_features: w[1] })
+        .collect();
+    Model::new(name.to_string(), layers)
+}
+
+/// A mixed CONV->FC chain (a CNN-classifier shape): `conv_layers` 3x3
+/// convs over `h x w` with `f` filters, then dense layers over the
+/// flattened feature map.
+pub fn conv_fc_model(f: u64, conv_layers: usize, h: u64, w: u64, fc_out: &[u64]) -> Model {
+    let mut layers = Vec::new();
+    let mut cin = CONV_C;
+    for _ in 0..conv_layers {
+        layers.push(Layer::Conv { height: h, width: w, cin, filters: f, ksize: CONV_K });
+        cin = f;
+    }
+    let mut infeat = h * w * f; // flatten
+    for &o in fc_out {
+        layers.push(Layer::Fc { in_features: infeat, out_features: o });
+        infeat = o;
+    }
+    Model::new(format!("convfc_f{f}"), layers)
+}
+
+/// Closed-form FC MAC count the paper quotes: `I·n + (L-2)·n² + n·O`.
+pub fn fc_macs_closed_form(n: u64) -> u64 {
+    FC_INPUT * n + (FC_LAYERS as u64 - 2) * n * n + n * FC_OUTPUT
+}
+
+/// Closed-form CONV MAC count:
+/// `W·H·f·Fw·Fh·(C + f·(L-1))` (paper §III-A).
+pub fn conv_macs_closed_form(f: u64) -> u64 {
+    CONV_W * CONV_H * f * CONV_K * CONV_K * (CONV_C + f * (CONV_LAYERS as u64 - 1))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::LayerKind;
+
+    #[test]
+    fn fc_matches_closed_form() {
+        for n in [100, 1140, 1580, 2100, 2640] {
+            assert_eq!(fc_model(n).macs(), fc_macs_closed_form(n), "n={n}");
+        }
+    }
+
+    #[test]
+    fn conv_matches_closed_form() {
+        for f in [32, 292, 442, 702] {
+            assert_eq!(conv_model(f).macs(), conv_macs_closed_form(f), "f={f}");
+        }
+    }
+
+    #[test]
+    fn paper_table_anchor_points() {
+        // Table I: first FC step sits between ~0.76e7 and ~0.79e7 MACs
+        assert!((fc_model(1580).macs() as f64 - 0.76e7).abs() / 0.76e7 < 0.02);
+        // Table II row 1: 2.88e10 MACs at f ~ 442
+        assert!((conv_model(442).macs() as f64 - 2.88e10).abs() / 2.88e10 < 0.01);
+    }
+
+    #[test]
+    fn sweep_sizes() {
+        assert_eq!(fc_sweep().len(), ((FC_N_MAX - FC_N_MIN) / FC_N_STEP + 1) as usize);
+        assert_eq!(
+            conv_sweep().len(),
+            ((CONV_F_MAX - CONV_F_MIN) / CONV_F_STEP + 1) as usize
+        );
+        // grid 100 + 40k stays within N_max = 2640 (last point is 2620)
+        assert_eq!(fc_sweep().last().unwrap().layers[1].input_elems(), 2620);
+    }
+
+    #[test]
+    fn hetero_fc_chain() {
+        let m = hetero_fc_model("pyramid", &[64, 2048, 512, 128, 10]);
+        assert_eq!(m.len(), 4);
+        assert_eq!(m.macs(), 64 * 2048 + 2048 * 512 + 512 * 128 + 128 * 10);
+        m.validate();
+    }
+
+    #[test]
+    fn conv_fc_chain_is_consistent() {
+        let m = conv_fc_model(32, 3, 32, 32, &[256, 10]);
+        assert_eq!(m.len(), 5);
+        // flatten boundary: conv out elems == fc in features
+        assert_eq!(m.layers[2].output_elems(), m.layers[3].input_elems());
+        assert_eq!(m.layers[3].input_elems(), 32 * 32 * 32);
+        // heterogeneous arithmetic intensity: conv >> fc
+        assert!(m.layers[0].intensity() > 100.0 * m.layers[3].intensity());
+    }
+
+    #[test]
+    fn structure() {
+        let m = fc_model(100);
+        assert_eq!(m.len(), 5);
+        assert_eq!(m.layers[0], Layer::Fc { in_features: 64, out_features: 100 });
+        assert_eq!(m.layers[4], Layer::Fc { in_features: 100, out_features: 10 });
+
+        let c = conv_model(32);
+        assert_eq!(c.len(), 5);
+        assert_eq!(c.layers[0].kind(), LayerKind::Conv);
+        assert_eq!(c.layers[0].weight_bytes(), 9 * 3 * 32);
+        assert_eq!(c.layers[1].weight_bytes(), 9 * 32 * 32);
+    }
+}

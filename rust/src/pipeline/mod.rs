@@ -1,0 +1,378 @@
+//! Pipelined multi-TPU execution model (paper §V, Fig 3).
+//!
+//! Stages are TPUs; items flow `host -> TPU_0 -> host -> TPU_1 -> ... ->
+//! host`.  Every handoff crosses PCIe twice and pays a host-thread
+//! overhead (the paper implements stages as Python threads + queues).
+//!
+//! The simulator is the exact pipeline recurrence (equivalent to a
+//! discrete-event simulation of FIFO stages with unbounded — or bounded —
+//! queues), with two Edge-TPU-specific effects:
+//!
+//! * **DMA occupies the device**: a stage's service time includes moving
+//!   its input and output activations over PCIe (no compute/transfer
+//!   overlap) — this is what makes CONV segmentation a net loss for small
+//!   models even under batching (§V-B).
+//! * **GIL-serialized host**: the per-item stage overhead (Python worker
+//!   thread + queue handoff) is executed by a single host server shared by
+//!   ALL stages, so pipeline throughput can never exceed one item per
+//!   `n_stages * stage_overhead` — this is why the optimum is the minimum
+//!   number of TPUs that avoids host memory (§V-C).
+//!
+//! ```text
+//! dispatch(i, k) = max(arrive(i, k), finish(i, k-1), host_free)
+//! host_free      = dispatch + overhead
+//! finish(i, k)   = dispatch + overhead + in_xfer_i + exec_i + out_xfer_i
+//! arrive(i+1,k)  = finish(i, k) + hop_latency
+//! ```
+//!
+//! With bounded queues, `dispatch(i-1, ·)` additionally blocks until there
+//! is queue room downstream (backpressure).
+
+use crate::compiler::{place, Placement};
+use crate::config::SystemConfig;
+use crate::device::CostModel;
+use crate::link::Link;
+use crate::model::Model;
+use crate::segment::Partition;
+
+/// Per-stage timing inputs for the simulator.
+#[derive(Debug, Clone, PartialEq)]
+pub struct StageSpec {
+    /// On-TPU execution time per item (incl. host weight streaming).
+    pub exec_s: f64,
+    /// Input tensor bytes (transfer into this stage).
+    pub in_bytes: u64,
+    /// Output tensor bytes (transfer out of this stage).
+    pub out_bytes: u64,
+}
+
+/// Build stage specs for a partition of a model under the cost model.
+pub fn build_stages(model: &Model, partition: &Partition, cfg: &SystemConfig) -> Vec<StageSpec> {
+    let cm = CostModel::new(cfg.clone());
+    partition
+        .segments(model)
+        .iter()
+        .map(|seg| {
+            let placement: Placement = place(seg, &cfg.device);
+            let cost = cm.stage_cost(&placement);
+            StageSpec {
+                exec_s: cost.exec_s(),
+                in_bytes: seg.first().unwrap().input_elems(),
+                out_bytes: seg.last().unwrap().output_elems(),
+            }
+        })
+        .collect()
+}
+
+/// One scheduled execution interval (for Gantt traces).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GanttEntry {
+    pub stage: usize,
+    pub item: usize,
+    pub start_s: f64,
+    pub end_s: f64,
+}
+
+/// Simulation output.
+#[derive(Debug, Clone)]
+pub struct PipelineResult {
+    /// Wall-clock to finish the whole batch (last output lands on host).
+    pub makespan_s: f64,
+    /// Per-item end-to-end latencies (input submitted -> output on host).
+    pub latencies_s: Vec<f64>,
+    /// Per-stage total busy time.
+    pub stage_busy_s: Vec<f64>,
+    /// Execution schedule (stage x item intervals).
+    pub gantt: Vec<GanttEntry>,
+}
+
+impl PipelineResult {
+    /// Batch-amortized time per inference (the paper's §V-B metric).
+    pub fn per_item_s(&self, batch: usize) -> f64 {
+        self.makespan_s / batch as f64
+    }
+
+    /// Stage utilization over the makespan.
+    pub fn utilization(&self) -> Vec<f64> {
+        self.stage_busy_s.iter().map(|b| b / self.makespan_s).collect()
+    }
+
+    /// Index of the bottleneck stage.
+    pub fn bottleneck(&self) -> usize {
+        self.stage_busy_s
+            .iter()
+            .enumerate()
+            .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .map(|(i, _)| i)
+            .unwrap_or(0)
+    }
+}
+
+/// Simulation knobs.
+#[derive(Debug, Clone)]
+pub struct SimOptions {
+    /// Items in the batch.
+    pub batch: usize,
+    /// Bounded inter-stage queue capacity (None = unbounded, the paper's
+    /// Python `queue.Queue()` default).
+    pub queue_capacity: Option<usize>,
+    /// Record the Gantt schedule.
+    pub record_gantt: bool,
+}
+
+impl Default for SimOptions {
+    fn default() -> Self {
+        SimOptions { batch: 1, queue_capacity: None, record_gantt: false }
+    }
+}
+
+/// Simulate the pipelined execution of `batch` items through `stages`.
+///
+/// Event-driven: repeatedly dispatch, among all stages with a ready item,
+/// the one whose dispatch time (`max(ready, stage_free, host_free)`) is
+/// earliest — i.e. the shared host server is granted FCFS in *simulated*
+/// time.  With `stage_overhead = 0` this reduces to the classical tandem
+/// recurrence (`makespan = Σ service + (B-1)·max service`).
+pub fn simulate(stages: &[StageSpec], link: &Link, opts: &SimOptions) -> PipelineResult {
+    assert!(!stages.is_empty() && opts.batch > 0);
+    let s = stages.len();
+    let b = opts.batch;
+    let overhead = link.stage_overhead_s();
+
+    // per-stage total service time: overhead + DMA in + exec + DMA out
+    let service: Vec<f64> = stages
+        .iter()
+        .map(|st| {
+            overhead + link.xfer_s(st.in_bytes) + st.exec_s + link.xfer_s(st.out_bytes)
+        })
+        .collect();
+
+    // per-stage FIFO of (item, ready_time); all items ready at stage 0 at t=0
+    let mut queues: Vec<std::collections::VecDeque<(usize, f64)>> =
+        (0..s).map(|_| std::collections::VecDeque::new()).collect();
+    for k in 0..b {
+        queues[0].push_back((k, 0.0));
+    }
+    let mut stage_free = vec![0.0f64; s];
+    let mut host_free = 0.0f64;
+    let mut latencies = vec![0.0f64; b];
+    let mut busy = vec![0.0f64; s];
+    let mut gantt = Vec::new();
+    let mut makespan = 0.0f64;
+    let mut remaining = b * s;
+
+    while remaining > 0 {
+        // candidate dispatch per stage (head of its queue, FIFO)
+        let mut best: Option<(f64, usize)> = None; // (dispatch_t, stage)
+        for i in 0..s {
+            let Some(&(_, ready)) = queues[i].front() else { continue };
+            // bounded downstream queue: block before service (the worker
+            // cannot take a new item while it has nowhere to put it)
+            if let Some(cap) = opts.queue_capacity {
+                if i + 1 < s && queues[i + 1].len() >= cap {
+                    continue;
+                }
+            }
+            let t = ready.max(stage_free[i]).max(host_free);
+            // prefer later stages on ties so downstream drains first
+            let better = match best {
+                None => true,
+                Some((bt, bi)) => t < bt - 1e-15 || ((t - bt).abs() <= 1e-15 && i > bi),
+            };
+            if better {
+                best = Some((t, i));
+            }
+        }
+        let (t, i) = best.expect("pipeline stalled: no dispatchable stage");
+        let (item, _) = queues[i].pop_front().unwrap();
+        host_free = t + overhead;
+        let finish = t + service[i];
+        stage_free[i] = finish;
+        busy[i] += service[i];
+        if opts.record_gantt {
+            gantt.push(GanttEntry { stage: i, item, start_s: t, end_s: finish });
+        }
+        if i + 1 < s {
+            queues[i + 1].push_back((item, finish + link.hop_latency_s()));
+        } else {
+            latencies[item] = finish; // submitted at t=0
+            makespan = makespan.max(finish);
+        }
+        remaining -= 1;
+    }
+
+    PipelineResult { makespan_s: makespan, latencies_s: latencies, stage_busy_s: busy, gantt }
+}
+
+/// Convenience: simulate a model/partition pair end-to-end.
+pub fn simulate_partition(
+    model: &Model,
+    partition: &Partition,
+    cfg: &SystemConfig,
+    opts: &SimOptions,
+) -> PipelineResult {
+    let stages = build_stages(model, partition, cfg);
+    simulate(&stages, &Link::new(cfg.link.clone()), opts)
+}
+
+/// Single-TPU, single-input latency (the paper's baseline): input
+/// transfer + whole-model execution + output transfer, no pipeline
+/// overheads.
+pub fn single_tpu_latency_s(model: &Model, cfg: &SystemConfig) -> f64 {
+    let cm = CostModel::new(cfg.clone());
+    let link = Link::new(cfg.link.clone());
+    let p = place(&model.layers, &cfg.device);
+    link.xfer_s(model.layers.first().unwrap().input_elems())
+        + cm.stage_cost(&p).exec_s()
+        + link.xfer_s(model.layers.last().unwrap().output_elems())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::{conv_model, fc_model};
+    use crate::segment::uniform_cuts;
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    fn flat_stages(execs: &[f64]) -> Vec<StageSpec> {
+        execs.iter().map(|&e| StageSpec { exec_s: e, in_bytes: 0, out_bytes: 0 }).collect()
+    }
+
+    /// Zero-byte link with no overheads isolates the pure recurrence.
+    fn free_link() -> Link {
+        Link::new(crate::config::LinkConfig {
+            act_bw: f64::INFINITY,
+            hop_latency_s: 0.0,
+            stage_overhead_s: 0.0,
+            ..Default::default()
+        })
+    }
+
+    #[test]
+    fn single_item_latency_is_sum() {
+        let stages = flat_stages(&[1.0, 2.0, 3.0]);
+        let r = simulate(&stages, &free_link(), &SimOptions::default());
+        assert!((r.makespan_s - 6.0).abs() < 1e-12);
+        assert_eq!(r.latencies_s.len(), 1);
+    }
+
+    #[test]
+    fn steady_state_is_bottleneck_limited() {
+        let stages = flat_stages(&[1.0, 5.0, 2.0]);
+        let b = 100;
+        let r = simulate(&stages, &free_link(), &SimOptions { batch: b, ..Default::default() });
+        // fill (8) + (b-1) * bottleneck (5)
+        let expect = 8.0 + (b as f64 - 1.0) * 5.0;
+        assert!((r.makespan_s - expect).abs() < 1e-9, "makespan={}", r.makespan_s);
+        assert_eq!(r.bottleneck(), 1);
+    }
+
+    #[test]
+    fn utilization_bottleneck_near_one() {
+        let stages = flat_stages(&[1.0, 5.0, 2.0]);
+        let r = simulate(&stages, &free_link(), &SimOptions { batch: 200, ..Default::default() });
+        let u = r.utilization();
+        assert!(u[1] > 0.98, "u={u:?}");
+        assert!(u[0] < 0.25);
+    }
+
+    #[test]
+    fn bounded_queue_still_completes_and_is_slower_or_equal() {
+        let stages = flat_stages(&[1.0, 5.0, 1.0]);
+        let unb = simulate(&stages, &free_link(), &SimOptions { batch: 50, ..Default::default() });
+        let bnd = simulate(
+            &stages,
+            &free_link(),
+            &SimOptions { batch: 50, queue_capacity: Some(1), record_gantt: false },
+        );
+        assert!(bnd.makespan_s >= unb.makespan_s - 1e-12);
+        assert_eq!(bnd.latencies_s.len(), 50);
+    }
+
+    #[test]
+    fn gantt_entries_are_consistent() {
+        let stages = flat_stages(&[1.0, 2.0]);
+        let r = simulate(
+            &stages,
+            &free_link(),
+            &SimOptions { batch: 3, queue_capacity: None, record_gantt: true },
+        );
+        assert_eq!(r.gantt.len(), 6);
+        for e in &r.gantt {
+            assert!(e.end_s > e.start_s);
+        }
+        // per-stage intervals do not overlap
+        for stage in 0..2 {
+            let mut xs: Vec<_> = r.gantt.iter().filter(|e| e.stage == stage).collect();
+            xs.sort_by(|a, b| a.start_s.partial_cmp(&b.start_s).unwrap());
+            for w in xs.windows(2) {
+                assert!(w[1].start_s >= w[0].end_s - 1e-12);
+            }
+        }
+    }
+
+    /// Paper Fig 4 (FC): once the single-TPU placement spills to host,
+    /// segmenting onto 2 TPUs beats 1 TPU even for a SINGLE input.
+    #[test]
+    fn fc_single_input_segmentation_wins_after_spill() {
+        let cfg = cfg();
+        let m = fc_model(2100);
+        let t1 = single_tpu_latency_s(&m, &cfg);
+        // 2 TPUs: one segment still spills one layer -> partial win
+        let r2 = simulate_partition(&m, &uniform_cuts(5, 2), &cfg, &SimOptions::default());
+        assert!(r2.makespan_s < 0.7 * t1, "t1={t1} t2={}", r2.makespan_s);
+        // 4 TPUs: everything fits on-device -> order-of-magnitude win
+        let r4 = simulate_partition(&m, &uniform_cuts(5, 4), &cfg, &SimOptions::default());
+        assert!(r4.makespan_s < t1 / 3.0, "t1={t1} t4={}", r4.makespan_s);
+    }
+
+    /// ...but for models that fit on one TPU, segmentation only adds
+    /// communication (slightly slower), §V-A.
+    #[test]
+    fn fc_single_input_segmentation_costs_pre_spill() {
+        let cfg = cfg();
+        let m = fc_model(1000);
+        let t1 = single_tpu_latency_s(&m, &cfg);
+        let r4 = simulate_partition(&m, &uniform_cuts(5, 4), &cfg, &SimOptions::default());
+        assert!(r4.makespan_s > t1, "t1={t1} t4={}", r4.makespan_s);
+        // "practically negligible compared with the difference between
+        // steps" (steps are ~7-11 ms)
+        assert!(r4.makespan_s - t1 < 5e-3);
+    }
+
+    /// CONV single input: intermediates are so large that segmented runs
+    /// are clearly slower than single-TPU pre-spill (paper Fig 4 bottom).
+    #[test]
+    fn conv_single_input_segmentation_clearly_slower() {
+        let cfg = cfg();
+        let m = conv_model(300);
+        let t1 = single_tpu_latency_s(&m, &cfg);
+        let r3 = simulate_partition(&m, &uniform_cuts(5, 3), &cfg, &SimOptions::default());
+        assert!(r3.makespan_s > t1 * 1.2, "t1={t1} t3={}", r3.makespan_s);
+    }
+
+    #[test]
+    fn property_makespan_bounds() {
+        crate::util::proptest::forall(128, |rng| {
+            let s = rng.below(5) as usize + 1;
+            let b = rng.below(40) as usize + 1;
+            let execs: Vec<f64> = (0..s).map(|_| rng.f64_range(1e-4, 1e-2)).collect();
+            let stages = flat_stages(&execs);
+            let r = simulate(&stages, &free_link(), &SimOptions { batch: b, ..Default::default() });
+            let sum: f64 = execs.iter().sum();
+            let bneck = execs.iter().cloned().fold(0.0, f64::max);
+            // lower bounds: pipeline can't beat fill + bottleneck stream
+            crate::check!(r.makespan_s >= sum - 1e-12, "fill");
+            crate::check!(r.makespan_s >= bneck * b as f64 - 1e-12, "bneck");
+            // exact for deterministic stage times:
+            let expect = sum + (b as f64 - 1.0) * bneck;
+            crate::check!((r.makespan_s - expect).abs() < 1e-9, "expect={expect} got={}", r.makespan_s);
+            // latency of first item == sum of stage times
+            crate::check!((r.latencies_s[0] - sum).abs() < 1e-9, "lat0");
+            Ok(())
+        });
+    }
+}

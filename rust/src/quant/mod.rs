@@ -1,0 +1,125 @@
+//! int8 affine quantization — the Rust twin of `python/compile/quantize.py`.
+//!
+//! Only the pieces the runtime needs at the serving edges (quantize inputs,
+//! dequantize outputs) plus the requantization primitive, kept bit-exact
+//! with the Python/XLA side: f32 multiply, round-ties-to-even, clamp.
+//! Cross-language golden vectors are asserted in both test suites.
+
+pub const QMIN: i32 = -128;
+pub const QMAX: i32 = 127;
+
+/// Per-tensor affine parameters: `real = scale * (q - zero_point)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QParams {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QParams {
+    pub fn quantize(&self, real: f32) -> i8 {
+        let q = (real / self.scale).round_ties_even() as i64 + self.zero_point as i64;
+        q.clamp(QMIN as i64, QMAX as i64) as i8
+    }
+
+    pub fn dequantize(&self, q: i8) -> f32 {
+        (q as i32 - self.zero_point) as f32 * self.scale
+    }
+
+    pub fn quantize_slice(&self, real: &[f32]) -> Vec<i8> {
+        real.iter().map(|&r| self.quantize(r)).collect()
+    }
+
+    pub fn dequantize_slice(&self, q: &[i8]) -> Vec<f32> {
+        q.iter().map(|&v| self.dequantize(v)).collect()
+    }
+}
+
+/// int32 accumulator -> int8, matching `quantize.requantize_jnp` /
+/// XLA `round_nearest_even` bit-for-bit.
+pub fn requantize(acc: i32, mult: f32, zp_out: i32) -> i8 {
+    let scaled = (acc as f32 * mult).round_ties_even();
+    let q = scaled as i32 + zp_out;
+    q.clamp(QMIN, QMAX) as i8
+}
+
+/// Combined rescale factor (computed in f32 like the Python side).
+pub fn requant_multiplier(in_scale: f32, w_scale: f32, out_scale: f32) -> f32 {
+    in_scale * w_scale / out_scale
+}
+
+/// Bias quantization: int32 at scale `in_scale * w_scale`.
+pub fn bias_quantize(b: f32, in_scale: f32, w_scale: f32) -> i32 {
+    (b / (in_scale * w_scale)).round_ties_even() as i32
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Mirrors python/tests/test_quantize.py::test_cross_language_vectors.
+    /// If these change, change the Python test too.
+    #[test]
+    fn cross_language_vectors() {
+        let accs = [0i32, 1000, -1000, 123_456, -123_456, 1 << 30];
+        let want = [3i8, 7, -1, 127, -128, 127];
+        for (a, w) in accs.iter().zip(want) {
+            assert_eq!(requantize(*a, 0.003_906_25, 3), w, "acc={a}");
+        }
+        let q = QParams { scale: 0.05, zero_point: -10 };
+        let reals = [-1.0f32, 0.0, 0.024, 0.026, 7.0];
+        let want = [-30i8, -10, -10, -9, 127];
+        for (r, w) in reals.iter().zip(want) {
+            assert_eq!(q.quantize(*r), w, "real={r}");
+        }
+        assert_eq!(bias_quantize(0.5, 0.1, 0.02), 250);
+        assert_eq!(bias_quantize(-0.25, 0.1, 0.02), -125);
+        assert!((requant_multiplier(0.1, 0.02, 0.05) - 0.04).abs() < 1e-7);
+    }
+
+    #[test]
+    fn requantize_ties_to_even() {
+        // acc * mult == 0.5 and 1.5 exactly -> 0 and 2
+        assert_eq!(requantize(1, 0.5, 0), 0);
+        assert_eq!(requantize(3, 0.5, 0), 2);
+        assert_eq!(requantize(-1, 0.5, 0), 0);
+        assert_eq!(requantize(-3, 0.5, 0), -2);
+    }
+
+    #[test]
+    fn requantize_saturates() {
+        assert_eq!(requantize(i32::MAX, 1.0, 0), 127);
+        assert_eq!(requantize(i32::MIN, 1.0, 0), -128);
+    }
+
+    #[test]
+    fn quantize_dequantize_roundtrip_error() {
+        let q = QParams { scale: 0.1, zero_point: 5 };
+        for i in -50..50 {
+            let real = i as f32 * 0.07;
+            let err = (q.dequantize(q.quantize(real)) - real).abs();
+            assert!(err <= 0.05 + 1e-6, "real={real} err={err}");
+        }
+    }
+
+    #[test]
+    fn zero_exactly_representable() {
+        let q = QParams { scale: 0.03, zero_point: -7 };
+        assert_eq!(q.dequantize(q.quantize(0.0)), 0.0);
+    }
+
+    #[test]
+    fn property_requantize_monotone() {
+        crate::util::proptest::forall(256, |rng| {
+            let mult = rng.f64_range(1e-6, 0.5) as f32;
+            let zp = rng.range_i64(-128, 127) as i32;
+            let a = rng.range_i64(-1 << 20, 1 << 20) as i32;
+            let b = rng.range_i64(-1 << 20, 1 << 20) as i32;
+            let (lo, hi) = if a <= b { (a, b) } else { (b, a) };
+            crate::check!(
+                requantize(lo, mult, zp) <= requantize(hi, mult, zp),
+                "lo={lo} hi={hi} mult={mult} zp={zp}"
+            );
+            Ok(())
+        });
+    }
+}

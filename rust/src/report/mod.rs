@@ -1,0 +1,136 @@
+//! Aligned-text / CSV table rendering for the paper-reproduction harness
+//! (every `repro <table|fig>` command prints through this).
+
+/// A simple column-aligned table.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: impl Into<String>, headers: &[&str]) -> Self {
+        Table {
+            title: title.into(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "row arity mismatch");
+        self.rows.push(cells);
+    }
+
+    /// Render with per-column alignment (numbers right, text left).
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let numeric: Vec<bool> = (0..ncols)
+            .map(|i| {
+                self.rows.iter().all(|r| {
+                    let c = r[i].trim();
+                    c.is_empty() || c.parse::<f64>().is_ok() || c.ends_with('x')
+                })
+            })
+            .collect();
+        let mut out = String::new();
+        if !self.title.is_empty() {
+            out.push_str(&format!("## {}\n", self.title));
+        }
+        let fmt_row = |cells: &[String], out: &mut String| {
+            let mut parts = Vec::with_capacity(ncols);
+            for (i, c) in cells.iter().enumerate() {
+                if numeric[i] {
+                    parts.push(format!("{:>width$}", c, width = widths[i]));
+                } else {
+                    parts.push(format!("{:<width$}", c, width = widths[i]));
+                }
+            }
+            out.push_str(&parts.join("  "));
+            out.push('\n');
+        };
+        fmt_row(&self.headers, &mut out);
+        out.push_str(&format!("{}\n", "-".repeat(widths.iter().sum::<usize>() + 2 * (ncols - 1))));
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out
+    }
+
+    /// CSV export (for plotting).
+    pub fn csv(&self) -> String {
+        let esc = |s: &str| {
+            if s.contains(',') || s.contains('"') {
+                format!("\"{}\"", s.replace('"', "\"\""))
+            } else {
+                s.to_string()
+            }
+        };
+        let mut out = self.headers.iter().map(|h| esc(h)).collect::<Vec<_>>().join(",");
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.iter().map(|c| esc(c)).collect::<Vec<_>>().join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+/// Format helpers shared by harness commands.
+pub fn f3(v: f64) -> String {
+    format!("{v:.3}")
+}
+
+pub fn f2(v: f64) -> String {
+    format!("{v:.2}")
+}
+
+pub fn ms(v_s: f64) -> String {
+    format!("{:.2}", v_s * 1e3)
+}
+
+pub fn speedup(v: f64) -> String {
+    format!("{v:.1}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["name", "val"]);
+        t.row(vec!["a".into(), "1.5".into()]);
+        t.row(vec!["bbbb".into(), "22.25".into()]);
+        let s = t.render();
+        assert!(s.contains("## demo"));
+        // lines: [0] title, [1] headers, [2] separator, [3..] rows
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines[3].len(), lines[4].len());
+        // numeric column right-aligned
+        assert!(lines[3].ends_with("1.5"));
+    }
+
+    #[test]
+    #[should_panic(expected = "arity")]
+    fn arity_checked() {
+        let mut t = Table::new("x", &["a", "b"]);
+        t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn csv_escapes() {
+        let mut t = Table::new("", &["a", "b"]);
+        t.row(vec!["x,y".into(), "q\"z".into()]);
+        let csv = t.csv();
+        assert!(csv.contains("\"x,y\""));
+        assert!(csv.contains("\"q\"\"z\""));
+    }
+}

@@ -1,0 +1,288 @@
+//! Artifact manifest (`artifacts/manifest.json`, written by `aot.py`):
+//! which models exist, their layer accounting, the per-segment HLO files
+//! with boundary quantization, and golden test vectors.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::model::{Layer, Model};
+use crate::util::json::Json;
+
+/// Quantization parameters of a tensor boundary.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct QuantInfo {
+    pub scale: f32,
+    pub zero_point: i32,
+}
+
+impl QuantInfo {
+    pub fn to_qparams(self) -> crate::quant::QParams {
+        crate::quant::QParams { scale: self.scale, zero_point: self.zero_point }
+    }
+}
+
+/// One contiguous segment artifact `[start, end)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegmentEntry {
+    pub start: usize,
+    pub end: usize,
+    pub file: String,
+    pub input_shape: Vec<usize>,
+    pub output_shape: Vec<usize>,
+    pub in_q: QuantInfo,
+    pub out_q: QuantInfo,
+}
+
+/// Golden input/output vectors for the whole model (oracle-computed).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Golden {
+    pub input: Vec<i8>,
+    pub input_shape: Vec<usize>,
+    pub output: Vec<i8>,
+    pub output_shape: Vec<usize>,
+}
+
+/// One model in the manifest.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelEntry {
+    pub name: String,
+    pub kind: String,
+    pub macs: u64,
+    pub layers: Vec<Layer>,
+    pub segments: Vec<SegmentEntry>,
+    pub golden: Golden,
+}
+
+impl ModelEntry {
+    /// The layer-IR model (for placement / cost / segmentation search).
+    pub fn to_model(&self) -> Model {
+        Model::new(self.name.clone(), self.layers.clone())
+    }
+
+    /// Find the artifact covering exactly `[start, end)`.
+    pub fn segment(&self, start: usize, end: usize) -> Option<&SegmentEntry> {
+        self.segments.iter().find(|s| s.start == start && s.end == end)
+    }
+
+    /// Artifacts realizing a partition given by cut positions.
+    pub fn segments_for_cuts(&self, cuts: &[usize]) -> Result<Vec<&SegmentEntry>> {
+        let mut bounds = vec![0usize];
+        bounds.extend_from_slice(cuts);
+        bounds.push(self.layers.len());
+        bounds
+            .windows(2)
+            .map(|w| {
+                self.segment(w[0], w[1]).with_context(|| {
+                    format!("{}: no artifact for segment [{}, {})", self.name, w[0], w[1])
+                })
+            })
+            .collect()
+    }
+}
+
+/// The whole manifest.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    pub models: BTreeMap<String, ModelEntry>,
+}
+
+fn parse_qinfo(j: &Json) -> Result<QuantInfo> {
+    Ok(QuantInfo {
+        scale: j.get("scale").and_then(Json::as_f64).context("scale")? as f32,
+        zero_point: j.get("zero_point").and_then(Json::as_i64).context("zero_point")? as i32,
+    })
+}
+
+fn parse_usize_vec(j: &Json) -> Result<Vec<usize>> {
+    j.as_arr()
+        .context("expected array")?
+        .iter()
+        .map(|v| v.as_u64().map(|x| x as usize).context("expected u64"))
+        .collect()
+}
+
+fn parse_i8_vec(j: &Json) -> Result<Vec<i8>> {
+    j.as_arr()
+        .context("expected array")?
+        .iter()
+        .map(|v| v.as_i64().map(|x| x as i8).context("expected i8"))
+        .collect()
+}
+
+fn parse_layer(j: &Json) -> Result<Layer> {
+    match j.get("kind").and_then(Json::as_str) {
+        Some("fc") => Ok(Layer::Fc {
+            in_features: j.get("in_features").and_then(Json::as_u64).context("in_features")?,
+            out_features: j.get("out_features").and_then(Json::as_u64).context("out_features")?,
+        }),
+        Some("conv") => Ok(Layer::Conv {
+            height: j.get("height").and_then(Json::as_u64).context("height")?,
+            width: j.get("width").and_then(Json::as_u64).context("width")?,
+            cin: j.get("cin").and_then(Json::as_u64).context("cin")?,
+            filters: j.get("filters").and_then(Json::as_u64).context("filters")?,
+            ksize: j.get("ksize").and_then(Json::as_u64).unwrap_or(3),
+        }),
+        k => anyhow::bail!("unknown layer kind {k:?}"),
+    }
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {path:?} — run `make artifacts` first"))?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let j = Json::parse(text).map_err(|e| anyhow::anyhow!("manifest: {e}"))?;
+        let mut models = BTreeMap::new();
+        let obj = j.get("models").and_then(Json::as_obj).context("manifest: models")?;
+        for (name, m) in obj {
+            let layers: Vec<Layer> = m
+                .get("layers")
+                .and_then(Json::as_arr)
+                .context("layers")?
+                .iter()
+                .map(parse_layer)
+                .collect::<Result<_>>()?;
+            let segments: Vec<SegmentEntry> = m
+                .get("segments")
+                .and_then(Json::as_arr)
+                .context("segments")?
+                .iter()
+                .map(|s| {
+                    Ok(SegmentEntry {
+                        start: s.get("start").and_then(Json::as_u64).context("start")? as usize,
+                        end: s.get("end").and_then(Json::as_u64).context("end")? as usize,
+                        file: s.get("file").and_then(Json::as_str).context("file")?.to_string(),
+                        input_shape: parse_usize_vec(s.get("input_shape").context("input_shape")?)?,
+                        output_shape: parse_usize_vec(
+                            s.get("output_shape").context("output_shape")?,
+                        )?,
+                        in_q: parse_qinfo(s.get("in_q").context("in_q")?)?,
+                        out_q: parse_qinfo(s.get("out_q").context("out_q")?)?,
+                    })
+                })
+                .collect::<Result<_>>()?;
+            let g = m.get("golden").context("golden")?;
+            let golden = Golden {
+                input: parse_i8_vec(g.get("input").context("golden.input")?)?,
+                input_shape: parse_usize_vec(g.get("input_shape").context("shape")?)?,
+                output: parse_i8_vec(g.get("output").context("golden.output")?)?,
+                output_shape: parse_usize_vec(g.get("output_shape").context("shape")?)?,
+            };
+            models.insert(
+                name.clone(),
+                ModelEntry {
+                    name: name.clone(),
+                    kind: m.get("kind").and_then(Json::as_str).unwrap_or("fc").to_string(),
+                    macs: m.get("macs").and_then(Json::as_u64).context("macs")?,
+                    layers,
+                    segments,
+                    golden,
+                },
+            );
+        }
+        Ok(Manifest { models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelEntry> {
+        self.models.get(name).with_context(|| {
+            format!(
+                "model {name:?} not in manifest (have: {:?})",
+                self.models.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "models": {
+        "fc_tiny": {
+          "kind": "fc",
+          "seed": 1,
+          "macs": 1234,
+          "layers": [
+            {"kind": "fc", "in_features": 8, "out_features": 16,
+             "macs": 128, "weight_bytes": 128,
+             "in_q": {"scale": 0.03, "zero_point": 0},
+             "out_q": {"scale": 0.015, "zero_point": -128}},
+            {"kind": "fc", "in_features": 16, "out_features": 4,
+             "macs": 64, "weight_bytes": 64,
+             "in_q": {"scale": 0.015, "zero_point": -128},
+             "out_q": {"scale": 0.03, "zero_point": 0}}
+          ],
+          "segments": [
+            {"start": 0, "end": 1, "file": "a.hlo.txt",
+             "input_shape": [8], "output_shape": [16],
+             "in_q": {"scale": 0.03, "zero_point": 0},
+             "out_q": {"scale": 0.015, "zero_point": -128}},
+            {"start": 1, "end": 2, "file": "b.hlo.txt",
+             "input_shape": [16], "output_shape": [4],
+             "in_q": {"scale": 0.015, "zero_point": -128},
+             "out_q": {"scale": 0.03, "zero_point": 0}},
+            {"start": 0, "end": 2, "file": "c.hlo.txt",
+             "input_shape": [8], "output_shape": [4],
+             "in_q": {"scale": 0.03, "zero_point": 0},
+             "out_q": {"scale": 0.03, "zero_point": 0}}
+          ],
+          "golden": {"input": [1, -2, 3, 4, 5, 6, 7, 8], "input_shape": [8],
+                     "output": [0, 1, -1, 127], "output_shape": [4]}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = m.model("fc_tiny").unwrap();
+        assert_eq!(e.macs, 1234);
+        assert_eq!(e.layers.len(), 2);
+        assert_eq!(e.segments.len(), 3);
+        assert_eq!(e.golden.input.len(), 8);
+        assert_eq!(e.golden.output, vec![0, 1, -1, 127]);
+        let model = e.to_model();
+        assert_eq!(model.macs(), 128 + 64);
+    }
+
+    #[test]
+    fn segments_for_cuts() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        let e = m.model("fc_tiny").unwrap();
+        let whole = e.segments_for_cuts(&[]).unwrap();
+        assert_eq!(whole.len(), 1);
+        assert_eq!((whole[0].start, whole[0].end), (0, 2));
+        let two = e.segments_for_cuts(&[1]).unwrap();
+        assert_eq!(two.len(), 2);
+        assert_eq!(two[0].file, "a.hlo.txt");
+        assert_eq!(two[1].file, "b.hlo.txt");
+        // boundary consistency
+        assert_eq!(two[0].out_q, two[1].in_q);
+        assert!(e.segments_for_cuts(&[3]).is_err());
+    }
+
+    #[test]
+    fn missing_model_is_error() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn real_manifest_parses_if_present() {
+        let p = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json");
+        if !p.exists() {
+            return; // `make artifacts` not run — covered by integration tests
+        }
+        let m = Manifest::load(&p).unwrap();
+        assert!(m.models.contains_key("fc_n256"));
+        let e = m.model("fc_n256").unwrap();
+        assert_eq!(e.layers.len(), 5);
+        assert_eq!(e.segments.len(), 15); // all contiguous sub-runs
+    }
+}

@@ -1,0 +1,135 @@
+//! PJRT runtime: loads the AOT-lowered HLO artifacts (`make artifacts`)
+//! and executes them on the CPU PJRT client — the only place the compute
+//! graph runs at serving time; Python is never on this path.
+//!
+//! Interchange is HLO **text**: `HloModuleProto::from_text_file` reparses
+//! and reassigns instruction ids, sidestepping the 64-bit-id protos that
+//! jax >= 0.5 emits and xla_extension 0.5.1 rejects (see aot.py).
+
+pub mod manifest;
+pub mod stage;
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+pub use manifest::{Manifest, ModelEntry, QuantInfo, SegmentEntry};
+
+/// A PJRT client plus the artifact directory it loads from.
+pub struct TpuRuntime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+}
+
+/// A compiled segment executable with its boundary metadata.
+pub struct LoadedSegment {
+    exe: xla::PjRtLoadedExecutable,
+    /// Element count of the input tensor.
+    pub in_elems: usize,
+    /// Element count of the output tensor.
+    pub out_elems: usize,
+    /// Input tensor dims (row-major), e.g. `[64]` or `[32, 32, 3]`.
+    pub in_shape: Vec<usize>,
+    /// Quantization of the input boundary.
+    pub in_q: QuantInfo,
+    /// Quantization of the output boundary.
+    pub out_q: QuantInfo,
+    /// Layer index range `[start, end)` in the source model.
+    pub start: usize,
+    pub end: usize,
+}
+
+impl TpuRuntime {
+    /// Create a CPU PJRT client rooted at an artifact directory.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(TpuRuntime { client, artifact_dir: artifact_dir.as_ref().to_path_buf() })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Read + parse `manifest.json` from the artifact directory.
+    pub fn manifest(&self) -> Result<Manifest> {
+        Manifest::load(&self.artifact_dir.join("manifest.json"))
+    }
+
+    /// Load and compile one segment artifact.
+    pub fn load_segment(&self, seg: &SegmentEntry) -> Result<LoadedSegment> {
+        let path = self.artifact_dir.join(&seg.file);
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .map_err(|e| anyhow::anyhow!("parsing HLO text {path:?}: {e}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow::anyhow!("compiling {}: {e}", seg.file))?;
+        Ok(LoadedSegment {
+            exe,
+            in_elems: seg.input_shape.iter().product(),
+            out_elems: seg.output_shape.iter().product(),
+            in_shape: seg.input_shape.clone(),
+            in_q: seg.in_q,
+            out_q: seg.out_q,
+            start: seg.start,
+            end: seg.end,
+        })
+    }
+}
+
+impl LoadedSegment {
+    /// Execute on an int8 activation tensor (flattened row-major).
+    pub fn run(&self, input: &[i8]) -> Result<Vec<i8>> {
+        anyhow::ensure!(
+            input.len() == self.in_elems,
+            "segment [{}, {}) expects {} input elems, got {}",
+            self.start,
+            self.end,
+            self.in_elems,
+            input.len()
+        );
+        let bytes: &[u8] =
+            unsafe { std::slice::from_raw_parts(input.as_ptr() as *const u8, input.len()) };
+        let lit = xla::Literal::create_from_shape_and_untyped_data(
+            xla::ElementType::S8,
+            &self.in_shape,
+            bytes,
+        )
+        .map_err(|e| anyhow::anyhow!("building input literal: {e}"))?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[lit])
+            .map_err(|e| anyhow::anyhow!("executing segment: {e}"))?[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow::anyhow!("fetching result: {e}"))?;
+        // lowered with return_tuple=True -> unwrap the 1-tuple
+        let out = result.to_tuple1().map_err(|e| anyhow::anyhow!("untuple: {e}"))?;
+        let v = out.to_vec::<i8>().map_err(|e| anyhow::anyhow!("to_vec: {e}"))?;
+        anyhow::ensure!(
+            v.len() == self.out_elems,
+            "segment [{}, {}) produced {} elems, expected {}",
+            self.start,
+            self.end,
+            v.len(),
+            self.out_elems
+        );
+        Ok(v)
+    }
+}
+
+/// Execute a chain of segments end-to-end (single-threaded reference path;
+/// the pipelined path lives in [`crate::coordinator`]).
+pub fn run_chain(segments: &[LoadedSegment], input: &[i8]) -> Result<Vec<i8>> {
+    let mut x = input.to_vec();
+    for seg in segments {
+        x = seg.run(&x)?;
+    }
+    Ok(x)
+}

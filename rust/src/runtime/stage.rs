@@ -1,0 +1,35 @@
+//! Glue between [`crate::runtime`] and [`crate::coordinator`]: a
+//! [`StageBackend`] that executes one AOT-compiled HLO segment via PJRT.
+//!
+//! The factory builds the client + executable *inside* the worker thread
+//! (PJRT handles are not `Send`; one client per worker mirrors one host
+//! process per physical TPU).
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::coordinator::{StageBackend, StageFactory};
+use crate::runtime::{LoadedSegment, SegmentEntry, TpuRuntime};
+
+/// A PJRT-backed pipeline stage.
+pub struct PjrtStage {
+    /// Keep the client alive for the executable's lifetime.
+    _runtime: TpuRuntime,
+    segment: LoadedSegment,
+}
+
+impl StageBackend for PjrtStage {
+    fn run(&mut self, input: &[i8]) -> Result<Vec<i8>> {
+        self.segment.run(input)
+    }
+}
+
+/// Build a [`StageFactory`] for one segment artifact.
+pub fn pjrt_stage_factory(artifact_dir: PathBuf, seg: SegmentEntry) -> StageFactory {
+    Box::new(move || {
+        let runtime = TpuRuntime::new(&artifact_dir)?;
+        let segment = runtime.load_segment(&seg)?;
+        Ok(Box::new(PjrtStage { _runtime: runtime, segment }) as Box<dyn StageBackend>)
+    })
+}

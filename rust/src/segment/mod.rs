@@ -1,0 +1,205 @@
+//! Model segmentation: contiguous partitions of a layer chain onto `s`
+//! TPUs (paper §V).
+//!
+//! A partition of `l` layers into `s` segments is identified by its `s-1`
+//! **cut positions** (indices in `1..l` between layers).  There are
+//! `C(l-1, s-1)` of them (paper footnote 3) — small enough for exhaustive
+//! profiling on realistic chain lengths.
+
+pub mod strategy;
+
+use crate::model::{Layer, Model};
+
+/// A contiguous partition, stored as ascending cut positions in `(0, l)`.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct Partition {
+    pub cuts: Vec<usize>,
+    pub n_layers: usize,
+}
+
+impl Partition {
+    pub fn new(cuts: Vec<usize>, n_layers: usize) -> Self {
+        let p = Partition { cuts, n_layers };
+        p.validate();
+        p
+    }
+
+    /// Single-segment (no cuts) partition.
+    pub fn whole(n_layers: usize) -> Self {
+        Partition::new(Vec::new(), n_layers)
+    }
+
+    pub fn validate(&self) {
+        assert!(self.n_layers > 0, "empty model");
+        let mut prev = 0usize;
+        for &c in &self.cuts {
+            assert!(c > prev && c < self.n_layers, "bad cut {c} (l={})", self.n_layers);
+            prev = c;
+        }
+    }
+
+    pub fn n_segments(&self) -> usize {
+        self.cuts.len() + 1
+    }
+
+    /// `[start, end)` bounds of each segment.
+    pub fn bounds(&self) -> Vec<(usize, usize)> {
+        let mut b = Vec::with_capacity(self.n_segments());
+        let mut start = 0;
+        for &c in &self.cuts {
+            b.push((start, c));
+            start = c;
+        }
+        b.push((start, self.n_layers));
+        b
+    }
+
+    /// Layer slices of each segment.
+    pub fn segments<'a>(&self, model: &'a Model) -> Vec<&'a [Layer]> {
+        assert_eq!(model.len(), self.n_layers);
+        self.bounds().iter().map(|&(a, b)| &model.layers[a..b]).collect()
+    }
+
+    /// Paper-style label, e.g. "2+2+1" for cuts [2,4] of 5 layers.
+    pub fn label(&self) -> String {
+        self.bounds()
+            .iter()
+            .map(|(a, b)| (b - a).to_string())
+            .collect::<Vec<_>>()
+            .join("+")
+    }
+}
+
+/// The compiler's default split: distribute the **layer count** evenly,
+/// with earlier segments taking the smaller share (observed behaviour in
+/// Tables III–IV: 5 layers on 3 TPUs -> 1+2+2, on 4 TPUs -> 1+1+1+2).
+pub fn uniform_cuts(n_layers: usize, n_segments: usize) -> Partition {
+    assert!(n_segments >= 1 && n_segments <= n_layers);
+    let base = n_layers / n_segments;
+    let rem = n_layers % n_segments;
+    // first (n_segments - rem) segments get `base`, the rest get `base+1`
+    let mut cuts = Vec::with_capacity(n_segments - 1);
+    let mut pos = 0;
+    for i in 0..n_segments - 1 {
+        pos += if i < n_segments - rem { base } else { base + 1 };
+        cuts.push(pos);
+    }
+    Partition::new(cuts, n_layers)
+}
+
+/// All `C(l-1, s-1)` contiguous partitions of `l` layers into `s` segments.
+pub fn enumerate_partitions(n_layers: usize, n_segments: usize) -> Vec<Partition> {
+    assert!(n_segments >= 1 && n_segments <= n_layers);
+    let mut out = Vec::new();
+    let mut cuts = Vec::with_capacity(n_segments - 1);
+    fn rec(next: usize, left: usize, l: usize, cuts: &mut Vec<usize>, out: &mut Vec<Partition>) {
+        if left == 0 {
+            out.push(Partition::new(cuts.clone(), l));
+            return;
+        }
+        // must leave room for `left` more cuts before l
+        for c in next..=(l - left) {
+            cuts.push(c);
+            rec(c + 1, left - 1, l, cuts, out);
+            cuts.pop();
+        }
+    }
+    rec(1, n_segments - 1, n_layers, &mut cuts, &mut out);
+    out
+}
+
+/// `C(n, k)` as u64 (small inputs only).
+pub fn binomial(n: u64, k: u64) -> u64 {
+    if k > n {
+        return 0;
+    }
+    let k = k.min(n - k);
+    let mut num = 1u64;
+    for i in 0..k {
+        num = num * (n - i) / (i + 1);
+    }
+    num
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::synthetic::fc_model;
+
+    #[test]
+    fn uniform_matches_paper_tables() {
+        // Table III: 5 layers / 3 TPUs -> first TPU gets only L1 (1+2+2)
+        assert_eq!(uniform_cuts(5, 3).label(), "1+2+2");
+        // Table IV: 5 layers / 4 TPUs -> last TPU gets two layers
+        assert_eq!(uniform_cuts(5, 4).label(), "1+1+1+2");
+        // 2 TPUs -> 2+3
+        assert_eq!(uniform_cuts(5, 2).label(), "2+3");
+        assert_eq!(uniform_cuts(5, 1).label(), "5");
+        assert_eq!(uniform_cuts(6, 3).label(), "2+2+2");
+    }
+
+    #[test]
+    fn enumeration_count_matches_formula() {
+        // paper: (l-1)! / ((s-1)! (l-s)!) — 14 total for l=5, s=1..4
+        let mut total = 0;
+        for s in 1..=4 {
+            let got = enumerate_partitions(5, s).len() as u64;
+            assert_eq!(got, binomial(4, s as u64 - 1), "s={s}");
+            total += got;
+        }
+        assert_eq!(total, 1 + 4 + 6 + 4); // the paper's "only 14 possibilities" (+1 for s=1)
+    }
+
+    #[test]
+    fn bounds_cover_exactly() {
+        let p = Partition::new(vec![1, 3], 5);
+        assert_eq!(p.bounds(), vec![(0, 1), (1, 3), (3, 5)]);
+        let m = fc_model(100);
+        let segs = p.segments(&m);
+        assert_eq!(segs.iter().map(|s| s.len()).sum::<usize>(), 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad cut")]
+    fn rejects_out_of_range_cut() {
+        Partition::new(vec![5], 5);
+    }
+
+    #[test]
+    #[should_panic(expected = "bad cut")]
+    fn rejects_duplicate_cut() {
+        Partition::new(vec![2, 2], 5);
+    }
+
+    #[test]
+    fn binomial_basics() {
+        assert_eq!(binomial(4, 0), 1);
+        assert_eq!(binomial(4, 2), 6);
+        assert_eq!(binomial(19, 3), 969);
+    }
+
+    #[test]
+    fn property_partitions_cover_contiguously() {
+        crate::util::proptest::forall(128, |rng| {
+            let l = rng.below(10) as usize + 1;
+            let s = rng.below(l as u64) as usize + 1;
+            let parts = enumerate_partitions(l, s);
+            crate::check!(parts.len() as u64 == binomial(l as u64 - 1, s as u64 - 1), "l={l} s={s}");
+            for p in &parts {
+                let b = p.bounds();
+                crate::check!(b[0].0 == 0, "first start");
+                crate::check!(b.last().unwrap().1 == l, "last end");
+                for w in b.windows(2) {
+                    crate::check!(w[0].1 == w[1].0, "contiguous");
+                }
+                crate::check!(b.iter().all(|(a, z)| z > a), "non-empty segments");
+            }
+            // all partitions distinct
+            let mut seen = std::collections::HashSet::new();
+            for p in &parts {
+                crate::check!(seen.insert(p.cuts.clone()), "duplicate {:?}", p.cuts);
+            }
+            Ok(())
+        });
+    }
+}

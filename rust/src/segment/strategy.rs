@@ -1,0 +1,174 @@
+//! Segmentation strategies: how to choose the cut positions.
+//!
+//! * [`Strategy::Uniform`] — the compiler default (layer-count balance);
+//!   reproduces the degeneracies of Tables III–IV.
+//! * [`Strategy::MemoryBalanced`] — minimize the max per-segment weight
+//!   footprint (the "logical next step" the paper discusses in §V-A and
+//!   rejects as insufficient).
+//! * [`Strategy::ProfiledExhaustive`] — the paper's contribution: profile
+//!   every partition under the batched pipeline and keep the fastest.
+//! * [`Strategy::ProfiledThreshold`] — Google-tool behaviour: first
+//!   partition meeting a stage-imbalance threshold.
+
+use crate::compiler::layer_footprint;
+use crate::config::SystemConfig;
+use crate::model::Model;
+use crate::profiler;
+use crate::segment::{enumerate_partitions, uniform_cuts, Partition};
+
+/// A segmentation strategy.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Strategy {
+    /// Compiler default: even layer counts, earlier segments smaller.
+    Uniform,
+    /// Minimize max per-segment memory footprint.
+    MemoryBalanced,
+    /// Exhaustive profiling on a pipelined batch of the given size.
+    ProfiledExhaustive { batch: usize },
+    /// First partition whose (max-min) stage time <= threshold.
+    ProfiledThreshold { batch: usize, max_delta_s: f64 },
+}
+
+impl Strategy {
+    /// Choose a partition of `model` into `n_segments`.
+    pub fn partition(&self, model: &Model, n_segments: usize, cfg: &SystemConfig) -> Partition {
+        match *self {
+            Strategy::Uniform => uniform_cuts(model.len(), n_segments),
+            Strategy::MemoryBalanced => memory_balanced(model, n_segments, cfg),
+            Strategy::ProfiledExhaustive { batch } => {
+                profiler::best_partition(model, cfg, n_segments, batch).partition
+            }
+            Strategy::ProfiledThreshold { batch, max_delta_s } => {
+                profiler::threshold_search(model, cfg, n_segments, batch, max_delta_s).partition
+            }
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Strategy::Uniform => "uniform",
+            Strategy::MemoryBalanced => "memory-balanced",
+            Strategy::ProfiledExhaustive { .. } => "profiled-exhaustive",
+            Strategy::ProfiledThreshold { .. } => "profiled-threshold",
+        }
+    }
+}
+
+/// Minimize the maximum per-segment footprint over all contiguous
+/// partitions (exhaustive — the space is C(l-1, s-1)).
+fn memory_balanced(model: &Model, n_segments: usize, cfg: &SystemConfig) -> Partition {
+    let fp: Vec<u64> =
+        model.layers.iter().map(|l| layer_footprint(l, &cfg.device)).collect();
+    enumerate_partitions(model.len(), n_segments)
+        .into_iter()
+        .min_by_key(|p| {
+            p.bounds()
+                .iter()
+                .map(|&(a, b)| fp[a..b].iter().sum::<u64>())
+                .max()
+                .unwrap_or(0)
+        })
+        .expect("at least one partition")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::place_partition;
+    use crate::model::synthetic::{conv_model, fc_model};
+
+    fn cfg() -> SystemConfig {
+        SystemConfig::default()
+    }
+
+    #[test]
+    fn uniform_is_compiler_default() {
+        let m = fc_model(1140);
+        assert_eq!(Strategy::Uniform.partition(&m, 3, &cfg()).label(), "1+2+2");
+    }
+
+    /// Memory balance moves the big layers off the degenerate tiny-first
+    /// segment (paper: uniform 3-TPU FC leaves TPU1 nearly empty).
+    #[test]
+    fn memory_balanced_fixes_fc_degeneracy() {
+        let m = fc_model(2100);
+        let p = Strategy::MemoryBalanced.partition(&m, 3, &cfg());
+        // first segment takes L1+L2 (the 64n + n^2 pair), not just L1
+        assert_eq!(p.bounds()[0], (0, 2), "{p:?}");
+        // and the result fits entirely on-device where uniform spills
+        let segs = p.segments(&m);
+        let rep = place_partition(&segs, &cfg().device);
+        assert!(!rep.uses_host());
+    }
+
+    #[test]
+    fn profiled_strategies_return_requested_arity() {
+        let m = conv_model(592);
+        for s in 1..=4 {
+            let p = Strategy::ProfiledExhaustive { batch: 50 }.partition(&m, s, &cfg());
+            assert_eq!(p.n_segments(), s);
+            let p = Strategy::ProfiledThreshold { batch: 50, max_delta_s: 1e-3 }
+                .partition(&m, s, &cfg());
+            assert_eq!(p.n_segments(), s);
+        }
+    }
+
+    /// Heterogeneous models (paper §V-C's motivation for profiling over a
+    /// "multivariable optimisation"): with mixed conv/fc layers, memory
+    /// balance and workload balance disagree, and only the profiled
+    /// search resolves the trade-off.
+    #[test]
+    fn hetero_model_profiling_beats_memory_balance() {
+        use crate::model::synthetic::conv_fc_model;
+        // low-overhead host (a C++ runtime rather than Python threads) so
+        // stage compute/stream balance — not the GIL — is the bottleneck
+        let mut cfg = cfg();
+        cfg.link.stage_overhead_s = 20e-6;
+        // 3 compute-heavy convs (150 KiB of weights each) + one
+        // memory-heavy dense layer (4.2 MiB) + small head: memory balance
+        // isolates the dense layer; workload balance must split the convs
+        let m = conv_fc_model(128, 3, 16, 16, &[128, 10]);
+        let table = profiler::SegmentCostTable::build(&m, &cfg);
+        let mb = Strategy::MemoryBalanced.partition(&m, 3, &cfg);
+        let mb_prof = profiler::profile_partition(&m, &table, &mb, &cfg, 50);
+        let best = profiler::best_partition(&m, &cfg, 3, 50);
+        assert!(
+            best.per_item_s < mb_prof.per_item_s * 0.999,
+            "profiled {:?} ({:.1}us) should strictly beat memory-balanced {:?} ({:.1}us)",
+            best.partition.cuts,
+            best.per_item_s * 1e6,
+            mb.cuts,
+            mb_prof.per_item_s * 1e6,
+        );
+        assert_ne!(best.partition.cuts, mb.cuts, "expected strategies to diverge");
+    }
+
+    /// Memory balance alone is NOT sufficient (paper §V-A: "would not
+    /// consider that ... the one that distributes the workload more evenly
+    /// is preferable") — profiled must be at least as fast everywhere.
+    #[test]
+    fn property_profiled_beats_or_ties_memory_balanced() {
+        crate::util::proptest::forall(32, |rng| {
+            let cfg = cfg();
+            let m = if rng.below(2) == 0 {
+                fc_model(rng.below(2400) + 200)
+            } else {
+                conv_model(rng.below(600) + 40)
+            };
+            let s = rng.below(3) as usize + 2;
+            let batch = 50;
+            let table = profiler::SegmentCostTable::build(&m, &cfg);
+            let mb = Strategy::MemoryBalanced.partition(&m, s, &cfg);
+            let mb_prof = profiler::profile_partition(&m, &table, &mb, &cfg, batch);
+            let best = profiler::best_partition(&m, &cfg, s, batch);
+            crate::check!(
+                best.per_item_s <= mb_prof.per_item_s + 1e-12,
+                "{} s={s}: best={} mb={}",
+                m.name,
+                best.per_item_s,
+                mb_prof.per_item_s
+            );
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,235 @@
+//! High-level serving assembly: manifest + segmentation strategy + cost
+//! model + PJRT stages -> a running [`Pipeline`] serving real numerics,
+//! with the simulated Edge TPU clock attached to every stage.
+//!
+//! Used by `examples/serve_pipeline.rs` and `repro serve`.
+
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+use crate::compiler::place;
+use crate::config::SystemConfig;
+use crate::coordinator::{Pipeline, PipelineConfig, Request, StageSim};
+use crate::device::CostModel;
+use crate::link::Link;
+use crate::model::Model;
+use crate::pipeline::single_tpu_latency_s;
+use crate::runtime::stage::pjrt_stage_factory;
+use crate::runtime::{Manifest, ModelEntry};
+use crate::segment::strategy::Strategy;
+use crate::segment::Partition;
+use crate::util::rng::Rng;
+
+/// A serving deployment plan for one model.
+#[derive(Debug)]
+pub struct ServePlan {
+    pub model_name: String,
+    pub partition: Partition,
+    pub sims: Vec<StageSim>,
+    /// Simulated single-TPU per-inference latency (the paper baseline).
+    pub single_tpu_s: f64,
+    pub input_shape: Vec<usize>,
+}
+
+/// Build the plan: pick the partition, derive per-stage simulated costs.
+pub fn plan(
+    entry: &ModelEntry,
+    n_tpus: usize,
+    strategy: Strategy,
+    cfg: &SystemConfig,
+) -> Result<ServePlan> {
+    let model: Model = entry.to_model();
+    anyhow::ensure!(
+        n_tpus >= 1 && n_tpus <= model.len(),
+        "n_tpus {n_tpus} out of range for {} layers",
+        model.len()
+    );
+    let partition = if n_tpus == 1 {
+        Partition::whole(model.len())
+    } else {
+        strategy.partition(&model, n_tpus, cfg)
+    };
+    let cm = CostModel::new(cfg.clone());
+    let link = Link::new(cfg.link.clone());
+    let bounds = partition.bounds();
+    let sims: Vec<StageSim> = bounds
+        .iter()
+        .map(|&(a, b)| {
+            let seg = &model.layers[a..b];
+            let placement = place(seg, &cfg.device);
+            let in_bytes = seg.first().unwrap().input_elems();
+            let out_bytes = seg.last().unwrap().output_elems();
+            StageSim {
+                // DMA in/out occupies the device (no overlap) — same
+                // service-time model as pipeline::simulate
+                exec_s: link.xfer_s(in_bytes)
+                    + cm.stage_cost(&placement).exec_s()
+                    + link.xfer_s(out_bytes),
+                hop_out_s: if b == model.len() { 0.0 } else { link.hop_latency_s() },
+                overhead_s: cfg.link.stage_overhead_s,
+            }
+        })
+        .collect();
+    let whole = entry
+        .segment(0, model.len())
+        .context("whole-model artifact missing")?;
+    Ok(ServePlan {
+        model_name: entry.name.clone(),
+        partition,
+        sims,
+        single_tpu_s: single_tpu_latency_s(&model, cfg),
+        input_shape: whole.input_shape.clone(),
+    })
+}
+
+/// Spawn the PJRT-backed pipeline for a plan.
+pub fn spawn_pipeline(
+    artifact_dir: &Path,
+    entry: &ModelEntry,
+    plan: &ServePlan,
+    queue_capacity: usize,
+) -> Result<Pipeline> {
+    let segs = entry.segments_for_cuts(&plan.partition.cuts)?;
+    let factories = segs
+        .iter()
+        .map(|s| pjrt_stage_factory(PathBuf::from(artifact_dir), (*s).clone()))
+        .collect();
+    Pipeline::spawn(factories, plan.sims.clone(), &PipelineConfig { queue_capacity })
+        .context("spawning pipeline")
+}
+
+/// Deterministic random int8 request batch for a plan.
+pub fn synth_requests(plan: &ServePlan, batch: usize, seed: u64) -> Vec<Request> {
+    let elems: usize = plan.input_shape.iter().product();
+    let mut rng = Rng::new(seed);
+    (0..batch as u64)
+        .map(|id| Request { id, data: rng.i8_vec(elems) })
+        .collect()
+}
+
+/// Results of one serving run.
+#[derive(Debug, Clone)]
+pub struct ServeReport {
+    pub n_tpus: usize,
+    pub partition_label: String,
+    pub batch: usize,
+    /// Real wall-clock for the whole batch on this host (PJRT CPU).
+    pub wall_s: f64,
+    pub real_throughput: f64,
+    /// Simulated Edge TPU makespan and per-inference time.
+    pub sim_makespan_s: f64,
+    pub sim_per_item_s: f64,
+    /// Simulated speedup vs the single-TPU baseline.
+    pub sim_speedup_vs_one_tpu: f64,
+}
+
+/// Serve one closed batch and summarize.
+pub fn serve_batch(
+    pipeline: &Pipeline,
+    plan: &ServePlan,
+    requests: Vec<Request>,
+) -> Result<ServeReport> {
+    let batch = requests.len();
+    // exclude backend construction (artifact compilation) from the timing
+    pipeline.wait_ready()?;
+    let t0 = std::time::Instant::now();
+    let responses = pipeline.serve_batch(requests)?;
+    let wall = t0.elapsed().as_secs_f64();
+    let sim_makespan = responses.iter().map(|r| r.sim_done_s).fold(0.0, f64::max);
+    let per_item = sim_makespan / batch as f64;
+    Ok(ServeReport {
+        n_tpus: plan.partition.n_segments(),
+        partition_label: plan.partition.label(),
+        batch,
+        wall_s: wall,
+        real_throughput: batch as f64 / wall,
+        sim_makespan_s: sim_makespan,
+        sim_per_item_s: per_item,
+        sim_speedup_vs_one_tpu: plan.single_tpu_s / per_item,
+    })
+}
+
+/// Load the manifest from an artifact dir (helper for binaries).
+pub fn load_manifest(artifact_dir: &Path) -> Result<Manifest> {
+    Manifest::load(&artifact_dir.join("manifest.json"))
+}
+
+/// Default artifact directory: `$REPO/artifacts` (overridable by env).
+pub fn default_artifact_dir() -> PathBuf {
+    if let Ok(d) = std::env::var("TPU_PIPELINE_ARTIFACTS") {
+        return PathBuf::from(d);
+    }
+    PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::manifest::Manifest;
+
+    fn sample_manifest() -> Manifest {
+        // reuse the sample from runtime::manifest tests via a minimal JSON
+        Manifest::parse(
+            r#"{"models": {"m": {
+                "kind": "fc", "seed": 1, "macs": 192,
+                "layers": [
+                  {"kind": "fc", "in_features": 8, "out_features": 16},
+                  {"kind": "fc", "in_features": 16, "out_features": 4}],
+                "segments": [
+                  {"start": 0, "end": 2, "file": "w.hlo.txt",
+                   "input_shape": [8], "output_shape": [4],
+                   "in_q": {"scale": 0.1, "zero_point": 0},
+                   "out_q": {"scale": 0.1, "zero_point": 0}},
+                  {"start": 0, "end": 1, "file": "a.hlo.txt",
+                   "input_shape": [8], "output_shape": [16],
+                   "in_q": {"scale": 0.1, "zero_point": 0},
+                   "out_q": {"scale": 0.05, "zero_point": -128}},
+                  {"start": 1, "end": 2, "file": "b.hlo.txt",
+                   "input_shape": [16], "output_shape": [4],
+                   "in_q": {"scale": 0.05, "zero_point": -128},
+                   "out_q": {"scale": 0.1, "zero_point": 0}}],
+                "golden": {"input": [0,0,0,0,0,0,0,0], "input_shape": [8],
+                           "output": [0,0,0,0], "output_shape": [4]}}}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn plan_builds_sims_per_stage() {
+        let m = sample_manifest();
+        let entry = m.model("m").unwrap();
+        let cfg = SystemConfig::default();
+        let p = plan(entry, 2, Strategy::Uniform, &cfg).unwrap();
+        assert_eq!(p.sims.len(), 2);
+        assert_eq!(p.partition.label(), "1+1");
+        assert!(p.single_tpu_s > 0.0);
+        assert_eq!(p.input_shape, vec![8]);
+        // last stage's hop is an output transfer (cheaper than a full hop)
+        assert!(p.sims[1].hop_out_s < p.sims[0].hop_out_s + 1e-9);
+    }
+
+    #[test]
+    fn plan_rejects_bad_arity() {
+        let m = sample_manifest();
+        let entry = m.model("m").unwrap();
+        let cfg = SystemConfig::default();
+        assert!(plan(entry, 3, Strategy::Uniform, &cfg).is_err());
+        assert!(plan(entry, 0, Strategy::Uniform, &cfg).is_err());
+    }
+
+    #[test]
+    fn synth_requests_deterministic() {
+        let m = sample_manifest();
+        let entry = m.model("m").unwrap();
+        let cfg = SystemConfig::default();
+        let p = plan(entry, 1, Strategy::Uniform, &cfg).unwrap();
+        let a = synth_requests(&p, 5, 42);
+        let b = synth_requests(&p, 5, 42);
+        assert_eq!(a.len(), 5);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.data, y.data);
+            assert_eq!(x.data.len(), 8);
+        }
+    }
+}

@@ -1,0 +1,86 @@
+//! Execution traces: CSV/ASCII export of pipeline Gantt schedules for
+//! inspecting stage overlap and bottlenecks.
+
+use crate::pipeline::PipelineResult;
+
+/// Gantt schedule as CSV (`stage,item,start_s,end_s`).
+pub fn gantt_csv(result: &PipelineResult) -> String {
+    let mut out = String::from("stage,item,start_s,end_s\n");
+    for e in &result.gantt {
+        out.push_str(&format!("{},{},{:.9},{:.9}\n", e.stage, e.item, e.start_s, e.end_s));
+    }
+    out
+}
+
+/// Coarse ASCII Gantt chart (one row per stage, `width` columns over the
+/// makespan; digits show which item occupies the slot, '.' = idle).
+pub fn gantt_ascii(result: &PipelineResult, width: usize) -> String {
+    if result.gantt.is_empty() {
+        return String::from("(no gantt recorded)\n");
+    }
+    let n_stages = result.gantt.iter().map(|e| e.stage).max().unwrap() + 1;
+    let span = result.makespan_s.max(1e-12);
+    let mut rows = vec![vec!['.'; width]; n_stages];
+    for e in &result.gantt {
+        let a = ((e.start_s / span) * width as f64) as usize;
+        let b = (((e.end_s / span) * width as f64).ceil() as usize).min(width);
+        let c = char::from_digit((e.item % 10) as u32, 10).unwrap();
+        for cell in rows[e.stage].iter_mut().take(b).skip(a.min(width)) {
+            *cell = c;
+        }
+    }
+    let mut out = String::new();
+    for (i, row) in rows.iter().enumerate() {
+        out.push_str(&format!("TPU{i} |{}|\n", row.iter().collect::<String>()));
+    }
+    out.push_str(&format!("       0 .. {:.3} ms\n", span * 1e3));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::LinkConfig;
+    use crate::link::Link;
+    use crate::pipeline::{simulate, SimOptions, StageSpec};
+
+    fn run() -> PipelineResult {
+        let stages: Vec<StageSpec> = [1e-3, 2e-3]
+            .iter()
+            .map(|&e| StageSpec { exec_s: e, in_bytes: 10, out_bytes: 10 })
+            .collect();
+        simulate(
+            &stages,
+            &Link::new(LinkConfig::default()),
+            &SimOptions { batch: 4, queue_capacity: None, record_gantt: true },
+        )
+    }
+
+    #[test]
+    fn csv_has_all_rows() {
+        let csv = gantt_csv(&run());
+        assert_eq!(csv.lines().count(), 1 + 8); // header + 2 stages x 4 items
+        assert!(csv.starts_with("stage,item,"));
+    }
+
+    #[test]
+    fn ascii_has_stage_rows() {
+        let art = gantt_ascii(&run(), 60);
+        assert!(art.contains("TPU0 |"));
+        assert!(art.contains("TPU1 |"));
+        // stage 1 is the bottleneck: its row must be busier than stage 0
+        let busy = |row: &str| row.chars().filter(|c| c.is_ascii_digit()).count();
+        let lines: Vec<&str> = art.lines().collect();
+        assert!(busy(lines[1]) > busy(lines[0]), "{art}");
+    }
+
+    #[test]
+    fn empty_gantt_handled() {
+        let r = simulate(
+            &[StageSpec { exec_s: 1e-3, in_bytes: 0, out_bytes: 0 }],
+            &Link::new(LinkConfig::default()),
+            &SimOptions::default(),
+        );
+        assert!(gantt_ascii(&r, 10).contains("no gantt"));
+    }
+}

@@ -1,0 +1,154 @@
+//! Micro-benchmark harness driving the `cargo bench` targets (criterion is
+//! not in the offline vendor set).
+//!
+//! Behaviour: warm-up, then timed iterations until both a minimum iteration
+//! count and a minimum wall-time are reached; reports mean / p50 / p95 and
+//! throughput.  `black_box` prevents the optimizer from deleting the
+//! measured work.
+
+use std::hint::black_box as std_black_box;
+use std::time::{Duration, Instant};
+
+use super::stats::Summary;
+
+pub use std::hint::black_box;
+
+/// One benchmark result row.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_s: f64,
+    pub p50_s: f64,
+    pub p95_s: f64,
+    pub min_s: f64,
+}
+
+impl BenchResult {
+    pub fn per_sec(&self) -> f64 {
+        1.0 / self.mean_s
+    }
+}
+
+fn fmt_time(s: f64) -> String {
+    if s < 1e-6 {
+        format!("{:8.1}ns", s * 1e9)
+    } else if s < 1e-3 {
+        format!("{:8.2}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:8.3}ms", s * 1e3)
+    } else {
+        format!("{:8.3}s ", s)
+    }
+}
+
+/// Benchmark runner: collects rows, prints a criterion-like table.
+pub struct Bencher {
+    rows: Vec<BenchResult>,
+    min_iters: usize,
+    max_iters: usize,
+    min_time: Duration,
+    warmup: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Bencher {
+    pub fn new() -> Self {
+        // keep `cargo bench` wall-time sane across the many targets
+        Bencher {
+            rows: Vec::new(),
+            min_iters: 10,
+            max_iters: 100_000,
+            min_time: Duration::from_millis(300),
+            warmup: Duration::from_millis(100),
+        }
+    }
+
+    pub fn with_budget(mut self, min_time: Duration, warmup: Duration) -> Self {
+        self.min_time = min_time;
+        self.warmup = warmup;
+        self
+    }
+
+    /// Time `f` repeatedly; the closure's return value is black-boxed.
+    pub fn bench<T>(&mut self, name: &str, mut f: impl FnMut() -> T) -> &BenchResult {
+        // warm-up
+        let wstart = Instant::now();
+        while wstart.elapsed() < self.warmup {
+            std_black_box(f());
+        }
+        let mut s = Summary::new();
+        let start = Instant::now();
+        let mut iters = 0usize;
+        while (iters < self.min_iters || start.elapsed() < self.min_time)
+            && iters < self.max_iters
+        {
+            let t0 = Instant::now();
+            std_black_box(f());
+            s.add(t0.elapsed().as_secs_f64());
+            iters += 1;
+        }
+        self.rows.push(BenchResult {
+            name: name.to_string(),
+            iters,
+            mean_s: s.mean(),
+            p50_s: s.p50(),
+            p95_s: s.p95(),
+            min_s: s.min(),
+        });
+        self.rows.last().unwrap()
+    }
+
+    /// Print all rows as an aligned table (called at the end of each bench
+    /// binary; `cargo bench` output is this table).
+    pub fn report(&self, title: &str) {
+        println!("\n== {title} ==");
+        println!(
+            "{:<44} {:>8} {:>10} {:>10} {:>10} {:>10}",
+            "benchmark", "iters", "mean", "p50", "p95", "min"
+        );
+        for r in &self.rows {
+            println!(
+                "{:<44} {:>8} {} {} {} {}",
+                r.name,
+                r.iters,
+                fmt_time(r.mean_s),
+                fmt_time(r.p50_s),
+                fmt_time(r.p95_s),
+                fmt_time(r.min_s),
+            );
+        }
+    }
+
+    pub fn rows(&self) -> &[BenchResult] {
+        &self.rows
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut b = Bencher::new()
+            .with_budget(Duration::from_millis(20), Duration::from_millis(5));
+        let r = b.bench("noop-vec", || vec![0u8; 64]).clone();
+        assert!(r.iters >= 10);
+        assert!(r.mean_s > 0.0 && r.mean_s < 0.01);
+        assert!(r.p50_s <= r.p95_s);
+    }
+
+    #[test]
+    fn report_does_not_panic() {
+        let mut b = Bencher::new()
+            .with_budget(Duration::from_millis(5), Duration::from_millis(1));
+        b.bench("x", || 1 + 1);
+        b.report("t");
+    }
+}

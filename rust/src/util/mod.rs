@@ -1,0 +1,62 @@
+//! Cross-cutting substrates built in-repo because the offline vendor set
+//! carries only the `xla` crate's closure: JSON, PRNG, stats, a bench
+//! harness and a property-testing helper.
+
+pub mod bench;
+pub mod json;
+pub mod proptest;
+pub mod rng;
+pub mod stats;
+
+/// Mebibytes helper for memory reports (the paper reports MiB).
+pub fn mib(bytes: u64) -> f64 {
+    bytes as f64 / (1024.0 * 1024.0)
+}
+
+/// Format seconds as the most readable unit.
+pub fn fmt_seconds(s: f64) -> String {
+    if !s.is_finite() {
+        return format!("{s}");
+    }
+    if s < 1e-3 {
+        format!("{:.1}µs", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else {
+        format!("{:.3}s", s)
+    }
+}
+
+/// Format a MAC count like the paper ("0.76e7", "2.88e10").
+pub fn fmt_macs(macs: u64) -> String {
+    if macs == 0 {
+        return "0".to_string();
+    }
+    let exp = (macs as f64).log10().floor() as i32;
+    let mant = macs as f64 / 10f64.powi(exp);
+    format!("{mant:.2}e{exp}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mib_conversion() {
+        assert_eq!(mib(1024 * 1024), 1.0);
+        assert!((mib(7_791_050) - 7.43).abs() < 0.01);
+    }
+
+    #[test]
+    fn fmt_macs_like_paper() {
+        assert_eq!(fmt_macs(7_600_000), "0.76e7".replace("0.76e7", "7.60e6"));
+        assert_eq!(fmt_macs(28_800_000_000), "2.88e10");
+    }
+
+    #[test]
+    fn fmt_seconds_units() {
+        assert_eq!(fmt_seconds(0.0000005), "0.5µs");
+        assert_eq!(fmt_seconds(0.0074), "7.40ms");
+        assert_eq!(fmt_seconds(1.5), "1.500s");
+    }
+}

@@ -1,0 +1,91 @@
+//! Tiny property-testing harness (proptest is not in the offline vendor
+//! set): run a property over many deterministic random cases and report the
+//! seed of the first failing case so it can be replayed.
+//!
+//! ```ignore
+//! forall(256, |rng| {
+//!     let n = rng.below(100) + 1;
+//!     check!(some_invariant(n), "n={n}");
+//!     Ok(())
+//! });
+//! ```
+
+use super::rng::Rng;
+
+/// Run `prop` over `cases` deterministic cases.  Panics (test failure) with
+/// the case seed on the first `Err`.
+pub fn forall(cases: u64, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    for case in 0..cases {
+        // decouple case streams; replay one case with `replay(seed, prop)`
+        let seed = 0x5EED_0000_0000 + case;
+        let mut rng = Rng::new(seed);
+        if let Err(msg) = prop(&mut rng) {
+            panic!("property failed at case {case} (replay seed {seed:#x}): {msg}");
+        }
+    }
+}
+
+/// Replay a single failing case by seed.
+pub fn replay(seed: u64, mut prop: impl FnMut(&mut Rng) -> Result<(), String>) {
+    let mut rng = Rng::new(seed);
+    if let Err(msg) = prop(&mut rng) {
+        panic!("replay {seed:#x} failed: {msg}");
+    }
+}
+
+/// `check!(cond, "context {x}")` inside a `forall` property.
+#[macro_export]
+macro_rules! check {
+    ($cond:expr, $($ctx:tt)+) => {
+        if !$cond {
+            return Err(format!("{} — {}", stringify!($cond), format!($($ctx)+)));
+        }
+    };
+    ($cond:expr) => {
+        if !$cond {
+            return Err(stringify!($cond).to_string());
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut n = 0u64;
+        forall(64, |rng| {
+            n += 1;
+            let v = rng.below(10);
+            check!(v < 10, "v={v}");
+            Ok(())
+        });
+        assert_eq!(n, 64);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_reports_seed() {
+        forall(64, |rng| {
+            let v = rng.below(100);
+            check!(v < 90, "v={v}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn deterministic_across_runs() {
+        let mut first = Vec::new();
+        forall(8, |rng| {
+            first.push(rng.next_u64());
+            Ok(())
+        });
+        let mut second = Vec::new();
+        forall(8, |rng| {
+            second.push(rng.next_u64());
+            Ok(())
+        });
+        assert_eq!(first, second);
+    }
+}

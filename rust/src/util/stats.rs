@@ -1,0 +1,210 @@
+//! Summary statistics and latency histograms for benches and serving
+//! metrics (no external stats crates offline).
+
+/// Online summary over f64 samples, plus exact percentiles on demand.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    samples: Vec<f64>,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub fn add(&mut self, v: f64) {
+        self.samples.push(v);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.samples.is_empty()
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        self.samples.iter().sum::<f64>() / self.samples.len() as f64
+    }
+
+    pub fn min(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::INFINITY, f64::min)
+    }
+
+    pub fn max(&self) -> f64 {
+        self.samples.iter().copied().fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Sample standard deviation (n-1 denominator).
+    pub fn stddev(&self) -> f64 {
+        let n = self.samples.len();
+        if n < 2 {
+            return 0.0;
+        }
+        let m = self.mean();
+        (self.samples.iter().map(|v| (v - m) * (v - m)).sum::<f64>() / (n - 1) as f64).sqrt()
+    }
+
+    /// Exact percentile via nearest-rank on a sorted copy; `q` in [0, 100].
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.samples.is_empty() {
+            return f64::NAN;
+        }
+        let mut s = self.samples.clone();
+        s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let rank = ((q / 100.0) * (s.len() as f64 - 1.0)).round() as usize;
+        s[rank.min(s.len() - 1)]
+    }
+
+    pub fn p50(&self) -> f64 {
+        self.percentile(50.0)
+    }
+
+    pub fn p95(&self) -> f64 {
+        self.percentile(95.0)
+    }
+
+    pub fn p99(&self) -> f64 {
+        self.percentile(99.0)
+    }
+}
+
+/// Fixed-bucket log-scale latency histogram (1 µs .. ~100 s), cheap enough
+/// for the serving hot path (single atomic-free add; wrap in a mutex or
+/// per-worker instance for concurrency).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [BASE * GROWTH^i, BASE * GROWTH^(i+1))
+    counts: Vec<u64>,
+    total: u64,
+    sum_s: f64,
+    max_s: f64,
+}
+
+const BASE_S: f64 = 1e-6;
+const GROWTH: f64 = 1.25;
+const NBUCKETS: usize = 90; // 1.25^90 * 1us ~ 5e2 s
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl LatencyHistogram {
+    pub fn new() -> Self {
+        LatencyHistogram { counts: vec![0; NBUCKETS], total: 0, sum_s: 0.0, max_s: 0.0 }
+    }
+
+    fn bucket(v_s: f64) -> usize {
+        if v_s <= BASE_S {
+            return 0;
+        }
+        let b = (v_s / BASE_S).ln() / GROWTH.ln();
+        (b as usize).min(NBUCKETS - 1)
+    }
+
+    pub fn record(&mut self, v_s: f64) {
+        self.counts[Self::bucket(v_s)] += 1;
+        self.total += 1;
+        self.sum_s += v_s;
+        self.max_s = self.max_s.max(v_s);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.total
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.total == 0 {
+            f64::NAN
+        } else {
+            self.sum_s / self.total as f64
+        }
+    }
+
+    pub fn max(&self) -> f64 {
+        self.max_s
+    }
+
+    /// Percentile estimate from bucket upper bounds (bounded ~25% relative
+    /// error by construction).
+    pub fn percentile(&self, q: f64) -> f64 {
+        if self.total == 0 {
+            return f64::NAN;
+        }
+        let target = ((q / 100.0) * self.total as f64).ceil() as u64;
+        let mut seen = 0;
+        for (i, c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target.max(1) {
+                return BASE_S * GROWTH.powi(i as i32 + 1);
+            }
+        }
+        self.max_s
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.counts.iter_mut().zip(&other.counts) {
+            *a += b;
+        }
+        self.total += other.total;
+        self.sum_s += other.sum_s;
+        self.max_s = self.max_s.max(other.max_s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn summary_basics() {
+        let mut s = Summary::new();
+        for v in [1.0, 2.0, 3.0, 4.0, 5.0] {
+            s.add(v);
+        }
+        assert_eq!(s.mean(), 3.0);
+        assert_eq!(s.min(), 1.0);
+        assert_eq!(s.max(), 5.0);
+        assert_eq!(s.p50(), 3.0);
+        assert!((s.stddev() - 1.5811).abs() < 1e-3);
+    }
+
+    #[test]
+    fn percentile_edges() {
+        let mut s = Summary::new();
+        s.add(10.0);
+        assert_eq!(s.percentile(0.0), 10.0);
+        assert_eq!(s.percentile(100.0), 10.0);
+    }
+
+    #[test]
+    fn histogram_percentiles_bracket_truth() {
+        let mut h = LatencyHistogram::new();
+        for i in 1..=1000 {
+            h.record(i as f64 * 1e-4); // 0.1ms .. 100ms uniform
+        }
+        let p50 = h.percentile(50.0);
+        assert!(p50 > 0.03 && p50 < 0.08, "p50={p50}");
+        let p99 = h.percentile(99.0);
+        assert!(p99 > 0.07 && p99 < 0.15, "p99={p99}");
+        assert_eq!(h.count(), 1000);
+        assert!((h.mean() - 0.050).abs() < 0.002);
+    }
+
+    #[test]
+    fn histogram_merge() {
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        a.record(1e-3);
+        b.record(2e-3);
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+        assert!(a.max() == 2e-3);
+    }
+}

@@ -1,0 +1,107 @@
+//! Integration: the paper-reproduction harness end-to-end — every CLI
+//! command renders, CSV output is well-formed, and the qualitative claims
+//! of the evaluation hold in the generated tables themselves.
+
+use tpu_pipeline::cli::{self, Args};
+use tpu_pipeline::config::SystemConfig;
+use tpu_pipeline::segment::strategy::Strategy;
+use tpu_pipeline::sweep::{batch_sweep, headline, Kind};
+
+fn run(cmd: &str) -> String {
+    let argv: Vec<String> = cmd.split_whitespace().map(String::from).collect();
+    cli::run(&Args::parse(&argv).unwrap()).unwrap()
+}
+
+#[test]
+fn all_commands_render() {
+    let out = run("all");
+    for needle in [
+        "Fig 2a (FC)", "Fig 2a (CONV)", "Fig 2b", "Fig 2c", "Fig 4", "§V-B", "Fig 5",
+        "Fig 6", "Table I", "Table II", "Table III", "Table IV", "Table V", "Table VI",
+    ] {
+        assert!(out.contains(needle), "missing {needle}");
+    }
+}
+
+#[test]
+fn csv_outputs_have_uniform_arity() {
+    for cmd in ["fig2a --csv", "fig2b --csv --kind conv", "fig6 --csv", "table3 --csv"] {
+        let out = run(cmd);
+        let mut lines = out.lines();
+        let cols = lines.next().unwrap().split(',').count();
+        for (i, line) in lines.enumerate() {
+            assert_eq!(line.split(',').count(), cols, "{cmd}: row {i}");
+        }
+    }
+}
+
+#[test]
+fn table5_profiled_fc_has_no_host_usage_where_table3b_does() {
+    // §V-C: profiling eliminates the host spill the default split causes
+    let t3b = run("table3b --csv");
+    let t5 = run("table5 --csv");
+    let host_cols = |csv: &str| -> Vec<f64> {
+        csv.lines()
+            .skip(1)
+            .flat_map(|l| {
+                l.split(',')
+                    .skip(3 + 3) // x, macs, split, dev1..dev3
+                    .map(|v| v.parse::<f64>().unwrap())
+                    .collect::<Vec<_>>()
+            })
+            .collect()
+    };
+    let default_host: f64 = host_cols(&t3b).iter().sum();
+    let profiled_host: f64 = host_cols(&t5).iter().sum();
+    assert!(default_host > 5.0, "default split should spill (got {default_host})");
+    assert!(profiled_host == 0.0, "profiled split must not spill (got {profiled_host})");
+}
+
+#[test]
+fn fig6_headline_magnitudes() {
+    let cfg = SystemConfig::default();
+    let fc = headline(Kind::Fc, &cfg, Strategy::ProfiledExhaustive { batch: 50 }, 50);
+    let conv = headline(Kind::Conv, &cfg, Strategy::ProfiledExhaustive { batch: 50 }, 50);
+    // paper abstract: 46x FC, 6x CONV
+    assert!((fc.best_speedup - 46.0).abs() < 10.0, "FC {fc:?}");
+    assert!((conv.best_speedup - 6.0).abs() < 3.0, "CONV {conv:?}");
+    assert!(fc.best_speedup > conv.best_speedup * 4.0);
+}
+
+#[test]
+fn conv_segmentation_hurts_pre_spill_batched() {
+    // §V-B: "in many models it is still slower than 1 TPU"
+    let cfg = SystemConfig::default();
+    let pts = batch_sweep(Kind::Conv, &cfg, Strategy::Uniform, 50);
+    // small models: communication dominates -> outright loss
+    let small: Vec<_> = pts.iter().filter(|p| p.x <= 180).collect();
+    let losing = small.iter().filter(|p| p.speedup_vs_one_tpu[3] < 1.0).count();
+    assert!(
+        losing * 2 >= small.len(),
+        "most small CONV points should lose with 4-way segmentation"
+    );
+    // the whole pre-spill band: "very poor" at best (<1.5x)
+    for p in pts.iter().filter(|p| p.x <= 350) {
+        assert!(
+            p.speedup_vs_one_tpu[3] < 1.5,
+            "x={}: {:?}",
+            p.x,
+            p.speedup_vs_one_tpu
+        );
+    }
+}
+
+#[test]
+fn optimum_is_minimum_tpus_that_avoid_host() {
+    // §V-C: "the optimum is to use the minimum number of TPUs that avoids
+    // using host memory" — for FC models with one spilled layer, 2 TPUs
+    // beat 3 and 4 (extra hops cost, no extra memory benefit needed)
+    let cfg = SystemConfig::default();
+    let pts = batch_sweep(Kind::Fc, &cfg, Strategy::ProfiledExhaustive { batch: 50 }, 50);
+    // one-spilled-layer band: n in (1620 .. 1980)
+    let p = pts.iter().find(|p| p.x == 1740).unwrap();
+    let s2 = p.speedup_vs_one_tpu[1];
+    let s3 = p.speedup_vs_one_tpu[2];
+    let s4 = p.speedup_vs_one_tpu[3];
+    assert!(s2 >= s3 && s2 >= s4, "n=1740: s2={s2:.1} s3={s3:.1} s4={s4:.1}");
+}

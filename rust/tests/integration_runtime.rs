@@ -1,0 +1,100 @@
+//! Integration: AOT artifacts -> PJRT -> numerics.
+//!
+//! The strong correctness signal of the whole stack: HLO text produced by
+//! `aot.py` (L2 jax graphs calling L1 Pallas kernels) must execute under
+//! the Rust PJRT runtime and reproduce the Python oracle's golden vectors
+//! bit-exactly, both whole-model and as chained segments.
+//!
+//! Requires `make artifacts`.  Tests skip (with a loud message) when the
+//! artifact directory is missing, unless TPU_PIPELINE_REQUIRE_ARTIFACTS=1.
+
+use tpu_pipeline::runtime::{run_chain, TpuRuntime};
+use tpu_pipeline::serving::default_artifact_dir;
+
+fn runtime_or_skip() -> Option<TpuRuntime> {
+    let dir = default_artifact_dir();
+    if !dir.join("manifest.json").exists() {
+        if std::env::var("TPU_PIPELINE_REQUIRE_ARTIFACTS").as_deref() == Ok("1") {
+            panic!("artifacts missing at {dir:?}: run `make artifacts`");
+        }
+        eprintln!("SKIP: artifacts missing at {dir:?}; run `make artifacts`");
+        return None;
+    }
+    Some(TpuRuntime::new(dir).expect("PJRT CPU client"))
+}
+
+#[test]
+fn whole_model_matches_golden() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let manifest = rt.manifest().unwrap();
+    for (name, entry) in &manifest.models {
+        let whole = entry.segment(0, entry.layers.len()).expect("whole artifact");
+        let seg = rt.load_segment(whole).unwrap_or_else(|e| panic!("{name}: {e:#}"));
+        let out = seg.run(&entry.golden.input).unwrap();
+        assert_eq!(out, entry.golden.output, "{name}: PJRT output != python oracle");
+    }
+}
+
+#[test]
+fn segment_chains_match_whole_model() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let manifest = rt.manifest().unwrap();
+    // every contiguous partition of the 5-layer models must chain to the
+    // same output (int8-exact) — the invariant pipelining relies on
+    let cut_sets: [&[usize]; 5] = [&[], &[2], &[1, 3], &[1, 2, 3], &[1, 2, 3, 4]];
+    for name in ["fc_n256", "conv_f16"] {
+        let entry = manifest.model(name).unwrap();
+        for cuts in cut_sets {
+            let segs = entry.segments_for_cuts(cuts).unwrap();
+            let loaded: Vec<_> =
+                segs.iter().map(|s| rt.load_segment(s).unwrap()).collect();
+            let out = run_chain(&loaded, &entry.golden.input).unwrap();
+            assert_eq!(
+                out, entry.golden.output,
+                "{name} cuts {cuts:?}: chained output != golden"
+            );
+        }
+    }
+}
+
+#[test]
+fn boundary_shapes_are_consistent() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let manifest = rt.manifest().unwrap();
+    for entry in manifest.models.values() {
+        for s in &entry.segments {
+            for t in &entry.segments {
+                if t.start == s.end {
+                    assert_eq!(
+                        s.output_shape, t.input_shape,
+                        "{}: [{},{}) -> [{},{})",
+                        entry.name, s.start, s.end, t.start, t.end
+                    );
+                    assert_eq!(s.out_q, t.in_q, "{}", entry.name);
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn wrong_input_size_is_rejected() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let manifest = rt.manifest().unwrap();
+    let entry = manifest.model("fc_n256").unwrap();
+    let seg = rt.load_segment(entry.segment(0, 5).unwrap()).unwrap();
+    let err = seg.run(&[0i8; 3]).unwrap_err();
+    assert!(err.to_string().contains("expects"), "{err}");
+}
+
+#[test]
+fn repeated_execution_is_deterministic() {
+    let Some(rt) = runtime_or_skip() else { return };
+    let manifest = rt.manifest().unwrap();
+    let entry = manifest.model("conv_f32").unwrap();
+    let seg = rt.load_segment(entry.segment(0, 5).unwrap()).unwrap();
+    let a = seg.run(&entry.golden.input).unwrap();
+    for _ in 0..3 {
+        assert_eq!(seg.run(&entry.golden.input).unwrap(), a);
+    }
+}
