@@ -1,0 +1,50 @@
+//! Benchmarks for the TPU-pool allocator: candidate generation (the
+//! per-model profiled search) and the full admission + placement auction,
+//! swept over M models x N TPUs — the scheduler runs on every
+//! registration change, so replanning latency matters for a serving
+//! control plane.
+
+use std::time::Duration;
+
+use tpu_pipeline::config::SystemConfig;
+use tpu_pipeline::scheduler::{
+    allocate, candidates_for, AllocatorConfig, ModelRegistry,
+};
+use tpu_pipeline::util::bench::{black_box, Bencher};
+
+const MODEL_POOL: [&str; 6] = ["fc_small", "fc_big", "fc_huge", "conv_a", "conv_b", "pyramid"];
+
+fn registry(m: usize) -> ModelRegistry {
+    let mut reg = ModelRegistry::new();
+    for name in MODEL_POOL.iter().take(m) {
+        reg.register_named(name).unwrap();
+    }
+    reg
+}
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let mut b = Bencher::new().with_budget(Duration::from_millis(250), Duration::from_millis(60));
+
+    // per-model candidate search (placement + profiled simulation)
+    for name in ["fc_small", "fc_huge", "conv_b"] {
+        let model = tpu_pipeline::scheduler::resolve_model(name).unwrap();
+        let alloc = AllocatorConfig::default();
+        b.bench(&format!("candidates/{name}"), || {
+            candidates_for(black_box(&model), &cfg, &alloc)
+        });
+    }
+
+    // full pool auction: M models x N TPUs
+    for m in [1usize, 2, 4, 6] {
+        let reg = registry(m);
+        for n in [2usize, 4, 8] {
+            let alloc = AllocatorConfig { total_tpus: n, ..Default::default() };
+            b.bench(&format!("allocate/m{m}_n{n}"), || {
+                allocate(black_box(&reg), &cfg, &alloc).unwrap()
+            });
+        }
+    }
+
+    b.report("scheduler");
+}

@@ -76,7 +76,12 @@ impl Args {
     }
 
     pub fn csv(&self) -> bool {
-        self.flags.get("csv").map(String::as_str) == Some("true")
+        self.bool_flag("csv")
+    }
+
+    /// Bare `--flag` presence.
+    pub fn bool_flag(&self, key: &str) -> bool {
+        self.flags.get(key).map(String::as_str) == Some("true")
     }
 
     pub fn config(&self) -> Result<SystemConfig> {
@@ -377,9 +382,109 @@ pub fn run(args: &Args) -> Result<String> {
         "ablation-replicate" => ablation_replicate(args.kind()?, &cfg, batch),
         "ablation-hybrid" => ablation_hybrid(&cfg, batch),
         "ablation-energy" => ablation_energy(args.kind()?, &cfg, batch),
+        "schedule" => schedule(args)?,
         "" | "help" | "--help" => USAGE.to_string(),
         other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
     };
+    Ok(out)
+}
+
+/// Parse the shared pool flags — `--models`, `--weights`, `--slo-ms`,
+/// `--tpus`, `--batch`, `--max-tpus-per-model`, `--allow-spill`,
+/// `--no-replicas` — into a registry + allocator config.  Shared by
+/// `repro schedule` and `repro serve-pool` so planning and deployment
+/// always see the same tenancy spec.
+pub fn pool_spec(
+    args: &Args,
+    default_models: &str,
+) -> Result<(crate::scheduler::ModelRegistry, crate::scheduler::AllocatorConfig)> {
+    use crate::scheduler::{AllocatorConfig, ModelRegistry, Tenant};
+
+    let models = args.str_flag("models", default_models);
+    let names: Vec<&str> =
+        models.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    anyhow::ensure!(!names.is_empty(), "--models must name at least one model");
+
+    let weights: Vec<f64> = match args.flags.get("weights") {
+        None => vec![1.0; names.len()],
+        Some(spec) => {
+            let ws: Vec<f64> = spec
+                .split(',')
+                .map(|w| w.trim().parse().with_context(|| format!("bad --weights {spec:?}")))
+                .collect::<Result<_>>()?;
+            anyhow::ensure!(
+                ws.len() == names.len() && ws.iter().all(|&w| w > 0.0),
+                "--weights needs one positive value per model"
+            );
+            ws
+        }
+    };
+    let slos_ms: Vec<Option<f64>> = match args.flags.get("slo-ms") {
+        None => vec![None; names.len()],
+        Some(spec) => {
+            let ss: Vec<Option<f64>> = spec
+                .split(',')
+                .map(|s| {
+                    let s = s.trim();
+                    if s.is_empty() || s == "-" {
+                        Ok(None)
+                    } else {
+                        s.parse().map(Some).with_context(|| format!("bad --slo-ms {spec:?}"))
+                    }
+                })
+                .collect::<Result<_>>()?;
+            anyhow::ensure!(
+                ss.len() == names.len(),
+                "--slo-ms needs one value (or '-') per model"
+            );
+            ss
+        }
+    };
+
+    let mut registry = ModelRegistry::new();
+    for (i, name) in names.iter().enumerate() {
+        let model = crate::scheduler::resolve_model(name)?;
+        let mut tenant = Tenant::new(*name, model).with_weight(weights[i]);
+        if let Some(slo_ms) = slos_ms[i] {
+            tenant = tenant.with_slo_p99_s(slo_ms / 1e3);
+        }
+        registry.register(tenant)?;
+    }
+
+    let alloc = AllocatorConfig {
+        total_tpus: args.usize_flag("tpus", 4)?,
+        batch: args.batch()?,
+        max_tpus_per_model: args.usize_flag("max-tpus-per-model", 4)?,
+        allow_host_spill: args.bool_flag("allow-spill"),
+        replicate_leftover: !args.bool_flag("no-replicas"),
+    };
+    Ok((registry, alloc))
+}
+
+/// `repro schedule`: multi-tenant TPU-pool admission + placement table.
+///
+/// Pure cost-model simulation (no artifacts needed): registers the named
+/// models, runs the pool allocator, and prints per-model
+/// `(tpu_count, strategy, predicted p99)` plus queued/rejected tenants.
+pub fn schedule(args: &Args) -> Result<String> {
+    use crate::scheduler::{allocate, plan_table};
+
+    let cfg = args.config()?;
+    let (registry, alloc) = pool_spec(args, "fc_big,conv_a,conv_b")?;
+    let plan = allocate(&registry, &cfg, &alloc)?;
+    let mut out = emit(plan_table(&plan), args.csv());
+    if !args.csv() {
+        out.push_str(&format!(
+            "pool: {}/{} TPUs used | weighted p99 objective {} ms | \
+             admitted {} queued {} rejected {}\n",
+            plan.tpus_used(),
+            plan.total_tpus,
+            ms(plan.objective_s),
+            plan.assignments.len(),
+            plan.queued.len(),
+            plan.rejected.len(),
+        ));
+    }
     Ok(out)
 }
 
@@ -462,8 +567,22 @@ ablations (beyond the paper; §V-C/§VI discussion made quantitative):
   ablation-hybrid        hybrid CPU-TPU pipeline for spilled FC models
   ablation-energy        J/inference: 1 TPU vs 4-TPU pipeline vs CPU
 
-serving (real numerics over PJRT; needs `make artifacts`):
+multi-tenant pool scheduler (cost-model simulation; no artifacts needed):
+  schedule --models fc_big,conv_a,conv_b --tpus 4
+           [--weights 2,1,1] [--slo-ms 20,-,50] [--allow-spill]
+           [--max-tpus-per-model 4] [--no-replicas]
+        memory-aware admission + per-model (tpu_count, strategy, p99)
+        chosen by the pool allocator; models: fc_small fc_big fc_huge
+        conv_a conv_b conv_big pyramid, or fc_n<width> / conv_f<filters>
+
+serving (real numerics; PJRT needs `make artifacts`):
   serve --model fc_n512 --tpus 4 [--strategy profiled] [--batch 50]
+        [--replicas N]   N data-parallel pipeline copies (ReplicaRouter)
+  serve-pool --models fc_big,fc_small --tpus 4 [--batch 50]
+        deploy the scheduled pool and serve synthetic traffic for every
+        admitted model concurrently (native deterministic backend);
+        accepts the same pool flags as `schedule` (--weights, --slo-ms,
+        --allow-spill, --max-tpus-per-model, --no-replicas)
   gantt --kind fc --x 2100 --tpus 3    ASCII pipeline schedule
 ";
 
@@ -523,6 +642,42 @@ mod tests {
             let out = run(&a).unwrap();
             assert!(!out.is_empty(), "{c}");
         }
+    }
+
+    #[test]
+    fn schedule_acceptance_scenario_admits_all_three() {
+        let a = Args::parse(&argv("schedule --models fc_big,conv_a,conv_b --tpus 4")).unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("fc_big"), "{out}");
+        assert!(out.contains("conv_a"), "{out}");
+        assert!(out.contains("conv_b"), "{out}");
+        assert!(out.contains("admitted 3 queued 0 rejected 0"), "{out}");
+        assert!(out.contains("4/4 TPUs used"), "{out}");
+        assert!(!out.contains("queued:"), "{out}");
+    }
+
+    #[test]
+    fn schedule_flags_weights_slos_csv() {
+        let a = Args::parse(&argv(
+            "schedule --models fc_small,conv_a --tpus 2 --weights 2,1 --slo-ms 1,- --csv",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.starts_with("model,weight,tpus"), "{out}");
+        // bad weights arity errors
+        let a = Args::parse(&argv("schedule --models fc_small --weights 1,2")).unwrap();
+        assert!(run(&a).is_err());
+        // unknown model errors
+        let a = Args::parse(&argv("schedule --models bogus")).unwrap();
+        assert!(run(&a).is_err());
+    }
+
+    #[test]
+    fn schedule_reports_queued_and_rejected() {
+        let a = Args::parse(&argv("schedule --models fc_huge,conv_big,fc_n3000 --tpus 4")).unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("queued:"), "{out}");
+        assert!(out.contains("rejected:"), "{out}");
     }
 
     #[test]

@@ -190,6 +190,108 @@ mod tests {
     }
 
     #[test]
+    fn try_recv_on_empty_returns_none_without_blocking() {
+        let (tx, rx) = bounded::<u32>(4);
+        assert_eq!(rx.try_recv(), None, "empty open channel");
+        tx.send(7).unwrap();
+        assert_eq!(rx.try_recv(), Some(7));
+        assert_eq!(rx.try_recv(), None, "drained again");
+        tx.close();
+        assert_eq!(rx.try_recv(), None, "empty closed channel");
+        assert!(rx.is_empty());
+    }
+
+    #[test]
+    fn send_after_close_returns_the_value() {
+        let (tx, rx) = bounded::<String>(2);
+        tx.close();
+        // the rejected value comes back to the caller intact
+        let err = tx.send("payload".to_string()).unwrap_err();
+        assert_eq!(err, SendError("payload".to_string()));
+        let SendError(v) = err;
+        assert_eq!(v, "payload");
+        assert_eq!(rx.recv(), None);
+        // closing twice is idempotent
+        tx.close();
+        assert!(tx.send("again".to_string()).is_err());
+    }
+
+    #[test]
+    fn recv_drains_buffered_items_after_close_then_none_forever() {
+        let (tx, rx) = bounded(8);
+        for i in 0..4 {
+            tx.send(i).unwrap();
+        }
+        tx.close();
+        // closed-but-nonempty: recv keeps draining in FIFO order
+        for i in 0..4 {
+            assert_eq!(rx.len(), 4 - i as usize);
+            assert_eq!(rx.recv(), Some(i));
+        }
+        // closed-and-empty: every further recv is None (no hang)
+        assert_eq!(rx.recv(), None);
+        assert_eq!(rx.recv(), None);
+    }
+
+    /// Poll `cond` until it holds or the deadline passes (scheduling-safe
+    /// alternative to a fixed sleep before asserting cross-thread state).
+    fn eventually(deadline: Duration, cond: impl Fn() -> bool) -> bool {
+        let t0 = std::time::Instant::now();
+        while t0.elapsed() < deadline {
+            if cond() {
+                return true;
+            }
+            thread::sleep(Duration::from_millis(2));
+        }
+        cond()
+    }
+
+    #[test]
+    fn capacity_blocks_sender_and_unblocks_per_recv() {
+        let (tx, rx) = bounded::<u32>(2);
+        tx.send(0).unwrap();
+        tx.send(1).unwrap();
+        let unblocked = Arc::new(Mutex::new(Vec::new()));
+        let log = unblocked.clone();
+        let t = thread::spawn(move || {
+            for v in [2u32, 3] {
+                tx.send(v).unwrap(); // must block while 2 items sit queued
+                log.lock().unwrap().push(v);
+            }
+        });
+        // these hold regardless of scheduling: a blocked send can neither
+        // grow the queue past capacity nor reach the post-send log line
+        thread::sleep(Duration::from_millis(40));
+        assert_eq!(rx.len(), 2, "queue must stay at capacity");
+        assert!(unblocked.lock().unwrap().is_empty(), "sender must still be blocked");
+        // each recv frees exactly one slot
+        assert_eq!(rx.recv(), Some(0));
+        assert!(
+            eventually(Duration::from_secs(5), || *unblocked.lock().unwrap() == [2]),
+            "sender should wake after one recv frees a slot"
+        );
+        assert_eq!(rx.recv(), Some(1));
+        t.join().unwrap();
+        assert_eq!(unblocked.lock().unwrap().as_slice(), &[2, 3]);
+        assert_eq!(rx.recv(), Some(2));
+        assert_eq!(rx.recv(), Some(3));
+    }
+
+    #[test]
+    fn close_wakes_blocked_sender() {
+        let (tx, rx) = bounded::<u32>(1);
+        tx.send(0).unwrap();
+        let tx2 = tx.clone();
+        let t = thread::spawn(move || tx2.send(1));
+        thread::sleep(Duration::from_millis(30));
+        tx.close(); // the blocked send must wake and fail
+        assert_eq!(t.join().unwrap(), Err(SendError(1)));
+        // the pre-close item is still drainable
+        assert_eq!(rx.recv(), Some(0));
+        assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
     fn mpmc_all_items_delivered_once() {
         let (tx, rx) = bounded::<u64>(16);
         let mut workers = Vec::new();

@@ -39,4 +39,5 @@ pub mod sweep;
 pub mod trace;
 pub mod cli;
 pub mod serving;
+pub mod scheduler;
 pub mod ablation;

@@ -23,6 +23,7 @@ fn main() {
     };
     let result = match args.command.as_str() {
         "serve" => cmd_serve(&args),
+        "serve-pool" => cmd_serve_pool(&args),
         "gantt" => cmd_gantt(&args),
         _ => cli::run(&args).map(|out| print!("{out}")),
     };
@@ -54,6 +55,28 @@ fn cmd_serve(args: &Args) -> Result<()> {
         strategy.name()
     );
 
+    // data-parallel deployment: N full pipeline copies behind the
+    // round-robin ReplicaRouter (the paper's §V-C alternative)
+    let replicas = args.usize_flag("replicas", 1)?;
+    if replicas > 1 {
+        let router =
+            serving::spawn_replicated_pipeline(&artifact_dir, entry, &plan, replicas, 64)?;
+        for p in &router.replicas {
+            p.wait_ready()?;
+        }
+        let requests = serving::synth_requests(&plan, batch, 0xC0FFEE);
+        let t0 = std::time::Instant::now();
+        let responses = router.serve_batch(requests)?;
+        let wall = t0.elapsed().as_secs_f64();
+        let sim_makespan = responses.iter().map(|r| r.sim_done_s).fold(0.0, f64::max);
+        println!("batch {} served over {replicas} replicas:", responses.len());
+        println!("  real wall (PJRT CPU):  {}", fmt_seconds(wall));
+        println!("  real throughput:       {:.0} inf/s", responses.len() as f64 / wall);
+        println!("  sim makespan (per-replica clock): {}", fmt_seconds(sim_makespan));
+        router.shutdown();
+        return Ok(());
+    }
+
     let pipeline = serving::spawn_pipeline(&artifact_dir, entry, &plan, 64)?;
     let requests = serving::synth_requests(&plan, batch, 0xC0FFEE);
     let report = serving::serve_batch(&pipeline, &plan, requests)?;
@@ -74,6 +97,64 @@ fn cmd_serve(args: &Args) -> Result<()> {
         );
     }
     pipeline.shutdown();
+    Ok(())
+}
+
+/// `repro serve-pool`: schedule a multi-tenant pool, deploy one pipeline
+/// (or replica set) per admitted model, and serve synthetic traffic for
+/// every tenant concurrently through the per-model router.
+///
+/// Stages run on the deterministic native backend, so this works without
+/// artifacts; responses are verified against each tenant's serial
+/// reference.
+fn cmd_serve_pool(args: &Args) -> Result<()> {
+    use tpu_pipeline::scheduler::{allocate, plan_table, BackendKind, PoolRouter};
+
+    let cfg = args.config()?;
+    let batch = args.batch()?;
+    // same flag grammar as `repro schedule` (incl. --weights / --slo-ms),
+    // so the deployed plan always matches the one `schedule` prints
+    let (registry, alloc) = cli::pool_spec(args, "fc_big,fc_small")?;
+    let plan = allocate(&registry, &cfg, &alloc)?;
+    print!("{}", plan_table(&plan).render());
+
+    let router = PoolRouter::deploy(&plan, &registry, &cfg, &BackendKind::Synthetic, 64)?;
+    let reports = serving::serve_pool(&router, batch, 0xC0FFEE, true)?;
+    println!("\nserved {} tenant(s) x {batch} requests concurrently:", reports.len());
+    for r in &reports {
+        println!(
+            "  {:10} {} TPU(s) x{} [{}]: wall {} | {:>6.0} inf/s | sim p99 {} \
+             (predicted {}) | verified {}",
+            r.name,
+            r.tpu_count,
+            r.replicas,
+            r.partition_label,
+            fmt_seconds(r.wall_s),
+            r.real_throughput,
+            fmt_seconds(r.sim_p99_s),
+            fmt_seconds(r.predicted_p99_s),
+            r.verified,
+        );
+    }
+    for t in router.tenants() {
+        let s = t.metrics.snapshot();
+        println!(
+            "  {:10} metrics: submitted {} completed {} errors {} | real p50 {} p99 {}",
+            t.name,
+            s.submitted,
+            s.completed,
+            s.errors,
+            fmt_seconds(s.real_p50_s),
+            fmt_seconds(s.real_p99_s),
+        );
+    }
+    let s = router.metrics.snapshot();
+    println!(
+        "  scheduler: registered {} admitted {} queued {} rejected {} | \
+         routed {} requests in {} batches",
+        s.registered, s.admitted, s.queued, s.rejected, s.routed_requests, s.routed_batches
+    );
+    router.shutdown();
     Ok(())
 }
 

@@ -84,8 +84,10 @@ impl ServeMetrics {
             completed: g.completed,
             real_p50_s: g.real_latency.percentile(50.0),
             real_p95_s: g.real_latency.percentile(95.0),
+            real_p99_s: g.real_latency.percentile(99.0),
             real_mean_s: g.real_latency.mean(),
             sim_p50_s: g.sim_latency.percentile(50.0),
+            sim_p99_s: g.sim_latency.percentile(99.0),
             sim_mean_s: g.sim_latency.mean(),
         }
     }
@@ -97,9 +99,128 @@ pub struct ServeSnapshot {
     pub completed: u64,
     pub real_p50_s: f64,
     pub real_p95_s: f64,
+    pub real_p99_s: f64,
     pub real_mean_s: f64,
     pub sim_p50_s: f64,
+    pub sim_p99_s: f64,
     pub sim_mean_s: f64,
+}
+
+/// Per-tenant serving metrics for the multi-tenant pool router: the
+/// shared [`ServeMetrics`] latency bookkeeping plus request accounting
+/// (submitted / errors) that only exists at the routing layer.
+#[derive(Debug, Default)]
+pub struct TenantMetrics {
+    core: ServeMetrics,
+    extra: Mutex<TenantCounters>,
+}
+
+#[derive(Debug, Default)]
+struct TenantCounters {
+    submitted: u64,
+    errors: u64,
+}
+
+impl TenantMetrics {
+    pub fn record_submitted(&self, n: u64) {
+        self.extra.lock().unwrap().submitted += n;
+    }
+
+    pub fn record_response(&self, real_s: f64, sim_s: f64) {
+        self.core.record(real_s, sim_s);
+    }
+
+    pub fn record_error(&self) {
+        self.extra.lock().unwrap().errors += 1;
+    }
+
+    pub fn snapshot(&self) -> TenantSnapshot {
+        let c = self.core.snapshot();
+        let e = self.extra.lock().unwrap();
+        TenantSnapshot {
+            submitted: e.submitted,
+            completed: c.completed,
+            errors: e.errors,
+            real_p50_s: c.real_p50_s,
+            real_p99_s: c.real_p99_s,
+            sim_p50_s: c.sim_p50_s,
+            sim_p99_s: c.sim_p99_s,
+        }
+    }
+}
+
+/// Immutable view of one tenant's counters.
+#[derive(Debug, Clone, Copy)]
+pub struct TenantSnapshot {
+    pub submitted: u64,
+    pub completed: u64,
+    pub errors: u64,
+    pub real_p50_s: f64,
+    pub real_p99_s: f64,
+    pub sim_p50_s: f64,
+    pub sim_p99_s: f64,
+}
+
+/// Pool-scheduler counters: registration, admission and routing totals.
+#[derive(Debug, Default)]
+pub struct SchedulerMetrics {
+    inner: Mutex<SchedulerInner>,
+}
+
+#[derive(Debug, Default)]
+struct SchedulerInner {
+    registered: u64,
+    admitted: u64,
+    queued: u64,
+    rejected: u64,
+    routed_batches: u64,
+    routed_requests: u64,
+    route_misses: u64,
+}
+
+impl SchedulerMetrics {
+    pub fn record_admission(&self, registered: u64, admitted: u64, queued: u64, rejected: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.registered = registered;
+        g.admitted = admitted;
+        g.queued = queued;
+        g.rejected = rejected;
+    }
+
+    pub fn record_routed(&self, requests: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.routed_batches += 1;
+        g.routed_requests += requests;
+    }
+
+    pub fn record_route_miss(&self) {
+        self.inner.lock().unwrap().route_misses += 1;
+    }
+
+    pub fn snapshot(&self) -> SchedulerSnapshot {
+        let g = self.inner.lock().unwrap();
+        SchedulerSnapshot {
+            registered: g.registered,
+            admitted: g.admitted,
+            queued: g.queued,
+            rejected: g.rejected,
+            routed_batches: g.routed_batches,
+            routed_requests: g.routed_requests,
+            route_misses: g.route_misses,
+        }
+    }
+}
+
+/// Immutable view of the scheduler counters.
+#[derive(Debug, Clone, Copy)]
+pub struct SchedulerSnapshot {
+    pub registered: u64,
+    pub admitted: u64,
+    pub queued: u64,
+    pub rejected: u64,
+    pub routed_batches: u64,
+    pub routed_requests: u64,
+    pub route_misses: u64,
 }
 
 #[cfg(test)]
@@ -127,6 +248,39 @@ mod tests {
         assert_eq!(s.completed, 100);
         assert!(s.real_p50_s > 0.03 && s.real_p50_s < 0.08, "{s:?}");
         assert!(s.sim_mean_s > s.real_mean_s);
+    }
+
+    #[test]
+    fn tenant_metrics_accounting() {
+        let m = TenantMetrics::default();
+        m.record_submitted(10);
+        for i in 1..=8 {
+            m.record_response(i as f64 * 1e-3, i as f64 * 2e-3);
+        }
+        m.record_error();
+        let s = m.snapshot();
+        assert_eq!(s.submitted, 10);
+        assert_eq!(s.completed, 8);
+        assert_eq!(s.errors, 1);
+        assert!(s.real_p99_s >= s.real_p50_s, "{s:?}");
+        assert!(s.sim_p50_s > s.real_p50_s, "{s:?}");
+    }
+
+    #[test]
+    fn scheduler_metrics_accounting() {
+        let m = SchedulerMetrics::default();
+        m.record_admission(5, 3, 1, 1);
+        m.record_routed(50);
+        m.record_routed(20);
+        m.record_route_miss();
+        let s = m.snapshot();
+        assert_eq!(s.registered, 5);
+        assert_eq!(s.admitted, 3);
+        assert_eq!(s.queued, 1);
+        assert_eq!(s.rejected, 1);
+        assert_eq!(s.routed_batches, 2);
+        assert_eq!(s.routed_requests, 70);
+        assert_eq!(s.route_misses, 1);
     }
 
     #[test]

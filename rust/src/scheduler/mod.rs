@@ -1,0 +1,185 @@
+//! Multi-tenant TPU-pool scheduler: memory-aware admission, cost-model
+//! placement, and per-model routing (DESIGN.md §7).
+//!
+//! The paper's pipeline serves **one** model on a fixed TPU set.  This
+//! subsystem turns that into a pool: M registered models compete for N
+//! simulated Edge TPUs, and the scheduler decides
+//!
+//! * **whether** each model runs at all — admission is memory-aware: a
+//!   model is only admitted with a segmentation whose every segment keeps
+//!   its weights in on-chip memory (host streaming is the 40x cliff of
+//!   Table I), otherwise it is queued (pool too small) or rejected (no
+//!   partition can ever fit);
+//! * **how** it runs — a per-model `(tpu_count, Strategy)` chosen by
+//!   searching the profiled cost model (`pipeline::simulate` over the
+//!   candidate partitions), minimizing the weighted sum of predicted p99
+//!   latencies, echoing the profiled-segmentation contribution at the
+//!   pool level;
+//! * **where requests go** — one live [`Pipeline`](crate::coordinator) —
+//!   or a [`ReplicaRouter`](crate::coordinator::ReplicaRouter) of copies
+//!   when leftover TPUs were granted as replicas — per admitted model,
+//!   behind a name-keyed router with per-tenant metrics.
+//!
+//! ```text
+//! ModelRegistry --register--> PoolScheduler::plan (allocator)
+//!                                   |  PoolPlan: admitted / queued / rejected
+//!                                   v
+//!                             PoolRouter::deploy  (router)
+//!                                   |  one Pipeline (xN replicas) per tenant
+//!                                   v
+//!                      router.serve("model", batch) + TenantMetrics
+//! ```
+//!
+//! Entry points: `repro schedule` (plan only, prints the admission table),
+//! `repro serve-pool` (plan + deploy + serve synthetic traffic), and
+//! `examples/serve_multi_tenant.rs` (concurrent multi-model serving with
+//! bit-exact response verification).
+
+pub mod allocator;
+pub mod registry;
+pub mod router;
+
+pub use allocator::{
+    allocate, candidates_for, AllocatorConfig, Assignment, Candidate, PoolPlan, Rejection,
+};
+pub use registry::{resolve_model, ModelRegistry, Tenant};
+pub use router::{
+    synthetic_reference, synthetic_transform, tenant_salt, BackendKind, PoolRouter,
+    TenantHandle,
+};
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::report::{ms, Table};
+
+/// Facade: a registry plus the pool/system configuration.
+pub struct PoolScheduler {
+    pub registry: ModelRegistry,
+    pub system: SystemConfig,
+    pub alloc: AllocatorConfig,
+}
+
+impl PoolScheduler {
+    pub fn new(system: SystemConfig, alloc: AllocatorConfig) -> Self {
+        PoolScheduler { registry: ModelRegistry::new(), system, alloc }
+    }
+
+    /// Register a tenant (see [`ModelRegistry::register`]).
+    pub fn register(&mut self, tenant: Tenant) -> Result<()> {
+        self.registry.register(tenant)
+    }
+
+    /// Run admission + placement over everything registered.
+    pub fn plan(&self) -> Result<PoolPlan> {
+        allocate(&self.registry, &self.system, &self.alloc)
+    }
+
+    /// Plan, then spawn the live deployments.
+    pub fn deploy(&self, backend: &BackendKind, queue_capacity: usize) -> Result<PoolRouter> {
+        let plan = self.plan()?;
+        PoolRouter::deploy(&plan, &self.registry, &self.system, backend, queue_capacity)
+    }
+}
+
+/// Render a pool plan as the `repro schedule` admission table.
+pub fn plan_table(plan: &PoolPlan) -> Table {
+    let mut t = Table::new(
+        format!(
+            "TPU-pool schedule — {} model(s) on {} TPUs ({} used)",
+            plan.assignments.len() + plan.queued.len() + plan.rejected.len(),
+            plan.total_tpus,
+            plan.tpus_used(),
+        ),
+        &[
+            "model", "weight", "tpus", "replicas", "strategy", "split", "p99_ms",
+            "per_item_ms", "dev_mib", "host_mib", "status",
+        ],
+    );
+    for a in &plan.assignments {
+        let c = &a.candidate;
+        t.row(vec![
+            a.name.clone(),
+            format!("{:.1}", a.weight),
+            c.tpu_count.to_string(),
+            a.replicas.to_string(),
+            c.strategy.name().to_string(),
+            c.partition.label(),
+            ms(a.effective_p99_s),
+            ms(c.per_item_s),
+            format!("{:.2}", c.device_mib),
+            format!("{:.2}", c.host_mib),
+            if a.slo_violated() { "admitted (SLO at risk)".into() } else { "admitted".into() },
+        ]);
+    }
+    for q in &plan.queued {
+        t.row(vec![
+            q.name.clone(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            format!("queued: {}", q.reason),
+        ]);
+    }
+    for r in &plan.rejected {
+        t.row(vec![
+            r.name.clone(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            "-".into(),
+            format!("rejected: {}", r.reason),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn facade_plans_and_deploys() {
+        let mut s =
+            PoolScheduler::new(SystemConfig::default(), AllocatorConfig::default());
+        s.registry.register_named("fc_big").unwrap();
+        s.registry.register_named("conv_a").unwrap();
+        s.registry.register_named("conv_b").unwrap();
+        let plan = s.plan().unwrap();
+        assert_eq!(plan.assignments.len(), 3);
+        let router = s.deploy(&BackendKind::Synthetic, 8).unwrap();
+        assert_eq!(router.len(), 3);
+        router.wait_ready().unwrap();
+        router.shutdown();
+    }
+
+    #[test]
+    fn plan_table_lists_every_tenant_once() {
+        let mut s = PoolScheduler::new(
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: 4, ..Default::default() },
+        );
+        // conv_big needs 4 TPUs and fc_huge needs 3, so one of them is
+        // queued on a 4-TPU pool; fc_n3000 can never fit on-chip
+        s.registry.register_named("conv_big").unwrap();
+        s.registry.register_named("fc_huge").unwrap();
+        s.registry.register_named("fc_n3000").unwrap();
+        let plan = s.plan().unwrap();
+        let rendered = plan_table(&plan).render();
+        assert!(rendered.contains("conv_big"), "{rendered}");
+        assert!(rendered.contains("queued"), "{rendered}");
+        assert!(rendered.contains("rejected"), "{rendered}");
+        assert_eq!(plan.assignments.len() + plan.queued.len() + plan.rejected.len(), 3);
+    }
+}

@@ -1,0 +1,204 @@
+//! Model registry: the set of tenants competing for the TPU pool.
+//!
+//! Each [`Tenant`] carries the layer-IR model (what the allocator places
+//! and costs), a scheduling weight (the objective multiplier), and an
+//! optional p99 SLO.  Tenants can be registered from artifact-manifest
+//! entries (`runtime::ModelEntry`) or resolved by name from the paper's
+//! synthetic families — the latter is what `repro schedule` uses, so the
+//! pool allocator runs without any compiled artifacts.
+
+use std::collections::BTreeMap;
+
+use anyhow::{Context, Result};
+
+use crate::model::synthetic::{conv_model, fc_model, hetero_fc_model};
+use crate::model::Model;
+use crate::runtime::ModelEntry;
+
+/// One registered model competing for the pool.
+#[derive(Debug, Clone)]
+pub struct Tenant {
+    /// Registry key (also the routing key for the per-model router).
+    pub name: String,
+    /// Layer-IR model the allocator segments and places.
+    pub model: Model,
+    /// Relative scheduling weight: the allocator minimizes
+    /// `Σ weight · p99`, so heavier tenants get TPUs first.
+    pub weight: f64,
+    /// Optional p99 latency SLO in seconds (predicted violations are
+    /// penalized by the allocator and flagged in reports).
+    pub slo_p99_s: Option<f64>,
+}
+
+impl Tenant {
+    pub fn new(name: impl Into<String>, model: Model) -> Self {
+        Tenant { name: name.into(), model, weight: 1.0, slo_p99_s: None }
+    }
+
+    pub fn with_weight(mut self, weight: f64) -> Self {
+        assert!(weight > 0.0, "weight must be positive");
+        self.weight = weight;
+        self
+    }
+
+    pub fn with_slo_p99_s(mut self, slo_s: f64) -> Self {
+        self.slo_p99_s = Some(slo_s);
+        self
+    }
+}
+
+/// The registry: name -> tenant, deterministic iteration order.
+#[derive(Debug, Clone, Default)]
+pub struct ModelRegistry {
+    tenants: BTreeMap<String, Tenant>,
+}
+
+impl ModelRegistry {
+    pub fn new() -> Self {
+        ModelRegistry::default()
+    }
+
+    /// Register a tenant; duplicate names are an error (tenants are
+    /// routing keys).
+    pub fn register(&mut self, tenant: Tenant) -> Result<()> {
+        anyhow::ensure!(
+            !self.tenants.contains_key(&tenant.name),
+            "model {:?} already registered",
+            tenant.name
+        );
+        self.tenants.insert(tenant.name.clone(), tenant);
+        Ok(())
+    }
+
+    /// Resolve `name` against the synthetic families and register it.
+    pub fn register_named(&mut self, name: &str) -> Result<()> {
+        let model = resolve_model(name)?;
+        self.register(Tenant::new(name, model))
+    }
+
+    /// Register a model from an artifact-manifest entry (PJRT-backed
+    /// deployments route by the manifest name).
+    pub fn register_manifest_entry(&mut self, entry: &ModelEntry) -> Result<()> {
+        self.register(Tenant::new(entry.name.clone(), entry.to_model()))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&Tenant> {
+        self.tenants.get(name).with_context(|| {
+            format!("model {name:?} not registered (have: {:?})", self.names())
+        })
+    }
+
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tenant> {
+        self.tenants.get_mut(name)
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    pub fn iter(&self) -> impl Iterator<Item = &Tenant> {
+        self.tenants.values()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.tenants.keys().cloned().collect()
+    }
+}
+
+/// Resolve a model name to a layer-IR model without artifacts.
+///
+/// Friendly aliases (sized off the paper's Tables I–IV so they exercise
+/// distinct admission regimes):
+///
+/// | alias      | model            | single-TPU placement            |
+/// |------------|------------------|---------------------------------|
+/// | `fc_small` | `fc_model(512)`  | fits on one TPU                 |
+/// | `fc_big`   | `fc_model(1980)` | spills on one TPU, fits on two  |
+/// | `fc_huge`  | `fc_model(2580)` | needs three TPUs (profiled)     |
+/// | `conv_a`   | `conv_model(292)`| fits on one TPU                 |
+/// | `conv_b`   | `conv_model(412)`| fits on one TPU (barely)        |
+/// | `conv_big` | `conv_model(592)`| needs four TPUs (profiled)      |
+/// | `pyramid`  | hetero FC chain  | fits on one TPU                 |
+///
+/// Parametric forms `fc_n<width>` and `conv_f<filters>` address the whole
+/// synthetic sweep grids.
+pub fn resolve_model(name: &str) -> Result<Model> {
+    let model = match name {
+        "fc_small" => fc_model(512),
+        "fc_big" => fc_model(1980),
+        "fc_huge" => fc_model(2580),
+        "conv_a" => conv_model(292),
+        "conv_b" => conv_model(412),
+        "conv_big" => conv_model(592),
+        "pyramid" => hetero_fc_model("pyramid", &[64, 2048, 1024, 256, 10]),
+        other => {
+            if let Some(n) = other.strip_prefix("fc_n") {
+                let n: u64 = n.parse().with_context(|| format!("bad fc width in {other:?}"))?;
+                fc_model(n)
+            } else if let Some(f) = other.strip_prefix("conv_f") {
+                let f: u64 =
+                    f.parse().with_context(|| format!("bad conv filters in {other:?}"))?;
+                conv_model(f)
+            } else {
+                anyhow::bail!(
+                    "unknown model {other:?} (aliases: fc_small fc_big fc_huge conv_a \
+                     conv_b conv_big pyramid; parametric: fc_n<width> conv_f<filters>)"
+                );
+            }
+        }
+    };
+    Ok(model)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compiler::place;
+    use crate::config::DeviceConfig;
+
+    #[test]
+    fn aliases_resolve_and_have_documented_placement() {
+        let cfg = DeviceConfig::default();
+        // one-TPU-fitting aliases
+        for name in ["fc_small", "conv_a", "conv_b", "pyramid"] {
+            let m = resolve_model(name).unwrap();
+            assert!(!place(&m.layers, &cfg).uses_host(), "{name} should fit one TPU");
+        }
+        // spilling aliases
+        for name in ["fc_big", "fc_huge", "conv_big"] {
+            let m = resolve_model(name).unwrap();
+            assert!(place(&m.layers, &cfg).uses_host(), "{name} should spill one TPU");
+        }
+    }
+
+    #[test]
+    fn parametric_names_resolve() {
+        assert_eq!(resolve_model("fc_n256").unwrap().name, "fc_n256");
+        assert_eq!(resolve_model("conv_f100").unwrap().name, "conv_f100");
+        assert!(resolve_model("fc_nxyz").is_err());
+        assert!(resolve_model("bogus").is_err());
+    }
+
+    #[test]
+    fn registry_rejects_duplicates_and_resolves() {
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        reg.register_named("conv_a").unwrap();
+        assert!(reg.register_named("fc_small").is_err(), "duplicate must fail");
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.names(), vec!["conv_a".to_string(), "fc_small".to_string()]);
+        assert!(reg.get("fc_small").is_ok());
+        assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn tenant_builder_sets_policy_fields() {
+        let t = Tenant::new("t", fc_model(512)).with_weight(2.5).with_slo_p99_s(0.02);
+        assert_eq!(t.weight, 2.5);
+        assert_eq!(t.slo_p99_s, Some(0.02));
+    }
+}

@@ -1,0 +1,548 @@
+//! Per-model request router: one live deployment per admitted tenant.
+//!
+//! [`PoolRouter::deploy`] turns a [`PoolPlan`](super::allocator::PoolPlan)
+//! into running [`Pipeline`]s — one per admitted model, or a
+//! [`ReplicaRouter`] of full pipeline copies when the allocator granted
+//! leftover-TPU replicas — and routes request batches by model name with
+//! per-tenant metrics.
+//!
+//! Two stage backends:
+//!
+//! * [`BackendKind::Pjrt`] — AOT-compiled HLO segments via the PJRT
+//!   runtime (requires `make artifacts`; the offline `xla` stub reports
+//!   itself unavailable at spawn time).
+//! * [`BackendKind::Synthetic`] — a deterministic native executor with the
+//!   same shape contract as the real segments: stage `i` of a model maps
+//!   its segment's input activation tensor to its output tensor through a
+//!   keyed mixing function.  Composition over the pipeline must equal
+//!   [`synthetic_reference`] bit-for-bit, which is what the multi-tenant
+//!   example and tests verify — order, routing and isolation bugs all
+//!   corrupt the digest.
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use anyhow::{Context, Result};
+
+use crate::config::SystemConfig;
+use crate::coordinator::{
+    Pipeline, PipelineConfig, ReplicaRouter, Request, Response, StageBackend, StageFactory,
+};
+use crate::metrics::{SchedulerMetrics, TenantMetrics};
+use crate::model::Model;
+use crate::runtime::stage::pjrt_stage_factory;
+use crate::runtime::Manifest;
+use crate::segment::Partition;
+use crate::serving::stage_sims;
+use crate::util::rng::Rng;
+
+use super::allocator::PoolPlan;
+use super::registry::ModelRegistry;
+
+/// How deployed stages execute.
+#[derive(Debug, Clone)]
+pub enum BackendKind {
+    /// Deterministic native synthetic executor (no artifacts needed).
+    Synthetic,
+    /// AOT artifacts served through PJRT, rooted at this directory.
+    Pjrt { artifact_dir: PathBuf },
+}
+
+/// Stable per-tenant key for the synthetic executor (FNV-1a of the name).
+pub fn tenant_salt(name: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn stage_salt(model_salt: u64, stage: usize) -> u64 {
+    model_salt ^ (stage as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+}
+
+/// One synthetic stage application: a keyed, order-sensitive digest of the
+/// input tensor expanded to the output tensor shape.  O(in + out).
+pub fn synthetic_transform(salt: u64, input: &[i8], out_elems: usize) -> Vec<i8> {
+    let mut h = salt ^ 0xA076_1D64_78BD_642F;
+    for &b in input {
+        h = (h ^ (b as u8 as u64)).wrapping_mul(0x100000001b3);
+    }
+    (0..out_elems)
+        .map(|j| {
+            let mut x = h ^ (j as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+            x = x.wrapping_mul(0x2545_F491_4F6C_DD1D);
+            x ^= x >> 29;
+            (x >> 56) as u8 as i8
+        })
+        .collect()
+}
+
+/// Serial reference for a synthetic deployment: apply every stage's
+/// transform in partition order.  `stage_out_elems[i]` is stage i's output
+/// tensor size.  The pipelined deployment must reproduce this exactly.
+pub fn synthetic_reference(model_salt: u64, stage_out_elems: &[usize], input: &[i8]) -> Vec<i8> {
+    let mut x = input.to_vec();
+    for (i, &out) in stage_out_elems.iter().enumerate() {
+        x = synthetic_transform(stage_salt(model_salt, i), &x, out);
+    }
+    x
+}
+
+struct SyntheticStage {
+    salt: u64,
+    in_elems: usize,
+    out_elems: usize,
+}
+
+impl StageBackend for SyntheticStage {
+    fn run(&mut self, input: &[i8]) -> Result<Vec<i8>> {
+        anyhow::ensure!(
+            input.len() == self.in_elems,
+            "synthetic stage expects {} input elems, got {}",
+            self.in_elems,
+            input.len()
+        );
+        Ok(synthetic_transform(self.salt, input, self.out_elems))
+    }
+}
+
+fn synthetic_stage_factory(salt: u64, in_elems: usize, out_elems: usize) -> StageFactory {
+    Box::new(move || {
+        Ok(Box::new(SyntheticStage { salt, in_elems, out_elems }) as Box<dyn StageBackend>)
+    })
+}
+
+/// Per-segment (input, output) element counts of a partition.
+fn stage_elems(model: &Model, partition: &Partition) -> Vec<(usize, usize)> {
+    partition
+        .bounds()
+        .iter()
+        .map(|&(a, b)| {
+            (
+                model.layers[a].input_elems() as usize,
+                model.layers[b - 1].output_elems() as usize,
+            )
+        })
+        .collect()
+}
+
+enum Deployment {
+    Single(Pipeline),
+    Replicated(ReplicaRouter),
+}
+
+impl Deployment {
+    fn serve_batch(&self, requests: Vec<Request>) -> Result<Vec<Response>> {
+        match self {
+            Deployment::Single(p) => p.serve_batch(requests),
+            Deployment::Replicated(r) => r.serve_batch(requests),
+        }
+    }
+
+    fn wait_ready(&self) -> Result<()> {
+        match self {
+            Deployment::Single(p) => p.wait_ready(),
+            Deployment::Replicated(r) => {
+                for p in &r.replicas {
+                    p.wait_ready()?;
+                }
+                Ok(())
+            }
+        }
+    }
+
+    fn shutdown(self) {
+        match self {
+            Deployment::Single(p) => p.shutdown(),
+            Deployment::Replicated(r) => r.shutdown(),
+        }
+    }
+}
+
+/// One admitted tenant's live deployment.
+pub struct TenantHandle {
+    pub name: String,
+    pub tpu_count: usize,
+    pub replicas: usize,
+    pub partition_label: String,
+    pub strategy_name: &'static str,
+    pub predicted_p99_s: f64,
+    /// Input tensor element count (what requests must carry).
+    pub in_elems: usize,
+    /// Output tensor element count.
+    pub out_elems: usize,
+    /// Per-stage output sizes, for [`synthetic_reference`] checks.
+    pub stage_out_elems: Vec<usize>,
+    /// Synthetic-backend key (stable across runs; unused for PJRT).
+    pub salt: u64,
+    pub metrics: Arc<TenantMetrics>,
+    deployment: Deployment,
+    /// Serializes `serve` calls per tenant: a deployment's response queue
+    /// is shared, so two interleaved `serve_batch` drains would
+    /// cross-deliver responses.
+    serve_lock: std::sync::Mutex<()>,
+    /// The tenant's simulated clock at the end of the last served batch.
+    /// Pipeline sim clocks never reset, so per-batch sim latencies are
+    /// recorded relative to this epoch (otherwise the metric would grow
+    /// without bound across batches).
+    sim_epoch: std::sync::Mutex<f64>,
+}
+
+impl TenantHandle {
+    /// Deterministic random request batch shaped for this tenant.
+    pub fn synth_requests(&self, n: usize, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed ^ self.salt);
+        (0..n as u64).map(|id| Request { id, data: rng.i8_vec(self.in_elems) }).collect()
+    }
+
+    /// The serial reference output for one request (synthetic backend).
+    pub fn reference(&self, input: &[i8]) -> Vec<i8> {
+        synthetic_reference(self.salt, &self.stage_out_elems, input)
+    }
+}
+
+/// The per-model request router over all admitted deployments.
+pub struct PoolRouter {
+    tenants: BTreeMap<String, TenantHandle>,
+    pub metrics: Arc<SchedulerMetrics>,
+}
+
+impl PoolRouter {
+    /// Spawn every admitted assignment of `plan` and index the deployments
+    /// by model name.
+    pub fn deploy(
+        plan: &PoolPlan,
+        registry: &ModelRegistry,
+        cfg: &SystemConfig,
+        backend: &BackendKind,
+        queue_capacity: usize,
+    ) -> Result<PoolRouter> {
+        // PJRT deployments resolve segments through the artifact manifest
+        let manifest: Option<Manifest> = match backend {
+            BackendKind::Pjrt { artifact_dir } => {
+                Some(Manifest::load(&artifact_dir.join("manifest.json"))?)
+            }
+            BackendKind::Synthetic => None,
+        };
+
+        let mut tenants = BTreeMap::new();
+        for a in &plan.assignments {
+            let tenant = registry.get(&a.name)?;
+            let model = &tenant.model;
+            let partition = &a.candidate.partition;
+            let sims = stage_sims(model, partition, cfg);
+            let elems = stage_elems(model, partition);
+            let salt = tenant_salt(&a.name);
+
+            let mut pipelines = Vec::with_capacity(a.replicas);
+            for _ in 0..a.replicas {
+                let factories: Vec<StageFactory> = match backend {
+                    BackendKind::Synthetic => elems
+                        .iter()
+                        .enumerate()
+                        .map(|(i, &(ine, oute))| {
+                            synthetic_stage_factory(stage_salt(salt, i), ine, oute)
+                        })
+                        .collect(),
+                    BackendKind::Pjrt { artifact_dir } => {
+                        let entry = manifest
+                            .as_ref()
+                            .expect("manifest loaded for pjrt")
+                            .model(&a.name)?;
+                        entry
+                            .segments_for_cuts(&partition.cuts)?
+                            .iter()
+                            .map(|s| pjrt_stage_factory(artifact_dir.clone(), (*s).clone()))
+                            .collect()
+                    }
+                };
+                pipelines.push(
+                    Pipeline::spawn(
+                        factories,
+                        sims.clone(),
+                        &PipelineConfig { queue_capacity },
+                    )
+                    .with_context(|| format!("spawning pipeline for {}", a.name))?,
+                );
+            }
+            let deployment = if pipelines.len() == 1 {
+                Deployment::Single(pipelines.pop().unwrap())
+            } else {
+                Deployment::Replicated(ReplicaRouter::new(pipelines))
+            };
+            tenants.insert(
+                a.name.clone(),
+                TenantHandle {
+                    name: a.name.clone(),
+                    tpu_count: a.candidate.tpu_count,
+                    replicas: a.replicas,
+                    partition_label: partition.label(),
+                    strategy_name: a.candidate.strategy.name(),
+                    predicted_p99_s: a.effective_p99_s,
+                    in_elems: elems.first().map(|&(i, _)| i).unwrap_or(0),
+                    out_elems: elems.last().map(|&(_, o)| o).unwrap_or(0),
+                    stage_out_elems: elems.iter().map(|&(_, o)| o).collect(),
+                    salt,
+                    metrics: Arc::new(TenantMetrics::default()),
+                    deployment,
+                    serve_lock: std::sync::Mutex::new(()),
+                    sim_epoch: std::sync::Mutex::new(0.0),
+                },
+            );
+        }
+        let metrics = Arc::new(SchedulerMetrics::default());
+        metrics.record_admission(
+            registry.len() as u64,
+            plan.assignments.len() as u64,
+            plan.queued.len() as u64,
+            plan.rejected.len() as u64,
+        );
+        Ok(PoolRouter { tenants, metrics })
+    }
+
+    /// Block until every stage backend of every deployment is constructed.
+    pub fn wait_ready(&self) -> Result<()> {
+        for t in self.tenants.values() {
+            t.deployment.wait_ready()?;
+        }
+        Ok(())
+    }
+
+    /// Route a request batch to the named model's deployment.  Safe to
+    /// call concurrently: different tenants run fully in parallel, and
+    /// calls for the *same* tenant are serialized (a deployment's response
+    /// queue is shared, so interleaved drains would cross-deliver).
+    pub fn serve(&self, model: &str, requests: Vec<Request>) -> Result<Vec<Response>> {
+        let Some(t) = self.tenants.get(model) else {
+            self.metrics.record_route_miss();
+            anyhow::bail!(
+                "model {model:?} has no deployment (admitted: {:?})",
+                self.names()
+            );
+        };
+        let n = requests.len() as u64;
+        t.metrics.record_submitted(n);
+        self.metrics.record_routed(n);
+        let result = {
+            let _exclusive = t.serve_lock.lock().unwrap();
+            t.deployment.serve_batch(requests)
+        };
+        match result {
+            Ok(responses) => {
+                // sim latencies relative to this tenant's sim clock at
+                // batch start (the pipeline's simulated clock is
+                // monotonic across batches)
+                let mut epoch = t.sim_epoch.lock().unwrap();
+                let base = *epoch;
+                for r in &responses {
+                    t.metrics
+                        .record_response(r.real_latency_s, (r.sim_done_s - base).max(0.0));
+                    if r.sim_done_s > *epoch {
+                        *epoch = r.sim_done_s;
+                    }
+                }
+                drop(epoch);
+                Ok(responses)
+            }
+            Err(e) => {
+                t.metrics.record_error();
+                Err(e)
+            }
+        }
+    }
+
+    pub fn tenant(&self, name: &str) -> Option<&TenantHandle> {
+        self.tenants.get(name)
+    }
+
+    pub fn tenants(&self) -> impl Iterator<Item = &TenantHandle> {
+        self.tenants.values()
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.tenants.keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.tenants.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.tenants.is_empty()
+    }
+
+    /// Close every deployment and join all worker threads.
+    pub fn shutdown(self) {
+        for (_, t) in self.tenants {
+            t.deployment.shutdown();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::allocator::{allocate, AllocatorConfig};
+
+    fn deploy(names: &[&str], tpus: usize) -> (PoolRouter, PoolPlan) {
+        let mut reg = ModelRegistry::new();
+        for n in names {
+            reg.register_named(n).unwrap();
+        }
+        let cfg = SystemConfig::default();
+        let alloc = AllocatorConfig { total_tpus: tpus, ..Default::default() };
+        let plan = allocate(&reg, &cfg, &alloc).unwrap();
+        let router =
+            PoolRouter::deploy(&plan, &reg, &cfg, &BackendKind::Synthetic, 16).unwrap();
+        (router, plan)
+    }
+
+    #[test]
+    fn synthetic_transform_is_deterministic_and_input_sensitive() {
+        let a = synthetic_transform(7, &[1, 2, 3], 8);
+        assert_eq!(a, synthetic_transform(7, &[1, 2, 3], 8));
+        assert_eq!(a.len(), 8);
+        assert_ne!(a, synthetic_transform(7, &[1, 2, 4], 8), "input must matter");
+        assert_ne!(a, synthetic_transform(8, &[1, 2, 3], 8), "salt must matter");
+        assert_ne!(a, synthetic_transform(7, &[2, 1, 3], 8), "order must matter");
+    }
+
+    #[test]
+    fn routed_batches_match_reference_per_tenant() {
+        let (router, plan) = deploy(&["fc_small", "conv_a"], 2);
+        assert_eq!(plan.assignments.len(), 2);
+        router.wait_ready().unwrap();
+        for name in ["fc_small", "conv_a"] {
+            let t = router.tenant(name).unwrap();
+            let reqs = t.synth_requests(12, 42);
+            let expected: Vec<Vec<i8>> =
+                reqs.iter().map(|r| t.reference(&r.data)).collect();
+            let out = router.serve(name, reqs).unwrap();
+            assert_eq!(out.len(), 12);
+            for (i, r) in out.iter().enumerate() {
+                assert_eq!(r.id, i as u64, "{name}: order preserved");
+                assert_eq!(r.data, expected[i], "{name}: item {i} digest mismatch");
+                assert_eq!(r.data.len(), t.out_elems);
+            }
+            let snap = t.metrics.snapshot();
+            assert_eq!(snap.submitted, 12);
+            assert_eq!(snap.completed, 12);
+            assert_eq!(snap.errors, 0);
+        }
+        let s = router.metrics.snapshot();
+        assert_eq!(s.admitted, 2);
+        assert_eq!(s.routed_requests, 24);
+        router.shutdown();
+    }
+
+    #[test]
+    fn concurrent_tenants_stay_isolated() {
+        // two tenants served from two threads at once: responses must not
+        // cross deployments (distinct salts => distinct digests)
+        let (router, _plan) = deploy(&["fc_small", "conv_a"], 4);
+        router.wait_ready().unwrap();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for name in ["fc_small", "conv_a"] {
+                let router = &router;
+                handles.push(scope.spawn(move || {
+                    let t = router.tenant(name).unwrap();
+                    let reqs = t.synth_requests(30, 7);
+                    let expected: Vec<Vec<i8>> =
+                        reqs.iter().map(|r| t.reference(&r.data)).collect();
+                    let out = router.serve(name, reqs).unwrap();
+                    for (r, e) in out.iter().zip(&expected) {
+                        assert_eq!(&r.data, e, "{name} cross-tenant corruption");
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        router.shutdown();
+    }
+
+    #[test]
+    fn concurrent_calls_for_the_same_tenant_do_not_cross_deliver() {
+        // two threads hammer ONE deployment: serve() serializes them, so
+        // each caller must get back exactly its own (id, digest) set
+        let (router, _plan) = deploy(&["fc_small"], 1);
+        router.wait_ready().unwrap();
+        std::thread::scope(|scope| {
+            let mut handles = Vec::new();
+            for seed in [11u64, 22] {
+                let router = &router;
+                handles.push(scope.spawn(move || {
+                    let t = router.tenant("fc_small").unwrap();
+                    let reqs = t.synth_requests(20, seed);
+                    let expected: Vec<Vec<i8>> =
+                        reqs.iter().map(|r| t.reference(&r.data)).collect();
+                    let out = router.serve("fc_small", reqs).unwrap();
+                    assert_eq!(out.len(), 20);
+                    for (i, r) in out.iter().enumerate() {
+                        assert_eq!(r.id, i as u64, "seed {seed}");
+                        assert_eq!(r.data, expected[i], "seed {seed}: cross-delivery");
+                    }
+                }));
+            }
+            for h in handles {
+                h.join().unwrap();
+            }
+        });
+        assert_eq!(router.tenant("fc_small").unwrap().metrics.snapshot().completed, 40);
+        router.shutdown();
+    }
+
+    #[test]
+    fn replicated_deployment_serves_through_replica_router() {
+        // one 1-TPU model on a 3-TPU pool -> leftover TPUs become replicas
+        let (router, plan) = deploy(&["fc_small"], 3);
+        let a = plan.assignment("fc_small").unwrap();
+        assert!(a.replicas > 1, "expected replicas, got {a:?}");
+        router.wait_ready().unwrap();
+        let t = router.tenant("fc_small").unwrap();
+        assert_eq!(t.replicas, a.replicas);
+        let reqs = t.synth_requests(31, 3);
+        let expected: Vec<Vec<i8>> = reqs.iter().map(|r| t.reference(&r.data)).collect();
+        let out = router.serve("fc_small", reqs).unwrap();
+        assert_eq!(out.len(), 31);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.data, expected[i]);
+        }
+        router.shutdown();
+    }
+
+    #[test]
+    fn sim_latency_metrics_do_not_grow_across_batches() {
+        // the pipeline's simulated clock is monotonic across batches;
+        // recorded sim latencies must stay per-batch, not cumulative
+        let (router, _plan) = deploy(&["fc_small"], 1);
+        router.wait_ready().unwrap();
+        let t = router.tenant("fc_small").unwrap();
+        router.serve("fc_small", t.synth_requests(15, 1)).unwrap();
+        let first = t.metrics.snapshot().sim_p99_s;
+        for seed in 2..6u64 {
+            router.serve("fc_small", t.synth_requests(15, seed)).unwrap();
+        }
+        let after = t.metrics.snapshot().sim_p99_s;
+        assert!(
+            after <= first * 2.0 + 1e-6,
+            "sim latency must not accumulate across batches: {first} -> {after}"
+        );
+        router.shutdown();
+    }
+
+    #[test]
+    fn unknown_model_is_a_route_miss() {
+        let (router, _plan) = deploy(&["fc_small"], 1);
+        let err = router.serve("nope", Vec::new()).unwrap_err();
+        assert!(err.to_string().contains("no deployment"), "{err}");
+        assert_eq!(router.metrics.snapshot().route_misses, 1);
+        router.shutdown();
+    }
+}

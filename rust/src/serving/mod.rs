@@ -21,6 +21,8 @@ use crate::segment::strategy::Strategy;
 use crate::segment::Partition;
 use crate::util::rng::Rng;
 
+pub use crate::coordinator::ReplicaRouter;
+
 /// A serving deployment plan for one model.
 #[derive(Debug)]
 pub struct ServePlan {
@@ -30,6 +32,33 @@ pub struct ServePlan {
     /// Simulated single-TPU per-inference latency (the paper baseline).
     pub single_tpu_s: f64,
     pub input_shape: Vec<usize>,
+}
+
+/// Per-stage simulated-clock parameters for a model/partition pair — the
+/// live-pipeline twin of `pipeline::build_stages` (shared by the
+/// single-model `plan` and the multi-tenant scheduler's deployments).
+pub fn stage_sims(model: &Model, partition: &Partition, cfg: &SystemConfig) -> Vec<StageSim> {
+    let cm = CostModel::new(cfg.clone());
+    let link = Link::new(cfg.link.clone());
+    partition
+        .bounds()
+        .iter()
+        .map(|&(a, b)| {
+            let seg = &model.layers[a..b];
+            let placement = place(seg, &cfg.device);
+            let in_bytes = seg.first().unwrap().input_elems();
+            let out_bytes = seg.last().unwrap().output_elems();
+            StageSim {
+                // DMA in/out occupies the device (no overlap) — same
+                // service-time model as pipeline::simulate
+                exec_s: link.xfer_s(in_bytes)
+                    + cm.stage_cost(&placement).exec_s()
+                    + link.xfer_s(out_bytes),
+                hop_out_s: if b == model.len() { 0.0 } else { link.hop_latency_s() },
+                overhead_s: cfg.link.stage_overhead_s,
+            }
+        })
+        .collect()
 }
 
 /// Build the plan: pick the partition, derive per-stage simulated costs.
@@ -50,27 +79,7 @@ pub fn plan(
     } else {
         strategy.partition(&model, n_tpus, cfg)
     };
-    let cm = CostModel::new(cfg.clone());
-    let link = Link::new(cfg.link.clone());
-    let bounds = partition.bounds();
-    let sims: Vec<StageSim> = bounds
-        .iter()
-        .map(|&(a, b)| {
-            let seg = &model.layers[a..b];
-            let placement = place(seg, &cfg.device);
-            let in_bytes = seg.first().unwrap().input_elems();
-            let out_bytes = seg.last().unwrap().output_elems();
-            StageSim {
-                // DMA in/out occupies the device (no overlap) — same
-                // service-time model as pipeline::simulate
-                exec_s: link.xfer_s(in_bytes)
-                    + cm.stage_cost(&placement).exec_s()
-                    + link.xfer_s(out_bytes),
-                hop_out_s: if b == model.len() { 0.0 } else { link.hop_latency_s() },
-                overhead_s: cfg.link.stage_overhead_s,
-            }
-        })
-        .collect();
+    let sims = stage_sims(&model, &partition, cfg);
     let whole = entry
         .segment(0, model.len())
         .context("whole-model artifact missing")?;
@@ -97,6 +106,26 @@ pub fn spawn_pipeline(
         .collect();
     Pipeline::spawn(factories, plan.sims.clone(), &PipelineConfig { queue_capacity })
         .context("spawning pipeline")
+}
+
+/// Spawn a replicated single-model deployment: `replicas` full copies of
+/// the plan's pipeline behind a round-robin [`ReplicaRouter`] — the
+/// data-parallel alternative of the paper's closing remark, now a
+/// first-class serving path (the multi-tenant scheduler uses the same
+/// router for leftover-TPU replicas).
+pub fn spawn_replicated_pipeline(
+    artifact_dir: &Path,
+    entry: &ModelEntry,
+    plan: &ServePlan,
+    replicas: usize,
+    queue_capacity: usize,
+) -> Result<ReplicaRouter> {
+    anyhow::ensure!(replicas >= 1, "need at least one replica");
+    let mut pipelines = Vec::with_capacity(replicas);
+    for _ in 0..replicas {
+        pipelines.push(spawn_pipeline(artifact_dir, entry, plan, queue_capacity)?);
+    }
+    Ok(ReplicaRouter::new(pipelines))
 }
 
 /// Deterministic random int8 request batch for a plan.
@@ -148,6 +177,89 @@ pub fn serve_batch(
         sim_per_item_s: per_item,
         sim_speedup_vs_one_tpu: plan.single_tpu_s / per_item,
     })
+}
+
+/// Per-tenant result of one multi-tenant pool serving run.
+#[derive(Debug, Clone)]
+pub struct TenantServeReport {
+    pub name: String,
+    pub tpu_count: usize,
+    pub replicas: usize,
+    pub partition_label: String,
+    pub batch: usize,
+    /// Real wall-clock for this tenant's whole batch on this host.
+    pub wall_s: f64,
+    pub real_throughput: f64,
+    /// p99 of the simulated Edge TPU completion times.
+    pub sim_p99_s: f64,
+    /// Allocator-predicted p99 (for predicted-vs-served comparison).
+    pub predicted_p99_s: f64,
+    /// Whether responses were checked against the serial reference.
+    pub verified: bool,
+}
+
+/// Serve one closed batch per admitted tenant, **concurrently** across
+/// tenants, through a deployed [`PoolRouter`] — the multi-tenant
+/// counterpart of [`serve_batch`].  With `verify` set (synthetic
+/// backend), every response is checked bit-for-bit against the tenant's
+/// serial reference, so cross-tenant routing or ordering bugs fail loudly.
+pub fn serve_pool(
+    router: &crate::scheduler::PoolRouter,
+    batch: usize,
+    seed: u64,
+    verify: bool,
+) -> Result<Vec<TenantServeReport>> {
+    router.wait_ready()?;
+    let names = router.names();
+    let mut reports = Vec::with_capacity(names.len());
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for name in &names {
+            handles.push(scope.spawn(move || -> Result<TenantServeReport> {
+                let t = router.tenant(name).expect("deployed tenant");
+                let requests = t.synth_requests(batch, seed);
+                let expected: Option<Vec<Vec<i8>>> = if verify {
+                    Some(requests.iter().map(|r| t.reference(&r.data)).collect())
+                } else {
+                    None
+                };
+                let t0 = std::time::Instant::now();
+                let responses = router.serve(name, requests)?;
+                let wall = t0.elapsed().as_secs_f64();
+                if let Some(exp) = &expected {
+                    for (r, e) in responses.iter().zip(exp) {
+                        anyhow::ensure!(
+                            &r.data == e,
+                            "{name}: response {} mismatches the serial reference",
+                            r.id
+                        );
+                    }
+                }
+                let mut sim = crate::util::stats::Summary::new();
+                for r in &responses {
+                    sim.add(r.sim_done_s);
+                }
+                Ok(TenantServeReport {
+                    name: name.clone(),
+                    tpu_count: t.tpu_count,
+                    replicas: t.replicas,
+                    partition_label: t.partition_label.clone(),
+                    batch,
+                    wall_s: wall,
+                    real_throughput: batch as f64 / wall.max(1e-12),
+                    sim_p99_s: sim.p99(),
+                    predicted_p99_s: t.predicted_p99_s,
+                    verified: verify,
+                })
+            }));
+        }
+        for h in handles {
+            reports.push(h.join().expect("tenant serving thread panicked")?);
+        }
+        Ok(())
+    })?;
+    reports.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(reports)
 }
 
 /// Load the manifest from an artifact dir (helper for binaries).
@@ -216,6 +328,49 @@ mod tests {
         let cfg = SystemConfig::default();
         assert!(plan(entry, 3, Strategy::Uniform, &cfg).is_err());
         assert!(plan(entry, 0, Strategy::Uniform, &cfg).is_err());
+    }
+
+    #[test]
+    fn spawn_replicated_pipeline_builds_replica_set() {
+        let m = sample_manifest();
+        let entry = m.model("m").unwrap();
+        let cfg = SystemConfig::default();
+        let p = plan(entry, 2, Strategy::Uniform, &cfg).unwrap();
+        let dir = std::env::temp_dir();
+        // spawn succeeds even without artifacts: PJRT backends are built
+        // lazily inside the worker threads (wait_ready would surface the
+        // stub/missing-artifact error)
+        let router = spawn_replicated_pipeline(&dir, entry, &p, 3, 4).unwrap();
+        assert_eq!(router.replicas.len(), 3);
+        router.shutdown();
+        let p1 = plan(entry, 1, Strategy::Uniform, &cfg).unwrap();
+        assert!(spawn_replicated_pipeline(&dir, entry, &p1, 0, 4).is_err());
+    }
+
+    #[test]
+    fn serve_pool_serves_multiple_tenants_concurrently() {
+        use crate::scheduler::{allocate, AllocatorConfig, BackendKind, ModelRegistry, PoolRouter};
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        reg.register_named("conv_a").unwrap();
+        let cfg = SystemConfig::default();
+        let alloc = AllocatorConfig { total_tpus: 2, ..Default::default() };
+        let plan = allocate(&reg, &cfg, &alloc).unwrap();
+        let router =
+            PoolRouter::deploy(&plan, &reg, &cfg, &BackendKind::Synthetic, 8).unwrap();
+        let reports = serve_pool(&router, 10, 1, true).unwrap();
+        assert_eq!(reports.len(), 2);
+        assert_eq!(reports[0].name, "conv_a");
+        assert_eq!(reports[1].name, "fc_small");
+        for r in &reports {
+            assert_eq!(r.batch, 10);
+            assert!(r.verified);
+            assert!(r.wall_s > 0.0);
+            assert!(r.sim_p99_s > 0.0);
+            let t = router.tenant(&r.name).unwrap();
+            assert_eq!(t.metrics.snapshot().completed, 10);
+        }
+        router.shutdown();
     }
 
     #[test]

@@ -1,0 +1,248 @@
+//! In-tree shim for the subset of the `anyhow` API this workspace uses
+//! (the offline vendor set carries no crates.io closure).
+//!
+//! Supported surface:
+//!
+//! * [`Error`] — message + context chain; `Display` shows the outermost
+//!   context, `{:#}` (alternate) shows the whole chain joined by `": "`,
+//!   `Debug` shows the chain as a `Caused by:` list, like real anyhow.
+//! * [`Result<T>`] with the `E = Error` default.
+//! * [`Context::context`] / [`Context::with_context`] on `Result` (any
+//!   std-error or `anyhow::Error` payload) and on `Option`.
+//! * `anyhow!`, `bail!`, `ensure!` macros (format-string forms).
+//! * `From<E: std::error::Error + Send + Sync + 'static>` so `?` converts
+//!   std errors automatically.
+
+use std::fmt;
+
+/// The error type: an outermost message plus the chain of causes it wraps
+/// (outermost first, original error last).
+pub struct Error {
+    chain: Vec<String>,
+}
+
+impl Error {
+    /// Build an error from any displayable message.
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { chain: vec![message.to_string()] }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: fmt::Display>(mut self, context: C) -> Error {
+        self.chain.insert(0, context.to_string());
+        self
+    }
+
+    /// The cause chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        self.chain.iter().map(String::as_str)
+    }
+
+    /// The innermost (root) cause message.
+    pub fn root_cause(&self) -> &str {
+        self.chain.last().map(String::as_str).unwrap_or("")
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain, outermost first
+            write!(f, "{}", self.chain.join(": "))
+        } else {
+            write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.chain.first().map(String::as_str).unwrap_or(""))?;
+        if self.chain.len() > 1 {
+            write!(f, "\n\nCaused by:")?;
+            for cause in &self.chain[1..] {
+                write!(f, "\n    {cause}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(err: E) -> Error {
+        // keep the std error's own source chain visible
+        let mut chain = vec![err.to_string()];
+        let mut src = err.source();
+        while let Some(s) = src {
+            chain.push(s.to_string());
+            src = s.source();
+        }
+        Error { chain }
+    }
+}
+
+/// `anyhow::Result<T>` with the error defaulted to [`Error`].
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// Conversion into [`Error`] — implemented for std errors and for
+/// [`Error`] itself so `.context(..)` works on both kinds of `Result`.
+pub trait IntoError {
+    fn into_error(self) -> Error;
+}
+
+impl<E> IntoError for E
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn into_error(self) -> Error {
+        Error::from(self)
+    }
+}
+
+impl IntoError for Error {
+    fn into_error(self) -> Error {
+        self
+    }
+}
+
+/// Attach context to errors, mirroring `anyhow::Context`.
+pub trait Context<T> {
+    /// Wrap the error value with additional context.
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static;
+
+    /// Wrap the error value with lazily evaluated context.
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E: IntoError> Context<T> for Result<T, E> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| e.into_error().context(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| e.into_error().context(f()))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T>
+    where
+        C: fmt::Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string.
+#[macro_export]
+macro_rules! anyhow {
+    ($($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($($arg)*))
+    };
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return ::std::result::Result::Err($crate::Error::msg(::std::format!($($arg)*)))
+    };
+}
+
+/// Return early with an [`Error`] unless the condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::format!(
+                "condition failed: {}",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($arg:tt)+) => {
+        if !($cond) {
+            return ::std::result::Result::Err($crate::Error::msg(::std::format!($($arg)+)));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::NotFound, "file missing")
+    }
+
+    #[test]
+    fn display_shows_outermost_alternate_shows_chain() {
+        let e: Error = Err::<(), _>(io_err()).context("loading manifest").unwrap_err();
+        assert_eq!(e.to_string(), "loading manifest");
+        assert_eq!(format!("{e:#}"), "loading manifest: file missing");
+    }
+
+    #[test]
+    fn debug_lists_causes() {
+        let e = Error::msg("inner").context("outer");
+        let d = format!("{e:?}");
+        assert!(d.contains("outer"));
+        assert!(d.contains("Caused by"));
+        assert!(d.contains("inner"));
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn f() -> Result<()> {
+            Err(io_err())?;
+            Ok(())
+        }
+        assert_eq!(f().unwrap_err().to_string(), "file missing");
+    }
+
+    #[test]
+    fn context_on_anyhow_result_and_option() {
+        let r: Result<()> = Err(Error::msg("boom"));
+        let e = r.context("stage 2").unwrap_err();
+        assert_eq!(format!("{e:#}"), "stage 2: boom");
+        let o: Option<u32> = None;
+        assert_eq!(o.with_context(|| "empty").unwrap_err().to_string(), "empty");
+    }
+
+    #[test]
+    fn macros() {
+        fn f(x: u32) -> Result<u32> {
+            ensure!(x < 10, "x too big: {x}");
+            if x == 3 {
+                bail!("three is right out");
+            }
+            Err(anyhow!("fell through with {x}"))
+        }
+        assert_eq!(f(12).unwrap_err().to_string(), "x too big: 12");
+        assert_eq!(f(3).unwrap_err().to_string(), "three is right out");
+        assert_eq!(f(1).unwrap_err().to_string(), "fell through with 1");
+    }
+}
