@@ -1,0 +1,42 @@
+//! Benchmarks for the open-loop workload path: seeded arrival-schedule
+//! generation and the deterministic batcher+pipeline queueing simulation
+//! that `repro loadgen` reports — this runs on every loadgen invocation
+//! and inside tests, so its cost at realistic request counts matters.
+
+use std::time::Duration;
+
+use tpu_pipeline::config::SystemConfig;
+use tpu_pipeline::coordinator::batcher::BatchPolicy;
+use tpu_pipeline::scheduler::resolve_model;
+use tpu_pipeline::segment::strategy::Strategy;
+use tpu_pipeline::serving::stage_sims;
+use tpu_pipeline::util::bench::{black_box, Bencher};
+use tpu_pipeline::workload::{arrival_times, simulate_open_loop, Arrivals};
+
+fn main() {
+    let cfg = SystemConfig::default();
+    let mut b = Bencher::new().with_budget(Duration::from_millis(250), Duration::from_millis(60));
+
+    // seeded schedule generation
+    let poisson = Arrivals::Poisson { rate_hz: 1000.0 };
+    b.bench("arrivals/poisson_10k", || arrival_times(black_box(&poisson), 10_000, 7));
+    let bursty = Arrivals::Bursty { rate_hz: 2000.0, on_s: 0.05, off_s: 0.05 };
+    b.bench("arrivals/bursty_10k", || arrival_times(black_box(&bursty), 10_000, 7));
+
+    // open-loop queueing sim over a real planned partition
+    let model = resolve_model("fc_small").unwrap();
+    let partition = Strategy::Uniform.partition(&model, 2, &cfg);
+    let sims = stage_sims(&model, &partition, &cfg);
+    let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) };
+    for (name, arrivals) in [
+        ("poisson", Arrivals::Poisson { rate_hz: 800.0 }),
+        ("bursty", Arrivals::Bursty { rate_hz: 1600.0, on_s: 0.02, off_s: 0.02 }),
+        ("closed", Arrivals::Closed { concurrency: 8, think_s: 1e-4 }),
+    ] {
+        b.bench(&format!("open_loop_sim/{name}_2k"), || {
+            simulate_open_loop(black_box(&arrivals), 2000, 7, &policy, &sims)
+        });
+    }
+
+    b.report("loadgen");
+}

@@ -71,6 +71,22 @@ impl Args {
         }
     }
 
+    /// `--key N` as u64 (seeds), falling back to `default`.
+    pub fn u64_flag(&self, key: &str, default: u64) -> Result<u64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("bad --{key} {v:?}")),
+        }
+    }
+
+    /// `--key X` as f64, falling back to `default`.
+    pub fn f64_flag(&self, key: &str, default: f64) -> Result<f64> {
+        match self.flags.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("bad --{key} {v:?}")),
+        }
+    }
+
     pub fn str_flag(&self, key: &str, default: &str) -> String {
         self.flags.get(key).cloned().unwrap_or_else(|| default.to_string())
     }
@@ -383,6 +399,7 @@ pub fn run(args: &Args) -> Result<String> {
         "ablation-hybrid" => ablation_hybrid(&cfg, batch),
         "ablation-energy" => ablation_energy(args.kind()?, &cfg, batch),
         "schedule" => schedule(args)?,
+        "loadgen" => loadgen(args)?,
         "" | "help" | "--help" => USAGE.to_string(),
         other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
     };
@@ -488,6 +505,201 @@ pub fn schedule(args: &Args) -> Result<String> {
     Ok(out)
 }
 
+/// Parsed `repro loadgen` inputs beyond the shared pool flags.
+#[derive(Debug, Clone)]
+pub struct LoadgenSpec {
+    /// One offered load per registered model, in `--models` order.
+    pub loads: Vec<crate::workload::TenantLoad>,
+    /// Run seed: drives arrival schedules and request payloads.
+    pub seed: u64,
+    /// Per-tenant dynamic batching policy.
+    pub policy: crate::coordinator::batcher::BatchPolicy,
+}
+
+/// Parse the `repro loadgen` flags: the shared pool flags (`--models`,
+/// `--tpus`, `--weights`, `--slo-ms`, ...) plus `--seed`, `--requests`
+/// (per tenant), `--arrivals` (one spec, or one per model, comma-joined)
+/// and the batch policy (`--max-batch`, `--max-wait-ms`).
+///
+/// Loadgen always plans **without** leftover-TPU replica grants so the
+/// live pipelines match the deterministic simulation one-for-one.
+pub fn loadgen_spec(
+    args: &Args,
+) -> Result<(crate::scheduler::ModelRegistry, crate::scheduler::AllocatorConfig, LoadgenSpec)> {
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::workload::{Arrivals, TenantLoad};
+
+    const DEFAULT_MODELS: &str = "fc_small,conv_a";
+    let (registry, mut alloc) = pool_spec(args, DEFAULT_MODELS)?;
+    alloc.replicate_leftover = false;
+
+    let models = args.str_flag("models", DEFAULT_MODELS);
+    let names: Vec<&str> =
+        models.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+
+    let seed = args.u64_flag("seed", 7)?;
+    let requests = args.usize_flag("requests", 200)?;
+    anyhow::ensure!(requests >= 1, "--requests must be at least 1");
+
+    let arrivals_flag = args.str_flag("arrivals", "poisson:400");
+    let specs: Vec<&str> =
+        arrivals_flag.split(',').map(str::trim).filter(|s| !s.is_empty()).collect();
+    anyhow::ensure!(
+        specs.len() == 1 || specs.len() == names.len(),
+        "--arrivals needs one spec or one per model (got {} for {} models)",
+        specs.len(),
+        names.len()
+    );
+
+    let loads = names
+        .iter()
+        .enumerate()
+        .map(|(i, name)| {
+            let spec = if specs.len() == 1 { specs[0] } else { specs[i] };
+            Ok(TenantLoad {
+                model: (*name).to_string(),
+                arrivals: Arrivals::parse(spec)?,
+                requests,
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+
+    let max_wait_ms = args.f64_flag("max-wait-ms", 2.0)?;
+    anyhow::ensure!(max_wait_ms >= 0.0, "--max-wait-ms must be non-negative");
+    let policy = BatchPolicy {
+        max_batch: args.usize_flag("max-batch", 8)?,
+        max_wait: std::time::Duration::from_secs_f64(max_wait_ms / 1e3),
+    };
+    anyhow::ensure!(policy.max_batch >= 1, "--max-batch must be at least 1");
+
+    Ok((registry, alloc, LoadgenSpec { loads, seed, policy }))
+}
+
+/// Build the deterministic `repro loadgen` table: per tenant, push the
+/// seeded arrival schedule through the open-loop queueing simulation
+/// (batcher flush rules + pipeline recurrence on the planned partition)
+/// and report offered rate, batch/flush counters, latency percentiles and
+/// throughput.  Pure function of `(registry, cfg, alloc, spec)` — two
+/// calls render bit-identical tables, which is the reproducibility
+/// contract of `repro loadgen`.
+pub fn loadgen_table(
+    registry: &crate::scheduler::ModelRegistry,
+    cfg: &SystemConfig,
+    alloc: &crate::scheduler::AllocatorConfig,
+    spec: &LoadgenSpec,
+) -> Result<(Table, crate::scheduler::PoolPlan)> {
+    use crate::metrics::FlushKind;
+    use crate::scheduler::allocate;
+    use crate::serving::stage_sims;
+    use crate::util::stats::Summary;
+    use crate::workload::{arrival_seed, simulate_open_loop};
+
+    let plan = allocate(registry, cfg, alloc)?;
+    let mut t = Table::new(
+        format!(
+            "Open-loop load generation — seed {} | max_batch {} | max_wait {} ms",
+            spec.seed,
+            spec.policy.max_batch,
+            spec.policy.max_wait.as_secs_f64() * 1e3,
+        ),
+        &[
+            "model", "arrivals", "offered_hz", "requests", "tpus", "split", "batches",
+            "flush_size", "flush_deadline", "flush_closed", "p50_ms", "p99_ms", "mean_ms",
+            "throughput_hz", "status",
+        ],
+    );
+    for load in &spec.loads {
+        let offered = match load.arrivals.offered_rate_hz() {
+            Some(r) => format!("{r:.1}"),
+            None => "-".into(),
+        };
+        let Some(a) = plan.assignment(&load.model) else {
+            let status = if plan.rejected.iter().any(|r| r.name == load.model) {
+                "rejected"
+            } else {
+                "queued"
+            };
+            t.row(vec![
+                load.model.clone(),
+                load.arrivals.label(),
+                offered,
+                load.requests.to_string(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                "-".into(),
+                status.into(),
+            ]);
+            continue;
+        };
+        let tenant = registry.get(&load.model)?;
+        let sims = stage_sims(&tenant.model, &a.candidate.partition, cfg);
+        let run = simulate_open_loop(
+            &load.arrivals,
+            load.requests,
+            arrival_seed(spec.seed, &load.model),
+            &spec.policy,
+            &sims,
+        );
+        let mut lat = Summary::new();
+        for &l in &run.latencies_s {
+            lat.add(l);
+        }
+        t.row(vec![
+            load.model.clone(),
+            load.arrivals.label(),
+            offered,
+            load.requests.to_string(),
+            a.candidate.tpu_count.to_string(),
+            a.candidate.partition.label(),
+            run.batches.len().to_string(),
+            run.flushes(FlushKind::Size).to_string(),
+            run.flushes(FlushKind::Deadline).to_string(),
+            run.flushes(FlushKind::Closed).to_string(),
+            ms(lat.p50()),
+            ms(lat.p99()),
+            ms(lat.mean()),
+            format!("{:.1}", run.throughput_hz()),
+            "admitted".into(),
+        ]);
+    }
+    Ok((t, plan))
+}
+
+/// One-line pool summary appended under the (non-CSV) loadgen table.
+pub fn loadgen_summary(plan: &crate::scheduler::PoolPlan) -> String {
+    format!(
+        "pool: {}/{} TPUs used | admitted {} queued {} rejected {} | \
+         same --seed => bit-identical table\n",
+        plan.tpus_used(),
+        plan.total_tpus,
+        plan.assignments.len(),
+        plan.queued.len(),
+        plan.rejected.len(),
+    )
+}
+
+/// `repro loadgen` (deterministic part): render the seeded open-loop
+/// table.  The binary's `loadgen` command prints this and then (unless
+/// `--csv` or `--no-live`) drives the same seeds through the live
+/// `ServingPool` with bit-exact response verification.
+pub fn loadgen(args: &Args) -> Result<String> {
+    let cfg = args.config()?;
+    let (registry, alloc, spec) = loadgen_spec(args)?;
+    let (table, plan) = loadgen_table(&registry, &cfg, &alloc, &spec)?;
+    let mut out = emit(table, args.csv());
+    if !args.csv() {
+        out.push_str(&loadgen_summary(&plan));
+    }
+    Ok(out)
+}
+
 /// Replication (data parallelism) vs profiled segmentation (§V-C remark).
 fn ablation_replicate(kind: Kind, cfg: &SystemConfig, batch: usize) -> String {
     let mut t = Table::new(
@@ -577,13 +789,32 @@ multi-tenant pool scheduler (cost-model simulation; no artifacts needed):
 
 serving (real numerics; PJRT needs `make artifacts`):
   serve --model fc_n512 --tpus 4 [--strategy profiled] [--batch 50]
-        [--replicas N]   N data-parallel pipeline copies (ReplicaRouter)
+        [--replicas N] [--artifacts DIR]
+        single-model pipelined serving; --replicas N runs N data-parallel
+        pipeline copies behind the round-robin ReplicaRouter
   serve-pool --models fc_big,fc_small --tpus 4 [--batch 50]
         deploy the scheduled pool and serve synthetic traffic for every
         admitted model concurrently (native deterministic backend);
         accepts the same pool flags as `schedule` (--weights, --slo-ms,
         --allow-spill, --max-tpus-per-model, --no-replicas)
-  gantt --kind fc --x 2100 --tpus 3    ASCII pipeline schedule
+  gantt --kind fc --x 2100 --tpus 3 [--batch 8] [--strategy profiled]
+        ASCII pipeline schedule trace
+
+open-loop load generation (seeded, bit-reproducible):
+  loadgen --models fc_small,conv_a --tpus 4 --seed 7 --requests 200
+          [--arrivals poisson:400]       one spec, or one per model:
+              poisson:RATE | bursty:RATE:ON_S:OFF_S | closed:CONC:THINK_S
+          [--max-batch 8] [--max-wait-ms 2]   per-tenant flush policy
+          [--join MODEL@T_S] [--leave MODEL@T_S]  register/deregister the
+              model T_S seconds into the live run (online re-plan + drain)
+          [--no-live]  print only the deterministic table
+          [--csv]      CSV table only (identical across runs of one seed)
+        prints the deterministic per-tenant table (offered rate, batch +
+        flush-reason counts, p50/p99/mean latency, throughput) from the
+        seeded open-loop queueing simulation, then replays the same seeds
+        against the live open-loop pool (per-tenant Batcher workers) with
+        bit-exact response verification; plans without replica grants so
+        live pipelines match the simulated ones
 ";
 
 #[cfg(test)]
@@ -685,5 +916,57 @@ mod tests {
         let a = Args::parse(&argv("nope")).unwrap();
         let err = run(&a).unwrap_err().to_string();
         assert!(err.contains("USAGE"));
+    }
+
+    #[test]
+    fn loadgen_csv_is_bit_identical_across_runs() {
+        let cmd = "loadgen --models fc_small,conv_a --tpus 2 --seed 7 \
+                   --requests 60 --arrivals poisson:900 --csv";
+        let a = Args::parse(&argv(cmd)).unwrap();
+        let first = run(&a).unwrap();
+        let second = run(&a).unwrap();
+        assert_eq!(first, second, "same seed must render the identical CSV");
+        assert!(first.starts_with("model,arrivals,offered_hz"), "{first}");
+        assert!(first.contains("fc_small"), "{first}");
+        assert!(first.contains("conv_a"), "{first}");
+        // a different seed changes the table
+        let b = Args::parse(&argv(&cmd.replace("--seed 7", "--seed 8"))).unwrap();
+        assert_ne!(first, run(&b).unwrap(), "seed must matter");
+    }
+
+    #[test]
+    fn loadgen_spec_parses_per_model_arrivals_and_rejects_arity() {
+        let a = Args::parse(&argv(
+            "loadgen --models fc_small,conv_a --arrivals poisson:300,closed:4:0.001 \
+             --requests 10 --max-batch 4 --max-wait-ms 1",
+        ))
+        .unwrap();
+        let (_reg, alloc, spec) = loadgen_spec(&a).unwrap();
+        assert!(!alloc.replicate_leftover, "loadgen plans without replica grants");
+        assert_eq!(spec.loads.len(), 2);
+        assert_eq!(spec.loads[0].model, "fc_small");
+        assert_eq!(spec.loads[1].arrivals.label(), "closed:4:0.001");
+        assert_eq!(spec.policy.max_batch, 4);
+        // wrong arity
+        let a = Args::parse(&argv(
+            "loadgen --models fc_small,conv_a,conv_b --arrivals poisson:1,poisson:2",
+        ))
+        .unwrap();
+        assert!(loadgen_spec(&a).is_err());
+        // bad process spec
+        let a = Args::parse(&argv("loadgen --models fc_small --arrivals uniform:9")).unwrap();
+        assert!(loadgen_spec(&a).is_err());
+    }
+
+    #[test]
+    fn loadgen_marks_unadmitted_tenants() {
+        // fc_n3000 can never fit on-chip -> rejected row, not a crash
+        let a = Args::parse(&argv(
+            "loadgen --models fc_small,fc_n3000 --tpus 2 --requests 10",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("rejected"), "{out}");
+        assert!(out.contains("admitted"), "{out}");
     }
 }

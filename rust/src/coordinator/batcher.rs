@@ -2,10 +2,17 @@
 //! and wait time before injection into the pipeline.  The paper's workload
 //! is a closed 50-input batch; a serving deployment sees an open arrival
 //! stream, which this component adapts.
+//!
+//! The fill loop parks on the queue's condvar with a deadline
+//! ([`super::queue::Receiver::recv_deadline`]) — there is no sleep/poll
+//! spin, so an idle batcher burns no CPU and a request arriving mid-wait
+//! wakes it immediately.
 
 use std::time::{Duration, Instant};
 
-use super::queue::Receiver;
+use crate::metrics::FlushKind;
+
+use super::queue::{Receiver, RecvDeadline};
 use super::Request;
 
 /// Batching policy.
@@ -30,28 +37,51 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// Wrap a request queue with a batching policy (`max_batch >= 1`).
     pub fn new(rx: Receiver<Request>, policy: BatchPolicy) -> Self {
         assert!(policy.max_batch >= 1);
         Batcher { rx, policy }
+    }
+
+    /// The policy this batcher flushes under.
+    pub fn policy(&self) -> BatchPolicy {
+        self.policy
+    }
+
+    /// Requests currently waiting in the ingress queue (not yet batched).
+    pub fn queue_depth(&self) -> usize {
+        self.rx.len()
     }
 
     /// Collect the next batch.  Blocks for the first request, then fills
     /// until `max_batch` or `max_wait`.  `None` when the queue is closed
     /// and drained.
     pub fn next_batch(&self) -> Option<Vec<Request>> {
+        self.next_batch_with_reason().map(|(batch, _)| batch)
+    }
+
+    /// Like [`Batcher::next_batch`], but also reports why the batch
+    /// flushed: `Size` (hit `max_batch`), `Deadline` (oldest request
+    /// waited `max_wait`) or `Closed` (queue closed mid-fill).
+    ///
+    /// With `max_wait == 0` the deadline is immediately in the past, so
+    /// the batch takes only requests that are already queued and never
+    /// waits — "immediate flush" semantics.
+    pub fn next_batch_with_reason(&self) -> Option<(Vec<Request>, FlushKind)> {
         let first = self.rx.recv()?;
         let deadline = Instant::now() + self.policy.max_wait;
         let mut batch = vec![first];
-        while batch.len() < self.policy.max_batch {
-            if Instant::now() >= deadline {
-                break;
+        let reason = loop {
+            if batch.len() >= self.policy.max_batch {
+                break FlushKind::Size;
             }
-            match self.rx.try_recv() {
-                Some(r) => batch.push(r),
-                None => std::thread::sleep(Duration::from_micros(50)),
+            match self.rx.recv_deadline(deadline) {
+                RecvDeadline::Item(r) => batch.push(r),
+                RecvDeadline::TimedOut => break FlushKind::Deadline,
+                RecvDeadline::Closed => break FlushKind::Closed,
             }
-        }
-        Some(batch)
+        };
+        Some((batch, reason))
     }
 }
 
@@ -59,6 +89,7 @@ impl Batcher {
 mod tests {
     use super::*;
     use crate::coordinator::queue::bounded;
+    use std::time::Duration;
 
     fn reqs(n: usize) -> Vec<Request> {
         (0..n).map(|i| Request { id: i as u64, data: vec![0; 4] }).collect()
@@ -85,8 +116,9 @@ mod tests {
             BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(10) },
         );
         let t0 = Instant::now();
-        let batch = b.next_batch().unwrap();
+        let (batch, reason) = b.next_batch_with_reason().unwrap();
         assert_eq!(batch.len(), 1);
+        assert_eq!(reason, FlushKind::Deadline);
         assert!(t0.elapsed() < Duration::from_millis(500));
     }
 
@@ -109,5 +141,66 @@ mod tests {
         let batch = b.next_batch().unwrap();
         let ids: Vec<u64> = batch.iter().map(|r| r.id).collect();
         assert_eq!(ids, (0..30).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn max_batch_one_flushes_each_request_by_size() {
+        let (tx, rx) = bounded(16);
+        for r in reqs(3) {
+            tx.send(r).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 1, max_wait: Duration::from_secs(5) });
+        for i in 0..3u64 {
+            let (batch, reason) = b.next_batch_with_reason().unwrap();
+            assert_eq!(batch.len(), 1);
+            assert_eq!(batch[0].id, i);
+            // must not wait out the 5s deadline: size bound fires first
+            assert_eq!(reason, FlushKind::Size);
+        }
+    }
+
+    #[test]
+    fn queue_closed_mid_batch_flushes_partial_with_closed_reason() {
+        let (tx, rx) = bounded(16);
+        for r in reqs(4) {
+            tx.send(r).unwrap();
+        }
+        tx.close();
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 10, max_wait: Duration::from_secs(5) });
+        let (batch, reason) = b.next_batch_with_reason().unwrap();
+        assert_eq!(batch.len(), 4);
+        assert_eq!(reason, FlushKind::Closed);
+        assert!(b.next_batch_with_reason().is_none(), "drained queue yields None");
+    }
+
+    #[test]
+    fn zero_max_wait_flushes_immediately_without_waiting() {
+        let (tx, rx) = bounded(16);
+        for r in reqs(3) {
+            tx.send(r).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 10, max_wait: Duration::ZERO });
+        // already-queued requests are all taken (no waiting needed)...
+        let t0 = Instant::now();
+        let (batch, reason) = b.next_batch_with_reason().unwrap();
+        assert_eq!(batch.len(), 3);
+        assert_eq!(reason, FlushKind::Deadline);
+        // ...and the flush never blocks on future arrivals
+        assert!(t0.elapsed() < Duration::from_millis(100));
+        tx.send(Request { id: 9, data: vec![] }).unwrap();
+        let (batch, _) = b.next_batch_with_reason().unwrap();
+        assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn queue_depth_reports_pending() {
+        let (tx, rx) = bounded(16);
+        for r in reqs(6) {
+            tx.send(r).unwrap();
+        }
+        let b = Batcher::new(rx, BatchPolicy { max_batch: 4, max_wait: Duration::from_secs(1) });
+        assert_eq!(b.queue_depth(), 6);
+        assert_eq!(b.next_batch().unwrap().len(), 4);
+        assert_eq!(b.queue_depth(), 2);
     }
 }

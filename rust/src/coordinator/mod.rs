@@ -89,14 +89,18 @@ impl HostCalendar {
 /// One inference request.
 #[derive(Debug, Clone)]
 pub struct Request {
+    /// Caller-chosen id; responses of one serve call are ordered by it.
     pub id: u64,
+    /// Input activation tensor (int8, row-major).
     pub data: Vec<i8>,
 }
 
 /// One completed inference.
 #[derive(Debug, Clone)]
 pub struct Response {
+    /// The originating request's id.
     pub id: u64,
+    /// Output activation tensor (int8, row-major).
     pub data: Vec<i8>,
     /// Real wall-clock latency on this host (PJRT CPU execution).
     pub real_latency_s: f64,
@@ -122,7 +126,9 @@ pub struct Pipeline {
     /// for the replica router's scoped threads.
     ready: std::sync::Mutex<(std::sync::mpsc::Receiver<Result<(), String>>, usize)>,
     n_stages: usize,
+    /// Per-stage execution counters (one entry per TPU worker).
     pub stage_metrics: Vec<Arc<StageMetrics>>,
+    /// End-to-end latency histograms for this pipeline.
     pub serve_metrics: Arc<ServeMetrics>,
 }
 
@@ -311,10 +317,12 @@ fn stage_loop(
 /// alternative (paper §V-C closing remark).  Each replica is a full copy
 /// of the model on its own TPU set.
 pub struct ReplicaRouter {
+    /// The replica pipelines; requests are sharded round-robin across them.
     pub replicas: Vec<Pipeline>,
 }
 
 impl ReplicaRouter {
+    /// Wrap a non-empty set of identical pipelines as one deployment.
     pub fn new(replicas: Vec<Pipeline>) -> Self {
         assert!(!replicas.is_empty());
         ReplicaRouter { replicas }
@@ -343,6 +351,7 @@ impl ReplicaRouter {
         Ok(all)
     }
 
+    /// Close every replica's input and join all worker threads.
     pub fn shutdown(self) {
         for r in self.replicas {
             r.shutdown();

@@ -5,6 +5,7 @@
 
 use std::collections::VecDeque;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 struct Inner<T> {
     queue: VecDeque<T>,
@@ -43,6 +44,17 @@ impl<T> Clone for Receiver<T> {
 /// Error returned when sending into a closed queue.
 #[derive(Debug, PartialEq, Eq)]
 pub struct SendError<T>(pub T);
+
+/// Outcome of a deadline-bounded receive ([`Receiver::recv_deadline`]).
+#[derive(Debug, PartialEq, Eq)]
+pub enum RecvDeadline<T> {
+    /// An item was received before the deadline.
+    Item(T),
+    /// The deadline passed with the queue still open and empty.
+    TimedOut,
+    /// The queue is closed and fully drained.
+    Closed,
+}
 
 /// Create a bounded channel with the given capacity (>= 1).
 pub fn bounded<T>(capacity: usize) -> (Sender<T>, Receiver<T>) {
@@ -97,6 +109,34 @@ impl<T> Receiver<T> {
         }
     }
 
+    /// Blocking receive bounded by a deadline: parks on the condvar (no
+    /// spinning) until an item arrives, the queue closes, or `deadline`
+    /// passes.  An already-queued item is always returned, even when the
+    /// deadline is in the past — "deadline passed" only means "do not
+    /// *wait* any longer".
+    pub fn recv_deadline(&self, deadline: Instant) -> RecvDeadline<T> {
+        let mut inner = self.shared.inner.lock().unwrap();
+        loop {
+            if let Some(v) = inner.queue.pop_front() {
+                self.shared.not_full.notify_one();
+                return RecvDeadline::Item(v);
+            }
+            if inner.closed {
+                return RecvDeadline::Closed;
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return RecvDeadline::TimedOut;
+            }
+            let (guard, _timeout) = self
+                .shared
+                .not_empty
+                .wait_timeout(inner, deadline - now)
+                .unwrap();
+            inner = guard;
+        }
+    }
+
     /// Non-blocking receive.
     pub fn try_recv(&self) -> Option<T> {
         let mut inner = self.shared.inner.lock().unwrap();
@@ -107,10 +147,12 @@ impl<T> Receiver<T> {
         v
     }
 
+    /// Number of items currently buffered in the queue.
     pub fn len(&self) -> usize {
         self.shared.inner.lock().unwrap().queue.len()
     }
 
+    /// Whether the queue is currently empty (it may still be open).
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -289,6 +331,43 @@ mod tests {
         // the pre-close item is still drainable
         assert_eq!(rx.recv(), Some(0));
         assert_eq!(rx.recv(), None);
+    }
+
+    #[test]
+    fn recv_deadline_returns_buffered_item_even_past_deadline() {
+        let (tx, rx) = bounded(4);
+        tx.send(42u32).unwrap();
+        // deadline already passed: the queued item must still come out
+        let past = Instant::now() - Duration::from_millis(5);
+        assert_eq!(rx.recv_deadline(past), RecvDeadline::Item(42));
+        // empty + past deadline -> immediate timeout, no blocking
+        assert_eq!(rx.recv_deadline(past), RecvDeadline::TimedOut);
+    }
+
+    #[test]
+    fn recv_deadline_times_out_then_sees_closed() {
+        let (tx, rx) = bounded::<u32>(4);
+        let t0 = Instant::now();
+        let r = rx.recv_deadline(t0 + Duration::from_millis(20));
+        assert_eq!(r, RecvDeadline::TimedOut);
+        assert!(t0.elapsed() >= Duration::from_millis(20));
+        tx.close();
+        assert_eq!(
+            rx.recv_deadline(Instant::now() + Duration::from_secs(5)),
+            RecvDeadline::Closed
+        );
+    }
+
+    #[test]
+    fn recv_deadline_wakes_on_send() {
+        let (tx, rx) = bounded::<u32>(4);
+        let t = thread::spawn(move || {
+            thread::sleep(Duration::from_millis(20));
+            tx.send(7).unwrap();
+        });
+        let r = rx.recv_deadline(Instant::now() + Duration::from_secs(5));
+        assert_eq!(r, RecvDeadline::Item(7));
+        t.join().unwrap();
     }
 
     #[test]

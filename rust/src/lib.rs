@@ -40,4 +40,5 @@ pub mod trace;
 pub mod cli;
 pub mod serving;
 pub mod scheduler;
+pub mod workload;
 pub mod ablation;

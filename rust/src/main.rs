@@ -24,6 +24,7 @@ fn main() {
     let result = match args.command.as_str() {
         "serve" => cmd_serve(&args),
         "serve-pool" => cmd_serve_pool(&args),
+        "loadgen" => cmd_loadgen(&args),
         "gantt" => cmd_gantt(&args),
         _ => cli::run(&args).map(|out| print!("{out}")),
     };
@@ -155,6 +156,162 @@ fn cmd_serve_pool(args: &Args) -> Result<()> {
         s.registered, s.admitted, s.queued, s.rejected, s.routed_requests, s.routed_batches
     );
     router.shutdown();
+    Ok(())
+}
+
+/// Parse a `--join MODEL@T_S` / `--leave MODEL@T_S` churn flag.
+fn churn_flag(args: &Args, key: &str) -> Result<Option<(String, f64)>> {
+    let Some(spec) = args.flags.get(key) else { return Ok(None) };
+    let (model, at) = spec
+        .split_once('@')
+        .ok_or_else(|| anyhow::anyhow!("--{key} wants MODEL@T_S, got {spec:?}"))?;
+    let at_s: f64 = at
+        .parse()
+        .map_err(|_| anyhow::anyhow!("bad time {at:?} in --{key} {spec:?}"))?;
+    anyhow::ensure!(at_s >= 0.0, "--{key} time must be non-negative");
+    Ok(Some((model.to_string(), at_s)))
+}
+
+/// `repro loadgen`: seeded open-loop load generation.
+///
+/// Prints the deterministic per-tenant table (same `--seed` renders the
+/// bit-identical table — the queueing numbers come from the seeded
+/// open-loop simulation, not from wall clocks), then drives the *same*
+/// seeds against a live open-loop `ServingPool`: per-tenant ingress
+/// queues + dynamic batchers, responses verified bit-for-bit against the
+/// serial reference.  `--join`/`--leave` register/deregister a tenant
+/// mid-run to exercise online re-planning with drain.
+fn cmd_loadgen(args: &Args) -> Result<()> {
+    use tpu_pipeline::scheduler::{
+        resolve_model, BackendKind, OpenOptions, ServingPool, Tenant,
+    };
+    use tpu_pipeline::util::fmt_seconds;
+    use tpu_pipeline::workload::TenantLoad;
+
+    // parse the spec and plan once: the printed table, the skip decisions
+    // below and the deployed pool all come from the same inputs.  CSV mode
+    // prints only the reproducible table, so two runs of one seed diff
+    // clean
+    let cfg = args.config()?;
+    let (registry, alloc, spec) = cli::loadgen_spec(args)?;
+    let (table, plan) = cli::loadgen_table(&registry, &cfg, &alloc, &spec)?;
+    if args.csv() {
+        print!("{}", table.csv());
+        return Ok(());
+    }
+    print!("{}", table.render());
+    print!("{}", cli::loadgen_summary(&plan));
+    if args.bool_flag("no-live") {
+        return Ok(());
+    }
+
+    let join = churn_flag(args, "join")?;
+    let leave = churn_flag(args, "leave")?;
+
+    // only admitted tenants have a live deployment to drive; queued or
+    // rejected ones already show their status in the table above
+    let live_loads: Vec<TenantLoad> = spec
+        .loads
+        .iter()
+        .filter(|l| plan.assignment(&l.model).is_some())
+        .cloned()
+        .collect();
+    for l in &spec.loads {
+        if plan.assignment(&l.model).is_none() {
+            println!("  (skipping {:?} in the live run: not admitted)", l.model);
+        }
+    }
+    if live_loads.is_empty() && join.is_none() {
+        println!("  no admitted tenants — nothing to serve live");
+        return Ok(());
+    }
+
+    let pool = ServingPool::deploy(
+        registry,
+        cfg,
+        alloc,
+        BackendKind::Synthetic,
+        OpenOptions { policy: spec.policy, queue_capacity: 64 },
+    )?;
+    println!("\nlive open-loop run (synthetic backend, bit-exact verification):");
+
+    let mut reports = Vec::new();
+    std::thread::scope(|scope| -> Result<()> {
+        let driver = {
+            let pool = &pool;
+            let loads = &live_loads;
+            scope.spawn(move || serving::serve_open_loop(pool, loads, spec.seed, true))
+        };
+        if let Some((model, at_s)) = join {
+            let pool = &pool;
+            scope.spawn(move || {
+                std::thread::sleep(std::time::Duration::from_secs_f64(at_s));
+                match resolve_model(&model)
+                    .and_then(|m| pool.register(Tenant::new(model.clone(), m)))
+                {
+                    Ok(report) => println!(
+                        "  [t={at_s}s] registered {model:?}: re-plan drained {} \
+                         deployment(s), admitted {:?}",
+                        report.drained, report.admitted
+                    ),
+                    Err(e) => println!("  [t={at_s}s] register {model:?} failed: {e:#}"),
+                }
+            });
+        }
+        if let Some((model, at_s)) = leave {
+            let pool = &pool;
+            scope.spawn(move || {
+                std::thread::sleep(std::time::Duration::from_secs_f64(at_s));
+                match pool.deregister(&model) {
+                    Ok(report) => println!(
+                        "  [t={at_s}s] deregistered {model:?}: re-plan drained {} \
+                         deployment(s), admitted {:?}",
+                        report.drained, report.admitted
+                    ),
+                    Err(e) => println!("  [t={at_s}s] deregister {model:?} failed: {e:#}"),
+                }
+            });
+        }
+        reports = driver.join().expect("open-loop driver panicked")?;
+        Ok(())
+    })?;
+
+    for r in &reports {
+        println!(
+            "  {:10} {:18} submitted {:4} completed {:4} verified {} | wall {}",
+            r.name,
+            r.arrivals,
+            r.submitted,
+            r.completed,
+            r.verified,
+            fmt_seconds(r.wall_s),
+        );
+    }
+    for name in pool.names() {
+        if let Some(m) = pool.tenant_metrics(&name) {
+            let s = m.snapshot();
+            println!(
+                "  {:10} batches {} (size {} / deadline {} / closed {}) mean batch {:.1} \
+                 max queue depth {} | real p50 {} p99 {}",
+                name,
+                s.batches,
+                s.flush_size,
+                s.flush_deadline,
+                s.flush_closed,
+                s.mean_batch,
+                s.max_queue_depth,
+                fmt_seconds(s.real_p50_s),
+                fmt_seconds(s.real_p99_s),
+            );
+        }
+    }
+    let s = pool.metrics.snapshot();
+    println!(
+        "  scheduler: admitted {} queued {} rejected {} | routed {} requests | \
+         re-plans {} (drained {} deployments)",
+        s.admitted, s.queued, s.rejected, s.routed_requests, s.replans, s.drained_deployments
+    );
+    pool.shutdown();
     Ok(())
 }
 

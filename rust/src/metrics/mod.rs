@@ -1,10 +1,24 @@
-//! Serving metrics: per-stage counters/timers and end-to-end latency
-//! histograms, shared across worker threads.
+//! Serving metrics: per-stage counters/timers, end-to-end latency
+//! histograms, per-tenant batching counters (queue depth / flush reason)
+//! and pool-scheduler re-plan counters, shared across worker threads.
 
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::util::stats::{LatencyHistogram, Summary};
+
+/// Why a dynamic batch was flushed (see `coordinator::batcher`).  Defined
+/// here so both the batcher and the metrics layer can name it without a
+/// dependency cycle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FlushKind {
+    /// The batch reached `max_batch` pending requests.
+    Size,
+    /// The oldest pending request hit the `max_wait` deadline.
+    Deadline,
+    /// The request queue was closed and drained.
+    Closed,
+}
 
 /// Metrics for one pipeline stage (one TPU worker).
 #[derive(Debug, Default)]
@@ -119,21 +133,47 @@ pub struct TenantMetrics {
 struct TenantCounters {
     submitted: u64,
     errors: u64,
+    batches: u64,
+    batched_requests: u64,
+    flush_size: u64,
+    flush_deadline: u64,
+    flush_closed: u64,
+    max_queue_depth: u64,
 }
 
 impl TenantMetrics {
+    /// Count `n` requests handed to this tenant's deployment or queue.
     pub fn record_submitted(&self, n: u64) {
         self.extra.lock().unwrap().submitted += n;
     }
 
+    /// Record one completed response's real and simulated latency.
     pub fn record_response(&self, real_s: f64, sim_s: f64) {
         self.core.record(real_s, sim_s);
     }
 
+    /// Count one failed batch/serve call.
     pub fn record_error(&self) {
         self.extra.lock().unwrap().errors += 1;
     }
 
+    /// Record one flushed batch: its size, the ingress-queue depth left
+    /// behind at flush time, and why it flushed.
+    pub fn record_batch(&self, batch_len: u64, queue_depth: u64, kind: FlushKind) {
+        let mut g = self.extra.lock().unwrap();
+        g.batches += 1;
+        g.batched_requests += batch_len;
+        match kind {
+            FlushKind::Size => g.flush_size += 1,
+            FlushKind::Deadline => g.flush_deadline += 1,
+            FlushKind::Closed => g.flush_closed += 1,
+        }
+        if queue_depth > g.max_queue_depth {
+            g.max_queue_depth = queue_depth;
+        }
+    }
+
+    /// Take an immutable snapshot of every counter.
     pub fn snapshot(&self) -> TenantSnapshot {
         let c = self.core.snapshot();
         let e = self.extra.lock().unwrap();
@@ -141,6 +181,16 @@ impl TenantMetrics {
             submitted: e.submitted,
             completed: c.completed,
             errors: e.errors,
+            batches: e.batches,
+            mean_batch: if e.batches == 0 {
+                f64::NAN
+            } else {
+                e.batched_requests as f64 / e.batches as f64
+            },
+            flush_size: e.flush_size,
+            flush_deadline: e.flush_deadline,
+            flush_closed: e.flush_closed,
+            max_queue_depth: e.max_queue_depth,
             real_p50_s: c.real_p50_s,
             real_p99_s: c.real_p99_s,
             sim_p50_s: c.sim_p50_s,
@@ -152,12 +202,31 @@ impl TenantMetrics {
 /// Immutable view of one tenant's counters.
 #[derive(Debug, Clone, Copy)]
 pub struct TenantSnapshot {
+    /// Requests submitted (closed batches + open-loop arrivals).
     pub submitted: u64,
+    /// Responses completed.
     pub completed: u64,
+    /// Failed serve calls.
     pub errors: u64,
+    /// Dynamic batches flushed into the pipeline.
+    pub batches: u64,
+    /// Mean flushed-batch size (NaN before the first flush).
+    pub mean_batch: f64,
+    /// Batches flushed because `max_batch` was reached.
+    pub flush_size: u64,
+    /// Batches flushed because `max_wait` expired.
+    pub flush_deadline: u64,
+    /// Batches flushed because the ingress queue closed.
+    pub flush_closed: u64,
+    /// Maximum ingress-queue depth observed at any flush.
+    pub max_queue_depth: u64,
+    /// Real wall-clock latency p50 (seconds).
     pub real_p50_s: f64,
+    /// Real wall-clock latency p99 (seconds).
     pub real_p99_s: f64,
+    /// Simulated Edge TPU latency p50 (seconds).
     pub sim_p50_s: f64,
+    /// Simulated Edge TPU latency p99 (seconds).
     pub sim_p99_s: f64,
 }
 
@@ -176,9 +245,12 @@ struct SchedulerInner {
     routed_batches: u64,
     routed_requests: u64,
     route_misses: u64,
+    replans: u64,
+    drained_deployments: u64,
 }
 
 impl SchedulerMetrics {
+    /// Overwrite the admission totals with the latest plan's outcome.
     pub fn record_admission(&self, registered: u64, admitted: u64, queued: u64, rejected: u64) {
         let mut g = self.inner.lock().unwrap();
         g.registered = registered;
@@ -187,16 +259,27 @@ impl SchedulerMetrics {
         g.rejected = rejected;
     }
 
+    /// Count one routed batch of `requests` requests.
     pub fn record_routed(&self, requests: u64) {
         let mut g = self.inner.lock().unwrap();
         g.routed_batches += 1;
         g.routed_requests += requests;
     }
 
+    /// Count a request for a model with no live deployment.
     pub fn record_route_miss(&self) {
         self.inner.lock().unwrap().route_misses += 1;
     }
 
+    /// Count one online re-plan (registration change on a live pool) that
+    /// drained `drained` deployments before redeploying.
+    pub fn record_replan(&self, drained: u64) {
+        let mut g = self.inner.lock().unwrap();
+        g.replans += 1;
+        g.drained_deployments += drained;
+    }
+
+    /// Take an immutable snapshot of every counter.
     pub fn snapshot(&self) -> SchedulerSnapshot {
         let g = self.inner.lock().unwrap();
         SchedulerSnapshot {
@@ -207,6 +290,8 @@ impl SchedulerMetrics {
             routed_batches: g.routed_batches,
             routed_requests: g.routed_requests,
             route_misses: g.route_misses,
+            replans: g.replans,
+            drained_deployments: g.drained_deployments,
         }
     }
 }
@@ -214,13 +299,24 @@ impl SchedulerMetrics {
 /// Immutable view of the scheduler counters.
 #[derive(Debug, Clone, Copy)]
 pub struct SchedulerSnapshot {
+    /// Tenants registered at the last plan.
     pub registered: u64,
+    /// Tenants admitted by the last plan.
     pub admitted: u64,
+    /// Tenants queued (pool too small) by the last plan.
     pub queued: u64,
+    /// Tenants rejected (can never fit) by the last plan.
     pub rejected: u64,
+    /// Batches routed through the pool router.
     pub routed_batches: u64,
+    /// Requests routed through the pool router.
     pub routed_requests: u64,
+    /// Requests for models with no live deployment.
     pub route_misses: u64,
+    /// Online re-plans triggered by register/deregister on a live pool.
+    pub replans: u64,
+    /// Deployments drained (and redeployed or retired) across all re-plans.
+    pub drained_deployments: u64,
 }
 
 #[cfg(test)]
@@ -273,6 +369,8 @@ mod tests {
         m.record_routed(50);
         m.record_routed(20);
         m.record_route_miss();
+        m.record_replan(2);
+        m.record_replan(0);
         let s = m.snapshot();
         assert_eq!(s.registered, 5);
         assert_eq!(s.admitted, 3);
@@ -281,6 +379,24 @@ mod tests {
         assert_eq!(s.routed_batches, 2);
         assert_eq!(s.routed_requests, 70);
         assert_eq!(s.route_misses, 1);
+        assert_eq!(s.replans, 2);
+        assert_eq!(s.drained_deployments, 2);
+    }
+
+    #[test]
+    fn tenant_batch_counters() {
+        let m = TenantMetrics::default();
+        m.record_batch(8, 3, FlushKind::Size);
+        m.record_batch(2, 0, FlushKind::Deadline);
+        m.record_batch(1, 0, FlushKind::Closed);
+        m.record_batch(5, 1, FlushKind::Size);
+        let s = m.snapshot();
+        assert_eq!(s.batches, 4);
+        assert_eq!(s.flush_size, 2);
+        assert_eq!(s.flush_deadline, 1);
+        assert_eq!(s.flush_closed, 1);
+        assert_eq!(s.max_queue_depth, 3);
+        assert!((s.mean_batch - 4.0).abs() < 1e-12, "{s:?}");
     }
 
     #[test]

@@ -69,8 +69,11 @@ impl Default for AllocatorConfig {
 /// One evaluated `(tpu_count, strategy)` option for a tenant.
 #[derive(Debug, Clone)]
 pub struct Candidate {
+    /// Pipeline depth (TPUs) this candidate uses.
     pub tpu_count: usize,
+    /// Segmentation strategy that chose the partition.
     pub strategy: Strategy,
+    /// The concrete layer partition.
     pub partition: Partition,
     /// Batch-amortized per-inference seconds (simulated Edge TPU clock).
     pub per_item_s: f64,
@@ -88,16 +91,22 @@ pub struct Candidate {
 /// Why a tenant was not admitted.
 #[derive(Debug, Clone)]
 pub struct Rejection {
+    /// The tenant's registry name.
     pub name: String,
+    /// Human-readable reason it was queued/rejected.
     pub reason: String,
 }
 
 /// Final placement of one admitted tenant.
 #[derive(Debug, Clone)]
 pub struct Assignment {
+    /// The tenant's registry name.
     pub name: String,
+    /// The tenant's scheduling weight (objective multiplier).
     pub weight: f64,
+    /// The tenant's p99 SLO, if declared.
     pub slo_p99_s: Option<f64>,
+    /// The winning `(tpu_count, strategy, partition)` candidate.
     pub candidate: Candidate,
     /// Data-parallel copies of the whole pipeline (>= 1).
     pub replicas: usize,
@@ -106,6 +115,7 @@ pub struct Assignment {
 }
 
 impl Assignment {
+    /// Total TPUs this assignment occupies (pipeline depth × replicas).
     pub fn tpus_used(&self) -> usize {
         self.candidate.tpu_count * self.replicas
     }
@@ -119,7 +129,9 @@ impl Assignment {
 /// The allocator's output: admitted placements + non-admitted tenants.
 #[derive(Debug, Clone)]
 pub struct PoolPlan {
+    /// TPUs in the pool this plan was computed for.
     pub total_tpus: usize,
+    /// Admitted tenants with their winning placements.
     pub assignments: Vec<Assignment>,
     /// Tenants that fit the device but lost the TPU auction on this pool.
     pub queued: Vec<Rejection>,
@@ -131,10 +143,12 @@ pub struct PoolPlan {
 }
 
 impl PoolPlan {
+    /// TPUs occupied across all admitted assignments.
     pub fn tpus_used(&self) -> usize {
         self.assignments.iter().map(Assignment::tpus_used).sum()
     }
 
+    /// The admitted assignment for `name`, if it was admitted.
     pub fn assignment(&self, name: &str) -> Option<&Assignment> {
         self.assignments.iter().find(|a| a.name == name)
     }

@@ -24,24 +24,34 @@
 //! ModelRegistry --register--> PoolScheduler::plan (allocator)
 //!                                   |  PoolPlan: admitted / queued / rejected
 //!                                   v
-//!                             PoolRouter::deploy  (router)
-//!                                   |  one Pipeline (xN replicas) per tenant
-//!                                   v
-//!                      router.serve("model", batch) + TenantMetrics
+//!               +------ PoolRouter::deploy  (router, closed batches)
+//!               |             |  one Pipeline (xN replicas) per tenant
+//!               |             v
+//!               |    router.serve("model", batch) + TenantMetrics
+//!               |
+//!               +------ ServingPool::deploy (pool, open loop)
+//!                             |  per-tenant ingress + Batcher worker
+//!                             v
+//!                    pool.submit("model", request) -> TenantClient::done
+//!                    pool.register / pool.deregister  (online re-plan)
 //! ```
 //!
 //! Entry points: `repro schedule` (plan only, prints the admission table),
-//! `repro serve-pool` (plan + deploy + serve synthetic traffic), and
-//! `examples/serve_multi_tenant.rs` (concurrent multi-model serving with
-//! bit-exact response verification).
+//! `repro serve-pool` (plan + deploy + closed synthetic batches),
+//! `repro loadgen` (seeded open-loop arrival processes + live
+//! verification), `examples/serve_multi_tenant.rs` (concurrent
+//! closed-batch serving) and `examples/open_loop.rs` (open arrivals with
+//! mid-run registration churn).
 
 pub mod allocator;
+pub mod pool;
 pub mod registry;
 pub mod router;
 
 pub use allocator::{
     allocate, candidates_for, AllocatorConfig, Assignment, Candidate, PoolPlan, Rejection,
 };
+pub use pool::{OpenOptions, ReplanReport, ServingPool, TenantClient};
 pub use registry::{resolve_model, ModelRegistry, Tenant};
 pub use router::{
     synthetic_reference, synthetic_transform, tenant_salt, BackendKind, PoolRouter,
@@ -55,12 +65,16 @@ use crate::report::{ms, Table};
 
 /// Facade: a registry plus the pool/system configuration.
 pub struct PoolScheduler {
+    /// The registered tenants (mutated by register/deregister).
     pub registry: ModelRegistry,
+    /// Calibrated device/link constants used for cost-model placement.
     pub system: SystemConfig,
+    /// Allocator knobs (pool size, profiling batch, spill policy, ...).
     pub alloc: AllocatorConfig,
 }
 
 impl PoolScheduler {
+    /// An empty scheduler over the given system + allocator configuration.
     pub fn new(system: SystemConfig, alloc: AllocatorConfig) -> Self {
         PoolScheduler { registry: ModelRegistry::new(), system, alloc }
     }
@@ -70,15 +84,36 @@ impl PoolScheduler {
         self.registry.register(tenant)
     }
 
+    /// Remove a tenant (see [`ModelRegistry::deregister`]).  For draining
+    /// removal on a live pool, use [`ServingPool::deregister`].
+    pub fn deregister(&mut self, name: &str) -> Result<Tenant> {
+        self.registry.deregister(name)
+    }
+
     /// Run admission + placement over everything registered.
     pub fn plan(&self) -> Result<PoolPlan> {
         allocate(&self.registry, &self.system, &self.alloc)
     }
 
-    /// Plan, then spawn the live deployments.
+    /// Plan, then spawn the live closed-batch deployments.
     pub fn deploy(&self, backend: &BackendKind, queue_capacity: usize) -> Result<PoolRouter> {
         let plan = self.plan()?;
         PoolRouter::deploy(&plan, &self.registry, &self.system, backend, queue_capacity)
+    }
+
+    /// Plan, then spawn the **open-loop** serving pool: per-tenant ingress
+    /// queues + dynamic batchers, with online re-planning on registration
+    /// change.  The pool takes a snapshot of the current registry;
+    /// subsequent membership changes go through
+    /// [`ServingPool::register`] / [`ServingPool::deregister`].
+    pub fn deploy_open(&self, backend: BackendKind, opts: OpenOptions) -> Result<ServingPool> {
+        ServingPool::deploy(
+            self.registry.clone(),
+            self.system.clone(),
+            self.alloc.clone(),
+            backend,
+            opts,
+        )
     }
 }
 
@@ -162,6 +197,27 @@ mod tests {
         assert_eq!(router.len(), 3);
         router.wait_ready().unwrap();
         router.shutdown();
+    }
+
+    #[test]
+    fn facade_deploys_open_loop_pool() {
+        let mut s = PoolScheduler::new(
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: 2, ..Default::default() },
+        );
+        s.registry.register_named("fc_small").unwrap();
+        s.registry.register_named("conv_a").unwrap();
+        let pool = s.deploy_open(BackendKind::Synthetic, OpenOptions::default()).unwrap();
+        assert_eq!(pool.names(), vec!["conv_a".to_string(), "fc_small".to_string()]);
+        let client = pool.client("conv_a").unwrap();
+        for r in client.synth_requests(4, 1) {
+            pool.submit("conv_a", r).unwrap();
+        }
+        for _ in 0..4 {
+            let r = client.done.recv().unwrap();
+            assert_eq!(r.data.len(), client.out_elems);
+        }
+        pool.shutdown();
     }
 
     #[test]

@@ -1,0 +1,620 @@
+//! Open-loop, re-plannable multi-tenant serving pool.
+//!
+//! [`PoolRouter`](super::router::PoolRouter) serves *closed* batches: the
+//! caller hands over a complete request vector and blocks.  This module
+//! turns the same deployments into an **open-loop** system — the shape the
+//! ROADMAP's "heavy open traffic" north star asks for:
+//!
+//! * every admitted tenant gets its own bounded ingress queue and a
+//!   [`Batcher`] worker thread that groups arrivals under a per-pool
+//!   [`BatchPolicy`] (size/wait flush) and feeds its pipeline;
+//! * callers [`submit`](ServingPool::submit) single requests as they
+//!   arrive and collect [`Response`]s from a per-tenant completion stream
+//!   ([`TenantClient::done`]) that survives re-plans;
+//! * [`register`](ServingPool::register) / [`deregister`](ServingPool::deregister)
+//!   on the **live** pool re-run the branch-and-bound allocator, drain
+//!   only the deployments whose assignment changed, and redeploy — without
+//!   dropping a single in-flight request.
+//!
+//! ## Drain / re-plan protocol
+//!
+//! A re-plan holds the pool's state lock, closes the ingress queues of
+//! affected tenants, and joins their batcher workers.  Queue-close
+//! semantics guarantee the worker first drains everything already
+//! accepted, serving it through the old deployment; responses land in the
+//! tenant's *persistent* completion queue, which outlives the swap.  Only
+//! then is the new deployment spawned behind a fresh ingress.
+//! [`submit`](ServingPool::submit) sends *outside* the state lock (so a
+//! slow tenant cannot head-of-line block the pool); a send that races the
+//! swap gets its request handed back by the closing queue and retries
+//! against the new ingress — accepted requests are therefore never lost,
+//! and per-tenant FIFO order is preserved across the swap.
+//!
+//! The synthetic backend's per-layer keyed transforms make the reference
+//! output partition-invariant (see [`super::router::synthetic_reference`]),
+//! so responses verify bit-for-bit even when a re-plan changes a tenant's
+//! segmentation mid-run.
+
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use anyhow::{Context, Result};
+
+use crate::config::SystemConfig;
+use crate::coordinator::batcher::{BatchPolicy, Batcher};
+use crate::coordinator::queue::{bounded, Receiver, SendError, Sender};
+use crate::coordinator::{Request, Response};
+use crate::metrics::{SchedulerMetrics, TenantMetrics};
+use crate::runtime::Manifest;
+use crate::util::rng::Rng;
+
+use super::allocator::{allocate, AllocatorConfig, PoolPlan};
+use super::registry::{ModelRegistry, Tenant};
+use super::router::{build_deployment, synthetic_reference, BackendKind, Deployment};
+
+/// Completion-queue capacity per tenant: bounds how many responses may sit
+/// unconsumed before the batcher worker backpressures.  Generous, so tests
+/// and drivers may submit-then-drain without interleaving.
+const DONE_QUEUE_CAPACITY: usize = 4096;
+
+/// Knobs of the open-loop serving path.
+#[derive(Debug, Clone)]
+pub struct OpenOptions {
+    /// Per-tenant dynamic batching policy (size/wait flush).
+    pub policy: BatchPolicy,
+    /// Capacity of each tenant's ingress queue and of the host queues
+    /// between pipeline stages (backpressure bound).
+    pub queue_capacity: usize,
+}
+
+impl Default for OpenOptions {
+    fn default() -> Self {
+        OpenOptions { policy: BatchPolicy::default(), queue_capacity: 64 }
+    }
+}
+
+/// Outcome of one online re-plan.
+#[derive(Debug, Clone)]
+pub struct ReplanReport {
+    /// Deployments drained (then retired or redeployed) by this re-plan.
+    pub drained: u64,
+    /// Model names admitted by the new plan, sorted.
+    pub admitted: Vec<String>,
+    /// Tenants queued (pool too small) by the new plan.
+    pub queued: usize,
+    /// Tenants rejected (can never fit) by the new plan.
+    pub rejected: usize,
+}
+
+impl ReplanReport {
+    fn of(plan: &PoolPlan, drained: u64) -> ReplanReport {
+        ReplanReport {
+            drained,
+            admitted: plan.assignments.iter().map(|a| a.name.clone()).collect(),
+            queued: plan.queued.len(),
+            rejected: plan.rejected.len(),
+        }
+    }
+}
+
+/// One tenant's live open-loop deployment: ingress + batcher worker.
+struct LiveTenant {
+    ingress: Sender<Request>,
+    worker: Option<JoinHandle<()>>,
+    /// Assignment signature for re-plan diffing.
+    tpu_count: usize,
+    replicas: usize,
+    partition_cuts: Vec<usize>,
+    /// Shape/verification info mirrored into [`TenantClient`]s.
+    in_elems: usize,
+    out_elems: usize,
+    salt: u64,
+    layer_out_elems: Vec<usize>,
+    metrics: Arc<TenantMetrics>,
+}
+
+/// A caller's handle on one tenant's open-loop stream: shape info for
+/// building requests, the completion queue, and the tenant's counters.
+/// The completion queue persists across re-plans; it closes (recv returns
+/// `None`) only when the tenant is deregistered or the pool shuts down.
+pub struct TenantClient {
+    /// Model/routing name.
+    pub name: String,
+    /// Input tensor element count (what submitted requests must carry).
+    pub in_elems: usize,
+    /// Output tensor element count.
+    pub out_elems: usize,
+    /// Synthetic-backend key (stable across runs and re-plans).
+    pub salt: u64,
+    /// Per-layer output sizes over the whole model, for
+    /// [`synthetic_reference`] checks (partition-invariant).
+    pub layer_out_elems: Vec<usize>,
+    /// The tenant's completion stream (cloneable receiver).
+    pub done: Receiver<Response>,
+    /// The tenant's serving counters (persist across re-plans).
+    pub metrics: Arc<TenantMetrics>,
+}
+
+impl TenantClient {
+    /// Deterministic random requests shaped for this tenant, ids `0..n`.
+    pub fn synth_requests(&self, n: usize, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed ^ self.salt);
+        (0..n as u64).map(|id| Request { id, data: rng.i8_vec(self.in_elems) }).collect()
+    }
+
+    /// The serial reference output for one request (synthetic backend).
+    pub fn reference(&self, input: &[i8]) -> Vec<i8> {
+        synthetic_reference(self.salt, &self.layer_out_elems, input)
+    }
+}
+
+/// Both ends of a tenant's persistent completion queue.
+type DoneChannel = (Sender<Response>, Receiver<Response>);
+
+struct PoolState {
+    registry: ModelRegistry,
+    live: BTreeMap<String, LiveTenant>,
+    /// name -> (producer, consumer) of the persistent completion queue.
+    done: BTreeMap<String, DoneChannel>,
+    /// Per-tenant counters, persistent across re-plans.
+    tenant_metrics: BTreeMap<String, Arc<TenantMetrics>>,
+    plan: PoolPlan,
+}
+
+/// The open-loop multi-tenant serving pool (see the module docs for the
+/// batching and drain/re-plan protocol).
+pub struct ServingPool {
+    system: SystemConfig,
+    alloc: AllocatorConfig,
+    backend: BackendKind,
+    opts: OpenOptions,
+    manifest: Option<Manifest>,
+    state: Mutex<PoolState>,
+    /// Pool-level admission/routing/re-plan counters.
+    pub metrics: Arc<SchedulerMetrics>,
+}
+
+/// Per-tenant batcher worker: pull batches off the ingress queue under the
+/// flush policy, serve them through the deployment, stream responses into
+/// the completion queue.  Exits (and tears the deployment down) when the
+/// ingress queue is closed and drained.
+fn tenant_worker(
+    deployment: Deployment,
+    batcher: Batcher,
+    done: Sender<Response>,
+    metrics: Arc<TenantMetrics>,
+) {
+    // sim latencies are recorded relative to the deployment's sim clock at
+    // batch start (the clock is monotonic across batches)
+    let mut sim_epoch = 0.0f64;
+    while let Some((batch, kind)) = batcher.next_batch_with_reason() {
+        metrics.record_batch(batch.len() as u64, batcher.queue_depth() as u64, kind);
+        match deployment.serve_batch(batch) {
+            Ok(responses) => {
+                let base = sim_epoch;
+                for r in &responses {
+                    metrics.record_response(r.real_latency_s, (r.sim_done_s - base).max(0.0));
+                    if r.sim_done_s > sim_epoch {
+                        sim_epoch = r.sim_done_s;
+                    }
+                }
+                for r in responses {
+                    if done.send(r).is_err() {
+                        break;
+                    }
+                }
+            }
+            Err(_) => metrics.record_error(),
+        }
+    }
+    deployment.shutdown();
+}
+
+impl ServingPool {
+    /// Plan over `registry` and spawn one open-loop deployment per
+    /// admitted tenant.  Blocks until every stage backend is constructed,
+    /// so a returned pool is ready to serve.
+    pub fn deploy(
+        registry: ModelRegistry,
+        system: SystemConfig,
+        alloc: AllocatorConfig,
+        backend: BackendKind,
+        opts: OpenOptions,
+    ) -> Result<ServingPool> {
+        let manifest = match &backend {
+            BackendKind::Pjrt { artifact_dir } => {
+                Some(Manifest::load(&artifact_dir.join("manifest.json"))?)
+            }
+            BackendKind::Synthetic => None,
+        };
+        let total_tpus = alloc.total_tpus;
+        let pool = ServingPool {
+            system,
+            alloc,
+            backend,
+            opts,
+            manifest,
+            state: Mutex::new(PoolState {
+                registry,
+                live: BTreeMap::new(),
+                done: BTreeMap::new(),
+                tenant_metrics: BTreeMap::new(),
+                plan: PoolPlan {
+                    total_tpus,
+                    assignments: Vec::new(),
+                    queued: Vec::new(),
+                    rejected: Vec::new(),
+                    objective_s: 0.0,
+                },
+            }),
+            metrics: Arc::new(SchedulerMetrics::default()),
+        };
+        {
+            let mut st = pool.state.lock().unwrap();
+            pool.apply_plan(&mut st)?;
+        }
+        Ok(pool)
+    }
+
+    /// Re-run the allocator over the state's registry, drain deployments
+    /// whose assignment vanished or changed, and spawn the missing ones.
+    /// Returns how many deployments were drained.
+    fn apply_plan(&self, st: &mut PoolState) -> Result<u64> {
+        // an empty registry is a valid (idle) pool: deregistering the last
+        // tenant must drain it, not error
+        let plan = if st.registry.is_empty() {
+            PoolPlan {
+                total_tpus: self.alloc.total_tpus,
+                assignments: Vec::new(),
+                queued: Vec::new(),
+                rejected: Vec::new(),
+                objective_s: 0.0,
+            }
+        } else {
+            allocate(&st.registry, &self.system, &self.alloc)?
+        };
+
+        // drain deployments whose assignment vanished or changed; joining
+        // the worker completes every request its ingress already accepted
+        let names: Vec<String> = st.live.keys().cloned().collect();
+        let mut drained = 0u64;
+        for name in names {
+            let keep = match plan.assignment(&name) {
+                Some(a) => {
+                    let lt = &st.live[&name];
+                    a.candidate.tpu_count == lt.tpu_count
+                        && a.replicas == lt.replicas
+                        && a.candidate.partition.cuts == lt.partition_cuts
+                }
+                None => false,
+            };
+            if !keep {
+                let mut lt = st.live.remove(&name).unwrap();
+                lt.ingress.close();
+                if let Some(h) = lt.worker.take() {
+                    let _ = h.join();
+                }
+                drained += 1;
+            }
+        }
+
+        // spawn deployments for new or changed assignments
+        for a in &plan.assignments {
+            if st.live.contains_key(&a.name) {
+                continue;
+            }
+            let built = build_deployment(
+                a,
+                &st.registry,
+                &self.system,
+                &self.backend,
+                self.manifest.as_ref(),
+                self.opts.queue_capacity,
+            )?;
+            built.deployment.wait_ready()?;
+            let (ingress, ingress_rx) = bounded(self.opts.queue_capacity);
+            let done_tx = st
+                .done
+                .entry(a.name.clone())
+                .or_insert_with(|| bounded(DONE_QUEUE_CAPACITY))
+                .0
+                .clone();
+            let metrics = st
+                .tenant_metrics
+                .entry(a.name.clone())
+                .or_insert_with(|| Arc::new(TenantMetrics::default()))
+                .clone();
+            let batcher = Batcher::new(ingress_rx, self.opts.policy);
+            let deployment = built.deployment;
+            let worker_metrics = metrics.clone();
+            let worker = std::thread::spawn(move || {
+                tenant_worker(deployment, batcher, done_tx, worker_metrics)
+            });
+            st.live.insert(
+                a.name.clone(),
+                LiveTenant {
+                    ingress,
+                    worker: Some(worker),
+                    tpu_count: a.candidate.tpu_count,
+                    replicas: a.replicas,
+                    partition_cuts: a.candidate.partition.cuts.clone(),
+                    in_elems: built.in_elems,
+                    out_elems: built.out_elems,
+                    salt: built.salt,
+                    layer_out_elems: built.layer_out_elems,
+                    metrics,
+                },
+            );
+        }
+
+        self.metrics.record_admission(
+            st.registry.len() as u64,
+            plan.assignments.len() as u64,
+            plan.queued.len() as u64,
+            plan.rejected.len() as u64,
+        );
+        st.plan = plan;
+        Ok(drained)
+    }
+
+    /// Submit one request to the named tenant's ingress queue.  Blocks
+    /// only when that tenant's ingress queue is full (backpressure) — the
+    /// state lock is released before the send, so a slow tenant never
+    /// head-of-line blocks other tenants' submissions or a concurrent
+    /// re-plan.  If a re-plan closes the ingress mid-send, the bounded
+    /// queue hands the request back intact and the send retries against
+    /// the tenant's new deployment: an accepted request is always served.
+    pub fn submit(&self, model: &str, request: Request) -> Result<()> {
+        let mut request = request;
+        loop {
+            let (ingress, metrics) = {
+                let st = self.state.lock().unwrap();
+                let lt = st.live.get(model).with_context(|| {
+                    format!(
+                        "model {model:?} has no live deployment (admitted: {:?})",
+                        st.live.keys().collect::<Vec<_>>()
+                    )
+                })?;
+                (lt.ingress.clone(), lt.metrics.clone())
+            };
+            match ingress.send(request) {
+                Ok(()) => {
+                    metrics.record_submitted(1);
+                    self.metrics.record_routed(1);
+                    return Ok(());
+                }
+                // a re-plan swapped this tenant's ingress under us; the
+                // request came back intact — retry (or error out above if
+                // the tenant was deregistered)
+                Err(SendError(r)) => request = r,
+            }
+        }
+    }
+
+    /// A caller handle on one live tenant: shape info, completion stream
+    /// and counters.  Cheap to call; the stream survives re-plans.
+    pub fn client(&self, model: &str) -> Result<TenantClient> {
+        let st = self.state.lock().unwrap();
+        let lt = st
+            .live
+            .get(model)
+            .with_context(|| format!("model {model:?} has no live deployment"))?;
+        let done = st.done.get(model).expect("live tenant has a done channel").1.clone();
+        Ok(TenantClient {
+            name: model.to_string(),
+            in_elems: lt.in_elems,
+            out_elems: lt.out_elems,
+            salt: lt.salt,
+            layer_out_elems: lt.layer_out_elems.clone(),
+            done,
+            metrics: lt.metrics.clone(),
+        })
+    }
+
+    /// Register a new tenant on the live pool and re-plan.  Deployments
+    /// whose assignment is unchanged keep running untouched; changed ones
+    /// are drained (in-flight requests complete) and redeployed.
+    pub fn register(&self, tenant: Tenant) -> Result<ReplanReport> {
+        let mut st = self.state.lock().unwrap();
+        st.registry.register(tenant)?;
+        let drained = self.apply_plan(&mut st)?;
+        self.metrics.record_replan(drained);
+        Ok(ReplanReport::of(&st.plan, drained))
+    }
+
+    /// Remove a tenant from the live pool and re-plan.  The tenant's
+    /// in-flight requests complete first (drain), then its completion
+    /// queue closes; freed TPUs are re-auctioned to the remaining tenants.
+    pub fn deregister(&self, name: &str) -> Result<ReplanReport> {
+        let mut st = self.state.lock().unwrap();
+        st.registry.deregister(name)?;
+        let drained = self.apply_plan(&mut st)?;
+        // the drain above already flushed every accepted request's
+        // response into the completion queue; now end the stream
+        if let Some((tx, _rx)) = st.done.remove(name) {
+            tx.close();
+        }
+        st.tenant_metrics.remove(name);
+        self.metrics.record_replan(drained);
+        Ok(ReplanReport::of(&st.plan, drained))
+    }
+
+    /// Clone of the most recent pool plan.
+    pub fn plan(&self) -> PoolPlan {
+        self.state.lock().unwrap().plan.clone()
+    }
+
+    /// Names of the tenants with a live deployment, sorted.
+    pub fn names(&self) -> Vec<String> {
+        self.state.lock().unwrap().live.keys().cloned().collect()
+    }
+
+    /// One tenant's counters (also reachable via [`TenantClient`]).
+    pub fn tenant_metrics(&self, name: &str) -> Option<Arc<TenantMetrics>> {
+        self.state.lock().unwrap().tenant_metrics.get(name).cloned()
+    }
+
+    /// Drain every tenant (in-flight requests complete), join all workers
+    /// and close all completion streams.
+    pub fn shutdown(self) {
+        let mut st = self.state.into_inner().unwrap();
+        let names: Vec<String> = st.live.keys().cloned().collect();
+        for name in names {
+            let mut lt = st.live.remove(&name).unwrap();
+            lt.ingress.close();
+            if let Some(h) = lt.worker.take() {
+                let _ = h.join();
+            }
+        }
+        for (_name, (tx, _rx)) in st.done {
+            tx.close();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pool(names: &[&str], tpus: usize) -> ServingPool {
+        let mut reg = ModelRegistry::new();
+        for n in names {
+            reg.register_named(n).unwrap();
+        }
+        ServingPool::deploy(
+            reg,
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: tpus, ..Default::default() },
+            BackendKind::Synthetic,
+            OpenOptions::default(),
+        )
+        .unwrap()
+    }
+
+    /// Submit n requests, collect n responses, verify each bit-for-bit.
+    fn run_and_verify(p: &ServingPool, name: &str, n: usize, seed: u64) {
+        let client = p.client(name).unwrap();
+        let reqs = client.synth_requests(n, seed);
+        let expected: Vec<Vec<i8>> = reqs.iter().map(|r| client.reference(&r.data)).collect();
+        for r in reqs {
+            p.submit(name, r).unwrap();
+        }
+        let mut got = 0usize;
+        while got < n {
+            let r = client.done.recv().expect("stream closed early");
+            assert_eq!(r.data, expected[r.id as usize], "{name}: digest mismatch");
+            assert_eq!(r.data.len(), client.out_elems);
+            got += 1;
+        }
+    }
+
+    #[test]
+    fn open_loop_round_trip_two_tenants() {
+        let p = pool(&["fc_small", "conv_a"], 2);
+        run_and_verify(&p, "fc_small", 40, 11);
+        run_and_verify(&p, "conv_a", 40, 22);
+        for name in ["fc_small", "conv_a"] {
+            let s = p.tenant_metrics(name).unwrap().snapshot();
+            assert_eq!(s.submitted, 40, "{name}");
+            assert_eq!(s.completed, 40, "{name}");
+            assert_eq!(s.errors, 0, "{name}");
+            assert!(s.batches >= 1, "{name}");
+            assert_eq!(
+                s.flush_size + s.flush_deadline + s.flush_closed,
+                s.batches,
+                "{name}: every batch has exactly one flush reason"
+            );
+        }
+        assert_eq!(p.metrics.snapshot().routed_requests, 80);
+        p.shutdown();
+    }
+
+    #[test]
+    fn register_replans_without_losing_in_flight_requests() {
+        // fc_small alone on 3 TPUs -> replicated; registering fc_big
+        // (needs 2 TPUs) forces fc_small to shrink: its deployment is
+        // drained and redeployed mid-stream
+        let p = pool(&["fc_small"], 3);
+        assert!(p.plan().assignment("fc_small").unwrap().replicas > 1);
+        let client = p.client("fc_small").unwrap();
+        let reqs = client.synth_requests(30, 5);
+        let expected: Vec<Vec<i8>> = reqs.iter().map(|r| client.reference(&r.data)).collect();
+        for r in reqs {
+            p.submit("fc_small", r).unwrap();
+        }
+        // re-plan while those 30 are in flight
+        let report = p
+            .register(Tenant::new("fc_big", super::super::resolve_model("fc_big").unwrap()))
+            .unwrap();
+        assert!(report.admitted.contains(&"fc_big".to_string()), "{report:?}");
+        assert!(report.drained >= 1, "fc_small must have been drained: {report:?}");
+        // every pre-replan request completes, bit-exact (same reference:
+        // the synthetic function is partition-invariant)
+        let mut got = 0;
+        while got < 30 {
+            let r = client.done.recv().expect("stream closed early");
+            assert_eq!(r.data, expected[r.id as usize], "in-flight request corrupted");
+            got += 1;
+        }
+        assert_eq!(client.metrics.snapshot().completed, 30);
+        // both tenants serve after the re-plan
+        run_and_verify(&p, "fc_small", 10, 6);
+        run_and_verify(&p, "fc_big", 10, 7);
+        let s = p.metrics.snapshot();
+        assert_eq!(s.replans, 1);
+        assert!(s.drained_deployments >= 1);
+        p.shutdown();
+    }
+
+    #[test]
+    fn register_rejected_tenant_drains_nothing() {
+        let p = pool(&["fc_small", "conv_a"], 2);
+        run_and_verify(&p, "fc_small", 5, 1);
+        // fc_n3000 can never fit on-chip -> rejected; nobody is drained
+        let report = p
+            .register(Tenant::new("fc_n3000", super::super::resolve_model("fc_n3000").unwrap()))
+            .unwrap();
+        assert_eq!(report.rejected, 1, "{report:?}");
+        assert_eq!(report.drained, 0, "unchanged tenants must keep running: {report:?}");
+        // the untouched deployments still serve
+        run_and_verify(&p, "fc_small", 5, 2);
+        run_and_verify(&p, "conv_a", 5, 3);
+        p.shutdown();
+    }
+
+    #[test]
+    fn deregister_last_tenant_leaves_an_idle_pool() {
+        let p = pool(&["fc_small"], 1);
+        run_and_verify(&p, "fc_small", 6, 2);
+        let report = p.deregister("fc_small").unwrap();
+        assert!(report.admitted.is_empty(), "{report:?}");
+        assert!(p.names().is_empty());
+        assert!(p.plan().assignments.is_empty());
+        p.shutdown();
+    }
+
+    #[test]
+    fn deregister_drains_then_closes_the_stream() {
+        let p = pool(&["fc_small", "conv_a"], 2);
+        let client = p.client("fc_small").unwrap();
+        let reqs = client.synth_requests(12, 9);
+        let expected: Vec<Vec<i8>> = reqs.iter().map(|r| client.reference(&r.data)).collect();
+        for r in reqs {
+            p.submit("fc_small", r).unwrap();
+        }
+        let report = p.deregister("fc_small").unwrap();
+        assert!(!report.admitted.contains(&"fc_small".to_string()));
+        // all 12 in-flight responses arrive, then the stream ends
+        let mut got = 0;
+        while let Some(r) = client.done.recv() {
+            assert_eq!(r.data, expected[r.id as usize]);
+            got += 1;
+        }
+        assert_eq!(got, 12, "deregister must not drop in-flight requests");
+        // submitting to the gone tenant errors; the survivor still serves
+        assert!(p.submit("fc_small", Request { id: 0, data: vec![0; 4] }).is_err());
+        run_and_verify(&p, "conv_a", 8, 4);
+        p.shutdown();
+    }
+}

@@ -31,16 +31,19 @@ pub struct Tenant {
 }
 
 impl Tenant {
+    /// A tenant with weight 1 and no SLO.
     pub fn new(name: impl Into<String>, model: Model) -> Self {
         Tenant { name: name.into(), model, weight: 1.0, slo_p99_s: None }
     }
 
+    /// Set the scheduling weight (must be positive).
     pub fn with_weight(mut self, weight: f64) -> Self {
         assert!(weight > 0.0, "weight must be positive");
         self.weight = weight;
         self
     }
 
+    /// Declare a p99 latency SLO in seconds.
     pub fn with_slo_p99_s(mut self, slo_s: f64) -> Self {
         self.slo_p99_s = Some(slo_s);
         self
@@ -54,6 +57,7 @@ pub struct ModelRegistry {
 }
 
 impl ModelRegistry {
+    /// An empty registry.
     pub fn new() -> Self {
         ModelRegistry::default()
     }
@@ -82,28 +86,43 @@ impl ModelRegistry {
         self.register(Tenant::new(entry.name.clone(), entry.to_model()))
     }
 
+    /// Remove a tenant, returning it; unknown names are an error.  On a
+    /// live pool, go through `ServingPool::deregister` instead so the
+    /// tenant's deployment is drained first.
+    pub fn deregister(&mut self, name: &str) -> Result<Tenant> {
+        self.tenants.remove(name).with_context(|| {
+            format!("model {name:?} not registered (have: {:?})", self.names())
+        })
+    }
+
+    /// Look up a registered tenant by name (error lists what exists).
     pub fn get(&self, name: &str) -> Result<&Tenant> {
         self.tenants.get(name).with_context(|| {
             format!("model {name:?} not registered (have: {:?})", self.names())
         })
     }
 
+    /// Mutable lookup, e.g. to adjust a tenant's weight or SLO.
     pub fn get_mut(&mut self, name: &str) -> Option<&mut Tenant> {
         self.tenants.get_mut(name)
     }
 
+    /// Number of registered tenants.
     pub fn len(&self) -> usize {
         self.tenants.len()
     }
 
+    /// Whether no tenant is registered.
     pub fn is_empty(&self) -> bool {
         self.tenants.is_empty()
     }
 
+    /// Iterate over registered tenants in name order.
     pub fn iter(&self) -> impl Iterator<Item = &Tenant> {
         self.tenants.values()
     }
 
+    /// Registered tenant names, sorted.
     pub fn names(&self) -> Vec<String> {
         self.tenants.keys().cloned().collect()
     }
@@ -193,6 +212,19 @@ mod tests {
         assert_eq!(reg.names(), vec!["conv_a".to_string(), "fc_small".to_string()]);
         assert!(reg.get("fc_small").is_ok());
         assert!(reg.get("nope").is_err());
+    }
+
+    #[test]
+    fn deregister_removes_and_errors_on_unknown() {
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        let t = reg.deregister("fc_small").unwrap();
+        assert_eq!(t.name, "fc_small");
+        assert!(reg.is_empty());
+        assert!(reg.deregister("fc_small").is_err(), "double deregister must fail");
+        // the name is free for re-registration after removal
+        reg.register_named("fc_small").unwrap();
+        assert_eq!(reg.len(), 1);
     }
 
     #[test]

@@ -12,12 +12,15 @@
 //!   runtime (requires `make artifacts`; the offline `xla` stub reports
 //!   itself unavailable at spawn time).
 //! * [`BackendKind::Synthetic`] — a deterministic native executor with the
-//!   same shape contract as the real segments: stage `i` of a model maps
-//!   its segment's input activation tensor to its output tensor through a
-//!   keyed mixing function.  Composition over the pipeline must equal
-//!   [`synthetic_reference`] bit-for-bit, which is what the multi-tenant
-//!   example and tests verify — order, routing and isolation bugs all
-//!   corrupt the digest.
+//!   same shape contract as the real segments: every **layer** of a model
+//!   gets a keyed mixing transform from its input tensor to its output
+//!   tensor, and a stage applies the transforms of the layers its segment
+//!   covers, in order.  The end-to-end composition is therefore
+//!   **partition-invariant**: any segmentation of the same model computes
+//!   the same function, which is what lets online re-planning swap a
+//!   tenant's partition mid-run while responses keep verifying against
+//!   the same [`synthetic_reference`].  Order, routing and isolation bugs
+//!   all corrupt the digest.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -33,11 +36,10 @@ use crate::metrics::{SchedulerMetrics, TenantMetrics};
 use crate::model::Model;
 use crate::runtime::stage::pjrt_stage_factory;
 use crate::runtime::Manifest;
-use crate::segment::Partition;
 use crate::serving::stage_sims;
 use crate::util::rng::Rng;
 
-use super::allocator::PoolPlan;
+use super::allocator::{Assignment, PoolPlan};
 use super::registry::ModelRegistry;
 
 /// How deployed stages execute.
@@ -59,11 +61,11 @@ pub fn tenant_salt(name: &str) -> u64 {
     h
 }
 
-fn stage_salt(model_salt: u64, stage: usize) -> u64 {
-    model_salt ^ (stage as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
+fn layer_salt(model_salt: u64, layer: usize) -> u64 {
+    model_salt ^ (layer as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
 }
 
-/// One synthetic stage application: a keyed, order-sensitive digest of the
+/// One synthetic layer application: a keyed, order-sensitive digest of the
 /// input tensor expanded to the output tensor shape.  O(in + out).
 pub fn synthetic_transform(salt: u64, input: &[i8], out_elems: usize) -> Vec<i8> {
     let mut h = salt ^ 0xA076_1D64_78BD_642F;
@@ -80,21 +82,27 @@ pub fn synthetic_transform(salt: u64, input: &[i8], out_elems: usize) -> Vec<i8>
         .collect()
 }
 
-/// Serial reference for a synthetic deployment: apply every stage's
-/// transform in partition order.  `stage_out_elems[i]` is stage i's output
-/// tensor size.  The pipelined deployment must reproduce this exactly.
-pub fn synthetic_reference(model_salt: u64, stage_out_elems: &[usize], input: &[i8]) -> Vec<i8> {
+/// Serial reference for a synthetic deployment: apply every **layer**'s
+/// transform in chain order.  `layer_out_elems[i]` is layer i's output
+/// tensor size over the whole model.  Any pipelined deployment of any
+/// partition of the model must reproduce this exactly — the reference is
+/// independent of where the cuts fall, so it stays valid across re-plans.
+pub fn synthetic_reference(model_salt: u64, layer_out_elems: &[usize], input: &[i8]) -> Vec<i8> {
     let mut x = input.to_vec();
-    for (i, &out) in stage_out_elems.iter().enumerate() {
-        x = synthetic_transform(stage_salt(model_salt, i), &x, out);
+    for (i, &out) in layer_out_elems.iter().enumerate() {
+        x = synthetic_transform(layer_salt(model_salt, i), &x, out);
     }
     x
 }
 
+/// One pipeline stage of the synthetic backend: applies the keyed
+/// transforms of the contiguous layer range its segment covers.
 struct SyntheticStage {
-    salt: u64,
+    /// Per-layer keys, in chain order within the segment.
+    salts: Vec<u64>,
+    /// Per-layer output tensor sizes, aligned with `salts`.
+    outs: Vec<usize>,
     in_elems: usize,
-    out_elems: usize,
 }
 
 impl StageBackend for SyntheticStage {
@@ -105,44 +113,47 @@ impl StageBackend for SyntheticStage {
             self.in_elems,
             input.len()
         );
-        Ok(synthetic_transform(self.salt, input, self.out_elems))
+        let mut x = input.to_vec();
+        for (salt, &out) in self.salts.iter().zip(&self.outs) {
+            x = synthetic_transform(*salt, &x, out);
+        }
+        Ok(x)
     }
 }
 
-fn synthetic_stage_factory(salt: u64, in_elems: usize, out_elems: usize) -> StageFactory {
+/// Factory for the synthetic stage covering layers `[a, b)` of `model`.
+fn synthetic_stage_factory(
+    model_salt: u64,
+    model: &Model,
+    a: usize,
+    b: usize,
+) -> StageFactory {
+    let salts: Vec<u64> = (a..b).map(|i| layer_salt(model_salt, i)).collect();
+    let outs: Vec<usize> =
+        model.layers[a..b].iter().map(|l| l.output_elems() as usize).collect();
+    let in_elems = model.layers[a].input_elems() as usize;
     Box::new(move || {
-        Ok(Box::new(SyntheticStage { salt, in_elems, out_elems }) as Box<dyn StageBackend>)
+        Ok(Box::new(SyntheticStage { salts, outs, in_elems }) as Box<dyn StageBackend>)
     })
 }
 
-/// Per-segment (input, output) element counts of a partition.
-fn stage_elems(model: &Model, partition: &Partition) -> Vec<(usize, usize)> {
-    partition
-        .bounds()
-        .iter()
-        .map(|&(a, b)| {
-            (
-                model.layers[a].input_elems() as usize,
-                model.layers[b - 1].output_elems() as usize,
-            )
-        })
-        .collect()
-}
-
-enum Deployment {
+/// One admitted tenant's running pipelines: a single [`Pipeline`] or a
+/// [`ReplicaRouter`] over identical copies.  Shared by the closed-batch
+/// [`PoolRouter`] and the open-loop `scheduler::pool::ServingPool`.
+pub(crate) enum Deployment {
     Single(Pipeline),
     Replicated(ReplicaRouter),
 }
 
 impl Deployment {
-    fn serve_batch(&self, requests: Vec<Request>) -> Result<Vec<Response>> {
+    pub(crate) fn serve_batch(&self, requests: Vec<Request>) -> Result<Vec<Response>> {
         match self {
             Deployment::Single(p) => p.serve_batch(requests),
             Deployment::Replicated(r) => r.serve_batch(requests),
         }
     }
 
-    fn wait_ready(&self) -> Result<()> {
+    pub(crate) fn wait_ready(&self) -> Result<()> {
         match self {
             Deployment::Single(p) => p.wait_ready(),
             Deployment::Replicated(r) => {
@@ -154,7 +165,7 @@ impl Deployment {
         }
     }
 
-    fn shutdown(self) {
+    pub(crate) fn shutdown(self) {
         match self {
             Deployment::Single(p) => p.shutdown(),
             Deployment::Replicated(r) => r.shutdown(),
@@ -162,22 +173,100 @@ impl Deployment {
     }
 }
 
+/// A freshly spawned deployment plus the shape/verification info the
+/// routing layers index by.
+pub(crate) struct BuiltTenant {
+    pub(crate) deployment: Deployment,
+    /// Input tensor element count (what requests must carry).
+    pub(crate) in_elems: usize,
+    /// Output tensor element count.
+    pub(crate) out_elems: usize,
+    /// Per-layer output sizes over the whole model, for
+    /// [`synthetic_reference`] checks (partition-invariant).
+    pub(crate) layer_out_elems: Vec<usize>,
+    /// Synthetic-backend key (stable across runs and re-plans).
+    pub(crate) salt: u64,
+}
+
+/// Spawn the pipelines for one plan assignment — the shared deployment
+/// path of [`PoolRouter::deploy`] and the open-loop serving pool's
+/// (re-)deployments.  `manifest` must be `Some` for the PJRT backend.
+pub(crate) fn build_deployment(
+    a: &Assignment,
+    registry: &ModelRegistry,
+    cfg: &SystemConfig,
+    backend: &BackendKind,
+    manifest: Option<&Manifest>,
+    queue_capacity: usize,
+) -> Result<BuiltTenant> {
+    let tenant = registry.get(&a.name)?;
+    let model = &tenant.model;
+    let partition = &a.candidate.partition;
+    let sims = stage_sims(model, partition, cfg);
+    let bounds = partition.bounds();
+    let salt = tenant_salt(&a.name);
+
+    let mut pipelines = Vec::with_capacity(a.replicas);
+    for _ in 0..a.replicas {
+        let factories: Vec<StageFactory> = match backend {
+            BackendKind::Synthetic => bounds
+                .iter()
+                .map(|&(s, e)| synthetic_stage_factory(salt, model, s, e))
+                .collect(),
+            BackendKind::Pjrt { artifact_dir } => {
+                let entry = manifest
+                    .ok_or_else(|| anyhow::anyhow!("pjrt backend needs a manifest"))?
+                    .model(&a.name)?;
+                entry
+                    .segments_for_cuts(&partition.cuts)?
+                    .iter()
+                    .map(|s| pjrt_stage_factory(artifact_dir.clone(), (*s).clone()))
+                    .collect()
+            }
+        };
+        pipelines.push(
+            Pipeline::spawn(factories, sims.clone(), &PipelineConfig { queue_capacity })
+                .with_context(|| format!("spawning pipeline for {}", a.name))?,
+        );
+    }
+    let deployment = if pipelines.len() == 1 {
+        Deployment::Single(pipelines.pop().unwrap())
+    } else {
+        Deployment::Replicated(ReplicaRouter::new(pipelines))
+    };
+    Ok(BuiltTenant {
+        deployment,
+        in_elems: model.layers.first().map(|l| l.input_elems() as usize).unwrap_or(0),
+        out_elems: model.layers.last().map(|l| l.output_elems() as usize).unwrap_or(0),
+        layer_out_elems: model.layers.iter().map(|l| l.output_elems() as usize).collect(),
+        salt,
+    })
+}
+
 /// One admitted tenant's live deployment.
 pub struct TenantHandle {
+    /// Registry/routing key.
     pub name: String,
+    /// Pipeline depth (TPUs per replica).
     pub tpu_count: usize,
+    /// Data-parallel pipeline copies (>= 1).
     pub replicas: usize,
+    /// Paper-style segment-size label, e.g. `"2+2+1"`.
     pub partition_label: String,
+    /// Name of the segmentation strategy the allocator chose.
     pub strategy_name: &'static str,
+    /// Allocator-predicted p99 latency (seconds, simulated clock).
     pub predicted_p99_s: f64,
     /// Input tensor element count (what requests must carry).
     pub in_elems: usize,
     /// Output tensor element count.
     pub out_elems: usize,
-    /// Per-stage output sizes, for [`synthetic_reference`] checks.
-    pub stage_out_elems: Vec<usize>,
+    /// Per-layer output sizes over the whole model, for
+    /// [`synthetic_reference`] checks (partition-invariant).
+    pub layer_out_elems: Vec<usize>,
     /// Synthetic-backend key (stable across runs; unused for PJRT).
     pub salt: u64,
+    /// This tenant's serving counters.
     pub metrics: Arc<TenantMetrics>,
     deployment: Deployment,
     /// Serializes `serve` calls per tenant: a deployment's response queue
@@ -200,13 +289,14 @@ impl TenantHandle {
 
     /// The serial reference output for one request (synthetic backend).
     pub fn reference(&self, input: &[i8]) -> Vec<i8> {
-        synthetic_reference(self.salt, &self.stage_out_elems, input)
+        synthetic_reference(self.salt, &self.layer_out_elems, input)
     }
 }
 
 /// The per-model request router over all admitted deployments.
 pub struct PoolRouter {
     tenants: BTreeMap<String, TenantHandle>,
+    /// Pool-level routing/admission counters.
     pub metrics: Arc<SchedulerMetrics>,
 }
 
@@ -230,64 +320,23 @@ impl PoolRouter {
 
         let mut tenants = BTreeMap::new();
         for a in &plan.assignments {
-            let tenant = registry.get(&a.name)?;
-            let model = &tenant.model;
-            let partition = &a.candidate.partition;
-            let sims = stage_sims(model, partition, cfg);
-            let elems = stage_elems(model, partition);
-            let salt = tenant_salt(&a.name);
-
-            let mut pipelines = Vec::with_capacity(a.replicas);
-            for _ in 0..a.replicas {
-                let factories: Vec<StageFactory> = match backend {
-                    BackendKind::Synthetic => elems
-                        .iter()
-                        .enumerate()
-                        .map(|(i, &(ine, oute))| {
-                            synthetic_stage_factory(stage_salt(salt, i), ine, oute)
-                        })
-                        .collect(),
-                    BackendKind::Pjrt { artifact_dir } => {
-                        let entry = manifest
-                            .as_ref()
-                            .expect("manifest loaded for pjrt")
-                            .model(&a.name)?;
-                        entry
-                            .segments_for_cuts(&partition.cuts)?
-                            .iter()
-                            .map(|s| pjrt_stage_factory(artifact_dir.clone(), (*s).clone()))
-                            .collect()
-                    }
-                };
-                pipelines.push(
-                    Pipeline::spawn(
-                        factories,
-                        sims.clone(),
-                        &PipelineConfig { queue_capacity },
-                    )
-                    .with_context(|| format!("spawning pipeline for {}", a.name))?,
-                );
-            }
-            let deployment = if pipelines.len() == 1 {
-                Deployment::Single(pipelines.pop().unwrap())
-            } else {
-                Deployment::Replicated(ReplicaRouter::new(pipelines))
-            };
+            let built =
+                build_deployment(a, registry, cfg, backend, manifest.as_ref(), queue_capacity)?;
             tenants.insert(
                 a.name.clone(),
                 TenantHandle {
                     name: a.name.clone(),
                     tpu_count: a.candidate.tpu_count,
                     replicas: a.replicas,
-                    partition_label: partition.label(),
+                    partition_label: a.candidate.partition.label(),
                     strategy_name: a.candidate.strategy.name(),
                     predicted_p99_s: a.effective_p99_s,
-                    in_elems: elems.first().map(|&(i, _)| i).unwrap_or(0),
-                    out_elems: elems.last().map(|&(_, o)| o).unwrap_or(0),
-                    stage_out_elems: elems.iter().map(|&(_, o)| o).collect(),
-                    salt,
+                    in_elems: built.in_elems,
+                    out_elems: built.out_elems,
+                    layer_out_elems: built.layer_out_elems,
+                    salt: built.salt,
                     metrics: Arc::new(TenantMetrics::default()),
-                    deployment,
+                    deployment: built.deployment,
                     serve_lock: std::sync::Mutex::new(()),
                     sim_epoch: std::sync::Mutex::new(0.0),
                 },
@@ -354,22 +403,27 @@ impl PoolRouter {
         }
     }
 
+    /// Look up one admitted tenant's handle by model name.
     pub fn tenant(&self, name: &str) -> Option<&TenantHandle> {
         self.tenants.get(name)
     }
 
+    /// Iterate over every admitted tenant's handle (name order).
     pub fn tenants(&self) -> impl Iterator<Item = &TenantHandle> {
         self.tenants.values()
     }
 
+    /// Admitted model names, sorted.
     pub fn names(&self) -> Vec<String> {
         self.tenants.keys().cloned().collect()
     }
 
+    /// Number of admitted (deployed) tenants.
     pub fn len(&self) -> usize {
         self.tenants.len()
     }
 
+    /// Whether the router has no deployments at all.
     pub fn is_empty(&self) -> bool {
         self.tenants.is_empty()
     }

@@ -1,8 +1,12 @@
 //! High-level serving assembly: manifest + segmentation strategy + cost
 //! model + PJRT stages -> a running [`Pipeline`] serving real numerics,
-//! with the simulated Edge TPU clock attached to every stage.
+//! with the simulated Edge TPU clock attached to every stage; plus the
+//! closed-batch multi-tenant driver ([`serve_pool`]) and the live
+//! open-loop driver ([`serve_open_loop`]) that paces seeded arrival
+//! processes against a `ServingPool`.
 //!
-//! Used by `examples/serve_pipeline.rs` and `repro serve`.
+//! Used by `examples/serve_pipeline.rs`, `examples/open_loop.rs`,
+//! `repro serve`, `repro serve-pool` and `repro loadgen`.
 
 use std::path::{Path, PathBuf};
 
@@ -17,9 +21,11 @@ use crate::model::Model;
 use crate::pipeline::single_tpu_latency_s;
 use crate::runtime::stage::pjrt_stage_factory;
 use crate::runtime::{Manifest, ModelEntry};
+use crate::scheduler::ServingPool;
 use crate::segment::strategy::Strategy;
 use crate::segment::Partition;
 use crate::util::rng::Rng;
+use crate::workload::{arrival_times, Arrivals, TenantLoad};
 
 pub use crate::coordinator::ReplicaRouter;
 
@@ -262,6 +268,174 @@ pub fn serve_pool(
     Ok(reports)
 }
 
+/// Per-tenant result of one live open-loop serving run.
+#[derive(Debug, Clone)]
+pub struct OpenLoopReport {
+    /// Model/routing name.
+    pub name: String,
+    /// The arrival process driven against this tenant (label form).
+    pub arrivals: String,
+    /// Requests accepted by the tenant's ingress queue.
+    pub submitted: usize,
+    /// Responses received back.  Equals `submitted` unless the tenant was
+    /// deregistered mid-run (then it equals the accepted count — accepted
+    /// requests are never lost).
+    pub completed: usize,
+    /// Whether every response was checked against the serial reference.
+    pub verified: bool,
+    /// Real wall-clock of this tenant's whole run.
+    pub wall_s: f64,
+}
+
+/// Drive a **live** open-loop run against a [`ServingPool`]: one
+/// submitter+collector pair per tenant, pacing submissions on the same
+/// seeded arrival schedule the deterministic simulation uses
+/// (`workload::arrival_times`), while responses stream back through the
+/// tenant's completion queue.
+///
+/// With `verify` set (synthetic backend), every response is checked
+/// bit-for-bit against the tenant's serial reference — and because the
+/// synthetic transforms are per-layer, the check stays valid even if a
+/// concurrent `register`/`deregister` re-plans the tenant's partition
+/// mid-run.  A tenant deregistered mid-run stops early and cleanly: its
+/// accepted requests all complete before its stream closes.
+pub fn serve_open_loop(
+    pool: &ServingPool,
+    loads: &[TenantLoad],
+    seed: u64,
+    verify: bool,
+) -> Result<Vec<OpenLoopReport>> {
+    let mut reports = Vec::with_capacity(loads.len());
+    std::thread::scope(|scope| -> Result<()> {
+        let mut handles = Vec::new();
+        for load in loads {
+            handles.push(scope.spawn(move || serve_one_open_loop(pool, load, seed, verify)));
+        }
+        for h in handles {
+            reports.push(h.join().expect("open-loop tenant thread panicked")?);
+        }
+        Ok(())
+    })?;
+    reports.sort_by(|a, b| a.name.cmp(&b.name));
+    Ok(reports)
+}
+
+fn serve_one_open_loop(
+    pool: &ServingPool,
+    load: &TenantLoad,
+    seed: u64,
+    verify: bool,
+) -> Result<OpenLoopReport> {
+    let client = pool.client(&load.model)?;
+    let n = load.requests;
+    let tenant_seed = seed ^ crate::scheduler::tenant_salt(&load.model);
+    let requests = client.synth_requests(n, tenant_seed);
+    let expected: Option<Vec<Vec<i8>>> = if verify {
+        Some(requests.iter().map(|r| client.reference(&r.data)).collect())
+    } else {
+        None
+    };
+    let check = |r: &crate::coordinator::Response| -> Result<()> {
+        if let Some(exp) = &expected {
+            let want = exp
+                .get(r.id as usize)
+                .ok_or_else(|| anyhow::anyhow!("{}: unknown response id {}", load.model, r.id))?;
+            anyhow::ensure!(
+                &r.data == want,
+                "{}: response {} mismatches the serial reference",
+                load.model,
+                r.id
+            );
+        }
+        Ok(())
+    };
+
+    let t0 = std::time::Instant::now();
+    let mut submitted = 0usize;
+    let mut completed = 0usize;
+    match load.arrivals {
+        Arrivals::Closed { concurrency, think_s } => {
+            // one virtual-client loop: keep `concurrency` outstanding
+            let mut it = requests.into_iter();
+            for _ in 0..concurrency.min(n.max(1)) {
+                let Some(r) = it.next() else { break };
+                if pool.submit(&load.model, r).is_err() {
+                    break;
+                }
+                submitted += 1;
+            }
+            while completed < submitted {
+                match client.done.recv() {
+                    Some(r) => {
+                        check(&r)?;
+                        completed += 1;
+                        if think_s > 0.0 {
+                            std::thread::sleep(std::time::Duration::from_secs_f64(think_s));
+                        }
+                        if let Some(next) = it.next() {
+                            if pool.submit(&load.model, next).is_ok() {
+                                submitted += 1;
+                            }
+                        }
+                    }
+                    None => break, // tenant deregistered mid-run
+                }
+            }
+        }
+        _ => {
+            let offsets =
+                arrival_times(&load.arrivals, n, crate::workload::arrival_seed(seed, &load.model));
+            std::thread::scope(|scope| -> Result<()> {
+                let model = &load.model;
+                let submitter = scope.spawn(move || {
+                    let start = std::time::Instant::now();
+                    let mut accepted = 0usize;
+                    for (r, &at) in requests.into_iter().zip(&offsets) {
+                        let target = std::time::Duration::from_secs_f64(at);
+                        let elapsed = start.elapsed();
+                        if target > elapsed {
+                            std::thread::sleep(target - elapsed);
+                        }
+                        if pool.submit(model, r).is_err() {
+                            break; // tenant deregistered mid-run
+                        }
+                        accepted += 1;
+                    }
+                    accepted
+                });
+                while completed < n {
+                    match client.done.recv() {
+                        Some(r) => {
+                            check(&r)?;
+                            completed += 1;
+                        }
+                        // deregistered: every accepted request's response
+                        // was delivered before the stream closed
+                        None => break,
+                    }
+                }
+                submitted = submitter.join().expect("submitter panicked");
+                Ok(())
+            })?;
+        }
+    }
+    anyhow::ensure!(
+        completed == submitted,
+        "{}: {} accepted requests but only {} responses — in-flight loss",
+        load.model,
+        submitted,
+        completed
+    );
+    Ok(OpenLoopReport {
+        name: load.model.clone(),
+        arrivals: load.arrivals.label(),
+        submitted,
+        completed,
+        verified: verify,
+        wall_s: t0.elapsed().as_secs_f64(),
+    })
+}
+
 /// Load the manifest from an artifact dir (helper for binaries).
 pub fn load_manifest(artifact_dir: &Path) -> Result<Manifest> {
     Manifest::load(&artifact_dir.join("manifest.json"))
@@ -371,6 +545,49 @@ mod tests {
             assert_eq!(t.metrics.snapshot().completed, 10);
         }
         router.shutdown();
+    }
+
+    #[test]
+    fn open_loop_driver_serves_and_verifies_every_process() {
+        use crate::scheduler::{AllocatorConfig, BackendKind, ModelRegistry, OpenOptions};
+        use crate::workload::{Arrivals, TenantLoad};
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        reg.register_named("conv_a").unwrap();
+        let pool = ServingPool::deploy(
+            reg,
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: 2, ..Default::default() },
+            BackendKind::Synthetic,
+            OpenOptions::default(),
+        )
+        .unwrap();
+        let loads = vec![
+            TenantLoad {
+                model: "fc_small".into(),
+                arrivals: Arrivals::Poisson { rate_hz: 2000.0 },
+                requests: 30,
+            },
+            TenantLoad {
+                model: "conv_a".into(),
+                arrivals: Arrivals::Closed { concurrency: 3, think_s: 0.0 },
+                requests: 30,
+            },
+        ];
+        let reports = serve_open_loop(&pool, &loads, 7, true).unwrap();
+        assert_eq!(reports.len(), 2);
+        for r in &reports {
+            assert_eq!(r.submitted, 30, "{}", r.name);
+            assert_eq!(r.completed, 30, "{}", r.name);
+            assert!(r.verified);
+        }
+        for name in ["fc_small", "conv_a"] {
+            let s = pool.tenant_metrics(name).unwrap().snapshot();
+            assert_eq!(s.completed, 30, "{name}");
+            assert_eq!(s.errors, 0, "{name}");
+            assert!(s.batches >= 1, "{name}");
+        }
+        pool.shutdown();
     }
 
     #[test]

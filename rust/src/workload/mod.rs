@@ -1,0 +1,486 @@
+//! Seeded workload generation for open-loop serving: per-tenant arrival
+//! processes (Poisson, bursty on/off, closed-loop) and a deterministic
+//! queueing simulation of the batcher + pipeline.
+//!
+//! The paper measures a closed 50-input batch; the ROADMAP north star is
+//! heavy *open* traffic, where queueing — not raw segment latency —
+//! dominates (cf. arXiv 2602.17808).  This module supplies both halves of
+//! that story:
+//!
+//! * [`arrival_times`] draws a seeded, deterministic arrival schedule for
+//!   the open processes — the same `(process, n, seed)` always yields the
+//!   same schedule, on every platform (the PRNG is the in-repo
+//!   xoshiro256++);
+//! * [`simulate_open_loop`] pushes that schedule through a deterministic
+//!   model of the dynamic batcher ([`BatchPolicy`] size/wait flush) and
+//!   the pipelined stages (the same recurrence as `pipeline::simulate`:
+//!   stage-busy, GIL-serialized host overhead, hop latency), yielding
+//!   per-request latencies, batch boundaries and flush reasons that are
+//!   **bit-for-bit reproducible** — this is what `repro loadgen` prints,
+//!   while the live `ServingPool` run (real threads, real queues)
+//!   verifies numerics against the same seeds.
+//!
+//! Closed-loop arrivals are endogenous (each virtual client submits its
+//! next request one think-time after its previous response), so they are
+//! generated inside the simulation rather than by [`arrival_times`].
+
+use std::collections::VecDeque;
+
+use anyhow::{Context, Result};
+
+use crate::coordinator::batcher::BatchPolicy;
+use crate::coordinator::StageSim;
+use crate::metrics::FlushKind;
+use crate::util::rng::Rng;
+
+/// A per-tenant arrival process.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Arrivals {
+    /// Memoryless open arrivals at `rate_hz` requests/second.
+    Poisson {
+        /// Mean offered rate (requests per simulated second).
+        rate_hz: f64,
+    },
+    /// On/off open arrivals: Poisson at `rate_hz` during `on_s`-second
+    /// bursts separated by `off_s`-second silences.
+    Bursty {
+        /// Mean offered rate *during a burst*.
+        rate_hz: f64,
+        /// Burst (on-window) length in seconds.
+        on_s: f64,
+        /// Silence (off-window) length in seconds.
+        off_s: f64,
+    },
+    /// Closed loop: `concurrency` virtual clients, each submitting its
+    /// next request `think_s` seconds after its previous response.
+    Closed {
+        /// Number of always-outstanding virtual clients.
+        concurrency: usize,
+        /// Per-client think time between response and next request.
+        think_s: f64,
+    },
+}
+
+impl Arrivals {
+    /// Parse a CLI spec: `poisson:RATE`, `bursty:RATE:ON_S:OFF_S` or
+    /// `closed:CONCURRENCY:THINK_S`.
+    pub fn parse(spec: &str) -> Result<Arrivals> {
+        let parts: Vec<&str> = spec.split(':').collect();
+        let f = |s: &str| -> Result<f64> {
+            s.parse::<f64>().with_context(|| format!("bad number {s:?} in arrival spec {spec:?}"))
+        };
+        match parts.as_slice() {
+            ["poisson", rate] => {
+                let rate_hz = f(rate)?;
+                anyhow::ensure!(rate_hz > 0.0, "poisson rate must be positive in {spec:?}");
+                Ok(Arrivals::Poisson { rate_hz })
+            }
+            ["bursty", rate, on, off] => {
+                let (rate_hz, on_s, off_s) = (f(rate)?, f(on)?, f(off)?);
+                anyhow::ensure!(
+                    rate_hz > 0.0 && on_s > 0.0 && off_s >= 0.0,
+                    "bursty needs rate>0, on>0, off>=0 in {spec:?}"
+                );
+                Ok(Arrivals::Bursty { rate_hz, on_s, off_s })
+            }
+            ["closed", conc, think] => {
+                let concurrency: usize = conc
+                    .parse()
+                    .with_context(|| format!("bad concurrency {conc:?} in {spec:?}"))?;
+                let think_s = f(think)?;
+                anyhow::ensure!(
+                    concurrency >= 1 && think_s >= 0.0,
+                    "closed needs concurrency>=1, think>=0 in {spec:?}"
+                );
+                Ok(Arrivals::Closed { concurrency, think_s })
+            }
+            _ => anyhow::bail!(
+                "unknown arrival spec {spec:?} \
+                 (poisson:RATE | bursty:RATE:ON_S:OFF_S | closed:CONCURRENCY:THINK_S)"
+            ),
+        }
+    }
+
+    /// Compact stable label for tables, e.g. `poisson:400`.
+    pub fn label(&self) -> String {
+        match *self {
+            Arrivals::Poisson { rate_hz } => format!("poisson:{rate_hz}"),
+            Arrivals::Bursty { rate_hz, on_s, off_s } => {
+                format!("bursty:{rate_hz}:{on_s}:{off_s}")
+            }
+            Arrivals::Closed { concurrency, think_s } => {
+                format!("closed:{concurrency}:{think_s}")
+            }
+        }
+    }
+
+    /// Long-run offered rate in requests/second; `None` for closed loops
+    /// (their rate is an outcome, not an input).
+    pub fn offered_rate_hz(&self) -> Option<f64> {
+        match *self {
+            Arrivals::Poisson { rate_hz } => Some(rate_hz),
+            Arrivals::Bursty { rate_hz, on_s, off_s } => {
+                Some(rate_hz * on_s / (on_s + off_s))
+            }
+            Arrivals::Closed { .. } => None,
+        }
+    }
+}
+
+/// Salt separating the arrival-schedule PRNG stream from the
+/// request-payload stream (both derive from the same user-facing seed).
+pub const ARRIVAL_STREAM_SALT: u64 = 0xA5A5_5A5A_0F0F_F0F0;
+
+/// The arrival-schedule seed for one tenant under a run seed: the same
+/// `(run_seed, model)` pair that the live driver paces with is what the
+/// deterministic simulation replays.
+pub fn arrival_seed(run_seed: u64, model: &str) -> u64 {
+    run_seed ^ crate::scheduler::tenant_salt(model) ^ ARRIVAL_STREAM_SALT
+}
+
+/// One tenant's offered load in a `repro loadgen` run.
+#[derive(Debug, Clone)]
+pub struct TenantLoad {
+    /// Model/routing name (must be registered in the pool).
+    pub model: String,
+    /// The tenant's arrival process.
+    pub arrivals: Arrivals,
+    /// Total requests to submit.
+    pub requests: usize,
+}
+
+/// Seeded arrival schedule for an **open** process: `n` strictly ordered
+/// arrival offsets in seconds from the run start.  Deterministic in
+/// `(arrivals, n, seed)`.
+///
+/// # Panics
+/// On [`Arrivals::Closed`]: closed-loop arrivals depend on completions and
+/// are generated inside [`simulate_open_loop`] / the live driver.
+pub fn arrival_times(arrivals: &Arrivals, n: usize, seed: u64) -> Vec<f64> {
+    let mut rng = Rng::new(seed);
+    match *arrivals {
+        Arrivals::Poisson { rate_hz } => {
+            let mut t = 0.0f64;
+            (0..n)
+                .map(|_| {
+                    t += rng.exp(1.0 / rate_hz);
+                    t
+                })
+                .collect()
+        }
+        Arrivals::Bursty { rate_hz, on_s, off_s } => {
+            // draw in "active time", then expand every completed
+            // on-window by the off-window it is followed by
+            let mut tau = 0.0f64;
+            (0..n)
+                .map(|_| {
+                    tau += rng.exp(1.0 / rate_hz);
+                    let completed_windows = (tau / on_s).floor();
+                    tau + completed_windows * off_s
+                })
+                .collect()
+        }
+        Arrivals::Closed { .. } => {
+            panic!("closed-loop arrivals are endogenous; use simulate_open_loop")
+        }
+    }
+}
+
+/// One flushed batch in the deterministic open-loop simulation.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SimBatch {
+    /// Simulated instant the batch was injected into the pipeline.
+    pub flush_s: f64,
+    /// Requests in the batch.
+    pub len: usize,
+    /// Why it flushed (mirrors the live batcher's reasons; the final
+    /// batch of an exhausted arrival stream reports `Closed`).
+    pub kind: FlushKind,
+}
+
+/// Result of one deterministic open-loop run for a single tenant.
+#[derive(Debug, Clone)]
+pub struct OpenLoopRun {
+    /// Per-request latency (arrival to pipeline exit), indexed by id.
+    pub latencies_s: Vec<f64>,
+    /// Every flushed batch, in flush order.
+    pub batches: Vec<SimBatch>,
+    /// Completion time of the last request.
+    pub makespan_s: f64,
+}
+
+impl OpenLoopRun {
+    /// Achieved throughput over the whole run (requests/second).
+    pub fn throughput_hz(&self) -> f64 {
+        if self.makespan_s <= 0.0 {
+            return f64::NAN;
+        }
+        self.latencies_s.len() as f64 / self.makespan_s
+    }
+
+    /// Count of batches flushed for the given reason.
+    pub fn flushes(&self, kind: FlushKind) -> usize {
+        self.batches.iter().filter(|b| b.kind == kind).count()
+    }
+}
+
+/// Deterministic queueing simulation of one tenant's open-loop serving:
+/// seeded arrivals -> dynamic batcher (`policy`) -> pipelined stages
+/// (`sims`, the same recurrence as the live simulated clock: stage-busy,
+/// GIL-serialized host overhead, hop latency).  The batcher is busy while
+/// a batch is in flight (the live worker serves synchronously), so the
+/// next batch opens no earlier than the previous batch's last response.
+///
+/// Pure function of its arguments — calling it twice yields bit-identical
+/// results, which is what makes `repro loadgen` reports reproducible.
+pub fn simulate_open_loop(
+    arrivals: &Arrivals,
+    n: usize,
+    seed: u64,
+    policy: &BatchPolicy,
+    sims: &[StageSim],
+) -> OpenLoopRun {
+    assert!(policy.max_batch >= 1);
+    assert!(!sims.is_empty());
+    let max_wait = policy.max_wait.as_secs_f64();
+
+    // pending arrivals (time, id), sorted by time then id; a deque so the
+    // front-to-back consumption below stays O(1) per request
+    let mut pending: VecDeque<(f64, usize)> = VecDeque::new();
+    let mut next_id = 0usize;
+    let mut think = 0.0f64;
+    let closed = matches!(arrivals, Arrivals::Closed { .. });
+    if let Arrivals::Closed { concurrency, think_s } = *arrivals {
+        think = think_s;
+        let c = concurrency.min(n.max(1));
+        for _ in 0..c {
+            pending.push_back((0.0, next_id));
+            next_id += 1;
+        }
+    } else {
+        for t in arrival_times(arrivals, n, seed) {
+            pending.push_back((t, next_id));
+            next_id += 1;
+        }
+    }
+
+    let mut latencies = vec![0.0f64; n];
+    let mut batches: Vec<SimBatch> = Vec::new();
+    let mut stage_free = vec![0.0f64; sims.len()];
+    let mut host_free = 0.0f64;
+    let mut batcher_free = 0.0f64;
+    let mut served = 0usize;
+    let mut makespan = 0.0f64;
+
+    while served < n {
+        debug_assert!(!pending.is_empty(), "unserved requests but no pending arrivals");
+        // the batcher pulls the first request once it is free and the
+        // request has arrived; the wait deadline starts there
+        let (t0, id0) = pending.pop_front().expect("pending checked non-empty");
+        let open_t = t0.max(batcher_free);
+        let deadline = open_t + max_wait;
+        let mut batch = vec![(t0, id0)];
+        let kind = loop {
+            if batch.len() >= policy.max_batch {
+                break FlushKind::Size;
+            }
+            match pending.front().copied() {
+                Some((t, id)) if t <= deadline => {
+                    pending.pop_front();
+                    batch.push((t, id));
+                }
+                Some(_) => break FlushKind::Deadline,
+                None if closed && next_id < n => {
+                    // future closed-loop submissions depend on responses
+                    // to THIS batch; the live batcher waits out max_wait
+                    break FlushKind::Deadline;
+                }
+                None => break FlushKind::Closed, // arrival stream exhausted
+            }
+        };
+        let flush_s = match kind {
+            // flush fired when the size/close condition was met
+            FlushKind::Size | FlushKind::Closed => {
+                batch.iter().fold(open_t, |acc, &(t, _)| acc.max(t))
+            }
+            FlushKind::Deadline => deadline,
+        };
+        batches.push(SimBatch { flush_s, len: batch.len(), kind });
+
+        // pipeline recurrence, items in FIFO order
+        let mut last_done = flush_s;
+        for &(arrival, id) in &batch {
+            let mut t_in = flush_s;
+            for (si, sim) in sims.iter().enumerate() {
+                let ready = t_in.max(stage_free[si]);
+                let dispatch = ready.max(host_free);
+                host_free = dispatch + sim.overhead_s;
+                let finish = dispatch + sim.overhead_s + sim.exec_s;
+                stage_free[si] = finish;
+                t_in = finish + sim.hop_out_s;
+            }
+            let done = t_in;
+            latencies[id] = done - arrival;
+            if done > makespan {
+                makespan = done;
+            }
+            if done > last_done {
+                last_done = done;
+            }
+            served += 1;
+            if closed && next_id < n {
+                // this virtual client thinks, then submits again
+                let t_next = done + think;
+                let pos = pending.partition_point(|&(t, _)| t <= t_next);
+                pending.insert(pos, (t_next, next_id));
+                next_id += 1;
+            }
+        }
+        // the live worker serves synchronously: the next batch cannot
+        // open before this one's last response is back
+        batcher_free = last_done;
+    }
+
+    OpenLoopRun { latencies_s: latencies, batches, makespan_s: makespan }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn sims(n: usize, exec: f64) -> Vec<StageSim> {
+        (0..n)
+            .map(|i| StageSim {
+                exec_s: exec,
+                hop_out_s: if i + 1 == n { 0.0 } else { 1e-4 },
+                overhead_s: 2e-4,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn parse_round_trips_and_rejects_garbage() {
+        assert_eq!(
+            Arrivals::parse("poisson:400").unwrap(),
+            Arrivals::Poisson { rate_hz: 400.0 }
+        );
+        assert_eq!(
+            Arrivals::parse("bursty:800:0.05:0.1").unwrap(),
+            Arrivals::Bursty { rate_hz: 800.0, on_s: 0.05, off_s: 0.1 }
+        );
+        assert_eq!(
+            Arrivals::parse("closed:4:0.001").unwrap(),
+            Arrivals::Closed { concurrency: 4, think_s: 0.001 }
+        );
+        for bad in ["", "poisson", "poisson:0", "poisson:x", "uniform:3", "closed:0:1"] {
+            assert!(Arrivals::parse(bad).is_err(), "{bad:?} must not parse");
+        }
+        // labels re-parse to the same process
+        for spec in ["poisson:400", "bursty:800:0.05:0.1", "closed:4:0.001"] {
+            let a = Arrivals::parse(spec).unwrap();
+            assert_eq!(Arrivals::parse(&a.label()).unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn poisson_schedule_is_seeded_ordered_and_rate_plausible() {
+        let a = Arrivals::Poisson { rate_hz: 1000.0 };
+        let xs = arrival_times(&a, 2000, 7);
+        let ys = arrival_times(&a, 2000, 7);
+        assert_eq!(xs, ys, "same seed must give the identical schedule");
+        assert_ne!(xs, arrival_times(&a, 2000, 8), "seed must matter");
+        for w in xs.windows(2) {
+            assert!(w[1] > w[0], "arrivals must be strictly increasing");
+        }
+        let span = xs.last().unwrap();
+        assert!((span - 2.0).abs() < 0.3, "2000 arrivals at 1kHz ~ 2s, got {span}");
+    }
+
+    #[test]
+    fn bursty_arrivals_land_only_in_on_windows() {
+        let (on_s, off_s) = (0.05, 0.2);
+        let a = Arrivals::Bursty { rate_hz: 500.0, on_s, off_s };
+        let xs = arrival_times(&a, 500, 3);
+        let cycle = on_s + off_s;
+        for &t in &xs {
+            let phase = t % cycle;
+            assert!(phase <= on_s + 1e-9, "arrival at {t} (phase {phase}) is in an off-window");
+        }
+        assert_eq!(a.offered_rate_hz(), Some(500.0 * 0.05 / 0.25));
+    }
+
+    #[test]
+    fn open_loop_sim_is_bit_deterministic() {
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) };
+        let s = sims(3, 1e-3);
+        for a in [
+            Arrivals::Poisson { rate_hz: 700.0 },
+            Arrivals::Bursty { rate_hz: 900.0, on_s: 0.03, off_s: 0.05 },
+            Arrivals::Closed { concurrency: 4, think_s: 1e-3 },
+        ] {
+            let x = simulate_open_loop(&a, 300, 7, &policy, &s);
+            let y = simulate_open_loop(&a, 300, 7, &policy, &s);
+            assert_eq!(x.latencies_s, y.latencies_s, "{a:?}");
+            assert_eq!(x.batches, y.batches, "{a:?}: batch boundaries must be deterministic");
+            assert_eq!(x.makespan_s, y.makespan_s, "{a:?}");
+            // every request served exactly once
+            assert_eq!(x.batches.iter().map(|b| b.len).sum::<usize>(), 300, "{a:?}");
+            assert!(x.latencies_s.iter().all(|&l| l > 0.0), "{a:?}");
+        }
+    }
+
+    #[test]
+    fn overload_flushes_by_size_sparse_flushes_by_deadline() {
+        let policy = BatchPolicy { max_batch: 10, max_wait: Duration::from_millis(1) };
+        let s = sims(2, 1e-3);
+        // offered rate far above service rate: queues build, batches fill
+        let hot = simulate_open_loop(&Arrivals::Poisson { rate_hz: 5000.0 }, 400, 1, &policy, &s);
+        assert!(
+            hot.flushes(FlushKind::Size) > hot.flushes(FlushKind::Deadline),
+            "overload should mostly fill batches: {:?}",
+            hot.batches.len()
+        );
+        // sparse arrivals: the wait deadline fires with tiny batches
+        let cold = simulate_open_loop(&Arrivals::Poisson { rate_hz: 20.0 }, 50, 1, &policy, &s);
+        assert!(
+            cold.flushes(FlushKind::Deadline) + cold.flushes(FlushKind::Closed)
+                > cold.flushes(FlushKind::Size),
+            "sparse arrivals should flush by deadline"
+        );
+        // queueing delay must show up in the hot run's latencies
+        let hot_mean = hot.latencies_s.iter().sum::<f64>() / hot.latencies_s.len() as f64;
+        let cold_mean = cold.latencies_s.iter().sum::<f64>() / cold.latencies_s.len() as f64;
+        assert!(hot_mean > cold_mean, "hot {hot_mean} vs cold {cold_mean}");
+    }
+
+    #[test]
+    fn zero_max_wait_never_waits() {
+        let policy = BatchPolicy { max_batch: 64, max_wait: Duration::ZERO };
+        let s = sims(2, 5e-4);
+        let run = simulate_open_loop(&Arrivals::Poisson { rate_hz: 300.0 }, 100, 9, &policy, &s);
+        assert_eq!(run.batches.iter().map(|b| b.len).sum::<usize>(), 100);
+        // with max_wait = 0 a batch only contains requests that had
+        // already arrived when it opened: flush never exceeds open+0
+        for b in &run.batches {
+            assert!(b.len >= 1);
+        }
+    }
+
+    #[test]
+    fn closed_loop_respects_concurrency() {
+        let policy = BatchPolicy { max_batch: 4, max_wait: Duration::from_millis(1) };
+        let s = sims(2, 1e-3);
+        let run = simulate_open_loop(
+            &Arrivals::Closed { concurrency: 2, think_s: 0.0 },
+            20,
+            0,
+            &policy,
+            &s,
+        );
+        assert_eq!(run.latencies_s.len(), 20);
+        assert_eq!(run.batches.iter().map(|b| b.len).sum::<usize>(), 20);
+        // at most `concurrency` requests can ever share a batch
+        assert!(run.batches.iter().all(|b| b.len <= 2), "{:?}", run.batches);
+    }
+}
