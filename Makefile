@@ -1,0 +1,36 @@
+# Build glue for the repro harness (DESIGN.md §5, ROADMAP "vendor/xla").
+#
+# `make artifacts` runs the AOT driver: every contiguous segment of every
+# manifest model is lowered to an HLO-text artifact + manifest.json under
+# $(ARTIFACTS), which is what `repro serve`/`serve-pool` with the PJRT
+# backend (and the real xla crate swapped in for the vendor/xla stub)
+# consume.  Needs a Python with jax/numpy; the Rust side builds offline.
+
+PYTHON    ?= python3
+ARTIFACTS ?= artifacts
+CARGO     ?= cargo
+
+.PHONY: all build test check artifacts python-test clean
+
+all: build
+
+build:
+	$(CARGO) build --release
+
+test:
+	$(CARGO) test -q
+
+check:
+	$(CARGO) fmt --check
+	$(CARGO) clippy --all-targets -- -D warnings
+
+# AOT-compile every manifest model's segments (python/compile/aot.py).
+artifacts:
+	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
+
+python-test:
+	cd python && $(PYTHON) -m pytest tests -q
+
+clean:
+	rm -rf $(ARTIFACTS)
+	$(CARGO) clean

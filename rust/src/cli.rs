@@ -408,9 +408,10 @@ pub fn run(args: &Args) -> Result<String> {
 
 /// Parse the shared pool flags — `--models`, `--weights`, `--slo-ms`,
 /// `--tpus`, `--batch`, `--max-tpus-per-model`, `--allow-spill`,
-/// `--no-replicas` — into a registry + allocator config.  Shared by
-/// `repro schedule` and `repro serve-pool` so planning and deployment
-/// always see the same tenancy spec.
+/// `--no-replicas`, `--allow-sharing`, `--switch-cost-us`,
+/// `--max-residents` — into a registry + allocator config.  Shared by
+/// `repro schedule`, `repro serve-pool` and `repro loadgen` so planning
+/// and deployment always see the same tenancy spec.
 pub fn pool_spec(
     args: &Args,
     default_models: &str,
@@ -468,12 +469,24 @@ pub fn pool_spec(
         registry.register(tenant)?;
     }
 
+    let switch_cost_us = match args.flags.get("switch-cost-us") {
+        None => None,
+        Some(v) => {
+            let us: f64 =
+                v.parse().with_context(|| format!("bad --switch-cost-us {v:?}"))?;
+            anyhow::ensure!(us >= 0.0, "--switch-cost-us must be non-negative");
+            Some(us)
+        }
+    };
     let alloc = AllocatorConfig {
         total_tpus: args.usize_flag("tpus", 4)?,
         batch: args.batch()?,
         max_tpus_per_model: args.usize_flag("max-tpus-per-model", 4)?,
         allow_host_spill: args.bool_flag("allow-spill"),
         replicate_leftover: !args.bool_flag("no-replicas"),
+        allow_sharing: args.bool_flag("allow-sharing"),
+        switch_cost_us,
+        max_residents: args.usize_flag("max-residents", 2)?,
     };
     Ok((registry, alloc))
 }
@@ -483,7 +496,12 @@ pub fn pool_spec(
 /// Pure cost-model simulation (no artifacts needed): registers the named
 /// models, runs the pool allocator, and prints per-model
 /// `(tpu_count, strategy, predicted p99)` plus queued/rejected tenants.
+/// With `--allow-sharing`, plans computed under time-multiplexed
+/// co-residency add the grant + swap-overhead columns; tenants with an
+/// SLO additionally get their derived batch policy printed (the flush
+/// deadline shrinks under tight SLOs).
 pub fn schedule(args: &Args) -> Result<String> {
+    use crate::coordinator::batcher::BatchPolicy;
     use crate::scheduler::{allocate, plan_table};
 
     let cfg = args.config()?;
@@ -493,14 +511,46 @@ pub fn schedule(args: &Args) -> Result<String> {
     if !args.csv() {
         out.push_str(&format!(
             "pool: {}/{} TPUs used | weighted p99 objective {} ms | \
-             admitted {} queued {} rejected {}\n",
+             admitted {} queued {} rejected {}{}\n",
             plan.tpus_used(),
             plan.total_tpus,
             ms(plan.objective_s),
             plan.assignments.len(),
             plan.queued.len(),
             plan.rejected.len(),
+            if plan.sharing_enabled {
+                format!(" shared {}", plan.shared_count())
+            } else {
+                String::new()
+            },
         ));
+        // per-tenant batch policies derived from SLOs (only rendered when
+        // an admitted tenant declared an SLO, so SLO-free invocations are
+        // unchanged; queued/rejected tenants have no deployment to batch)
+        let with_slo: Vec<_> = registry
+            .iter()
+            .filter(|t| t.slo_p99_s.is_some() && plan.assignment(&t.name).is_some())
+            .collect();
+        if !with_slo.is_empty() {
+            let base = BatchPolicy {
+                max_batch: args.usize_flag("max-batch", 8)?,
+                max_wait: std::time::Duration::from_secs_f64(
+                    args.f64_flag("max-wait-ms", 2.0)? / 1e3,
+                ),
+            };
+            for t in with_slo {
+                let p = base.for_slo(t.slo_p99_s);
+                out.push_str(&format!(
+                    "batch policy {}: max_batch {} max_wait {} \
+                     (slo {}, pool max_wait {})\n",
+                    t.name,
+                    p.max_batch,
+                    ms(p.max_wait.as_secs_f64()),
+                    ms(t.slo_p99_s.unwrap_or(f64::NAN)),
+                    ms(base.max_wait.as_secs_f64()),
+                ));
+            }
+        }
     }
     Ok(out)
 }
@@ -517,12 +567,16 @@ pub struct LoadgenSpec {
 }
 
 /// Parse the `repro loadgen` flags: the shared pool flags (`--models`,
-/// `--tpus`, `--weights`, `--slo-ms`, ...) plus `--seed`, `--requests`
-/// (per tenant), `--arrivals` (one spec, or one per model, comma-joined)
-/// and the batch policy (`--max-batch`, `--max-wait-ms`).
+/// `--tpus`, `--weights`, `--slo-ms`, `--allow-sharing`, ...) plus
+/// `--seed`, `--requests` (per tenant), `--arrivals` (one spec, or one
+/// per model, comma-joined) and the base batch policy (`--max-batch`,
+/// `--max-wait-ms`); tenants with an SLO get a derived per-tenant policy
+/// (`BatchPolicy::for_slo`), applied identically by the deterministic
+/// simulation and the live pool.
 ///
-/// Loadgen always plans **without** leftover-TPU replica grants so the
-/// live pipelines match the deterministic simulation one-for-one.
+/// Replica grants are planned normally: the deterministic simulation
+/// models the round-robin fan-out, so data-parallel deployments are
+/// covered too (`--no-replicas` restores the old single-pipeline plans).
 pub fn loadgen_spec(
     args: &Args,
 ) -> Result<(crate::scheduler::ModelRegistry, crate::scheduler::AllocatorConfig, LoadgenSpec)> {
@@ -530,8 +584,7 @@ pub fn loadgen_spec(
     use crate::workload::{Arrivals, TenantLoad};
 
     const DEFAULT_MODELS: &str = "fc_small,conv_a";
-    let (registry, mut alloc) = pool_spec(args, DEFAULT_MODELS)?;
-    alloc.replicate_leftover = false;
+    let (registry, alloc) = pool_spec(args, DEFAULT_MODELS)?;
 
     let models = args.str_flag("models", DEFAULT_MODELS);
     let names: Vec<&str> =
@@ -577,8 +630,9 @@ pub fn loadgen_spec(
 
 /// Build the deterministic `repro loadgen` table: per tenant, push the
 /// seeded arrival schedule through the open-loop queueing simulation
-/// (batcher flush rules + pipeline recurrence on the planned partition)
-/// and report offered rate, batch/flush counters, latency percentiles and
+/// (batcher flush rules + pipeline recurrence on the planned deployment,
+/// including replica fan-out and shared-grant swap costs) and report
+/// offered rate, batch/flush/swap counters, latency percentiles and
 /// throughput.  Pure function of `(registry, cfg, alloc, spec)` — two
 /// calls render bit-identical tables, which is the reproducibility
 /// contract of `repro loadgen`.
@@ -590,9 +644,8 @@ pub fn loadgen_table(
 ) -> Result<(Table, crate::scheduler::PoolPlan)> {
     use crate::metrics::FlushKind;
     use crate::scheduler::allocate;
-    use crate::serving::stage_sims;
     use crate::util::stats::Summary;
-    use crate::workload::{arrival_seed, simulate_open_loop};
+    use crate::workload::{arrival_seed, simulate_deployment};
 
     let plan = allocate(registry, cfg, alloc)?;
     let mut t = Table::new(
@@ -603,9 +656,10 @@ pub fn loadgen_table(
             spec.policy.max_wait.as_secs_f64() * 1e3,
         ),
         &[
-            "model", "arrivals", "offered_hz", "requests", "tpus", "split", "batches",
-            "flush_size", "flush_deadline", "flush_closed", "p50_ms", "p99_ms", "mean_ms",
-            "throughput_hz", "status",
+            "model", "arrivals", "offered_hz", "requests", "tpus", "replicas", "split",
+            "grant", "batches", "flush_size", "flush_deadline", "flush_closed", "swaps",
+            "swap_over_ms", "p50_ms", "p99_ms", "mean_ms", "throughput_hz", "max_wait_ms",
+            "status",
         ],
     );
     for load in &spec.loads {
@@ -619,33 +673,28 @@ pub fn loadgen_table(
             } else {
                 "queued"
             };
-            t.row(vec![
+            let mut row = vec![
                 load.model.clone(),
                 load.arrivals.label(),
                 offered,
                 load.requests.to_string(),
-                "-".into(),
-                "-".into(),
-                "-".into(),
-                "-".into(),
-                "-".into(),
-                "-".into(),
-                "-".into(),
-                "-".into(),
-                "-".into(),
-                "-".into(),
-                status.into(),
-            ]);
+            ];
+            row.extend(vec!["-".to_string(); 15]);
+            row.push(status.into());
+            t.row(row);
             continue;
         };
         let tenant = registry.get(&load.model)?;
-        let sims = stage_sims(&tenant.model, &a.candidate.partition, cfg);
-        let run = simulate_open_loop(
+        // a tight SLO shrinks this tenant's flush deadline — the same
+        // derivation the live pool applies
+        let policy = spec.policy.for_slo(tenant.slo_p99_s);
+        let dep = crate::serving::deployment_sim(tenant, a, cfg);
+        let run = simulate_deployment(
             &load.arrivals,
             load.requests,
             arrival_seed(spec.seed, &load.model),
-            &spec.policy,
-            &sims,
+            &policy,
+            &dep,
         );
         let mut lat = Summary::new();
         for &l in &run.latencies_s {
@@ -657,15 +706,20 @@ pub fn loadgen_table(
             offered,
             load.requests.to_string(),
             a.candidate.tpu_count.to_string(),
+            a.replicas.to_string(),
             a.candidate.partition.label(),
+            a.grant.label(),
             run.batches.len().to_string(),
             run.flushes(FlushKind::Size).to_string(),
             run.flushes(FlushKind::Deadline).to_string(),
             run.flushes(FlushKind::Closed).to_string(),
+            run.swaps.to_string(),
+            ms(run.swap_overhead_s),
             ms(lat.p50()),
             ms(lat.p99()),
             ms(lat.mean()),
             format!("{:.1}", run.throughput_hz()),
+            ms(policy.max_wait.as_secs_f64()),
             "admitted".into(),
         ]);
     }
@@ -675,11 +729,16 @@ pub fn loadgen_table(
 /// One-line pool summary appended under the (non-CSV) loadgen table.
 pub fn loadgen_summary(plan: &crate::scheduler::PoolPlan) -> String {
     format!(
-        "pool: {}/{} TPUs used | admitted {} queued {} rejected {} | \
+        "pool: {}/{} TPUs used | admitted {}{} queued {} rejected {} | \
          same --seed => bit-identical table\n",
         plan.tpus_used(),
         plan.total_tpus,
         plan.assignments.len(),
+        if plan.sharing_enabled {
+            format!(" (shared {})", plan.shared_count())
+        } else {
+            String::new()
+        },
         plan.queued.len(),
         plan.rejected.len(),
     )
@@ -783,9 +842,17 @@ multi-tenant pool scheduler (cost-model simulation; no artifacts needed):
   schedule --models fc_big,conv_a,conv_b --tpus 4
            [--weights 2,1,1] [--slo-ms 20,-,50] [--allow-spill]
            [--max-tpus-per-model 4] [--no-replicas]
+           [--allow-sharing] [--switch-cost-us US] [--max-residents 2]
         memory-aware admission + per-model (tpu_count, strategy, p99)
         chosen by the pool allocator; models: fc_small fc_big fc_huge
-        conv_a conv_b conv_big pyramid, or fc_n<width> / conv_f<filters>
+        conv_a conv_b conv_big pyramid, or fc_n<width> / conv_f<filters>.
+        --allow-sharing lets a queued tenant time-share an already granted
+        TPU set: co-residents each get a 1/N slice and pay a context-switch
+        cost (segment parameter re-load from host memory, derived from the
+        cost model's off-chip bandwidth — override with --switch-cost-us);
+        a shared grant is only made when every affected SLO still holds.
+        Tenants with --slo-ms also print their derived batch policy
+        (max_wait shrinks under tight SLOs)
 
 serving (real numerics; PJRT needs `make artifacts`):
   serve --model fc_n512 --tpus 4 [--strategy profiled] [--batch 50]
@@ -804,17 +871,21 @@ open-loop load generation (seeded, bit-reproducible):
   loadgen --models fc_small,conv_a --tpus 4 --seed 7 --requests 200
           [--arrivals poisson:400]       one spec, or one per model:
               poisson:RATE | bursty:RATE:ON_S:OFF_S | closed:CONC:THINK_S
-          [--max-batch 8] [--max-wait-ms 2]   per-tenant flush policy
+          [--max-batch 8] [--max-wait-ms 2]   base flush policy (tenants
+              with --slo-ms derive a tighter per-tenant max_wait)
           [--join MODEL@T_S] [--leave MODEL@T_S]  register/deregister the
               model T_S seconds into the live run (online re-plan + drain)
+          [--allow-sharing]  time-multiplexed co-residency (see schedule);
+              shared tenants report deterministic swap counts + overhead
+          [--no-replicas]    plan without leftover-TPU replica grants
           [--no-live]  print only the deterministic table
           [--csv]      CSV table only (identical across runs of one seed)
-        prints the deterministic per-tenant table (offered rate, batch +
-        flush-reason counts, p50/p99/mean latency, throughput) from the
-        seeded open-loop queueing simulation, then replays the same seeds
-        against the live open-loop pool (per-tenant Batcher workers) with
-        bit-exact response verification; plans without replica grants so
-        live pipelines match the simulated ones
+        prints the deterministic per-tenant table (offered rate, replica
+        fan-out, grant kind, batch + flush-reason + swap counts,
+        p50/p99/mean latency, throughput) from the seeded open-loop
+        queueing simulation, then replays the same seeds against the live
+        open-loop pool (per-tenant Batcher workers) with bit-exact
+        response verification
 ";
 
 #[cfg(test)]
@@ -942,7 +1013,7 @@ mod tests {
         ))
         .unwrap();
         let (_reg, alloc, spec) = loadgen_spec(&a).unwrap();
-        assert!(!alloc.replicate_leftover, "loadgen plans without replica grants");
+        assert!(alloc.replicate_leftover, "loadgen models replica fan-out by default");
         assert_eq!(spec.loads.len(), 2);
         assert_eq!(spec.loads[0].model, "fc_small");
         assert_eq!(spec.loads[1].arrivals.label(), "closed:4:0.001");
@@ -956,6 +1027,79 @@ mod tests {
         // bad process spec
         let a = Args::parse(&argv("loadgen --models fc_small --arrivals uniform:9")).unwrap();
         assert!(loadgen_spec(&a).is_err());
+    }
+
+    #[test]
+    fn schedule_allow_sharing_admits_queued_tenant() {
+        // fc_huge and fc_n2580 are the same 3-TPU model; on a 4-TPU pool
+        // with conv_a, the whole-TPU auction must queue one of them
+        let off = run(&Args::parse(&argv(
+            "schedule --models fc_huge,fc_n2580,conv_a --tpus 4",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(off.contains("queued:"), "{off}");
+        assert!(!off.contains("shared"), "{off}");
+        assert!(!off.contains("swap_over_ms"), "whole-TPU table unchanged: {off}");
+
+        let cmd = "schedule --models fc_huge,fc_n2580,conv_a --tpus 4 --allow-sharing";
+        let on = run(&Args::parse(&argv(cmd)).unwrap()).unwrap();
+        assert!(!on.contains("queued:"), "sharing must admit the loser: {on}");
+        assert!(on.contains("shared 1/2"), "{on}");
+        assert!(on.contains("swap_over_ms"), "{on}");
+        assert!(on.contains("shared 2"), "footer counts shared grants: {on}");
+        // two invocations render the identical plan
+        assert_eq!(on, run(&Args::parse(&argv(cmd)).unwrap()).unwrap());
+    }
+
+    #[test]
+    fn schedule_prints_derived_batch_policy_for_slo_tenants() {
+        let out = run(&Args::parse(&argv(
+            "schedule --models fc_small,conv_a --tpus 2 --slo-ms 4,- --max-wait-ms 2",
+        ))
+        .unwrap())
+        .unwrap();
+        assert!(out.contains("batch policy fc_small"), "{out}");
+        assert!(out.contains("max_wait 1.00"), "4 ms SLO -> 1 ms wait: {out}");
+        assert!(!out.contains("batch policy conv_a"), "no SLO, no derived policy: {out}");
+        // SLO-free invocations print no policy block at all
+        let plain =
+            run(&Args::parse(&argv("schedule --models fc_small,conv_a --tpus 2")).unwrap())
+                .unwrap();
+        assert!(!plain.contains("batch policy"), "{plain}");
+    }
+
+    #[test]
+    fn loadgen_shared_deployment_reports_deterministic_swaps() {
+        let cmd = "loadgen --models fc_small,fc_n512 --tpus 1 --allow-sharing --seed 7 \
+                   --requests 60 --arrivals poisson:900 --csv";
+        let a = Args::parse(&argv(cmd)).unwrap();
+        let first = run(&a).unwrap();
+        assert_eq!(first, run(&a).unwrap(), "shared loadgen must be seed-stable");
+        let header = first.lines().next().unwrap();
+        let swaps_col = header.split(',').position(|c| c == "swaps").unwrap();
+        let grant_col = header.split(',').position(|c| c == "grant").unwrap();
+        for line in first.lines().skip(1) {
+            let cells: Vec<&str> = line.split(',').collect();
+            assert!(cells[grant_col].starts_with("shared"), "{line}");
+            let swaps: usize = cells[swaps_col].parse().unwrap();
+            assert!(swaps >= 1, "shared tenants must report swaps: {line}");
+        }
+    }
+
+    #[test]
+    fn loadgen_models_replica_fanout() {
+        // --max-tpus-per-model 1 forces the leftover TPU to become a
+        // data-parallel replica, which the sim must now model
+        let cmd = "loadgen --models fc_small --tpus 2 --max-tpus-per-model 1 --seed 3 \
+                   --requests 80 --arrivals poisson:2000 --csv";
+        let a = Args::parse(&argv(cmd)).unwrap();
+        let first = run(&a).unwrap();
+        assert_eq!(first, run(&a).unwrap(), "fan-out table must be seed-stable");
+        let header = first.lines().next().unwrap();
+        let rep_col = header.split(',').position(|c| c == "replicas").unwrap();
+        let row: Vec<&str> = first.lines().nth(1).unwrap().split(',').collect();
+        assert_eq!(row[rep_col], "2", "{first}");
     }
 
     #[test]

@@ -30,6 +30,28 @@ impl Default for BatchPolicy {
     }
 }
 
+/// Share of a tenant's p99 SLO the batcher may burn waiting to fill a
+/// batch (the rest is left for queueing + pipeline service).
+const SLO_WAIT_FRACTION: f64 = 0.25;
+
+impl BatchPolicy {
+    /// Derive a tenant-specific policy from its p99 SLO: a tight SLO
+    /// shrinks `max_wait` to a quarter of the budget so the flush
+    /// deadline can never eat the whole latency target.  Tenants
+    /// without an SLO (or with a generous one) keep the base policy.
+    pub fn for_slo(self, slo_p99_s: Option<f64>) -> BatchPolicy {
+        match slo_p99_s {
+            Some(slo) if slo > 0.0 => BatchPolicy {
+                max_batch: self.max_batch,
+                max_wait: self
+                    .max_wait
+                    .min(Duration::from_secs_f64(slo * SLO_WAIT_FRACTION)),
+            },
+            _ => self,
+        }
+    }
+}
+
 /// Pull-based batcher over a request queue.
 pub struct Batcher {
     rx: Receiver<Request>,
@@ -190,6 +212,24 @@ mod tests {
         tx.send(Request { id: 9, data: vec![] }).unwrap();
         let (batch, _) = b.next_batch_with_reason().unwrap();
         assert_eq!(batch.len(), 1);
+    }
+
+    #[test]
+    fn slo_derived_policy_shrinks_max_wait_only_under_tight_slos() {
+        let base = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) };
+        // no SLO: unchanged
+        let p = base.for_slo(None);
+        assert_eq!(p.max_wait, base.max_wait);
+        assert_eq!(p.max_batch, 8);
+        // generous SLO (100 ms): 25 ms cap is above the base wait
+        let p = base.for_slo(Some(0.1));
+        assert_eq!(p.max_wait, base.max_wait);
+        // tight SLO (4 ms): wait shrinks to a quarter of the budget
+        let p = base.for_slo(Some(0.004));
+        assert_eq!(p.max_wait, Duration::from_millis(1));
+        assert_eq!(p.max_batch, 8, "only the wait shrinks");
+        // nonsense SLO is ignored
+        assert_eq!(base.for_slo(Some(0.0)).max_wait, base.max_wait);
     }
 
     #[test]

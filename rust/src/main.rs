@@ -124,12 +124,13 @@ fn cmd_serve_pool(args: &Args) -> Result<()> {
     println!("\nserved {} tenant(s) x {batch} requests concurrently:", reports.len());
     for r in &reports {
         println!(
-            "  {:10} {} TPU(s) x{} [{}]: wall {} | {:>6.0} inf/s | sim p99 {} \
+            "  {:10} {} TPU(s) x{} [{}] ({}): wall {} | {:>6.0} inf/s | sim p99 {} \
              (predicted {}) | verified {}",
             r.name,
             r.tpu_count,
             r.replicas,
             r.partition_label,
+            r.grant_label,
             fmt_seconds(r.wall_s),
             r.real_throughput,
             fmt_seconds(r.sim_p99_s),
@@ -140,20 +141,29 @@ fn cmd_serve_pool(args: &Args) -> Result<()> {
     for t in router.tenants() {
         let s = t.metrics.snapshot();
         println!(
-            "  {:10} metrics: submitted {} completed {} errors {} | real p50 {} p99 {}",
+            "  {:10} metrics: submitted {} completed {} errors {} | swaps {} \
+             (overhead {}) | real p50 {} p99 {}",
             t.name,
             s.submitted,
             s.completed,
             s.errors,
+            s.swaps,
+            fmt_seconds(s.swap_overhead_s),
             fmt_seconds(s.real_p50_s),
             fmt_seconds(s.real_p99_s),
         );
     }
     let s = router.metrics.snapshot();
     println!(
-        "  scheduler: registered {} admitted {} queued {} rejected {} | \
+        "  scheduler: registered {} admitted {} ({} shared) queued {} rejected {} | \
          routed {} requests in {} batches",
-        s.registered, s.admitted, s.queued, s.rejected, s.routed_requests, s.routed_batches
+        s.registered,
+        s.admitted,
+        s.shared,
+        s.queued,
+        s.rejected,
+        s.routed_requests,
+        s.routed_batches
     );
     router.shutdown();
     Ok(())
@@ -292,7 +302,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             let s = m.snapshot();
             println!(
                 "  {:10} batches {} (size {} / deadline {} / closed {}) mean batch {:.1} \
-                 max queue depth {} | real p50 {} p99 {}",
+                 max queue depth {} | swaps {} (overhead {}) | real p50 {} p99 {}",
                 name,
                 s.batches,
                 s.flush_size,
@@ -300,6 +310,8 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 s.flush_closed,
                 s.mean_batch,
                 s.max_queue_depth,
+                s.swaps,
+                fmt_seconds(s.swap_overhead_s),
                 fmt_seconds(s.real_p50_s),
                 fmt_seconds(s.real_p99_s),
             );
@@ -307,9 +319,15 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     }
     let s = pool.metrics.snapshot();
     println!(
-        "  scheduler: admitted {} queued {} rejected {} | routed {} requests | \
+        "  scheduler: admitted {} ({} shared) queued {} rejected {} | routed {} requests | \
          re-plans {} (drained {} deployments)",
-        s.admitted, s.queued, s.rejected, s.routed_requests, s.replans, s.drained_deployments
+        s.admitted,
+        s.shared,
+        s.queued,
+        s.rejected,
+        s.routed_requests,
+        s.replans,
+        s.drained_deployments
     );
     pool.shutdown();
     Ok(())

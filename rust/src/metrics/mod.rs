@@ -139,6 +139,8 @@ struct TenantCounters {
     flush_deadline: u64,
     flush_closed: u64,
     max_queue_depth: u64,
+    swaps: u64,
+    swap_overhead_s: f64,
 }
 
 impl TenantMetrics {
@@ -173,6 +175,15 @@ impl TenantMetrics {
         }
     }
 
+    /// Record one context switch of a time-shared deployment: the
+    /// co-resident ran in between, so this tenant's segment parameters
+    /// were re-loaded from host memory at `overhead_s` simulated cost.
+    pub fn record_swap(&self, overhead_s: f64) {
+        let mut g = self.extra.lock().unwrap();
+        g.swaps += 1;
+        g.swap_overhead_s += overhead_s;
+    }
+
     /// Take an immutable snapshot of every counter.
     pub fn snapshot(&self) -> TenantSnapshot {
         let c = self.core.snapshot();
@@ -191,6 +202,8 @@ impl TenantMetrics {
             flush_deadline: e.flush_deadline,
             flush_closed: e.flush_closed,
             max_queue_depth: e.max_queue_depth,
+            swaps: e.swaps,
+            swap_overhead_s: e.swap_overhead_s,
             real_p50_s: c.real_p50_s,
             real_p99_s: c.real_p99_s,
             sim_p50_s: c.sim_p50_s,
@@ -220,6 +233,10 @@ pub struct TenantSnapshot {
     pub flush_closed: u64,
     /// Maximum ingress-queue depth observed at any flush.
     pub max_queue_depth: u64,
+    /// Context switches of a time-shared deployment (0 when exclusive).
+    pub swaps: u64,
+    /// Cumulative simulated parameter re-load time across those swaps.
+    pub swap_overhead_s: f64,
     /// Real wall-clock latency p50 (seconds).
     pub real_p50_s: f64,
     /// Real wall-clock latency p99 (seconds).
@@ -240,6 +257,7 @@ pub struct SchedulerMetrics {
 struct SchedulerInner {
     registered: u64,
     admitted: u64,
+    shared: u64,
     queued: u64,
     rejected: u64,
     routed_batches: u64,
@@ -251,10 +269,19 @@ struct SchedulerInner {
 
 impl SchedulerMetrics {
     /// Overwrite the admission totals with the latest plan's outcome.
-    pub fn record_admission(&self, registered: u64, admitted: u64, queued: u64, rejected: u64) {
+    /// `shared` counts admitted tenants holding a time-multiplexed grant.
+    pub fn record_admission(
+        &self,
+        registered: u64,
+        admitted: u64,
+        shared: u64,
+        queued: u64,
+        rejected: u64,
+    ) {
         let mut g = self.inner.lock().unwrap();
         g.registered = registered;
         g.admitted = admitted;
+        g.shared = shared;
         g.queued = queued;
         g.rejected = rejected;
     }
@@ -285,6 +312,7 @@ impl SchedulerMetrics {
         SchedulerSnapshot {
             registered: g.registered,
             admitted: g.admitted,
+            shared: g.shared,
             queued: g.queued,
             rejected: g.rejected,
             routed_batches: g.routed_batches,
@@ -303,6 +331,8 @@ pub struct SchedulerSnapshot {
     pub registered: u64,
     /// Tenants admitted by the last plan.
     pub admitted: u64,
+    /// Admitted tenants holding a time-multiplexed (shared) grant.
+    pub shared: u64,
     /// Tenants queued (pool too small) by the last plan.
     pub queued: u64,
     /// Tenants rejected (can never fit) by the last plan.
@@ -365,7 +395,7 @@ mod tests {
     #[test]
     fn scheduler_metrics_accounting() {
         let m = SchedulerMetrics::default();
-        m.record_admission(5, 3, 1, 1);
+        m.record_admission(5, 3, 1, 1, 1);
         m.record_routed(50);
         m.record_routed(20);
         m.record_route_miss();
@@ -374,6 +404,7 @@ mod tests {
         let s = m.snapshot();
         assert_eq!(s.registered, 5);
         assert_eq!(s.admitted, 3);
+        assert_eq!(s.shared, 1);
         assert_eq!(s.queued, 1);
         assert_eq!(s.rejected, 1);
         assert_eq!(s.routed_batches, 2);
@@ -397,6 +428,17 @@ mod tests {
         assert_eq!(s.flush_closed, 1);
         assert_eq!(s.max_queue_depth, 3);
         assert!((s.mean_batch - 4.0).abs() < 1e-12, "{s:?}");
+        assert_eq!(s.swaps, 0, "exclusive tenants never swap");
+    }
+
+    #[test]
+    fn tenant_swap_counters_accumulate() {
+        let m = TenantMetrics::default();
+        m.record_swap(2e-3);
+        m.record_swap(2e-3);
+        let s = m.snapshot();
+        assert_eq!(s.swaps, 2);
+        assert!((s.swap_overhead_s - 4e-3).abs() < 1e-12, "{s:?}");
     }
 
     #[test]

@@ -20,6 +20,17 @@
 //! Models that fit no admissible candidate at all are **rejected**
 //! (`cannot fit`); models that fit but lost the TPU-count auction are
 //! **queued** (they would be admitted on a bigger pool).
+//!
+//! With [`AllocatorConfig::allow_sharing`] set, a fourth outcome exists:
+//! a queued tenant may be granted a **time-multiplexed slice** of a TPU
+//! set already granted to an admitted tenant ([`DeviceGrant::Shared`],
+//! cf. arXiv 2602.17808's collaborative co-residency).  Co-resident
+//! segments do not fit on-chip together, so every scheduling quantum the
+//! incoming tenant's parameters are re-loaded from host memory — the
+//! context-switch cost is the same off-chip-bandwidth term the cost
+//! model charges spilled layers (arXiv 2102.10423 quantifies that
+//! penalty).  A shared placement is only granted when the predicted p99
+//! *including* swap overhead still meets every affected tenant's SLO.
 
 use anyhow::Result;
 
@@ -33,7 +44,7 @@ use crate::segment::Partition;
 use crate::util::mib;
 use crate::util::stats::Summary;
 
-use super::registry::ModelRegistry;
+use super::registry::{ModelRegistry, Tenant};
 
 /// Allocator knobs.
 #[derive(Debug, Clone)]
@@ -52,6 +63,16 @@ pub struct AllocatorConfig {
     pub allow_host_spill: bool,
     /// Hand leftover TPUs to admitted tenants as pipeline replicas.
     pub replicate_leftover: bool,
+    /// Grant queued tenants a time-multiplexed slice of an already
+    /// granted TPU set ([`DeviceGrant::Shared`]).  Off by default: with
+    /// it off, plans are identical to the whole-TPU allocator's.
+    pub allow_sharing: bool,
+    /// Override the per-swap context-switch cost (microseconds, whole
+    /// pipeline).  `None` derives it per tenant from the cost model's
+    /// host-memory bandwidth term (`serving::stage_switch_costs`).
+    pub switch_cost_us: Option<f64>,
+    /// Maximum co-resident tenants per TPU set (>= 2 when sharing).
+    pub max_residents: usize,
 }
 
 impl Default for AllocatorConfig {
@@ -62,6 +83,61 @@ impl Default for AllocatorConfig {
             max_tpus_per_model: 4,
             allow_host_spill: false,
             replicate_leftover: true,
+            allow_sharing: false,
+            switch_cost_us: None,
+            max_residents: 2,
+        }
+    }
+}
+
+/// How an assignment occupies its TPUs — the abstraction that replaces
+/// the old implicit "whole devices only" invariant.
+#[derive(Debug, Clone, PartialEq)]
+pub enum DeviceGrant {
+    /// The assignment owns its `tpu_count * replicas` devices outright.
+    Exclusive,
+    /// Time-multiplexed co-residency: the assignment runs on a TPU set
+    /// owned by `group[0]`; each member receives a `slice` of device time
+    /// and pays `switch_s` seconds per scheduling quantum to re-load its
+    /// segment parameters from host memory.
+    Shared {
+        /// Fraction of device time granted (`1 / group.len()`).
+        slice: f64,
+        /// Per-swap parameter re-load cost, summed over pipeline stages.
+        switch_s: f64,
+        /// Every co-resident on this TPU set, owner first (the owner's
+        /// TPUs are the ones counted against the pool).
+        group: Vec<String>,
+    },
+}
+
+impl DeviceGrant {
+    /// Fraction of device time this grant delivers (1.0 when exclusive).
+    pub fn slice(&self) -> f64 {
+        match self {
+            DeviceGrant::Exclusive => 1.0,
+            DeviceGrant::Shared { slice, .. } => *slice,
+        }
+    }
+
+    /// Per-quantum context-switch cost (0 when exclusive).
+    pub fn switch_s(&self) -> f64 {
+        match self {
+            DeviceGrant::Exclusive => 0.0,
+            DeviceGrant::Shared { switch_s, .. } => *switch_s,
+        }
+    }
+
+    /// Whether the grant time-shares its TPUs.
+    pub fn is_shared(&self) -> bool {
+        matches!(self, DeviceGrant::Shared { .. })
+    }
+
+    /// Compact table label, e.g. `excl` or `shared 1/2`.
+    pub fn label(&self) -> String {
+        match self {
+            DeviceGrant::Exclusive => "excl".to_string(),
+            DeviceGrant::Shared { group, .. } => format!("shared 1/{}", group.len()),
         }
     }
 }
@@ -86,6 +162,10 @@ pub struct Candidate {
     pub host_mib: f64,
     /// Whether any segment streams weights from the host.
     pub uses_host: bool,
+    /// Whole-pipeline context-switch cost if this candidate time-shares
+    /// its TPUs: re-loading every segment's on-chip weights from host
+    /// memory over the off-chip bandwidth term (seconds per swap).
+    pub switch_s: f64,
 }
 
 /// Why a tenant was not admitted.
@@ -110,14 +190,42 @@ pub struct Assignment {
     pub candidate: Candidate,
     /// Data-parallel copies of the whole pipeline (>= 1).
     pub replicas: usize,
-    /// Predicted p99 after replication (replicas split the batch).
+    /// How the TPUs are held: exclusive or a time-multiplexed slice.
+    pub grant: DeviceGrant,
+    /// Predicted p99 after replication (replicas split the batch) and,
+    /// for shared grants, slice dilation + swap overhead.
     pub effective_p99_s: f64,
 }
 
 impl Assignment {
-    /// Total TPUs this assignment occupies (pipeline depth × replicas).
+    /// TPUs this assignment charges against the pool: pipeline depth ×
+    /// replicas for exclusive grants and share-group owners; 0 for a
+    /// tenant riding a slice of somebody else's TPUs.
     pub fn tpus_used(&self) -> usize {
-        self.candidate.tpu_count * self.replicas
+        if self.owns_tpus() {
+            self.candidate.tpu_count * self.replicas
+        } else {
+            0
+        }
+    }
+
+    /// Whether this assignment is the one whose TPUs are counted (every
+    /// exclusive grant, plus the first member of each share group).
+    pub fn owns_tpus(&self) -> bool {
+        match &self.grant {
+            DeviceGrant::Exclusive => true,
+            DeviceGrant::Shared { group, .. } => group.first() == Some(&self.name),
+        }
+    }
+
+    /// Predicted p99 inflation from co-residency (slice dilation + swap
+    /// cost); 0 for exclusive grants.
+    pub fn swap_overhead_s(&self) -> f64 {
+        if self.grant.is_shared() {
+            (self.effective_p99_s - self.candidate.p99_s).max(0.0)
+        } else {
+            0.0
+        }
     }
 
     /// Whether the predicted p99 violates the tenant's SLO.
@@ -140,6 +248,9 @@ pub struct PoolPlan {
     /// Weighted effective-p99 objective over admitted tenants (after
     /// replica grants).
     pub objective_s: f64,
+    /// Whether time-multiplexed sharing was enabled for this plan (drives
+    /// the extended `repro schedule` columns).
+    pub sharing_enabled: bool,
 }
 
 impl PoolPlan {
@@ -151,6 +262,11 @@ impl PoolPlan {
     /// The admitted assignment for `name`, if it was admitted.
     pub fn assignment(&self, name: &str) -> Option<&Assignment> {
         self.assignments.iter().find(|a| a.name == name)
+    }
+
+    /// Number of admitted tenants holding a time-multiplexed grant.
+    pub fn shared_count(&self) -> usize {
+        self.assignments.iter().filter(|a| a.grant.is_shared()).count()
     }
 }
 
@@ -194,6 +310,8 @@ fn evaluate(
     for &l in &result.latencies_s {
         lat.add(l);
     }
+    let switch_s: f64 =
+        crate::serving::stage_switch_costs(model, &partition, cfg).iter().sum();
     Candidate {
         tpu_count,
         strategy,
@@ -203,6 +321,7 @@ fn evaluate(
         device_mib: mib(device_bytes),
         host_mib: mib(host_bytes),
         uses_host,
+        switch_s,
     }
 }
 
@@ -304,6 +423,13 @@ pub fn allocate(
     anyhow::ensure!(alloc.total_tpus >= 1, "pool needs at least one TPU");
     anyhow::ensure!(alloc.batch >= 1, "profiling batch must be at least 1");
     anyhow::ensure!(!registry.is_empty(), "no models registered");
+    anyhow::ensure!(
+        !alloc.allow_sharing || alloc.max_residents >= 2,
+        "sharing needs max_residents >= 2"
+    );
+    if let Some(us) = alloc.switch_cost_us {
+        anyhow::ensure!(us >= 0.0, "switch cost must be non-negative");
+    }
 
     // deterministic order: weight desc, then name (registry order is
     // name-sorted already)
@@ -350,7 +476,7 @@ pub fn allocate(
     search.run(0, total, 0.0);
 
     let mut assignments = Vec::new();
-    let mut queued = Vec::new();
+    let mut unplaced: Vec<(&Tenant, &Vec<Candidate>)> = Vec::new();
     for (i, (t, cands)) in searchable.iter().enumerate() {
         match search.best_choice[i] {
             Some(ci) => {
@@ -362,19 +488,10 @@ pub fn allocate(
                     effective_p99_s: cand.p99_s,
                     candidate: cand,
                     replicas: 1,
+                    grant: DeviceGrant::Exclusive,
                 });
             }
-            None => {
-                let min_k = cands.iter().map(|c| c.tpu_count).min().unwrap_or(0);
-                queued.push(Rejection {
-                    name: t.name.clone(),
-                    reason: format!(
-                        "needs {} TPU(s) but the pool auction left none \
-                         ({} total)",
-                        min_k, alloc.total_tpus
-                    ),
-                });
-            }
+            None => unplaced.push((*t, cands)),
         }
     }
 
@@ -382,8 +499,32 @@ pub fn allocate(
         grant_replicas(registry, cfg, alloc, &mut assignments);
     }
 
+    // auction losers get a second chance as time-sliced co-residents
+    let mut queued = Vec::new();
+    for (t, cands) in unplaced {
+        if alloc.allow_sharing {
+            match grant_shared(t, cands, alloc, &mut assignments) {
+                Ok(()) => continue,
+                Err(reason) => {
+                    queued.push(Rejection { name: t.name.clone(), reason });
+                    continue;
+                }
+            }
+        }
+        let min_k = cands.iter().map(|c| c.tpu_count).min().unwrap_or(0);
+        queued.push(Rejection {
+            name: t.name.clone(),
+            reason: format!(
+                "needs {} TPU(s) but the pool auction left none \
+                 ({} total)",
+                min_k, alloc.total_tpus
+            ),
+        });
+    }
+
     // the reported objective reflects what will actually be deployed,
-    // including the p99 improvement from replica grants
+    // including the p99 improvement from replica grants and the swap
+    // inflation of shared grants
     let objective_s =
         assignments.iter().map(|a| a.weight * a.effective_p99_s).sum();
     Ok(PoolPlan {
@@ -392,7 +533,157 @@ pub fn allocate(
         queued,
         rejected,
         objective_s,
+        sharing_enabled: alloc.allow_sharing,
     })
+}
+
+/// Predicted p99 of one co-resident under a `1/residents` time slice: the
+/// device delivers only `slice` of its cycles over any window, and every
+/// scheduling quantum re-loads the tenant's parameters from host memory.
+fn shared_p99_s(base_p99_s: f64, residents: usize, switch_s: f64) -> f64 {
+    base_p99_s * residents as f64 + switch_s
+}
+
+/// Per-swap cost of a candidate under the allocator config: the
+/// cost-model-derived re-load time ([`Candidate::switch_s`], the Table-I
+/// off-chip-bandwidth term) unless the operator pinned `switch_cost_us`.
+fn switch_cost_s(cand: &Candidate, alloc: &AllocatorConfig) -> f64 {
+    match alloc.switch_cost_us {
+        Some(us) => us * 1e-6,
+        None => cand.switch_s,
+    }
+}
+
+/// Try to admit an auction-losing tenant as a time-sliced co-resident on
+/// an already granted TPU set.  Pipelines co-reside stage-for-stage, so
+/// the tenant needs a candidate whose depth equals the host group's;
+/// every affected tenant's SLO must survive the slice dilation + swap
+/// overhead.  On success the tenant is appended to `assignments` and the
+/// whole group's grants/p99s are updated; on failure the queue reason is
+/// returned.
+fn grant_shared(
+    tenant: &Tenant,
+    cands: &[Candidate],
+    alloc: &AllocatorConfig,
+    assignments: &mut Vec<Assignment>,
+) -> std::result::Result<(), String> {
+    debug_assert!(alloc.max_residents >= 2, "sharing needs max_residents >= 2");
+    let mut slo_blocked = false;
+    // (owner index, candidate index, weighted-p99 increase)
+    let mut best: Option<(usize, usize, f64)> = None;
+    for (oi, owner) in assignments.iter().enumerate() {
+        // share groups are keyed by their owner; replicated pipelines are
+        // not shareable (a rider would need the whole replica set)
+        if !owner.owns_tpus() || owner.replicas != 1 {
+            continue;
+        }
+        let members = group_members(assignments, oi);
+        let residents = members.len() + 2; // owner + riders + the newcomer
+        if residents > alloc.max_residents {
+            continue;
+        }
+        for (ci, cand) in cands.iter().enumerate() {
+            if cand.tpu_count != owner.candidate.tpu_count {
+                continue;
+            }
+            let rider_p99 =
+                shared_p99_s(cand.p99_s, residents, switch_cost_s(cand, alloc));
+            if matches!(tenant.slo_p99_s, Some(slo) if rider_p99 > slo) {
+                slo_blocked = true;
+                continue; // the swap overhead breaches the rider's SLO
+            }
+            // existing members must not end up over their own SLOs — a
+            // host already flagged "SLO at risk" is not degraded further
+            let mut delta = tenant.weight * rider_p99;
+            let mut feasible = true;
+            for mi in members.iter().copied().chain([oi]) {
+                let m = &assignments[mi];
+                let m_p99 = shared_p99_s(
+                    m.candidate.p99_s,
+                    residents,
+                    switch_cost_s(&m.candidate, alloc),
+                );
+                if matches!(m.slo_p99_s, Some(slo) if m_p99 > slo) {
+                    feasible = false;
+                    slo_blocked = true;
+                    break;
+                }
+                delta += m.weight * (m_p99 - m.effective_p99_s);
+            }
+            if !feasible {
+                continue;
+            }
+            match best {
+                Some((_, _, d)) if d <= delta => {}
+                _ => best = Some((oi, ci, delta)),
+            }
+        }
+    }
+    let Some((oi, ci, _)) = best else {
+        let min_k = cands.iter().map(|c| c.tpu_count).min().unwrap_or(0);
+        return Err(if slo_blocked {
+            format!(
+                "needs {} TPU(s); a shared slot exists but its swap \
+                 overhead breaches an SLO",
+                min_k
+            )
+        } else {
+            format!(
+                "needs {} TPU(s) but the pool auction left none ({} total) \
+                 and no same-depth TPU set accepts a co-resident",
+                min_k, alloc.total_tpus
+            )
+        });
+    };
+
+    // apply: rebuild the whole group's grants at the new resident count
+    let cand = cands[ci].clone();
+    let mut members = vec![oi];
+    members.extend(group_members(assignments, oi));
+    let residents = members.len() + 1;
+    let mut group: Vec<String> =
+        members.iter().map(|&i| assignments[i].name.clone()).collect();
+    group.push(tenant.name.clone());
+    for &mi in &members {
+        let m = &mut assignments[mi];
+        let m_switch = switch_cost_s(&m.candidate, alloc);
+        m.effective_p99_s = shared_p99_s(m.candidate.p99_s, residents, m_switch);
+        m.grant = DeviceGrant::Shared {
+            slice: 1.0 / residents as f64,
+            switch_s: m_switch,
+            group: group.clone(),
+        };
+    }
+    let switch = switch_cost_s(&cand, alloc);
+    assignments.push(Assignment {
+        name: tenant.name.clone(),
+        weight: tenant.weight,
+        slo_p99_s: tenant.slo_p99_s,
+        effective_p99_s: shared_p99_s(cand.p99_s, residents, switch),
+        candidate: cand,
+        replicas: 1,
+        grant: DeviceGrant::Shared {
+            slice: 1.0 / residents as f64,
+            switch_s: switch,
+            group,
+        },
+    });
+    Ok(())
+}
+
+/// Indices of the non-owner members riding assignment `oi`'s TPU set.
+fn group_members(assignments: &[Assignment], oi: usize) -> Vec<usize> {
+    let owner = &assignments[oi].name;
+    assignments
+        .iter()
+        .enumerate()
+        .filter(|(i, a)| {
+            *i != oi
+                && matches!(&a.grant, DeviceGrant::Shared { group, .. }
+                    if group.first() == Some(owner))
+        })
+        .map(|(i, _)| i)
+        .collect()
 }
 
 /// Greedily hand leftover TPUs out as whole-pipeline replicas: each round,
@@ -611,6 +902,156 @@ mod tests {
         let plan =
             allocate(&reg, &cfg(), &AllocatorConfig::default()).unwrap();
         assert!(plan.assignments[0].slo_violated());
+    }
+
+    #[test]
+    fn candidates_carry_a_positive_switch_cost() {
+        let cands = candidates_for(&fc_model(512), &cfg(), &AllocatorConfig::default());
+        assert!(cands.iter().all(|c| c.switch_s > 0.0), "{cands:?}");
+        // the re-load crosses the slow host link, so it dwarfs the
+        // on-chip per-inference time (the whole point of co-residency
+        // being a *cost*, not free)
+        assert!(cands[0].switch_s > cands[0].per_item_s, "{cands:?}");
+    }
+
+    #[test]
+    fn sharing_admits_queued_tenant_with_swap_overhead() {
+        let mut reg = ModelRegistry::new();
+        reg.register(Tenant::new("heavy", fc_model(2580)).with_weight(2.0)).unwrap();
+        reg.register(Tenant::new("light", fc_model(2580)).with_weight(1.0)).unwrap();
+        let alloc = AllocatorConfig { total_tpus: 3, ..Default::default() };
+        let without = allocate(&reg, &cfg(), &alloc).unwrap();
+        assert_eq!(without.queued.len(), 1, "whole-TPU allocator must queue one");
+        assert!(!without.sharing_enabled);
+
+        let sharing = AllocatorConfig { allow_sharing: true, ..alloc };
+        let plan = allocate(&reg, &cfg(), &sharing).unwrap();
+        assert!(plan.sharing_enabled);
+        assert!(plan.queued.is_empty(), "{:?}", plan.queued);
+        assert_eq!(plan.assignments.len(), 2);
+        assert_eq!(plan.tpus_used(), 3, "a rider occupies no extra TPUs");
+        assert_eq!(plan.shared_count(), 2);
+        let rider = plan.assignment("light").unwrap();
+        assert!(rider.grant.is_shared());
+        assert!(!rider.owns_tpus());
+        assert!(rider.swap_overhead_s() > 0.0, "p99 must include swap overhead");
+        assert!(rider.effective_p99_s > rider.candidate.p99_s);
+        let host = plan.assignment("heavy").unwrap();
+        assert!(host.grant.is_shared(), "the owner time-shares too");
+        assert!(host.owns_tpus());
+        assert!((host.grant.slice() - 0.5).abs() < 1e-12);
+        assert!(host.swap_overhead_s() > 0.0);
+        // objective reflects the inflated p99s
+        let want: f64 =
+            plan.assignments.iter().map(|a| a.weight * a.effective_p99_s).sum();
+        assert!((plan.objective_s - want).abs() < 1e-12);
+    }
+
+    #[test]
+    fn two_tenants_saturate_one_tpu() {
+        let mut reg = ModelRegistry::new();
+        reg.register(Tenant::new("a", fc_model(512))).unwrap();
+        reg.register(Tenant::new("b", fc_model(512))).unwrap();
+        let alloc = AllocatorConfig {
+            total_tpus: 1,
+            allow_sharing: true,
+            ..Default::default()
+        };
+        let plan = allocate(&reg, &cfg(), &alloc).unwrap();
+        assert_eq!(plan.assignments.len(), 2, "queued={:?}", plan.queued);
+        assert_eq!(plan.tpus_used(), 1, "both must fit the single TPU");
+        assert_eq!(plan.shared_count(), 2);
+        for a in &plan.assignments {
+            assert_eq!(a.candidate.tpu_count, 1);
+            assert!((a.grant.slice() - 0.5).abs() < 1e-12);
+            assert!(a.grant.switch_s() > 0.0);
+        }
+        // max_residents caps the group: a third tenant stays queued
+        let mut reg3 = reg.clone();
+        reg3.register(Tenant::new("c", fc_model(512))).unwrap();
+        let plan3 = allocate(&reg3, &cfg(), &alloc).unwrap();
+        assert_eq!(plan3.assignments.len(), 2);
+        assert_eq!(plan3.queued.len(), 1);
+        // ...unless the cap is raised
+        let wide = AllocatorConfig { max_residents: 3, ..alloc };
+        let plan3 = allocate(&reg3, &cfg(), &wide).unwrap();
+        assert_eq!(plan3.assignments.len(), 3, "queued={:?}", plan3.queued);
+        assert!(plan3
+            .assignments
+            .iter()
+            .all(|a| (a.grant.slice() - 1.0 / 3.0).abs() < 1e-12));
+    }
+
+    #[test]
+    fn shared_grant_breaching_slo_stays_queued() {
+        let mut reg = ModelRegistry::new();
+        reg.register(Tenant::new("host", fc_model(512)).with_weight(2.0)).unwrap();
+        reg.register(Tenant::new("strict", fc_model(512)).with_slo_p99_s(1e-9)).unwrap();
+        let alloc = AllocatorConfig {
+            total_tpus: 1,
+            allow_sharing: true,
+            ..Default::default()
+        };
+        let plan = allocate(&reg, &cfg(), &alloc).unwrap();
+        assert_eq!(plan.assignments.len(), 1);
+        assert_eq!(plan.queued.len(), 1, "the SLO-breaching rider must stay queued");
+        assert_eq!(plan.queued[0].name, "strict");
+        assert!(plan.queued[0].reason.contains("SLO"), "{}", plan.queued[0].reason);
+        assert_eq!(plan.assignment("host").unwrap().grant, DeviceGrant::Exclusive);
+    }
+
+    #[test]
+    fn sharing_never_breaks_a_hosts_met_slo() {
+        // learn the exclusive p99, then pin the host's SLO between the
+        // exclusive and the time-shared prediction: co-residency would
+        // break a met SLO, so the rider must stay queued
+        let mut probe = ModelRegistry::new();
+        probe.register(Tenant::new("host", fc_model(512)).with_weight(2.0)).unwrap();
+        let alloc = AllocatorConfig {
+            total_tpus: 1,
+            allow_sharing: true,
+            ..Default::default()
+        };
+        let p99 = allocate(&probe, &cfg(), &alloc)
+            .unwrap()
+            .assignment("host")
+            .unwrap()
+            .candidate
+            .p99_s;
+        let mut reg = ModelRegistry::new();
+        reg.register(
+            Tenant::new("host", fc_model(512)).with_weight(2.0).with_slo_p99_s(p99 * 1.5),
+        )
+        .unwrap();
+        reg.register(Tenant::new("rider", fc_model(512))).unwrap();
+        let plan = allocate(&reg, &cfg(), &alloc).unwrap();
+        let host = plan.assignment("host").unwrap();
+        assert_eq!(host.grant, DeviceGrant::Exclusive, "met SLO must survive");
+        assert!(!host.slo_violated());
+        assert_eq!(plan.queued.len(), 1);
+        assert_eq!(plan.queued[0].name, "rider");
+        assert!(plan.queued[0].reason.contains("SLO"), "{}", plan.queued[0].reason);
+    }
+
+    #[test]
+    fn switch_cost_override_applies() {
+        let mut reg = ModelRegistry::new();
+        reg.register(Tenant::new("a", fc_model(512)).with_weight(2.0)).unwrap();
+        reg.register(Tenant::new("b", fc_model(512))).unwrap();
+        let alloc = AllocatorConfig {
+            total_tpus: 1,
+            allow_sharing: true,
+            switch_cost_us: Some(1234.0),
+            ..Default::default()
+        };
+        let plan = allocate(&reg, &cfg(), &alloc).unwrap();
+        let rider = plan.assignment("b").unwrap();
+        assert!((rider.grant.switch_s() - 1234e-6).abs() < 1e-12);
+        let want = rider.candidate.p99_s * 2.0 + 1234e-6;
+        assert!((rider.effective_p99_s - want).abs() < 1e-9);
+        // negative override is rejected
+        let bad = AllocatorConfig { switch_cost_us: Some(-1.0), ..alloc };
+        assert!(allocate(&reg, &cfg(), &bad).is_err());
     }
 
     #[test]

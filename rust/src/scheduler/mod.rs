@@ -49,7 +49,8 @@ pub mod registry;
 pub mod router;
 
 pub use allocator::{
-    allocate, candidates_for, AllocatorConfig, Assignment, Candidate, PoolPlan, Rejection,
+    allocate, candidates_for, AllocatorConfig, Assignment, Candidate, DeviceGrant, PoolPlan,
+    Rejection,
 };
 pub use pool::{OpenOptions, ReplanReport, ServingPool, TenantClient};
 pub use registry::{resolve_model, ModelRegistry, Tenant};
@@ -118,7 +119,21 @@ impl PoolScheduler {
 }
 
 /// Render a pool plan as the `repro schedule` admission table.
+///
+/// Plans computed with sharing enabled grow two extra columns — the
+/// grant kind (`excl` / `shared 1/N`) and the predicted p99 inflation
+/// from co-residency — so whole-TPU plans render exactly as before.
 pub fn plan_table(plan: &PoolPlan) -> Table {
+    let shared_cols = plan.sharing_enabled;
+    let mut headers = vec![
+        "model", "weight", "tpus", "replicas", "strategy", "split", "p99_ms",
+        "per_item_ms", "dev_mib", "host_mib",
+    ];
+    if shared_cols {
+        headers.push("grant");
+        headers.push("swap_over_ms");
+    }
+    headers.push("status");
     let mut t = Table::new(
         format!(
             "TPU-pool schedule — {} model(s) on {} TPUs ({} used)",
@@ -126,14 +141,11 @@ pub fn plan_table(plan: &PoolPlan) -> Table {
             plan.total_tpus,
             plan.tpus_used(),
         ),
-        &[
-            "model", "weight", "tpus", "replicas", "strategy", "split", "p99_ms",
-            "per_item_ms", "dev_mib", "host_mib", "status",
-        ],
+        &headers,
     );
     for a in &plan.assignments {
         let c = &a.candidate;
-        t.row(vec![
+        let mut row = vec![
             a.name.clone(),
             format!("{:.1}", a.weight),
             c.tpu_count.to_string(),
@@ -144,38 +156,30 @@ pub fn plan_table(plan: &PoolPlan) -> Table {
             ms(c.per_item_s),
             format!("{:.2}", c.device_mib),
             format!("{:.2}", c.host_mib),
-            if a.slo_violated() { "admitted (SLO at risk)".into() } else { "admitted".into() },
-        ]);
+        ];
+        if shared_cols {
+            row.push(a.grant.label());
+            row.push(ms(a.swap_overhead_s()));
+        }
+        row.push(if a.slo_violated() {
+            "admitted (SLO at risk)".into()
+        } else {
+            "admitted".into()
+        });
+        t.row(row);
     }
+    let dashes = if shared_cols { 11 } else { 9 };
     for q in &plan.queued {
-        t.row(vec![
-            q.name.clone(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            format!("queued: {}", q.reason),
-        ]);
+        let mut row = vec![q.name.clone()];
+        row.extend(vec!["-".to_string(); dashes]);
+        row.push(format!("queued: {}", q.reason));
+        t.row(row);
     }
     for r in &plan.rejected {
-        t.row(vec![
-            r.name.clone(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            "-".into(),
-            format!("rejected: {}", r.reason),
-        ]);
+        let mut row = vec![r.name.clone()];
+        row.extend(vec!["-".to_string(); dashes]);
+        row.push(format!("rejected: {}", r.reason));
+        t.row(row);
     }
     t
 }

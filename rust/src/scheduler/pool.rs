@@ -49,7 +49,7 @@ use crate::metrics::{SchedulerMetrics, TenantMetrics};
 use crate::runtime::Manifest;
 use crate::util::rng::Rng;
 
-use super::allocator::{allocate, AllocatorConfig, PoolPlan};
+use super::allocator::{allocate, AllocatorConfig, DeviceGrant, PoolPlan};
 use super::registry::{ModelRegistry, Tenant};
 use super::router::{build_deployment, synthetic_reference, BackendKind, Deployment};
 
@@ -102,10 +102,12 @@ impl ReplanReport {
 struct LiveTenant {
     ingress: Sender<Request>,
     worker: Option<JoinHandle<()>>,
-    /// Assignment signature for re-plan diffing.
+    /// Assignment signature for re-plan diffing (a grant change — e.g. a
+    /// shared tenant promoted to an exclusive TPU — forces a redeploy).
     tpu_count: usize,
     replicas: usize,
     partition_cuts: Vec<usize>,
+    grant: DeviceGrant,
     /// Shape/verification info mirrored into [`TenantClient`]s.
     in_elems: usize,
     out_elems: usize,
@@ -184,17 +186,30 @@ fn tenant_worker(
     batcher: Batcher,
     done: Sender<Response>,
     metrics: Arc<TenantMetrics>,
+    swap_s: f64,
 ) {
     // sim latencies are recorded relative to the deployment's sim clock at
     // batch start (the clock is monotonic across batches)
     let mut sim_epoch = 0.0f64;
     while let Some((batch, kind)) = batcher.next_batch_with_reason() {
         metrics.record_batch(batch.len() as u64, batcher.queue_depth() as u64, kind);
+        if swap_s > 0.0 {
+            // time-shared deployment: the co-resident ran since the last
+            // flush, so this batch swaps the tenant's parameters back in
+            metrics.record_swap(swap_s);
+        }
         match deployment.serve_batch(batch) {
             Ok(responses) => {
                 let base = sim_epoch;
                 for r in &responses {
-                    metrics.record_response(r.real_latency_s, (r.sim_done_s - base).max(0.0));
+                    // the swap's parameter re-load runs before the batch,
+                    // delaying every response in it — charge it to the
+                    // recorded sim latency so live p99 matches both the
+                    // allocator prediction and the deterministic sim
+                    metrics.record_response(
+                        r.real_latency_s,
+                        (r.sim_done_s - base).max(0.0) + swap_s,
+                    );
                     if r.sim_done_s > sim_epoch {
                         sim_epoch = r.sim_done_s;
                     }
@@ -229,6 +244,7 @@ impl ServingPool {
             BackendKind::Synthetic => None,
         };
         let total_tpus = alloc.total_tpus;
+        let allow_sharing = alloc.allow_sharing;
         let pool = ServingPool {
             system,
             alloc,
@@ -246,6 +262,7 @@ impl ServingPool {
                     queued: Vec::new(),
                     rejected: Vec::new(),
                     objective_s: 0.0,
+                    sharing_enabled: allow_sharing,
                 },
             }),
             metrics: Arc::new(SchedulerMetrics::default()),
@@ -270,6 +287,7 @@ impl ServingPool {
                 queued: Vec::new(),
                 rejected: Vec::new(),
                 objective_s: 0.0,
+                sharing_enabled: self.alloc.allow_sharing,
             }
         } else {
             allocate(&st.registry, &self.system, &self.alloc)?
@@ -286,6 +304,7 @@ impl ServingPool {
                     a.candidate.tpu_count == lt.tpu_count
                         && a.replicas == lt.replicas
                         && a.candidate.partition.cuts == lt.partition_cuts
+                        && a.grant == lt.grant
                 }
                 None => false,
             };
@@ -325,11 +344,16 @@ impl ServingPool {
                 .entry(a.name.clone())
                 .or_insert_with(|| Arc::new(TenantMetrics::default()))
                 .clone();
-            let batcher = Batcher::new(ingress_rx, self.opts.policy);
+            // a tenant with a tight SLO gets a tighter flush deadline
+            // than the pool-global policy (admission and batching agree
+            // on the latency budget)
+            let batcher =
+                Batcher::new(ingress_rx, self.opts.policy.for_slo(a.slo_p99_s));
             let deployment = built.deployment;
             let worker_metrics = metrics.clone();
+            let swap_s = a.grant.switch_s();
             let worker = std::thread::spawn(move || {
-                tenant_worker(deployment, batcher, done_tx, worker_metrics)
+                tenant_worker(deployment, batcher, done_tx, worker_metrics, swap_s)
             });
             st.live.insert(
                 a.name.clone(),
@@ -339,6 +363,7 @@ impl ServingPool {
                     tpu_count: a.candidate.tpu_count,
                     replicas: a.replicas,
                     partition_cuts: a.candidate.partition.cuts.clone(),
+                    grant: a.grant.clone(),
                     in_elems: built.in_elems,
                     out_elems: built.out_elems,
                     salt: built.salt,
@@ -351,6 +376,7 @@ impl ServingPool {
         self.metrics.record_admission(
             st.registry.len() as u64,
             plan.assignments.len() as u64,
+            plan.shared_count() as u64,
             plan.queued.len() as u64,
             plan.rejected.len() as u64,
         );
@@ -580,6 +606,48 @@ mod tests {
         // the untouched deployments still serve
         run_and_verify(&p, "fc_small", 5, 2);
         run_and_verify(&p, "conv_a", 5, 3);
+        p.shutdown();
+    }
+
+    #[test]
+    fn replan_promotes_shared_tenant_to_exclusive_after_deregister() {
+        // two 1-TPU tenants time-share the single TPU; deregistering the
+        // owner promotes the rider to an exclusive grant (drain+redeploy)
+        let mut reg = ModelRegistry::new();
+        reg.register(
+            Tenant::new("owner", super::super::resolve_model("fc_small").unwrap())
+                .with_weight(2.0),
+        )
+        .unwrap();
+        reg.register(Tenant::new("rider", super::super::resolve_model("fc_small").unwrap()))
+            .unwrap();
+        let p = ServingPool::deploy(
+            reg,
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: 1, allow_sharing: true, ..Default::default() },
+            BackendKind::Synthetic,
+            OpenOptions::default(),
+        )
+        .unwrap();
+        let plan = p.plan();
+        assert_eq!(plan.assignments.len(), 2, "queued={:?}", plan.queued);
+        assert!(plan.assignment("rider").unwrap().grant.is_shared());
+        assert!(plan.assignment("owner").unwrap().grant.is_shared());
+        run_and_verify(&p, "owner", 10, 1);
+        run_and_verify(&p, "rider", 10, 2);
+        // the rider's worker recorded its context switches
+        let before = p.tenant_metrics("rider").unwrap().snapshot();
+        assert!(before.swaps >= 1, "{before:?}");
+        assert!(before.swap_overhead_s > 0.0, "{before:?}");
+
+        let report = p.deregister("owner").unwrap();
+        assert!(report.drained >= 1, "grant change must drain: {report:?}");
+        let plan = p.plan();
+        assert_eq!(plan.assignment("rider").unwrap().grant, DeviceGrant::Exclusive);
+        run_and_verify(&p, "rider", 10, 3);
+        // exclusive deployments never swap: the counter froze
+        let after = p.tenant_metrics("rider").unwrap().snapshot();
+        assert_eq!(after.swaps, before.swaps, "{after:?}");
         p.shutdown();
     }
 

@@ -36,10 +36,10 @@ use crate::metrics::{SchedulerMetrics, TenantMetrics};
 use crate::model::Model;
 use crate::runtime::stage::pjrt_stage_factory;
 use crate::runtime::Manifest;
-use crate::serving::stage_sims;
+use crate::serving::stage_sims_for_grant;
 use crate::util::rng::Rng;
 
-use super::allocator::{Assignment, PoolPlan};
+use super::allocator::{Assignment, DeviceGrant, PoolPlan};
 use super::registry::ModelRegistry;
 
 /// How deployed stages execute.
@@ -202,7 +202,10 @@ pub(crate) fn build_deployment(
     let tenant = registry.get(&a.name)?;
     let model = &tenant.model;
     let partition = &a.candidate.partition;
-    let sims = stage_sims(model, partition, cfg);
+    // a time-sliced grant dilates every stage's simulated service time by
+    // 1/slice; the per-quantum swap cost is charged at batch boundaries
+    // by the serving layers (see TenantMetrics::record_swap)
+    let sims = stage_sims_for_grant(model, partition, cfg, &a.grant);
     let bounds = partition.bounds();
     let salt = tenant_salt(&a.name);
 
@@ -251,6 +254,8 @@ pub struct TenantHandle {
     pub tpu_count: usize,
     /// Data-parallel pipeline copies (>= 1).
     pub replicas: usize,
+    /// How the TPUs are held (exclusive or a time-multiplexed slice).
+    pub grant: DeviceGrant,
     /// Paper-style segment-size label, e.g. `"2+2+1"`.
     pub partition_label: String,
     /// Name of the segmentation strategy the allocator chose.
@@ -328,6 +333,7 @@ impl PoolRouter {
                     name: a.name.clone(),
                     tpu_count: a.candidate.tpu_count,
                     replicas: a.replicas,
+                    grant: a.grant.clone(),
                     partition_label: a.candidate.partition.label(),
                     strategy_name: a.candidate.strategy.name(),
                     predicted_p99_s: a.effective_p99_s,
@@ -346,6 +352,7 @@ impl PoolRouter {
         metrics.record_admission(
             registry.len() as u64,
             plan.assignments.len() as u64,
+            plan.shared_count() as u64,
             plan.queued.len() as u64,
             plan.rejected.len() as u64,
         );
@@ -381,14 +388,24 @@ impl PoolRouter {
         };
         match result {
             Ok(responses) => {
+                // a time-shared tenant swaps back in once per served
+                // batch (the co-resident ran in between); the re-load
+                // runs before the batch, so it also delays every
+                // response's recorded sim latency
+                let swap_s = t.grant.switch_s();
+                if t.grant.is_shared() {
+                    t.metrics.record_swap(swap_s);
+                }
                 // sim latencies relative to this tenant's sim clock at
                 // batch start (the pipeline's simulated clock is
                 // monotonic across batches)
                 let mut epoch = t.sim_epoch.lock().unwrap();
                 let base = *epoch;
                 for r in &responses {
-                    t.metrics
-                        .record_response(r.real_latency_s, (r.sim_done_s - base).max(0.0));
+                    t.metrics.record_response(
+                        r.real_latency_s,
+                        (r.sim_done_s - base).max(0.0) + swap_s,
+                    );
                     if r.sim_done_s > *epoch {
                         *epoch = r.sim_done_s;
                     }

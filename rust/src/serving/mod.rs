@@ -67,6 +67,80 @@ pub fn stage_sims(model: &Model, partition: &Partition, cfg: &SystemConfig) -> V
         .collect()
 }
 
+/// Per-stage context-switch cost of time-multiplexing this partition: to
+/// swap a co-resident tenant back onto stage `i`'s TPU, the segment's
+/// on-chip weights must be re-loaded from host memory over the cost
+/// model's off-chip bandwidth term — the same link whose non-overlap is
+/// the paper's Table-I cliff (cf. arXiv 2102.10423 on host-memory-access
+/// penalties).  Returns seconds per swap, one entry per segment.
+pub fn stage_switch_costs(model: &Model, partition: &Partition, cfg: &SystemConfig) -> Vec<f64> {
+    partition
+        .bounds()
+        .iter()
+        .map(|&(a, b)| {
+            model.layers[a..b]
+                .iter()
+                .map(|l| {
+                    let bw = match l.kind() {
+                        crate::model::LayerKind::Fc => cfg.link.host_weight_bw_fc,
+                        crate::model::LayerKind::Conv => cfg.link.host_weight_bw_conv,
+                    };
+                    l.weight_bytes() as f64 / bw
+                })
+                .sum::<f64>()
+        })
+        .collect()
+}
+
+/// [`stage_sims`] adjusted for a
+/// [`DeviceGrant`](crate::scheduler::DeviceGrant): a time-sliced tenant
+/// sees only `slice` of each device's cycles, so its per-item service
+/// time dilates by `1/slice`.  The per-quantum swap cost is charged at
+/// batch boundaries (by the workload sim and the pool's swap counters),
+/// not per item.
+pub fn stage_sims_for_grant(
+    model: &Model,
+    partition: &Partition,
+    cfg: &SystemConfig,
+    grant: &crate::scheduler::DeviceGrant,
+) -> Vec<StageSim> {
+    let mut sims = stage_sims(model, partition, cfg);
+    let slice = grant.slice();
+    if slice < 1.0 {
+        for s in &mut sims {
+            s.exec_s /= slice;
+        }
+    }
+    sims
+}
+
+/// Deterministic model of one admitted assignment's deployment: the
+/// grant-dilated stage sims, the replica fan-out, and (for shared
+/// grants) the per-stage context-switch costs, normalized so their sum
+/// matches the grant's `switch_s` even under a `--switch-cost-us`
+/// override.  `repro loadgen` simulates exactly this, so the
+/// deterministic table always matches the plan the live pool deploys.
+pub fn deployment_sim(
+    tenant: &crate::scheduler::Tenant,
+    a: &crate::scheduler::Assignment,
+    cfg: &SystemConfig,
+) -> crate::workload::DeploymentSim {
+    let sims = stage_sims_for_grant(&tenant.model, &a.candidate.partition, cfg, &a.grant);
+    let switch_s = if a.grant.is_shared() {
+        let natural = stage_switch_costs(&tenant.model, &a.candidate.partition, cfg);
+        let total: f64 = natural.iter().sum();
+        if total > 0.0 {
+            let scale = a.grant.switch_s() / total;
+            natural.iter().map(|c| c * scale).collect()
+        } else {
+            vec![a.grant.switch_s() / sims.len() as f64; sims.len()]
+        }
+    } else {
+        Vec::new()
+    };
+    crate::workload::DeploymentSim { sims, replicas: a.replicas, switch_s }
+}
+
 /// Build the plan: pick the partition, derive per-stage simulated costs.
 pub fn plan(
     entry: &ModelEntry,
@@ -191,6 +265,8 @@ pub struct TenantServeReport {
     pub name: String,
     pub tpu_count: usize,
     pub replicas: usize,
+    /// Grant kind, e.g. `excl` or `shared 1/2`.
+    pub grant_label: String,
     pub partition_label: String,
     pub batch: usize,
     /// Real wall-clock for this tenant's whole batch on this host.
@@ -249,6 +325,7 @@ pub fn serve_pool(
                     name: name.clone(),
                     tpu_count: t.tpu_count,
                     replicas: t.replicas,
+                    grant_label: t.grant.label(),
                     partition_label: t.partition_label.clone(),
                     batch,
                     wall_s: wall,
@@ -588,6 +665,42 @@ mod tests {
             assert!(s.batches >= 1, "{name}");
         }
         pool.shutdown();
+    }
+
+    #[test]
+    fn switch_costs_follow_partition_and_grants_dilate_service() {
+        use crate::model::synthetic::fc_model;
+        use crate::scheduler::DeviceGrant;
+        use crate::segment::{uniform_cuts, Partition};
+        let cfg = SystemConfig::default();
+        let m = fc_model(512);
+        let part = uniform_cuts(m.len(), 2);
+        let costs = stage_switch_costs(&m, &part, &cfg);
+        assert_eq!(costs.len(), 2);
+        assert!(costs.iter().all(|&c| c > 0.0));
+        // total re-load time is partition-invariant: same bytes cross the
+        // same host link wherever the cuts fall
+        let whole = stage_switch_costs(&m, &Partition::whole(m.len()), &cfg);
+        let total: f64 = costs.iter().sum();
+        assert!((total - whole[0]).abs() < 1e-12, "{total} vs {whole:?}");
+
+        // a 1/2 slice doubles every stage's service time, nothing else
+        let excl = stage_sims(&m, &part, &cfg);
+        let grant = DeviceGrant::Shared {
+            slice: 0.5,
+            switch_s: total,
+            group: vec!["a".into(), "b".into()],
+        };
+        let shared = stage_sims_for_grant(&m, &part, &cfg, &grant);
+        for (e, s) in excl.iter().zip(&shared) {
+            assert!((s.exec_s - 2.0 * e.exec_s).abs() < 1e-12);
+            assert_eq!(s.hop_out_s, e.hop_out_s);
+            assert_eq!(s.overhead_s, e.overhead_s);
+        }
+        let excl2 = stage_sims_for_grant(&m, &part, &cfg, &DeviceGrant::Exclusive);
+        for (e, s) in excl.iter().zip(&excl2) {
+            assert_eq!(e.exec_s, s.exec_s);
+        }
     }
 
     #[test]

@@ -18,7 +18,12 @@
 //!   per-request latencies, batch boundaries and flush reasons that are
 //!   **bit-for-bit reproducible** — this is what `repro loadgen` prints,
 //!   while the live `ServingPool` run (real threads, real queues)
-//!   verifies numerics against the same seeds.
+//!   verifies numerics against the same seeds;
+//! * [`simulate_deployment`] generalizes that to a whole
+//!   [`DeploymentSim`]: data-parallel replica fan-out (round-robin
+//!   sharded, like the live `ReplicaRouter`) and time-shared
+//!   [`DeviceGrant`](crate::scheduler::DeviceGrant)s, whose per-flush
+//!   parameter re-loads are reported as deterministic swap totals.
 //!
 //! Closed-loop arrivals are endogenous (each virtual client submits its
 //! next request one think-time after its previous response), so they are
@@ -207,6 +212,12 @@ pub struct OpenLoopRun {
     pub batches: Vec<SimBatch>,
     /// Completion time of the last request.
     pub makespan_s: f64,
+    /// Context switches of a time-shared deployment: one per flushed
+    /// batch (the co-resident ran in between), 0 when exclusive.
+    pub swaps: usize,
+    /// Total simulated parameter re-load time across those swaps, summed
+    /// over stages and replicas.
+    pub swap_overhead_s: f64,
 }
 
 impl OpenLoopRun {
@@ -224,12 +235,37 @@ impl OpenLoopRun {
     }
 }
 
+/// Deterministic model of one tenant's deployed pipelines for
+/// [`simulate_deployment`]: `replicas` identical copies of the staged
+/// pipeline (round-robin sharded, like the live `ReplicaRouter`),
+/// optionally time-shared with co-residents.
+#[derive(Debug, Clone)]
+pub struct DeploymentSim {
+    /// Per-stage simulated-clock parameters.  For a shared grant these
+    /// are the *slice-dilated* sims (`serving::stage_sims_for_grant`).
+    pub sims: Vec<StageSim>,
+    /// Data-parallel pipeline copies (>= 1); a flushed batch is sharded
+    /// round-robin across them, exactly like the live replica router.
+    pub replicas: usize,
+    /// Per-stage context-switch cost paid at every batch flush (the
+    /// co-resident ran in between, so the tenant's segment parameters
+    /// re-load from host memory).  Empty for exclusive grants.
+    pub switch_s: Vec<f64>,
+}
+
+impl DeploymentSim {
+    /// An exclusive single-pipeline deployment (the pre-sharing model).
+    pub fn exclusive(sims: Vec<StageSim>) -> Self {
+        DeploymentSim { sims, replicas: 1, switch_s: Vec::new() }
+    }
+}
+
 /// Deterministic queueing simulation of one tenant's open-loop serving:
 /// seeded arrivals -> dynamic batcher (`policy`) -> pipelined stages
-/// (`sims`, the same recurrence as the live simulated clock: stage-busy,
-/// GIL-serialized host overhead, hop latency).  The batcher is busy while
-/// a batch is in flight (the live worker serves synchronously), so the
-/// next batch opens no earlier than the previous batch's last response.
+/// (the same recurrence as the live simulated clock: stage-busy,
+/// GIL-serialized host overhead, hop latency), single-pipeline and
+/// exclusive.  See [`simulate_deployment`] for replica fan-out and
+/// time-shared (co-resident) deployments.
 ///
 /// Pure function of its arguments — calling it twice yields bit-identical
 /// results, which is what makes `repro loadgen` reports reproducible.
@@ -240,8 +276,34 @@ pub fn simulate_open_loop(
     policy: &BatchPolicy,
     sims: &[StageSim],
 ) -> OpenLoopRun {
+    simulate_deployment(arrivals, n, seed, policy, &DeploymentSim::exclusive(sims.to_vec()))
+}
+
+/// [`simulate_open_loop`] generalized over a whole [`DeploymentSim`]:
+///
+/// * **replica fan-out** — each flushed batch is sharded round-robin
+///   across `replicas` pipeline copies, each with its own stage clocks
+///   and host (GIL) server, and the batcher stays busy until the last
+///   shard's last response (the live worker serves synchronously);
+/// * **time-shared grants** — every flush first re-loads the tenant's
+///   segment parameters on each pipeline stage it uses (`switch_s`), and
+///   the run reports the swap count and total overhead.
+///
+/// Pure and seed-deterministic, like [`simulate_open_loop`].
+pub fn simulate_deployment(
+    arrivals: &Arrivals,
+    n: usize,
+    seed: u64,
+    policy: &BatchPolicy,
+    dep: &DeploymentSim,
+) -> OpenLoopRun {
     assert!(policy.max_batch >= 1);
-    assert!(!sims.is_empty());
+    assert!(!dep.sims.is_empty());
+    assert!(dep.replicas >= 1, "deployment needs at least one pipeline");
+    assert!(
+        dep.switch_s.is_empty() || dep.switch_s.len() == dep.sims.len(),
+        "switch costs must align with stages"
+    );
     let max_wait = policy.max_wait.as_secs_f64();
 
     // pending arrivals (time, id), sorted by time then id; a deque so the
@@ -264,13 +326,18 @@ pub fn simulate_open_loop(
         }
     }
 
+    let replicas = dep.replicas;
     let mut latencies = vec![0.0f64; n];
     let mut batches: Vec<SimBatch> = Vec::new();
-    let mut stage_free = vec![0.0f64; sims.len()];
-    let mut host_free = 0.0f64;
+    // per-replica clocks: each pipeline copy has its own stages and its
+    // own GIL-serialized host server (like the live `Pipeline`)
+    let mut stage_free = vec![vec![0.0f64; dep.sims.len()]; replicas];
+    let mut host_free = vec![0.0f64; replicas];
     let mut batcher_free = 0.0f64;
     let mut served = 0usize;
     let mut makespan = 0.0f64;
+    let mut swaps = 0usize;
+    let mut swap_overhead = 0.0f64;
 
     while served < n {
         debug_assert!(!pending.is_empty(), "unserved requests but no pending arrivals");
@@ -307,16 +374,31 @@ pub fn simulate_open_loop(
         };
         batches.push(SimBatch { flush_s, len: batch.len(), kind });
 
-        // pipeline recurrence, items in FIFO order
+        // time-shared deployment: the co-resident ran since the last
+        // flush, so each stage this batch touches re-loads the tenant's
+        // parameters from host memory before serving
+        if !dep.switch_s.is_empty() {
+            swaps += 1;
+            for rep_clocks in stage_free.iter_mut().take(replicas.min(batch.len())) {
+                for (si, &sw) in dep.switch_s.iter().enumerate() {
+                    rep_clocks[si] = rep_clocks[si].max(flush_s) + sw;
+                    swap_overhead += sw;
+                }
+            }
+        }
+
+        // pipeline recurrence, items in FIFO order, sharded round-robin
+        // across replicas (the live ReplicaRouter's split)
         let mut last_done = flush_s;
-        for &(arrival, id) in &batch {
+        for (pos, &(arrival, id)) in batch.iter().enumerate() {
+            let rep = pos % replicas;
             let mut t_in = flush_s;
-            for (si, sim) in sims.iter().enumerate() {
-                let ready = t_in.max(stage_free[si]);
-                let dispatch = ready.max(host_free);
-                host_free = dispatch + sim.overhead_s;
+            for (si, sim) in dep.sims.iter().enumerate() {
+                let ready = t_in.max(stage_free[rep][si]);
+                let dispatch = ready.max(host_free[rep]);
+                host_free[rep] = dispatch + sim.overhead_s;
                 let finish = dispatch + sim.overhead_s + sim.exec_s;
-                stage_free[si] = finish;
+                stage_free[rep][si] = finish;
                 t_in = finish + sim.hop_out_s;
             }
             let done = t_in;
@@ -331,8 +413,8 @@ pub fn simulate_open_loop(
             if closed && next_id < n {
                 // this virtual client thinks, then submits again
                 let t_next = done + think;
-                let pos = pending.partition_point(|&(t, _)| t <= t_next);
-                pending.insert(pos, (t_next, next_id));
+                let at = pending.partition_point(|&(t, _)| t <= t_next);
+                pending.insert(at, (t_next, next_id));
                 next_id += 1;
             }
         }
@@ -341,7 +423,13 @@ pub fn simulate_open_loop(
         batcher_free = last_done;
     }
 
-    OpenLoopRun { latencies_s: latencies, batches, makespan_s: makespan }
+    OpenLoopRun {
+        latencies_s: latencies,
+        batches,
+        makespan_s: makespan,
+        swaps,
+        swap_overhead_s: swap_overhead,
+    }
 }
 
 #[cfg(test)]
@@ -465,6 +553,61 @@ mod tests {
         for b in &run.batches {
             assert!(b.len >= 1);
         }
+    }
+
+    #[test]
+    fn replica_fanout_is_deterministic_and_cuts_queueing() {
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+        let s = sims(2, 1e-3);
+        let hot = Arrivals::Poisson { rate_hz: 3000.0 };
+        let one =
+            simulate_deployment(&hot, 300, 5, &policy, &DeploymentSim::exclusive(s.clone()));
+        let fan = DeploymentSim { sims: s, replicas: 2, switch_s: Vec::new() };
+        let two = simulate_deployment(&hot, 300, 5, &policy, &fan);
+        let again = simulate_deployment(&hot, 300, 5, &policy, &fan);
+        assert_eq!(two.latencies_s, again.latencies_s, "fan-out must stay deterministic");
+        assert_eq!(two.batches, again.batches);
+        assert_eq!(two.swaps, 0);
+        assert_eq!(two.latencies_s.len(), 300);
+        assert_eq!(two.batches.iter().map(|b| b.len).sum::<usize>(), 300);
+        // a second pipeline drains an overloaded queue faster
+        assert!(
+            two.makespan_s < one.makespan_s,
+            "2 replicas {} vs 1 {}",
+            two.makespan_s,
+            one.makespan_s
+        );
+        let mean =
+            |r: &OpenLoopRun| r.latencies_s.iter().sum::<f64>() / r.latencies_s.len() as f64;
+        assert!(mean(&two) < mean(&one));
+    }
+
+    #[test]
+    fn shared_deployment_pays_swaps_per_batch_deterministically() {
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+        let s = sims(2, 1e-3);
+        let arr = Arrivals::Poisson { rate_hz: 800.0 };
+        let excl =
+            simulate_deployment(&arr, 120, 9, &policy, &DeploymentSim::exclusive(s.clone()));
+        assert_eq!(excl.swaps, 0);
+        assert_eq!(excl.swap_overhead_s, 0.0);
+        // a 1/2 slice: exec dilates 2x, and every flush re-loads both
+        // stages' parameters at 3 ms each
+        let dilated: Vec<StageSim> =
+            s.iter().map(|x| StageSim { exec_s: 2.0 * x.exec_s, ..*x }).collect();
+        let dep = DeploymentSim { sims: dilated, replicas: 1, switch_s: vec![3e-3; 2] };
+        let shared = simulate_deployment(&arr, 120, 9, &policy, &dep);
+        let again = simulate_deployment(&arr, 120, 9, &policy, &dep);
+        assert_eq!(shared.latencies_s, again.latencies_s);
+        assert_eq!(shared.swaps, again.swaps, "swap totals must be seed-deterministic");
+        assert_eq!(shared.swaps, shared.batches.len(), "one swap per flushed batch");
+        assert!(
+            (shared.swap_overhead_s - shared.swaps as f64 * 6e-3).abs() < 1e-9,
+            "{shared:?}"
+        );
+        let mean =
+            |r: &OpenLoopRun| r.latencies_s.iter().sum::<f64>() / r.latencies_s.len() as f64;
+        assert!(mean(&shared) > mean(&excl), "co-residency must cost latency");
     }
 
     #[test]

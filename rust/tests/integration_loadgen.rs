@@ -118,6 +118,76 @@ fn open_loop_with_mid_run_churn_loses_nothing() {
     pool.shutdown();
 }
 
+/// ISSUE 3 acceptance: a shared deployment's loadgen table is
+/// byte-identical across runs of one seed, and the live co-resident
+/// pipelines serve the same seeds with bit-exact verification while
+/// counting their context switches.
+#[test]
+fn loadgen_shared_deployment_reproducible_and_serves_live() {
+    let cmd = "loadgen --models fc_small,fc_n512 --tpus 1 --allow-sharing --seed 11 \
+               --requests 80 --arrivals poisson:600 --csv";
+    let a = run(cmd);
+    assert_eq!(a, run(cmd), "same seed must render the identical shared CSV");
+    let header = a.lines().next().unwrap();
+    for col in ["grant", "swaps", "swap_over_ms", "replicas"] {
+        assert!(header.contains(col), "{header}");
+    }
+    assert!(a.contains("shared"), "{a}");
+
+    // the same spec drives a live pool of co-resident pipelines
+    let argv: Vec<String> = cmd.split_whitespace().map(String::from).collect();
+    let args = Args::parse(&argv).unwrap();
+    let (registry, alloc, spec) = cli::loadgen_spec(&args).unwrap();
+    assert!(alloc.allow_sharing);
+    let pool = ServingPool::deploy(
+        registry,
+        SystemConfig::default(),
+        alloc,
+        BackendKind::Synthetic,
+        OpenOptions { policy: spec.policy, queue_capacity: 32 },
+    )
+    .unwrap();
+    let reports = serving::serve_open_loop(&pool, &spec.loads, spec.seed, true).unwrap();
+    assert_eq!(reports.len(), 2);
+    for r in &reports {
+        assert_eq!(r.completed, 80, "{}", r.name);
+        assert!(r.verified, "{}", r.name);
+        let s = pool.tenant_metrics(&r.name).unwrap().snapshot();
+        assert!(s.swaps >= 1, "{}: co-resident must swap: {s:?}", r.name);
+        assert!(s.swap_overhead_s > 0.0, "{}: {s:?}", r.name);
+    }
+    let s = pool.metrics.snapshot();
+    assert_eq!(s.shared, 2);
+    pool.shutdown();
+}
+
+/// Replica fan-out end-to-end: the table models the round-robin shards
+/// deterministically and the live replicated pipelines verify bit-exact.
+#[test]
+fn loadgen_replicated_deployment_reproducible_and_serves_live() {
+    let cmd = "loadgen --models fc_small --tpus 2 --max-tpus-per-model 1 --seed 4 \
+               --requests 60 --arrivals poisson:1500 --csv";
+    let a = run(cmd);
+    assert_eq!(a, run(cmd), "replicated CSV must be seed-stable");
+
+    let argv: Vec<String> = cmd.split_whitespace().map(String::from).collect();
+    let args = Args::parse(&argv).unwrap();
+    let (registry, alloc, spec) = cli::loadgen_spec(&args).unwrap();
+    let pool = ServingPool::deploy(
+        registry,
+        SystemConfig::default(),
+        alloc,
+        BackendKind::Synthetic,
+        OpenOptions { policy: spec.policy, queue_capacity: 32 },
+    )
+    .unwrap();
+    assert_eq!(pool.plan().assignment("fc_small").unwrap().replicas, 2);
+    let reports = serving::serve_open_loop(&pool, &spec.loads, spec.seed, true).unwrap();
+    assert_eq!(reports[0].completed, 60);
+    assert!(reports[0].verified);
+    pool.shutdown();
+}
+
 /// The live open-loop path and the deterministic table agree on the
 /// basics: same request counts, and the live responses verify.
 #[test]

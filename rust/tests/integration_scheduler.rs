@@ -64,6 +64,62 @@ fn pool_serves_two_tenants_end_to_end() {
     router.shutdown();
 }
 
+/// The ISSUE 3 acceptance criterion: on an oversubscribed pool,
+/// `--allow-sharing` admits a tenant the whole-TPU allocator queued, its
+/// p99 includes nonzero swap overhead, and the plan renders
+/// deterministically; with sharing off the plan is the whole-TPU one.
+#[test]
+fn schedule_cli_sharing_acceptance() {
+    let base = "schedule --models fc_huge,fc_n2580,conv_a --tpus 4";
+    let off = run(base);
+    assert!(off.contains("queued:"), "{off}");
+    assert!(!off.contains("shared"), "whole-TPU plans must not change: {off}");
+
+    let cmd = format!("{base} --allow-sharing");
+    let on = run(&cmd);
+    assert!(!on.contains("queued:"), "sharing must admit the queued tenant: {on}");
+    assert!(on.contains("shared 1/2"), "{on}");
+    assert!(on.contains("swap_over_ms"), "{on}");
+    assert_eq!(on, run(&cmd), "shared plans must render deterministically");
+}
+
+/// Full shared-grant path: allocate with sharing -> deploy co-resident
+/// pipelines -> serve both tenants concurrently -> bit-exact responses
+/// and per-tenant swap accounting.
+#[test]
+fn co_resident_tenants_serve_end_to_end() {
+    let mut registry = ModelRegistry::new();
+    registry.register_named("fc_small").unwrap();
+    registry.register_named("fc_n512").unwrap();
+    let cfg = SystemConfig::default();
+    let alloc =
+        AllocatorConfig { total_tpus: 1, allow_sharing: true, ..Default::default() };
+    let plan = allocate(&registry, &cfg, &alloc).unwrap();
+    assert_eq!(plan.assignments.len(), 2, "queued={:?}", plan.queued);
+    assert_eq!(plan.tpus_used(), 1, "both tenants ride one TPU");
+    assert_eq!(plan.shared_count(), 2);
+    for a in &plan.assignments {
+        assert!(a.effective_p99_s > a.candidate.p99_s, "swap overhead missing: {a:?}");
+    }
+
+    let router =
+        PoolRouter::deploy(&plan, &registry, &cfg, &BackendKind::Synthetic, 16).unwrap();
+    let reports = serving::serve_pool(&router, 20, 0xFEED, true).unwrap();
+    assert_eq!(reports.len(), 2);
+    for r in &reports {
+        assert!(r.verified, "{}", r.name);
+        assert!(r.grant_label.starts_with("shared"), "{r:?}");
+        let snap = router.tenant(&r.name).unwrap().metrics.snapshot();
+        assert_eq!(snap.completed, 20, "{}", r.name);
+        assert!(snap.swaps >= 1, "{}: {snap:?}", r.name);
+        assert!(snap.swap_overhead_s > 0.0, "{}: {snap:?}", r.name);
+    }
+    let s = router.metrics.snapshot();
+    assert_eq!(s.admitted, 2);
+    assert_eq!(s.shared, 2);
+    router.shutdown();
+}
+
 /// Leftover TPUs turn into data-parallel replicas served through the
 /// (previously dead) coordinator::ReplicaRouter.
 #[test]
