@@ -1,16 +1,26 @@
-# Build glue for the repro harness (DESIGN.md §5, ROADMAP "vendor/xla").
+# Build glue for the repro harness (DESIGN.md §5/§11, ROADMAP "vendor/xla").
 #
 # `make artifacts` runs the AOT driver: every contiguous segment of every
 # manifest model is lowered to an HLO-text artifact + manifest.json under
 # $(ARTIFACTS), which is what `repro serve`/`serve-pool` with the PJRT
 # backend (and the real xla crate swapped in for the vendor/xla stub)
 # consume.  Needs a Python with jax/numpy; the Rust side builds offline.
+#
+# The `smoke-*` targets are the exact commands the CI workflow runs, so a
+# local `make smoke` reproduces CI byte-for-byte.  The `bench-*` targets
+# drive the CI bench job: quick-mode `cargo bench` runs that emit
+# BENCH_<name>.json (schema: DESIGN.md §11) and a >25% regression gate
+# against the checked-in baselines under benches/baseline/.
 
 PYTHON    ?= python3
 ARTIFACTS ?= artifacts
 CARGO     ?= cargo
+BENCH_OUT ?= bench-out
+SMOKE_OUT ?= smoke-out
 
-.PHONY: all build test check artifacts python-test clean
+.PHONY: all build test check artifacts python-test clean \
+        smoke smoke-scheduler smoke-loadgen smoke-sharing \
+        bench-quick bench-check bench-baseline
 
 all: build
 
@@ -25,12 +35,86 @@ check:
 	$(CARGO) clippy --all-targets -- -D warnings
 
 # AOT-compile every manifest model's segments (python/compile/aot.py).
+# Skips with an install hint instead of a confusing ModuleNotFoundError
+# when no jax-equipped Python is around (the common offline case).
 artifacts:
-	cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS)
+	@if ! command -v $(PYTHON) >/dev/null 2>&1; then \
+		echo "make artifacts: skipping — $(PYTHON) not found on PATH."; \
+		echo "  install python3 + deps: pip install jax jaxlib numpy"; \
+	elif ! $(PYTHON) -c "import jax, numpy" >/dev/null 2>&1; then \
+		echo "make artifacts: skipping — $(PYTHON) lacks jax/numpy (the AOT driver needs them)."; \
+		echo "  install with: pip install jax jaxlib numpy   # then re-run: make artifacts"; \
+	else \
+		cd python && $(PYTHON) -m compile.aot --out ../$(ARTIFACTS); \
+	fi
 
 python-test:
 	cd python && $(PYTHON) -m pytest tests -q
 
+# ---- CI smoke (identical commands locally and in .github/workflows/ci.yml)
+
+smoke: smoke-scheduler smoke-loadgen smoke-sharing
+
+smoke-scheduler:
+	$(CARGO) run --release --bin repro -- schedule --models fc_big,conv_a,conv_b --tpus 4
+	$(CARGO) run --release --example serve_multi_tenant
+
+smoke-loadgen:
+	mkdir -p $(SMOKE_OUT)
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 --models fc_small,conv_a \
+		--tpus 4 --requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/loadgen_a.csv
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 --models fc_small,conv_a \
+		--tpus 4 --requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/loadgen_b.csv
+	diff $(SMOKE_OUT)/loadgen_a.csv $(SMOKE_OUT)/loadgen_b.csv
+	$(CARGO) run --release --example open_loop
+
+smoke-sharing:
+	mkdir -p $(SMOKE_OUT)
+	# oversubscribed pool: the whole-TPU auction queues one tenant...
+	$(CARGO) run --release --bin repro -- schedule \
+		--models fc_huge,fc_n2580,conv_a --tpus 4 | grep -q "queued:"
+	# ...which --allow-sharing admits onto time-sliced devices,
+	# deterministically across invocations
+	$(CARGO) run --release --bin repro -- schedule \
+		--models fc_huge,fc_n2580,conv_a --tpus 4 --allow-sharing > $(SMOKE_OUT)/shared_a.txt
+	$(CARGO) run --release --bin repro -- schedule \
+		--models fc_huge,fc_n2580,conv_a --tpus 4 --allow-sharing > $(SMOKE_OUT)/shared_b.txt
+	diff $(SMOKE_OUT)/shared_a.txt $(SMOKE_OUT)/shared_b.txt
+	grep -q "shared 1/2" $(SMOKE_OUT)/shared_a.txt
+	! grep -q "queued:" $(SMOKE_OUT)/shared_a.txt
+	# a shared deployment's loadgen table is byte-identical per seed
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 \
+		--models fc_small,fc_n512 --tpus 1 --allow-sharing \
+		--requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/shared_lg_a.csv
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 \
+		--models fc_small,fc_n512 --tpus 1 --allow-sharing \
+		--requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/shared_lg_b.csv
+	diff $(SMOKE_OUT)/shared_lg_a.csv $(SMOKE_OUT)/shared_lg_b.csv
+	# the quantum knob stays seed-deterministic too
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 \
+		--models fc_small,fc_n512 --tpus 1 --allow-sharing --quantum-us 500 \
+		--requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/shared_q_a.csv
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 \
+		--models fc_small,fc_n512 --tpus 1 --allow-sharing --quantum-us 500 \
+		--requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/shared_q_b.csv
+	diff $(SMOKE_OUT)/shared_q_a.csv $(SMOKE_OUT)/shared_q_b.csv
+
+# ---- CI bench pipeline (DESIGN.md §11)
+
+bench-quick:
+	mkdir -p $(BENCH_OUT)
+	BENCH_QUICK=1 BENCH_JSON_DIR=$(BENCH_OUT) $(CARGO) bench --bench scheduler
+	BENCH_QUICK=1 BENCH_JSON_DIR=$(BENCH_OUT) $(CARGO) bench --bench loadgen
+
+bench-check:
+	$(PYTHON) scripts/bench_check.py $(BENCH_OUT)/BENCH_scheduler.json benches/baseline/BENCH_scheduler.json
+	$(PYTHON) scripts/bench_check.py $(BENCH_OUT)/BENCH_loadgen.json benches/baseline/BENCH_loadgen.json
+
+# Re-measure on the reference runner and commit the result to activate
+# the regression gate.
+bench-baseline: bench-quick
+	cp $(BENCH_OUT)/BENCH_scheduler.json $(BENCH_OUT)/BENCH_loadgen.json benches/baseline/
+
 clean:
-	rm -rf $(ARTIFACTS)
+	rm -rf $(ARTIFACTS) $(BENCH_OUT) $(SMOKE_OUT)
 	$(CARGO) clean

@@ -11,11 +11,23 @@ use tpu_pipeline::scheduler::resolve_model;
 use tpu_pipeline::segment::strategy::Strategy;
 use tpu_pipeline::serving::stage_sims;
 use tpu_pipeline::util::bench::{black_box, Bencher};
-use tpu_pipeline::workload::{arrival_times, simulate_open_loop, Arrivals};
+use tpu_pipeline::workload::{
+    arrival_times, simulate_deployment, simulate_open_loop, Arrivals, DeploymentSim,
+};
 
 fn main() {
     let cfg = SystemConfig::default();
-    let mut b = Bencher::new().with_budget(Duration::from_millis(250), Duration::from_millis(60));
+    // BENCH_QUICK shrinks the budget (the CI bench job's quick mode);
+    // BENCH_JSON_DIR makes report() emit BENCH_loadgen.json for the
+    // regression gate (scripts/bench_check.py, DESIGN.md §11)
+    let mut b = Bencher::new()
+        .with_budget(Duration::from_millis(250), Duration::from_millis(60))
+        .quick_from_env();
+
+    // fixed-work calibration scenario for machine-normalized regression
+    // ratios (Bencher::bench_calibration keeps both binaries' loops
+    // bit-identical)
+    b.bench_calibration();
 
     // seeded schedule generation
     let poisson = Arrivals::Poisson { rate_hz: 1000.0 };
@@ -35,6 +47,33 @@ fn main() {
     ] {
         b.bench(&format!("open_loop_sim/{name}_2k"), || {
             simulate_open_loop(black_box(&arrivals), 2000, 7, &policy, &sims)
+        });
+    }
+
+    // time-shared deployment with quantum-gated swap accounting (the
+    // sharing path `repro loadgen --allow-sharing --quantum-us` takes)
+    let dilated: Vec<_> = stage_sims(&model, &partition, &cfg)
+        .into_iter()
+        .map(|mut s| {
+            s.exec_s *= 2.0;
+            s
+        })
+        .collect();
+    for (name, quantum_s) in [("per_flush", 0.0), ("quantum_5ms", 5e-3)] {
+        let dep = DeploymentSim {
+            sims: dilated.clone(),
+            replicas: 1,
+            switch_s: vec![2e-3; dilated.len()],
+            quantum_s,
+        };
+        b.bench(&format!("shared_sim/{name}_2k"), || {
+            simulate_deployment(
+                black_box(&Arrivals::Poisson { rate_hz: 800.0 }),
+                2000,
+                7,
+                &policy,
+                &dep,
+            )
         });
     }
 

@@ -24,7 +24,17 @@ fn registry(m: usize) -> ModelRegistry {
 
 fn main() {
     let cfg = SystemConfig::default();
-    let mut b = Bencher::new().with_budget(Duration::from_millis(250), Duration::from_millis(60));
+    // BENCH_QUICK shrinks the budget (the CI bench job's quick mode);
+    // BENCH_JSON_DIR makes report() emit BENCH_scheduler.json for the
+    // regression gate (scripts/bench_check.py, DESIGN.md §11)
+    let mut b = Bencher::new()
+        .with_budget(Duration::from_millis(250), Duration::from_millis(60))
+        .quick_from_env();
+
+    // fixed-work calibration scenario: bench_check.py divides every
+    // scenario by it so the regression gate compares machine-normalized
+    // ratios, not absolute wall times
+    b.bench_calibration();
 
     // per-model candidate search (placement + profiled simulation)
     for name in ["fc_small", "fc_huge", "conv_b"] {
@@ -44,6 +54,20 @@ fn main() {
                 allocate(black_box(&reg), &cfg, &alloc).unwrap()
             });
         }
+    }
+
+    // the unified sharing-aware search: per-device slices widen the
+    // branching factor, so its replanning latency is tracked separately
+    for m in [2usize, 4] {
+        let reg = registry(m);
+        let alloc = AllocatorConfig {
+            total_tpus: 4,
+            allow_sharing: true,
+            ..Default::default()
+        };
+        b.bench(&format!("allocate_sharing/m{m}_n4"), || {
+            allocate(black_box(&reg), &cfg, &alloc).unwrap()
+        });
     }
 
     b.report("scheduler");

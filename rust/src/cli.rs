@@ -409,9 +409,10 @@ pub fn run(args: &Args) -> Result<String> {
 /// Parse the shared pool flags — `--models`, `--weights`, `--slo-ms`,
 /// `--tpus`, `--batch`, `--max-tpus-per-model`, `--allow-spill`,
 /// `--no-replicas`, `--allow-sharing`, `--switch-cost-us`,
-/// `--max-residents` — into a registry + allocator config.  Shared by
-/// `repro schedule`, `repro serve-pool` and `repro loadgen` so planning
-/// and deployment always see the same tenancy spec.
+/// `--max-residents`, `--quantum-us` — into a registry + allocator
+/// config.  Shared by `repro schedule`, `repro serve-pool` and
+/// `repro loadgen` so planning and deployment always see the same
+/// tenancy spec.
 pub fn pool_spec(
     args: &Args,
     default_models: &str,
@@ -478,6 +479,8 @@ pub fn pool_spec(
             Some(us)
         }
     };
+    let quantum_us = args.f64_flag("quantum-us", 0.0)?;
+    anyhow::ensure!(quantum_us >= 0.0, "--quantum-us must be non-negative");
     let alloc = AllocatorConfig {
         total_tpus: args.usize_flag("tpus", 4)?,
         batch: args.batch()?,
@@ -487,6 +490,7 @@ pub fn pool_spec(
         allow_sharing: args.bool_flag("allow-sharing"),
         switch_cost_us,
         max_residents: args.usize_flag("max-residents", 2)?,
+        quantum_us,
     };
     Ok((registry, alloc))
 }
@@ -519,7 +523,12 @@ pub fn schedule(args: &Args) -> Result<String> {
             plan.queued.len(),
             plan.rejected.len(),
             if plan.sharing_enabled {
-                format!(" shared {}", plan.shared_count())
+                let quantum = if alloc.quantum_us > 0.0 {
+                    format!(" (quantum {} us)", alloc.quantum_us)
+                } else {
+                    String::new()
+                };
+                format!(" shared {}{}", plan.shared_count(), quantum)
             } else {
                 String::new()
             },
@@ -657,9 +666,9 @@ pub fn loadgen_table(
         ),
         &[
             "model", "arrivals", "offered_hz", "requests", "tpus", "replicas", "split",
-            "grant", "batches", "flush_size", "flush_deadline", "flush_closed", "swaps",
-            "swap_over_ms", "p50_ms", "p99_ms", "mean_ms", "throughput_hz", "max_wait_ms",
-            "status",
+            "grant", "quantum_us", "batches", "flush_size", "flush_deadline",
+            "flush_closed", "swaps", "swap_over_ms", "p50_ms", "p99_ms", "mean_ms",
+            "throughput_hz", "max_wait_ms", "status",
         ],
     );
     for load in &spec.loads {
@@ -679,7 +688,7 @@ pub fn loadgen_table(
                 offered,
                 load.requests.to_string(),
             ];
-            row.extend(vec!["-".to_string(); 15]);
+            row.extend(vec!["-".to_string(); 16]);
             row.push(status.into());
             t.row(row);
             continue;
@@ -709,6 +718,7 @@ pub fn loadgen_table(
             a.replicas.to_string(),
             a.candidate.partition.label(),
             a.grant.label(),
+            format!("{:.0}", a.grant.quantum_s() * 1e6),
             run.batches.len().to_string(),
             run.flushes(FlushKind::Size).to_string(),
             run.flushes(FlushKind::Deadline).to_string(),
@@ -843,14 +853,22 @@ multi-tenant pool scheduler (cost-model simulation; no artifacts needed):
            [--weights 2,1,1] [--slo-ms 20,-,50] [--allow-spill]
            [--max-tpus-per-model 4] [--no-replicas]
            [--allow-sharing] [--switch-cost-us US] [--max-residents 2]
+           [--quantum-us US]
         memory-aware admission + per-model (tpu_count, strategy, p99)
         chosen by the pool allocator; models: fc_small fc_big fc_huge
         conv_a conv_b conv_big pyramid, or fc_n<width> / conv_f<filters>.
-        --allow-sharing lets a queued tenant time-share an already granted
-        TPU set: co-residents each get a 1/N slice and pay a context-switch
-        cost (segment parameter re-load from host memory, derived from the
-        cost model's off-chip bandwidth — override with --switch-cost-us);
-        a shared grant is only made when every affected SLO still holds.
+        --allow-sharing folds time-multiplexed per-device slices into the
+        branch-and-bound itself: a tenant's grant is exclusive or a
+        1/2..1/max-residents slice of each device it runs on, tenants of
+        different pipeline depths may overlap on a device subset (the
+        devices column shows the concrete ids), and every shared
+        candidate's p99 prices in the context-switch cost (segment
+        parameter re-load from host memory, derived from the cost
+        model's off-chip bandwidth — override with --switch-cost-us).
+        A shared grant breaching the tenant's own SLO is never made.
+        --quantum-us sets the scheduling-quantum length: longer quanta
+        swap less often under overload (throughput) at a priced-in
+        (1-slice)*quantum worst-case wait (latency); 0 swaps per flush.
         Tenants with --slo-ms also print their derived batch policy
         (max_wait shrinks under tight SLOs)
 
@@ -877,6 +895,9 @@ open-loop load generation (seeded, bit-reproducible):
               model T_S seconds into the live run (online re-plan + drain)
           [--allow-sharing]  time-multiplexed co-residency (see schedule);
               shared tenants report deterministic swap counts + overhead
+          [--quantum-us US]  scheduling-quantum length: flushes inside the
+              quantum keep parameters resident (fewer swaps, more
+              throughput, later p99 — the quantum_us column echoes it)
           [--no-replicas]    plan without leftover-TPU replica grants
           [--no-live]  print only the deterministic table
           [--csv]      CSV table only (identical across runs of one seed)
@@ -1050,6 +1071,58 @@ mod tests {
         assert!(on.contains("shared 2"), "footer counts shared grants: {on}");
         // two invocations render the identical plan
         assert_eq!(on, run(&Args::parse(&argv(cmd)).unwrap()).unwrap());
+    }
+
+    #[test]
+    fn schedule_sharing_off_ignores_the_quantum_knob_byte_for_byte() {
+        // the PR 3 compatibility invariant: without --allow-sharing the
+        // unified search renders the exact whole-TPU table, whatever the
+        // quantum is set to
+        let base = "schedule --models fc_big,conv_a,conv_b --tpus 4";
+        let plain = run(&Args::parse(&argv(base)).unwrap()).unwrap();
+        let with_q =
+            run(&Args::parse(&argv(&format!("{base} --quantum-us 50000"))).unwrap()).unwrap();
+        assert_eq!(plain, with_q, "quantum must be inert with sharing off");
+        assert!(!plain.contains("devices"), "{plain}");
+        assert!(!plain.contains("grant"), "{plain}");
+    }
+
+    #[test]
+    fn schedule_sharing_shows_devices_and_quantum() {
+        let cmd = "schedule --models fc_small,fc_n512 --tpus 1 --allow-sharing \
+                   --quantum-us 500";
+        let out = run(&Args::parse(&argv(cmd)).unwrap()).unwrap();
+        assert!(out.contains("devices"), "{out}");
+        assert!(out.contains("shared 1/2"), "{out}");
+        assert!(out.contains("quantum 500 us"), "{out}");
+        assert_eq!(out, run(&Args::parse(&argv(cmd)).unwrap()).unwrap());
+        // negative quantum is rejected
+        let bad = Args::parse(&argv("schedule --models fc_small --quantum-us -5")).unwrap();
+        assert!(run(&bad).is_err());
+    }
+
+    #[test]
+    fn loadgen_quantum_cuts_swaps_deterministically() {
+        let base = "loadgen --models fc_small,fc_n512 --tpus 1 --allow-sharing --seed 7 \
+                    --requests 60 --arrivals poisson:900 --csv";
+        let swaps_of = |out: &str| -> usize {
+            let header = out.lines().next().unwrap();
+            let col = header.split(',').position(|c| c == "swaps").unwrap();
+            out.lines()
+                .skip(1)
+                .map(|l| l.split(',').nth(col).unwrap().parse::<usize>().unwrap())
+                .sum()
+        };
+        let a = Args::parse(&argv(base)).unwrap();
+        let no_quantum = run(&a).unwrap();
+        assert!(no_quantum.lines().next().unwrap().contains("quantum_us"), "{no_quantum}");
+        let q = Args::parse(&argv(&format!("{base} --quantum-us 1000000"))).unwrap();
+        let with_quantum = run(&q).unwrap();
+        assert_eq!(with_quantum, run(&q).unwrap(), "quantum runs must stay seed-stable");
+        assert!(
+            swaps_of(&with_quantum) < swaps_of(&no_quantum),
+            "a 1s quantum must swap less:\n{no_quantum}\n{with_quantum}"
+        );
     }
 
     #[test]

@@ -142,12 +142,13 @@ fn cmd_serve_pool(args: &Args) -> Result<()> {
         let s = t.metrics.snapshot();
         println!(
             "  {:10} metrics: submitted {} completed {} errors {} | swaps {} \
-             (overhead {}) | real p50 {} p99 {}",
+             (skipped {}, overhead {}) | real p50 {} p99 {}",
             t.name,
             s.submitted,
             s.completed,
             s.errors,
             s.swaps,
+            s.swaps_skipped,
             fmt_seconds(s.swap_overhead_s),
             fmt_seconds(s.real_p50_s),
             fmt_seconds(s.real_p99_s),
@@ -302,7 +303,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
             let s = m.snapshot();
             println!(
                 "  {:10} batches {} (size {} / deadline {} / closed {}) mean batch {:.1} \
-                 max queue depth {} | swaps {} (overhead {}) | real p50 {} p99 {}",
+                 max queue depth {} | swaps {} (skipped {}, overhead {}) | real p50 {} p99 {}",
                 name,
                 s.batches,
                 s.flush_size,
@@ -311,6 +312,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 s.mean_batch,
                 s.max_queue_depth,
                 s.swaps,
+                s.swaps_skipped,
                 fmt_seconds(s.swap_overhead_s),
                 fmt_seconds(s.real_p50_s),
                 fmt_seconds(s.real_p99_s),

@@ -140,6 +140,7 @@ struct TenantCounters {
     flush_closed: u64,
     max_queue_depth: u64,
     swaps: u64,
+    swaps_skipped: u64,
     swap_overhead_s: f64,
 }
 
@@ -184,6 +185,14 @@ impl TenantMetrics {
         g.swap_overhead_s += overhead_s;
     }
 
+    /// Record a batch flush that landed inside the tenant's current
+    /// scheduling quantum: the parameters stayed resident and no re-load
+    /// was paid (only time-shared deployments with `--quantum-us > 0`
+    /// ever skip).
+    pub fn record_swap_skipped(&self) {
+        self.extra.lock().unwrap().swaps_skipped += 1;
+    }
+
     /// Take an immutable snapshot of every counter.
     pub fn snapshot(&self) -> TenantSnapshot {
         let c = self.core.snapshot();
@@ -203,6 +212,7 @@ impl TenantMetrics {
             flush_closed: e.flush_closed,
             max_queue_depth: e.max_queue_depth,
             swaps: e.swaps,
+            swaps_skipped: e.swaps_skipped,
             swap_overhead_s: e.swap_overhead_s,
             real_p50_s: c.real_p50_s,
             real_p99_s: c.real_p99_s,
@@ -235,6 +245,9 @@ pub struct TenantSnapshot {
     pub max_queue_depth: u64,
     /// Context switches of a time-shared deployment (0 when exclusive).
     pub swaps: u64,
+    /// Batch flushes that stayed inside the scheduling quantum and
+    /// skipped the re-load (0 when exclusive or `quantum_us = 0`).
+    pub swaps_skipped: u64,
     /// Cumulative simulated parameter re-load time across those swaps.
     pub swap_overhead_s: f64,
     /// Real wall-clock latency p50 (seconds).
@@ -436,8 +449,10 @@ mod tests {
         let m = TenantMetrics::default();
         m.record_swap(2e-3);
         m.record_swap(2e-3);
+        m.record_swap_skipped();
         let s = m.snapshot();
         assert_eq!(s.swaps, 2);
+        assert_eq!(s.swaps_skipped, 1);
         assert!((s.swap_overhead_s - 4e-3).abs() < 1e-12, "{s:?}");
     }
 

@@ -120,9 +120,11 @@ impl PoolScheduler {
 
 /// Render a pool plan as the `repro schedule` admission table.
 ///
-/// Plans computed with sharing enabled grow two extra columns — the
-/// grant kind (`excl` / `shared 1/N`) and the predicted p99 inflation
-/// from co-residency — so whole-TPU plans render exactly as before.
+/// Plans computed with sharing enabled grow three extra columns — the
+/// grant kind (`excl` / `shared 1/N`), the concrete device ids (so
+/// overlapping per-device slices are visible), and the predicted p99
+/// inflation from co-residency — so whole-TPU plans render exactly as
+/// before.
 pub fn plan_table(plan: &PoolPlan) -> Table {
     let shared_cols = plan.sharing_enabled;
     let mut headers = vec![
@@ -131,6 +133,7 @@ pub fn plan_table(plan: &PoolPlan) -> Table {
     ];
     if shared_cols {
         headers.push("grant");
+        headers.push("devices");
         headers.push("swap_over_ms");
     }
     headers.push("status");
@@ -159,6 +162,13 @@ pub fn plan_table(plan: &PoolPlan) -> Table {
         ];
         if shared_cols {
             row.push(a.grant.label());
+            row.push(
+                a.devices
+                    .iter()
+                    .map(ToString::to_string)
+                    .collect::<Vec<_>>()
+                    .join("+"),
+            );
             row.push(ms(a.swap_overhead_s()));
         }
         row.push(if a.slo_violated() {
@@ -168,7 +178,7 @@ pub fn plan_table(plan: &PoolPlan) -> Table {
         });
         t.row(row);
     }
-    let dashes = if shared_cols { 11 } else { 9 };
+    let dashes = if shared_cols { 12 } else { 9 };
     for q in &plan.queued {
         let mut row = vec![q.name.clone()];
         row.extend(vec!["-".to_string(); dashes]);
@@ -222,6 +232,26 @@ mod tests {
             assert_eq!(r.data.len(), client.out_elems);
         }
         pool.shutdown();
+    }
+
+    #[test]
+    fn plan_table_grows_device_columns_only_when_sharing() {
+        let mut s = PoolScheduler::new(
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: 1, allow_sharing: true, ..Default::default() },
+        );
+        s.registry.register_named("fc_small").unwrap();
+        s.registry.register_named("fc_n512").unwrap();
+        let on = plan_table(&s.plan().unwrap()).render();
+        assert!(on.contains("grant"), "{on}");
+        assert!(on.contains("devices"), "{on}");
+        assert!(on.contains("shared 1/2"), "{on}");
+
+        s.alloc.allow_sharing = false;
+        let off = plan_table(&s.plan().unwrap()).render();
+        assert!(!off.contains("grant"), "{off}");
+        assert!(!off.contains("devices"), "{off}");
+        assert!(!off.contains("swap_over_ms"), "{off}");
     }
 
     #[test]

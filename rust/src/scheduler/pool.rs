@@ -187,17 +187,37 @@ fn tenant_worker(
     done: Sender<Response>,
     metrics: Arc<TenantMetrics>,
     swap_s: f64,
+    quantum_s: f64,
 ) {
     // sim latencies are recorded relative to the deployment's sim clock at
     // batch start (the clock is monotonic across batches)
     let mut sim_epoch = 0.0f64;
+    // host-clock instant of the last paid parameter re-load: a batch that
+    // lands inside the tenant's current scheduling quantum keeps the
+    // parameters resident and skips the swap (quantum_s = 0 swaps on
+    // every flush, the PR 3 behaviour).  The live run paces arrivals in
+    // real time, so the host clock is the live analogue of the sim's
+    // flush clock; exact swap accounting is the deterministic sim's job
+    // (`workload::simulate_deployment`).
+    let started = std::time::Instant::now();
+    let mut last_swap_s = f64::NEG_INFINITY;
     while let Some((batch, kind)) = batcher.next_batch_with_reason() {
         metrics.record_batch(batch.len() as u64, batcher.queue_depth() as u64, kind);
-        if swap_s > 0.0 {
-            // time-shared deployment: the co-resident ran since the last
-            // flush, so this batch swaps the tenant's parameters back in
-            metrics.record_swap(swap_s);
-        }
+        let batch_swap_s = if swap_s > 0.0 {
+            let now_s = started.elapsed().as_secs_f64();
+            if now_s >= last_swap_s + quantum_s {
+                // time-shared deployment: the co-resident ran since the
+                // last quantum, so this batch swaps the parameters back in
+                last_swap_s = now_s;
+                metrics.record_swap(swap_s);
+                swap_s
+            } else {
+                metrics.record_swap_skipped();
+                0.0
+            }
+        } else {
+            0.0
+        };
         match deployment.serve_batch(batch) {
             Ok(responses) => {
                 let base = sim_epoch;
@@ -208,7 +228,7 @@ fn tenant_worker(
                     // allocator prediction and the deterministic sim
                     metrics.record_response(
                         r.real_latency_s,
-                        (r.sim_done_s - base).max(0.0) + swap_s,
+                        (r.sim_done_s - base).max(0.0) + batch_swap_s,
                     );
                     if r.sim_done_s > sim_epoch {
                         sim_epoch = r.sim_done_s;
@@ -304,7 +324,9 @@ impl ServingPool {
                     a.candidate.tpu_count == lt.tpu_count
                         && a.replicas == lt.replicas
                         && a.candidate.partition.cuts == lt.partition_cuts
-                        && a.grant == lt.grant
+                        // device renumbering alone is not a change: only
+                        // slice/cost/co-resident differences force a drain
+                        && a.grant.same_deployment(&lt.grant)
                 }
                 None => false,
             };
@@ -352,8 +374,9 @@ impl ServingPool {
             let deployment = built.deployment;
             let worker_metrics = metrics.clone();
             let swap_s = a.grant.switch_s();
+            let quantum_s = a.grant.quantum_s();
             let worker = std::thread::spawn(move || {
-                tenant_worker(deployment, batcher, done_tx, worker_metrics, swap_s)
+                tenant_worker(deployment, batcher, done_tx, worker_metrics, swap_s, quantum_s)
             });
             st.live.insert(
                 a.name.clone(),

@@ -278,11 +278,17 @@ pub struct TenantHandle {
     /// is shared, so two interleaved `serve_batch` drains would
     /// cross-deliver responses.
     serve_lock: std::sync::Mutex<()>,
-    /// The tenant's simulated clock at the end of the last served batch.
-    /// Pipeline sim clocks never reset, so per-batch sim latencies are
-    /// recorded relative to this epoch (otherwise the metric would grow
-    /// without bound across batches).
-    sim_epoch: std::sync::Mutex<f64>,
+    /// `(sim epoch, last swap)`: the tenant's simulated clock at the end
+    /// of the last served batch, and the host-clock instant (seconds
+    /// since `started`) of the last paid parameter re-load.  Pipeline sim
+    /// clocks never reset, so per-batch sim latencies are recorded
+    /// relative to the epoch (otherwise the metric would grow without
+    /// bound across batches); the swap clock quantum-gates the per-batch
+    /// re-load charge on the host clock, the live analogue of the
+    /// deterministic sim's flush clock.
+    sim_state: std::sync::Mutex<(f64, f64)>,
+    /// Deployment birth, the origin of the swap clock above.
+    started: std::time::Instant,
 }
 
 impl TenantHandle {
@@ -344,7 +350,8 @@ impl PoolRouter {
                     metrics: Arc::new(TenantMetrics::default()),
                     deployment: built.deployment,
                     serve_lock: std::sync::Mutex::new(()),
-                    sim_epoch: std::sync::Mutex::new(0.0),
+                    sim_state: std::sync::Mutex::new((0.0, f64::NEG_INFINITY)),
+                    started: std::time::Instant::now(),
                 },
             );
         }
@@ -388,29 +395,38 @@ impl PoolRouter {
         };
         match result {
             Ok(responses) => {
-                // a time-shared tenant swaps back in once per served
-                // batch (the co-resident ran in between); the re-load
-                // runs before the batch, so it also delays every
-                // response's recorded sim latency
-                let swap_s = t.grant.switch_s();
-                if t.grant.is_shared() {
-                    t.metrics.record_swap(swap_s);
-                }
-                // sim latencies relative to this tenant's sim clock at
-                // batch start (the pipeline's simulated clock is
+                // a time-shared tenant swaps its parameters back in at
+                // most once per scheduling quantum (the co-resident ran
+                // in between); the re-load runs before the batch, so it
+                // also delays every response's recorded sim latency.
+                // sim latencies are relative to this tenant's sim clock
+                // at batch start (the pipeline's simulated clock is
                 // monotonic across batches)
-                let mut epoch = t.sim_epoch.lock().unwrap();
-                let base = *epoch;
+                let mut st = t.sim_state.lock().unwrap();
+                let (base, last_swap) = *st;
+                let swap_s = if t.grant.is_shared() {
+                    let now_s = t.started.elapsed().as_secs_f64();
+                    if now_s >= last_swap + t.grant.quantum_s() {
+                        st.1 = now_s;
+                        t.metrics.record_swap(t.grant.switch_s());
+                        t.grant.switch_s()
+                    } else {
+                        t.metrics.record_swap_skipped();
+                        0.0
+                    }
+                } else {
+                    0.0
+                };
                 for r in &responses {
                     t.metrics.record_response(
                         r.real_latency_s,
                         (r.sim_done_s - base).max(0.0) + swap_s,
                     );
-                    if r.sim_done_s > *epoch {
-                        *epoch = r.sim_done_s;
+                    if r.sim_done_s > st.0 {
+                        st.0 = r.sim_done_s;
                     }
                 }
-                drop(epoch);
+                drop(st);
                 Ok(responses)
             }
             Err(e) => {

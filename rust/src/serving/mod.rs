@@ -118,8 +118,10 @@ pub fn stage_sims_for_grant(
 /// grant-dilated stage sims, the replica fan-out, and (for shared
 /// grants) the per-stage context-switch costs, normalized so their sum
 /// matches the grant's `switch_s` even under a `--switch-cost-us`
-/// override.  `repro loadgen` simulates exactly this, so the
-/// deterministic table always matches the plan the live pool deploys.
+/// override, plus the grant's scheduling-quantum length (a flush inside
+/// the quantum keeps the parameters resident and skips the re-load).
+/// `repro loadgen` simulates exactly this, so the deterministic table
+/// always matches the plan the live pool deploys.
 pub fn deployment_sim(
     tenant: &crate::scheduler::Tenant,
     a: &crate::scheduler::Assignment,
@@ -138,7 +140,12 @@ pub fn deployment_sim(
     } else {
         Vec::new()
     };
-    crate::workload::DeploymentSim { sims, replicas: a.replicas, switch_s }
+    crate::workload::DeploymentSim {
+        sims,
+        replicas: a.replicas,
+        switch_s,
+        quantum_s: a.grant.quantum_s(),
+    }
 }
 
 /// Build the plan: pick the partition, derive per-stage simulated costs.
@@ -689,7 +696,8 @@ mod tests {
         let grant = DeviceGrant::Shared {
             slice: 0.5,
             switch_s: total,
-            group: vec!["a".into(), "b".into()],
+            quantum_s: 0.0,
+            residents: vec![(0, vec!["a".into(), "b".into()])],
         };
         let shared = stage_sims_for_grant(&m, &part, &cfg, &grant);
         for (e, s) in excl.iter().zip(&shared) {

@@ -104,8 +104,38 @@ impl Bencher {
         self.rows.last().unwrap()
     }
 
+    /// Measure the fixed-work calibration scenario every bench binary
+    /// shares (`calibration/xoshiro_1m`: one million PRNG steps).  The
+    /// regression gate (`scripts/bench_check.py`) divides every scenario
+    /// by it, so it compares machine-normalized ratios instead of
+    /// absolute wall times — the loop must therefore be bit-identical
+    /// across binaries, which is why it lives here and not in them.
+    pub fn bench_calibration(&mut self) -> &BenchResult {
+        self.bench("calibration/xoshiro_1m", || {
+            let mut rng = super::rng::Rng::new(0x5EED);
+            let mut acc = 0u64;
+            for _ in 0..1_000_000 {
+                acc ^= rng.next_u64();
+            }
+            acc
+        })
+    }
+
+    /// Shrink the measurement budget when `BENCH_QUICK` is set — the CI
+    /// bench job's quick mode: enough iterations for the regression gate
+    /// (`scripts/bench_check.py`), not publication statistics.
+    pub fn quick_from_env(self) -> Self {
+        if std::env::var_os("BENCH_QUICK").is_some() {
+            self.with_budget(Duration::from_millis(40), Duration::from_millis(10))
+        } else {
+            self
+        }
+    }
+
     /// Print all rows as an aligned table (called at the end of each bench
-    /// binary; `cargo bench` output is this table).
+    /// binary; `cargo bench` output is this table).  With `BENCH_JSON_DIR`
+    /// set, additionally writes `BENCH_<title>.json` there (the CI bench
+    /// artifact; schema in DESIGN.md §11).
     pub fn report(&self, title: &str) {
         println!("\n== {title} ==");
         println!(
@@ -123,11 +153,51 @@ impl Bencher {
                 fmt_time(r.min_s),
             );
         }
+        if let Some(dir) = std::env::var_os("BENCH_JSON_DIR") {
+            let path = std::path::Path::new(&dir).join(format!("BENCH_{title}.json"));
+            match std::fs::write(&path, self.to_json(title)) {
+                Ok(()) => println!("wrote {}", path.display()),
+                Err(e) => eprintln!("BENCH_JSON_DIR={dir:?}: write failed: {e}"),
+            }
+        }
+    }
+
+    /// Render the rows as the `BENCH_<name>.json` document consumed by
+    /// `scripts/bench_check.py` (wall-time per scenario; schema
+    /// documented in DESIGN.md §11).
+    pub fn to_json(&self, bench: &str) -> String {
+        let mut s = String::new();
+        s.push_str("{\n");
+        s.push_str(&format!("  \"bench\": \"{}\",\n", json_escape(bench)));
+        s.push_str(&format!(
+            "  \"quick\": {},\n",
+            std::env::var_os("BENCH_QUICK").is_some()
+        ));
+        s.push_str("  \"scenarios\": {\n");
+        for (i, r) in self.rows.iter().enumerate() {
+            s.push_str(&format!(
+                "    \"{}\": {{\"iters\": {}, \"mean_s\": {:e}, \"p50_s\": {:e}, \
+                 \"p95_s\": {:e}, \"min_s\": {:e}}}{}\n",
+                json_escape(&r.name),
+                r.iters,
+                r.mean_s,
+                r.p50_s,
+                r.p95_s,
+                r.min_s,
+                if i + 1 == self.rows.len() { "" } else { "," }
+            ));
+        }
+        s.push_str("  }\n}\n");
+        s
     }
 
     pub fn rows(&self) -> &[BenchResult] {
         &self.rows
     }
+}
+
+fn json_escape(s: &str) -> String {
+    s.replace('\\', "\\\\").replace('"', "\\\"")
 }
 
 #[cfg(test)]
@@ -150,5 +220,27 @@ mod tests {
             .with_budget(Duration::from_millis(5), Duration::from_millis(1));
         b.bench("x", || 1 + 1);
         b.report("t");
+    }
+
+    #[test]
+    fn json_document_carries_every_scenario() {
+        let mut b = Bencher::new()
+            .with_budget(Duration::from_millis(5), Duration::from_millis(1));
+        b.bench("group/first", || 1 + 1);
+        b.bench("group/second", || vec![0u8; 8]);
+        let json = b.to_json("unit");
+        assert!(json.contains("\"bench\": \"unit\""), "{json}");
+        assert!(json.contains("\"group/first\""), "{json}");
+        assert!(json.contains("\"group/second\""), "{json}");
+        assert!(json.contains("\"mean_s\""), "{json}");
+        // exactly one comma between the two scenario lines, none trailing
+        assert_eq!(json.matches("}},").count(), 1, "{json}");
+        // parses with the in-repo JSON reader (the schema is real JSON)
+        let parsed = crate::util::json::Json::parse(&json).expect("valid JSON");
+        assert!(parsed.get("scenarios").and_then(|s| s.get("group/first")).is_some());
+        assert!(parsed
+            .at(&["scenarios", "group/second", "mean_s"])
+            .and_then(crate::util::json::Json::as_f64)
+            .is_some());
     }
 }

@@ -247,16 +247,21 @@ pub struct DeploymentSim {
     /// Data-parallel pipeline copies (>= 1); a flushed batch is sharded
     /// round-robin across them, exactly like the live replica router.
     pub replicas: usize,
-    /// Per-stage context-switch cost paid at every batch flush (the
-    /// co-resident ran in between, so the tenant's segment parameters
-    /// re-load from host memory).  Empty for exclusive grants.
+    /// Per-stage context-switch cost paid when a batch flush opens a new
+    /// scheduling quantum (the co-resident ran in between, so the
+    /// tenant's segment parameters re-load from host memory).  Empty for
+    /// exclusive grants.
     pub switch_s: Vec<f64>,
+    /// Scheduling-quantum length in seconds: a flush within `quantum_s`
+    /// of the last paid re-load keeps the parameters resident and skips
+    /// the swap.  `0` (PR 3's model) re-loads on every flush.
+    pub quantum_s: f64,
 }
 
 impl DeploymentSim {
     /// An exclusive single-pipeline deployment (the pre-sharing model).
     pub fn exclusive(sims: Vec<StageSim>) -> Self {
-        DeploymentSim { sims, replicas: 1, switch_s: Vec::new() }
+        DeploymentSim { sims, replicas: 1, switch_s: Vec::new(), quantum_s: 0.0 }
     }
 }
 
@@ -338,6 +343,10 @@ pub fn simulate_deployment(
     let mut makespan = 0.0f64;
     let mut swaps = 0usize;
     let mut swap_overhead = 0.0f64;
+    // simulated instant of the last paid re-load: flushes inside the
+    // scheduling quantum keep the parameters resident (quantum_s = 0
+    // degenerates to one swap per flush)
+    let mut last_swap_s = f64::NEG_INFINITY;
 
     while served < n {
         debug_assert!(!pending.is_empty(), "unserved requests but no pending arrivals");
@@ -374,11 +383,13 @@ pub fn simulate_deployment(
         };
         batches.push(SimBatch { flush_s, len: batch.len(), kind });
 
-        // time-shared deployment: the co-resident ran since the last
-        // flush, so each stage this batch touches re-loads the tenant's
-        // parameters from host memory before serving
-        if !dep.switch_s.is_empty() {
+        // time-shared deployment: if this flush opens a new scheduling
+        // quantum (the co-resident ran since the last one), each stage
+        // this batch touches re-loads the tenant's parameters from host
+        // memory before serving; flushes inside the quantum skip it
+        if !dep.switch_s.is_empty() && flush_s >= last_swap_s + dep.quantum_s {
             swaps += 1;
+            last_swap_s = flush_s;
             for rep_clocks in stage_free.iter_mut().take(replicas.min(batch.len())) {
                 for (si, &sw) in dep.switch_s.iter().enumerate() {
                     rep_clocks[si] = rep_clocks[si].max(flush_s) + sw;
@@ -562,7 +573,7 @@ mod tests {
         let hot = Arrivals::Poisson { rate_hz: 3000.0 };
         let one =
             simulate_deployment(&hot, 300, 5, &policy, &DeploymentSim::exclusive(s.clone()));
-        let fan = DeploymentSim { sims: s, replicas: 2, switch_s: Vec::new() };
+        let fan = DeploymentSim { sims: s, replicas: 2, switch_s: Vec::new(), quantum_s: 0.0 };
         let two = simulate_deployment(&hot, 300, 5, &policy, &fan);
         let again = simulate_deployment(&hot, 300, 5, &policy, &fan);
         assert_eq!(two.latencies_s, again.latencies_s, "fan-out must stay deterministic");
@@ -595,7 +606,8 @@ mod tests {
         // stages' parameters at 3 ms each
         let dilated: Vec<StageSim> =
             s.iter().map(|x| StageSim { exec_s: 2.0 * x.exec_s, ..*x }).collect();
-        let dep = DeploymentSim { sims: dilated, replicas: 1, switch_s: vec![3e-3; 2] };
+        let dep =
+            DeploymentSim { sims: dilated, replicas: 1, switch_s: vec![3e-3; 2], quantum_s: 0.0 };
         let shared = simulate_deployment(&arr, 120, 9, &policy, &dep);
         let again = simulate_deployment(&arr, 120, 9, &policy, &dep);
         assert_eq!(shared.latencies_s, again.latencies_s);
@@ -608,6 +620,47 @@ mod tests {
         let mean =
             |r: &OpenLoopRun| r.latencies_s.iter().sum::<f64>() / r.latencies_s.len() as f64;
         assert!(mean(&shared) > mean(&excl), "co-residency must cost latency");
+    }
+
+    #[test]
+    fn larger_quantum_swaps_less_and_never_loses_throughput() {
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+        let dilated: Vec<StageSim> =
+            sims(2, 1e-3).iter().map(|x| StageSim { exec_s: 2.0 * x.exec_s, ..*x }).collect();
+        let arr = Arrivals::Poisson { rate_hz: 800.0 };
+        let mut prev: Option<OpenLoopRun> = None;
+        for quantum_s in [0.0, 0.05, 10.0] {
+            let dep = DeploymentSim {
+                sims: dilated.clone(),
+                replicas: 1,
+                switch_s: vec![3e-3; 2],
+                quantum_s,
+            };
+            let run = simulate_deployment(&arr, 120, 9, &policy, &dep);
+            let again = simulate_deployment(&arr, 120, 9, &policy, &dep);
+            assert_eq!(run.latencies_s, again.latencies_s, "quantum {quantum_s}");
+            assert_eq!(run.swaps, again.swaps, "quantum {quantum_s}");
+            if quantum_s == 0.0 {
+                assert_eq!(run.swaps, run.batches.len(), "quantum 0 swaps every flush");
+            }
+            if let Some(p) = &prev {
+                assert!(
+                    run.swaps < p.swaps,
+                    "larger quantum must swap less: {} -> {}",
+                    p.swaps,
+                    run.swaps
+                );
+                assert!(
+                    run.throughput_hz() >= p.throughput_hz() - 1e-9,
+                    "larger quantum must not lose throughput: {} -> {}",
+                    p.throughput_hz(),
+                    run.throughput_hz()
+                );
+            }
+            prev = Some(run);
+        }
+        // a quantum so long it never expires pays exactly one swap
+        assert_eq!(prev.unwrap().swaps, 1);
     }
 
     #[test]

@@ -1,0 +1,123 @@
+#!/usr/bin/env python3
+"""Gate a BENCH_*.json bench report against its checked-in baseline.
+
+Usage: bench_check.py CURRENT_JSON BASELINE_JSON [--threshold 1.25]
+
+The JSON schema (DESIGN.md §11) is emitted by the in-repo bench harness
+(`util::bench::Bencher::report` with BENCH_JSON_DIR set):
+
+    {
+      "bench": "scheduler",
+      "quick": true,
+      "scenarios": {
+        "allocate/m2_n4": {"iters": 123, "mean_s": 1.2e-3, "p50_s": ...,
+                           "p95_s": ..., "min_s": ...}
+      }
+    }
+
+For every scenario present in the baseline, the gate fails when the
+current mean is more than THRESHOLD times the baseline mean.  When both
+documents carry a `calibration/...` scenario (fixed PRNG work), the
+ratio is machine-normalized by the calibration ratio first, so a slower
+CI runner does not raise false regressions.
+
+An empty baseline (`"scenarios": {}`) deactivates the gate — that is the
+bootstrap state; populate it with `make bench-baseline` on the reference
+runner.  Scenarios present only in the current run are reported as notes
+(new benchmarks), scenarios present only in the baseline are failures
+(a benchmark silently disappeared).
+"""
+
+import argparse
+import json
+import sys
+
+CALIBRATION_PREFIX = "calibration/"
+
+
+def load(path):
+    try:
+        with open(path, "r", encoding="utf-8") as f:
+            return json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"bench_check: cannot read {path}: {e}", file=sys.stderr)
+        sys.exit(2)
+
+
+def calibration_mean(scenarios):
+    for name, row in scenarios.items():
+        if name.startswith(CALIBRATION_PREFIX):
+            return row["mean_s"]
+    return None
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("current", help="freshly generated BENCH_*.json")
+    ap.add_argument("baseline", help="checked-in baseline BENCH_*.json")
+    ap.add_argument(
+        "--threshold",
+        type=float,
+        default=1.25,
+        help="fail when current/baseline mean exceeds this (default 1.25 = +25%%)",
+    )
+    args = ap.parse_args()
+
+    current = load(args.current)
+    baseline = load(args.baseline)
+    cur_sc = current.get("scenarios", {})
+    base_sc = baseline.get("scenarios", {})
+
+    if not base_sc:
+        print(
+            f"bench_check: baseline {args.baseline} has no scenarios — regression "
+            "gate inactive (populate it with `make bench-baseline` on the "
+            "reference runner)"
+        )
+        return 0
+
+    cur_cal = calibration_mean(cur_sc)
+    base_cal = calibration_mean(base_sc)
+    normalized = bool(cur_cal and base_cal)
+
+    failures = []
+    checked = 0
+    for name in sorted(base_sc):
+        if name.startswith(CALIBRATION_PREFIX):
+            continue
+        brow = base_sc[name]
+        crow = cur_sc.get(name)
+        if crow is None:
+            failures.append(f"{name}: in the baseline but missing from the current run")
+            continue
+        ratio = crow["mean_s"] / brow["mean_s"]
+        if normalized:
+            ratio /= cur_cal / base_cal
+        checked += 1
+        tag = " (machine-normalized)" if normalized else ""
+        if ratio > args.threshold:
+            failures.append(
+                f"{name}: {ratio:.2f}x slower than baseline{tag} "
+                f"({crow['mean_s']:.3e}s vs {brow['mean_s']:.3e}s)"
+            )
+        else:
+            print(f"ok {name}: {ratio:.2f}x{tag}")
+
+    for name in sorted(set(cur_sc) - set(base_sc)):
+        if not name.startswith(CALIBRATION_PREFIX):
+            print(f"note: {name} has no baseline entry (refresh with `make bench-baseline`)")
+
+    if failures:
+        print(
+            f"bench_check: {len(failures)} regression(s) past {args.threshold:.2f}x:",
+            file=sys.stderr,
+        )
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print(f"bench_check: {checked} scenario(s) within {args.threshold:.2f}x of baseline")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
