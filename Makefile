@@ -19,7 +19,7 @@ BENCH_OUT ?= bench-out
 SMOKE_OUT ?= smoke-out
 
 .PHONY: all build test check artifacts python-test clean \
-        smoke smoke-scheduler smoke-loadgen smoke-sharing \
+        smoke smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane \
         bench-quick bench-check bench-baseline
 
 all: build
@@ -53,7 +53,7 @@ python-test:
 
 # ---- CI smoke (identical commands locally and in .github/workflows/ci.yml)
 
-smoke: smoke-scheduler smoke-loadgen smoke-sharing
+smoke: smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane
 
 smoke-scheduler:
 	$(CARGO) run --release --bin repro -- schedule --models fc_big,conv_a,conv_b --tpus 4
@@ -99,21 +99,39 @@ smoke-sharing:
 		--requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/shared_q_b.csv
 	diff $(SMOKE_OUT)/shared_q_a.csv $(SMOKE_OUT)/shared_q_b.csv
 
+# Live data-plane gate (DESIGN.md §12): steady-state arena allocations
+# per request must be ZERO across exclusive, shared and replica grants —
+# the paper's "data movement dominates" argument, enforced host-side.
+smoke-dataplane:
+	$(CARGO) run --release --bin repro -- dataplane \
+		--models fc_small,conv_a --tpus 2 --alloc-budget 0
+	$(CARGO) run --release --bin repro -- dataplane \
+		--models fc_small,fc_n512 --tpus 1 --allow-sharing --alloc-budget 0
+	$(CARGO) run --release --bin repro -- dataplane \
+		--models fc_small --tpus 3 --alloc-budget 0
+
 # ---- CI bench pipeline (DESIGN.md §11)
 
 bench-quick:
 	mkdir -p $(BENCH_OUT)
 	BENCH_QUICK=1 BENCH_JSON_DIR=$(BENCH_OUT) $(CARGO) bench --bench scheduler
 	BENCH_QUICK=1 BENCH_JSON_DIR=$(BENCH_OUT) $(CARGO) bench --bench loadgen
+	BENCH_QUICK=1 BENCH_JSON_DIR=$(BENCH_OUT) $(CARGO) bench --bench dataplane
 
+# Gate against the checked-in baseline; when that baseline is still the
+# empty bootstrap, fall back to the previous CI run's results restored
+# under $(BENCH_PREV) (the rolling baseline cached by the CI bench job).
+BENCH_PREV ?= bench-prev
 bench-check:
-	$(PYTHON) scripts/bench_check.py $(BENCH_OUT)/BENCH_scheduler.json benches/baseline/BENCH_scheduler.json
-	$(PYTHON) scripts/bench_check.py $(BENCH_OUT)/BENCH_loadgen.json benches/baseline/BENCH_loadgen.json
+	$(PYTHON) scripts/bench_check.py $(BENCH_OUT)/BENCH_scheduler.json benches/baseline/BENCH_scheduler.json --fallback $(BENCH_PREV)/BENCH_scheduler.json
+	$(PYTHON) scripts/bench_check.py $(BENCH_OUT)/BENCH_loadgen.json benches/baseline/BENCH_loadgen.json --fallback $(BENCH_PREV)/BENCH_loadgen.json
+	$(PYTHON) scripts/bench_check.py $(BENCH_OUT)/BENCH_dataplane.json benches/baseline/BENCH_dataplane.json --fallback $(BENCH_PREV)/BENCH_dataplane.json
 
 # Re-measure on the reference runner and commit the result to activate
-# the regression gate.
+# the checked-in regression gate (takes precedence over the rolling one).
 bench-baseline: bench-quick
-	cp $(BENCH_OUT)/BENCH_scheduler.json $(BENCH_OUT)/BENCH_loadgen.json benches/baseline/
+	cp $(BENCH_OUT)/BENCH_scheduler.json $(BENCH_OUT)/BENCH_loadgen.json \
+	   $(BENCH_OUT)/BENCH_dataplane.json benches/baseline/
 
 clean:
 	rm -rf $(ARTIFACTS) $(BENCH_OUT) $(SMOKE_OUT)

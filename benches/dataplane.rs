@@ -1,0 +1,182 @@
+//! Benchmarks for the zero-copy batched data plane (DESIGN.md §12): the
+//! 4-stage synthetic pipeline served batch-at-once through arena slabs
+//! versus the retired per-request transfer granularity (one channel
+//! handoff and one fresh allocation per request per stage — the PR 4
+//! path, reproduced via `serve_batch_chunked(.., 1)` over backends that
+//! only implement the per-item `run`).  Also times the batched channel
+//! primitives (`send_many`/`recv_many_deadline`) against per-item
+//! send/recv, and the arena's take/share/recycle cycle.
+//!
+//! The acceptance bar for the data-plane rework is the first two
+//! scenarios: `pipeline4/batched_b50` must sustain at least 2x the
+//! requests/sec of `pipeline4/per_request_b50`.  The binary prints the
+//! measured ratio under the table, records both scenarios in
+//! BENCH_dataplane.json for the CI regression gate, and **exits nonzero
+//! below the bar** so the bench job fails if the batched path ever
+//! regresses toward per-request cost.
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use tpu_pipeline::coordinator::queue::bounded;
+use tpu_pipeline::coordinator::{
+    Arena, Pipeline, PipelineConfig, Request, StageBackend, StageFactory, StageSim, Tensor,
+};
+use tpu_pipeline::metrics::DataPlaneMetrics;
+use tpu_pipeline::scheduler::{synthetic_transform, synthetic_transform_into};
+use tpu_pipeline::util::bench::{black_box, Bencher};
+use tpu_pipeline::util::rng::Rng;
+
+const STAGES: usize = 4;
+const ELEMS: usize = 256;
+const BATCH: usize = 50;
+
+/// Batch-native stage: one keyed mixing transform per item, written
+/// directly into the output slab (zero allocations).
+struct BatchedStage {
+    salt: u64,
+}
+
+impl StageBackend for BatchedStage {
+    fn run(&mut self, input: &[i8]) -> Result<Vec<i8>> {
+        Ok(synthetic_transform(self.salt, input, input.len()))
+    }
+
+    fn run_batch(&mut self, n: usize, input: &[i8], output: &mut [i8]) -> Result<()> {
+        let len = input.len() / n;
+        for i in 0..n {
+            synthetic_transform_into(
+                self.salt,
+                &input[i * len..(i + 1) * len],
+                &mut output[i * len..(i + 1) * len],
+            );
+        }
+        Ok(())
+    }
+}
+
+/// Per-item stage: the same transform, but only through the allocating
+/// `run` contract — the default `run_batch` copies each fresh vector into
+/// the slab, mimicking the pre-arena per-request execution cost.
+struct PerItemStage {
+    salt: u64,
+}
+
+impl StageBackend for PerItemStage {
+    fn run(&mut self, input: &[i8]) -> Result<Vec<i8>> {
+        Ok(synthetic_transform(self.salt, input, input.len()))
+    }
+}
+
+fn spawn_pipeline(batched: bool) -> Pipeline {
+    let factories: Vec<StageFactory> = (0..STAGES)
+        .map(|i| {
+            let salt = 0x9E37_79B9 + i as u64;
+            if batched {
+                Box::new(move || {
+                    Ok(Box::new(BatchedStage { salt }) as Box<dyn StageBackend>)
+                }) as StageFactory
+            } else {
+                Box::new(move || {
+                    Ok(Box::new(PerItemStage { salt }) as Box<dyn StageBackend>)
+                }) as StageFactory
+            }
+        })
+        .collect();
+    let sims: Vec<StageSim> = (0..STAGES)
+        .map(|_| StageSim { exec_s: 1e-7, hop_out_s: 1e-8, overhead_s: 1e-8 })
+        .collect();
+    Pipeline::spawn(factories, sims, &PipelineConfig::default()).unwrap()
+}
+
+fn requests() -> Vec<Request> {
+    let mut rng = Rng::new(0xDA7A);
+    (0..BATCH as u64).map(|id| Request { id, data: rng.i8_vec(ELEMS) }).collect()
+}
+
+fn main() {
+    // BENCH_QUICK shrinks the budget (the CI bench job's quick mode);
+    // BENCH_JSON_DIR makes report() emit BENCH_dataplane.json for the
+    // regression gate (scripts/bench_check.py, DESIGN.md §11)
+    let mut b = Bencher::new()
+        .with_budget(Duration::from_millis(250), Duration::from_millis(60))
+        .quick_from_env();
+
+    // fixed-work calibration scenario for machine-normalized regression
+    // ratios (shared bit-identical loop, see Bencher::bench_calibration)
+    b.bench_calibration();
+
+    // ---- the headline pair: batched slabs vs per-request granularity
+    let reqs = requests();
+    let p_batched = spawn_pipeline(true);
+    let p_legacy = spawn_pipeline(false);
+    p_batched.wait_ready().unwrap();
+    p_legacy.wait_ready().unwrap();
+    // warm both arenas so the measurement sees steady state
+    drop(p_batched.serve_batch(reqs.clone()).unwrap());
+    drop(p_legacy.serve_batch_chunked(reqs.clone(), 1).unwrap());
+
+    b.bench("pipeline4/batched_b50", || {
+        p_batched.serve_batch(black_box(reqs.clone())).unwrap()
+    });
+    b.bench("pipeline4/per_request_b50", || {
+        p_legacy.serve_batch_chunked(black_box(reqs.clone()), 1).unwrap()
+    });
+
+    // ---- channel primitives: whole-flush transfer vs per-item locking
+    b.bench("queue/per_item_1k", || {
+        let (tx, rx) = bounded(1024);
+        for i in 0..1000u64 {
+            tx.send(i).unwrap();
+        }
+        let mut n = 0usize;
+        while rx.try_recv().is_some() {
+            n += 1;
+        }
+        n
+    });
+    b.bench("queue/batched_1k", || {
+        let (tx, rx) = bounded(1024);
+        tx.send_many(0..1000u64).unwrap();
+        let mut out = Vec::with_capacity(1000);
+        rx.recv_many_deadline(Instant::now(), 1000, &mut out);
+        out.len()
+    });
+
+    // ---- arena cycle: take -> share -> view -> recycle
+    let arena = Arena::new(std::sync::Arc::new(DataPlaneMetrics::default()));
+    drop(arena.take(BATCH * ELEMS)); // warm the size class
+    b.bench("arena/take_share_recycle", || {
+        let slab = arena.take(BATCH * ELEMS).share();
+        Tensor::slice(&slab, 0, ELEMS)
+    });
+
+    b.report("dataplane");
+
+    // the data-plane acceptance ratio, from the rows just measured
+    let mean = |name: &str| {
+        b.rows()
+            .iter()
+            .find(|r| r.name == name)
+            .map(|r| r.mean_s)
+            .expect("scenario measured")
+    };
+    let batched = mean("pipeline4/batched_b50");
+    let per_request = mean("pipeline4/per_request_b50");
+    let ratio = per_request / batched;
+    println!(
+        "\nbatched data plane: {:.0} req/s vs {:.0} req/s per-request path -> {ratio:.2}x",
+        BATCH as f64 / batched,
+        BATCH as f64 / per_request,
+    );
+
+    p_batched.shutdown();
+    p_legacy.shutdown();
+
+    // enforce the bar, not just print it: a regression below 2x fails the
+    // bench binary (and therefore the CI bench job)
+    if ratio < 2.0 {
+        eprintln!("FAIL: batched data plane below the 2x acceptance bar ({ratio:.2}x)");
+        std::process::exit(1);
+    }
+}

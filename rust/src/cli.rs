@@ -400,6 +400,7 @@ pub fn run(args: &Args) -> Result<String> {
         "ablation-energy" => ablation_energy(args.kind()?, &cfg, batch),
         "schedule" => schedule(args)?,
         "loadgen" => loadgen(args)?,
+        "dataplane" => dataplane(args)?,
         "" | "help" | "--help" => USAGE.to_string(),
         other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
     };
@@ -769,6 +770,159 @@ pub fn loadgen(args: &Args) -> Result<String> {
     Ok(out)
 }
 
+/// `repro dataplane`: the zero-copy data-plane smoke — drive live
+/// deployments (closed-batch router, then open-loop pool), measure the
+/// arena's allocation counters after a warm-up phase, and **fail** when
+/// steady-state allocations-per-request exceed `--alloc-budget`
+/// (default 0: the warm data plane must not allocate at all).  Every
+/// response is verified bit-for-bit against the serial reference, so the
+/// gate also re-proves byte-determinism of the batched path.
+///
+/// For the deployments this gate runs against in CI (single pipelines,
+/// and replicas of single-stage pipelines) both phases are deterministic
+/// by construction: the closed phase serves fixed-size batches
+/// back-to-back (replica shards are packed in the caller thread, so the
+/// arena sees the full fan-out demand on every call), and the open phase
+/// keeps exactly one request outstanding per tenant — slab sizes repeat
+/// exactly and the warm-up provably covers the measured window.  A
+/// *multi-stage replicated* deployment is the one shape whose
+/// intermediate-slab overlap is thread-timing-dependent; gate such
+/// topologies with a small nonzero `--alloc-budget` instead of 0.
+pub fn dataplane(args: &Args) -> Result<String> {
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::metrics::DataPlaneSnapshot;
+    use crate::scheduler::{allocate, BackendKind, OpenOptions, PoolRouter, ServingPool};
+
+    let cfg = args.config()?;
+    let (registry, alloc) = pool_spec(args, "fc_small,conv_a")?;
+    let batch = args.batch()?;
+    let warmup = args.usize_flag("warmup", 3)?.max(1);
+    let iters = args.usize_flag("iters", 5)?.max(1);
+    let open_warmup = args.usize_flag("open-warmup", 40)?.max(1);
+    let open_requests = args.usize_flag("open-requests", 80)?.max(1);
+    let budget = args.f64_flag("alloc-budget", 0.0)?;
+    anyhow::ensure!(budget >= 0.0, "--alloc-budget must be non-negative");
+
+    let mut t = Table::new(
+        format!(
+            "Zero-copy data plane — steady-state alloc budget {budget} per request \
+             (closed batch {batch} x{iters}, open loop {open_requests} reqs)"
+        ),
+        &[
+            "phase", "model", "requests", "allocs", "allocs_per_req", "reuses",
+            "handoffs", "items_per_handoff", "status",
+        ],
+    );
+    let mut failures: Vec<String> = Vec::new();
+    let mut row = |phase: &str,
+                   model: &str,
+                   requests: u64,
+                   before: DataPlaneSnapshot,
+                   after: DataPlaneSnapshot,
+                   failures: &mut Vec<String>| {
+        let allocs = after.slab_allocs - before.slab_allocs;
+        let per_req = allocs as f64 / requests as f64;
+        let handoffs = after.handoffs - before.handoffs;
+        let items = after.handoff_items - before.handoff_items;
+        let ok = per_req <= budget + 1e-12;
+        if !ok {
+            failures.push(format!(
+                "{phase}/{model}: {allocs} steady-state allocations over {requests} \
+                 requests ({per_req:.4}/req > budget {budget})"
+            ));
+        }
+        t.row(vec![
+            phase.to_string(),
+            model.to_string(),
+            requests.to_string(),
+            allocs.to_string(),
+            format!("{per_req:.4}"),
+            (after.slab_reuses - before.slab_reuses).to_string(),
+            handoffs.to_string(),
+            if handoffs == 0 {
+                "-".into()
+            } else {
+                format!("{:.1}", items as f64 / handoffs as f64)
+            },
+            if ok { "PASS".into() } else { "FAIL".into() },
+        ]);
+    };
+
+    // ---- phase 1: closed batches through the per-model router
+    let plan = allocate(&registry, &cfg, &alloc)?;
+    let router = PoolRouter::deploy(&plan, &registry, &cfg, &BackendKind::Synthetic, 64)?;
+    router.wait_ready()?;
+    for name in router.names() {
+        let tenant = router.tenant(&name).expect("deployed tenant");
+        let serve_once = |seed: u64| -> Result<()> {
+            let reqs = tenant.synth_requests(batch, seed);
+            let expected: Vec<Vec<i8>> =
+                reqs.iter().map(|r| tenant.reference(&r.data)).collect();
+            let responses = router.serve(&name, reqs)?;
+            for (r, e) in responses.iter().zip(&expected) {
+                anyhow::ensure!(&r.data == e, "{name}: digest mismatch on {}", r.id);
+            }
+            Ok(())
+        };
+        for i in 0..warmup {
+            serve_once(i as u64)?;
+        }
+        let before = router.data_plane.snapshot();
+        for i in 0..iters {
+            serve_once(1000 + i as u64)?;
+        }
+        let after = router.data_plane.snapshot();
+        row("closed", &name, (iters * batch) as u64, before, after, &mut failures);
+    }
+    router.shutdown();
+
+    // ---- phase 2: live open-loop pool, one request outstanding
+    let pool = ServingPool::deploy(
+        registry,
+        cfg,
+        alloc,
+        BackendKind::Synthetic,
+        OpenOptions {
+            policy: BatchPolicy {
+                max_batch: args.usize_flag("max-batch", 8)?,
+                max_wait: std::time::Duration::from_micros(500),
+            },
+            queue_capacity: 64,
+        },
+    )?;
+    for name in pool.names() {
+        let client = pool.client(&name)?;
+        let serve_one = |seed: u64| -> Result<()> {
+            let mut reqs = client.synth_requests(1, seed);
+            let req = reqs.pop().expect("one request");
+            let expected = client.reference(&req.data);
+            pool.submit(&name, req)?;
+            let resp = client.done.recv().context("completion stream closed early")?;
+            anyhow::ensure!(resp.data == expected, "{name}: open-loop digest mismatch");
+            Ok(())
+        };
+        for i in 0..open_warmup {
+            serve_one(i as u64)?;
+        }
+        let before = pool.data_plane().snapshot();
+        for i in 0..open_requests {
+            serve_one(10_000 + i as u64)?;
+        }
+        let after = pool.data_plane().snapshot();
+        row("open", &name, open_requests as u64, before, after, &mut failures);
+    }
+    pool.shutdown();
+
+    let mut out = t.render();
+    if failures.is_empty() {
+        out.push_str("data plane: steady state within the allocation budget\n");
+        Ok(out)
+    } else {
+        print!("{out}");
+        anyhow::bail!("data-plane alloc budget exceeded: {}", failures.join("; "))
+    }
+}
+
 /// Replication (data parallelism) vs profiled segmentation (§V-C remark).
 fn ablation_replicate(kind: Kind, cfg: &SystemConfig, batch: usize) -> String {
     let mut t = Table::new(
@@ -907,6 +1061,17 @@ open-loop load generation (seeded, bit-reproducible):
         queueing simulation, then replays the same seeds against the live
         open-loop pool (per-tenant Batcher workers) with bit-exact
         response verification
+
+zero-copy data plane (live smoke; `make smoke-dataplane` runs this):
+  dataplane --models fc_small,conv_a --tpus 2 [--alloc-budget 0]
+            [--batch 50] [--warmup 3] [--iters 5]
+            [--open-warmup 40] [--open-requests 80]
+            accepts the pool flags of `schedule` (--allow-sharing, ...).
+        serves live traffic through the closed-batch router and the
+        open-loop pool, then FAILS unless steady-state arena allocations
+        per request stay within --alloc-budget (default 0: a warm data
+        plane recycles every activation slab).  Responses are verified
+        bit-for-bit against the serial reference throughout
 ";
 
 #[cfg(test)]

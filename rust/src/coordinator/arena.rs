@@ -1,0 +1,417 @@
+//! Pooled activation-buffer arena: recycled slabs for the zero-copy
+//! batched data plane.
+//!
+//! The paper's argument is that off-chip data movement, not compute,
+//! bounds Edge-TPU inference; the host-side twin of that argument is that
+//! the serving path must not re-allocate and re-copy activations at every
+//! pipeline hop.  The arena keeps a free list of previously used slabs
+//! keyed by capacity: a request batch's tensors are written **once** into
+//! a [`SlabBuf`] at ingress, every stage writes its output into a recycled
+//! slab from the same arena, and responses hand the final slab back to the
+//! caller as ref-counted [`Tensor`] views — when the last view drops, the
+//! slab returns to the free list.  In steady state the request path
+//! performs **zero** heap allocations; [`DataPlaneMetrics`] counts the
+//! misses so the `make smoke-dataplane` gate can assert exactly that.
+//!
+//! Ownership model (double-release is unrepresentable by construction):
+//!
+//! ```text
+//! Arena::take  ->  SlabBuf (unique, writable)
+//!                     | .share()
+//!                     v
+//!                  SharedSlab (Arc, read-only)  --slice-->  Tensor views
+//!                     |  last clone dropped
+//!                     v
+//!                  slab returns to the arena free list
+//! ```
+
+use std::collections::BTreeMap;
+use std::fmt;
+use std::ops::{Deref, DerefMut};
+use std::sync::{Arc, Mutex};
+
+use crate::metrics::DataPlaneMetrics;
+
+/// Free slabs keyed by capacity; `take` reuses the smallest adequate one.
+type FreeList = BTreeMap<usize, Vec<Box<[i8]>>>;
+
+struct ArenaShared {
+    free: Mutex<FreeList>,
+    metrics: Arc<DataPlaneMetrics>,
+}
+
+/// A shared pool of recycled activation slabs (cheaply cloneable handle).
+///
+/// One arena is typically shared by every pipeline of a serving pool, so
+/// a slab retired by one tenant's deployment is reused by another's —
+/// retained memory is bounded by the pool-wide high-water mark, not by
+/// the sum of per-tenant peaks.
+#[derive(Clone)]
+pub struct Arena {
+    inner: Arc<ArenaShared>,
+}
+
+impl fmt::Debug for Arena {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("Arena").field("retained", &self.retained()).finish()
+    }
+}
+
+impl Arena {
+    /// An empty arena reporting its alloc/reuse traffic into `metrics`.
+    pub fn new(metrics: Arc<DataPlaneMetrics>) -> Arena {
+        Arena { inner: Arc::new(ArenaShared { free: Mutex::new(BTreeMap::new()), metrics }) }
+    }
+
+    /// Take a writable slab of exactly `len` logical bytes, reusing the
+    /// smallest retained slab whose capacity is at least `len` (so a
+    /// partial batch rides a full-batch slab instead of allocating).
+    /// Falls back to one heap allocation — counted as a miss — when no
+    /// retained slab fits.  Contents of a reused slab are unspecified;
+    /// every producer writes its full output.
+    pub fn take(&self, len: usize) -> SlabBuf {
+        if len == 0 {
+            return SlabBuf { arena: None, buf: Some(Vec::new().into_boxed_slice()), len: 0 };
+        }
+        let recycled = {
+            let mut free = self.inner.free.lock().unwrap();
+            let cap = free.range(len..).next().map(|(&c, _)| c);
+            match cap {
+                Some(c) => {
+                    let bucket = free.get_mut(&c).expect("capacity class present");
+                    let buf = bucket.pop();
+                    let now_empty = bucket.is_empty();
+                    if now_empty {
+                        free.remove(&c);
+                    }
+                    buf
+                }
+                None => None,
+            }
+        };
+        let buf = match recycled {
+            Some(buf) => {
+                self.inner.metrics.record_slab_reuse();
+                buf
+            }
+            None => {
+                self.inner.metrics.record_slab_alloc(len as u64);
+                vec![0i8; len].into_boxed_slice()
+            }
+        };
+        SlabBuf { arena: Some(self.clone()), buf: Some(buf), len }
+    }
+
+    /// Number of slabs currently retained on the free list.
+    pub fn retained(&self) -> usize {
+        self.inner.free.lock().unwrap().values().map(Vec::len).sum()
+    }
+
+    fn recycle(&self, buf: Box<[i8]>) {
+        if buf.is_empty() {
+            return;
+        }
+        self.inner.free.lock().unwrap().entry(buf.len()).or_default().push(buf);
+    }
+}
+
+/// A uniquely owned, writable slab leased from an [`Arena`].  Dropping it
+/// returns the buffer to the arena; [`SlabBuf::share`] converts it into a
+/// read-only ref-counted [`SharedSlab`] instead.  Derefs to the logical
+/// `len` bytes (the underlying capacity may be larger).
+pub struct SlabBuf {
+    /// `None` for detached buffers ([`SlabBuf::from_vec`]): they drop
+    /// normally instead of recycling.
+    arena: Option<Arena>,
+    /// `Some` until dropped or shared.
+    buf: Option<Box<[i8]>>,
+    len: usize,
+}
+
+impl SlabBuf {
+    /// Wrap a plain vector as a detached slab (not arena-recycled).  Used
+    /// where a tensor exists outside any pipeline, e.g. in unit tests.
+    pub fn from_vec(v: Vec<i8>) -> SlabBuf {
+        let len = v.len();
+        SlabBuf { arena: None, buf: Some(v.into_boxed_slice()), len }
+    }
+
+    /// Logical length in bytes.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether the slab holds zero logical bytes.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Freeze into a read-only ref-counted slab; the buffer returns to
+    /// the arena when the last [`SharedSlab`]/[`Tensor`] clone drops.
+    pub fn share(mut self) -> SharedSlab {
+        SharedSlab {
+            inner: Arc::new(SlabShared {
+                arena: self.arena.take(),
+                buf: self.buf.take(),
+                len: self.len,
+            }),
+        }
+    }
+}
+
+impl Deref for SlabBuf {
+    type Target = [i8];
+    fn deref(&self) -> &[i8] {
+        &self.buf.as_ref().expect("slab present until dropped/shared")[..self.len]
+    }
+}
+
+impl DerefMut for SlabBuf {
+    fn deref_mut(&mut self) -> &mut [i8] {
+        let len = self.len;
+        &mut self.buf.as_mut().expect("slab present until dropped/shared")[..len]
+    }
+}
+
+impl Drop for SlabBuf {
+    fn drop(&mut self) {
+        if let (Some(arena), Some(buf)) = (self.arena.take(), self.buf.take()) {
+            arena.recycle(buf);
+        }
+    }
+}
+
+impl fmt::Debug for SlabBuf {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SlabBuf(len={})", self.len)
+    }
+}
+
+struct SlabShared {
+    arena: Option<Arena>,
+    buf: Option<Box<[i8]>>,
+    len: usize,
+}
+
+impl Drop for SlabShared {
+    fn drop(&mut self) {
+        if let (Some(arena), Some(buf)) = (self.arena.take(), self.buf.take()) {
+            arena.recycle(buf);
+        }
+    }
+}
+
+/// Read-only ref-counted slab; cloning shares the same buffer.  The slab
+/// returns to its arena exactly once: when the last clone (including
+/// every [`Tensor`] sliced from it) drops.
+#[derive(Clone)]
+pub struct SharedSlab {
+    inner: Arc<SlabShared>,
+}
+
+impl SharedSlab {
+    /// The slab's logical bytes.
+    pub fn bytes(&self) -> &[i8] {
+        &self.inner.buf.as_ref().expect("slab present until last drop")[..self.inner.len]
+    }
+}
+
+impl fmt::Debug for SharedSlab {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SharedSlab(len={})", self.inner.len)
+    }
+}
+
+/// A ref-counted view of one tensor inside a [`SharedSlab`] — what a
+/// batched response carries instead of an owned `Vec<i8>`.  All views of
+/// one batch share the batch's output slab; no per-request copy is made.
+/// Derefs to `[i8]` and compares against slices and `Vec<i8>`, so
+/// existing `response.data == expected` call sites keep working.
+#[derive(Clone)]
+pub struct Tensor {
+    slab: SharedSlab,
+    off: usize,
+    len: usize,
+}
+
+impl Tensor {
+    /// View `len` bytes of `slab` starting at `off`.
+    pub fn slice(slab: &SharedSlab, off: usize, len: usize) -> Tensor {
+        assert!(off + len <= slab.inner.len, "tensor view out of slab bounds");
+        Tensor { slab: slab.clone(), off, len }
+    }
+
+    /// A detached tensor owning a plain vector (no arena involved).
+    pub fn from_vec(v: Vec<i8>) -> Tensor {
+        let len = v.len();
+        Tensor { slab: SlabBuf::from_vec(v).share(), off: 0, len }
+    }
+
+    /// The viewed bytes.
+    pub fn as_slice(&self) -> &[i8] {
+        &self.slab.bytes()[self.off..self.off + self.len]
+    }
+
+    /// Copy the viewed bytes into an owned vector.
+    pub fn to_vec(&self) -> Vec<i8> {
+        self.as_slice().to_vec()
+    }
+}
+
+impl Deref for Tensor {
+    type Target = [i8];
+    fn deref(&self) -> &[i8] {
+        self.as_slice()
+    }
+}
+
+impl fmt::Debug for Tensor {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        fmt::Debug::fmt(self.as_slice(), f)
+    }
+}
+
+impl PartialEq for Tensor {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl Eq for Tensor {}
+
+impl PartialEq<[i8]> for Tensor {
+    fn eq(&self, other: &[i8]) -> bool {
+        self.as_slice() == other
+    }
+}
+
+impl PartialEq<&[i8]> for Tensor {
+    fn eq(&self, other: &&[i8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+impl PartialEq<Vec<i8>> for Tensor {
+    fn eq(&self, other: &Vec<i8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+impl PartialEq<Tensor> for Vec<i8> {
+    fn eq(&self, other: &Tensor) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn arena() -> (Arena, Arc<DataPlaneMetrics>) {
+        let m = Arc::new(DataPlaneMetrics::default());
+        (Arena::new(m.clone()), m)
+    }
+
+    #[test]
+    fn take_allocates_then_recycles() {
+        let (a, m) = arena();
+        {
+            let mut s = a.take(64);
+            s[0] = 7;
+            assert_eq!(s.len(), 64);
+        } // dropped -> recycled
+        assert_eq!(a.retained(), 1);
+        let s2 = a.take(64);
+        assert_eq!(s2.len(), 64);
+        let snap = m.snapshot();
+        assert_eq!(snap.slab_allocs, 1, "second take must reuse");
+        assert_eq!(snap.slab_reuses, 1);
+        assert_eq!(snap.slab_alloc_bytes, 64);
+    }
+
+    #[test]
+    fn smaller_request_reuses_larger_slab() {
+        let (a, m) = arena();
+        drop(a.take(400)); // retained with capacity 400
+        let s = a.take(64);
+        assert_eq!(s.len(), 64, "logical length is the requested one");
+        assert_eq!(m.snapshot().slab_reuses, 1);
+        assert_eq!(m.snapshot().slab_allocs, 1, "only the first take allocated");
+    }
+
+    #[test]
+    fn shared_slab_returns_once_after_last_view_drops() {
+        let (a, m) = arena();
+        let mut s = a.take(8);
+        for (i, b) in s.iter_mut().enumerate() {
+            *b = i as i8;
+        }
+        let shared = s.share();
+        let t0 = Tensor::slice(&shared, 0, 4);
+        let t1 = Tensor::slice(&shared, 4, 4);
+        let t1b = t1.clone();
+        drop(shared);
+        assert_eq!(a.retained(), 0, "views keep the slab alive");
+        assert_eq!(t0.as_slice(), &[0, 1, 2, 3]);
+        drop(t0);
+        drop(t1);
+        assert_eq!(a.retained(), 0, "one view still alive");
+        assert_eq!(t1b.as_slice(), &[4, 5, 6, 7]);
+        drop(t1b);
+        assert_eq!(a.retained(), 1, "slab recycled exactly once");
+        // and it is reusable afterwards
+        let again = a.take(8);
+        assert_eq!(again.len(), 8);
+        assert_eq!(m.snapshot().slab_allocs, 1);
+    }
+
+    #[test]
+    fn tensor_comparisons_and_debug() {
+        let t = Tensor::from_vec(vec![1, -2, 3]);
+        assert_eq!(t, vec![1, -2, 3]);
+        assert_eq!(vec![1, -2, 3], t);
+        assert_eq!(t, t.clone());
+        assert_ne!(t, vec![1, -2, 4]);
+        assert_eq!(t.len(), 3);
+        assert_eq!(t.to_vec(), vec![1, -2, 3]);
+        assert_eq!(format!("{t:?}"), "[1, -2, 3]");
+    }
+
+    #[test]
+    fn zero_len_take_is_detached() {
+        let (a, m) = arena();
+        let s = a.take(0);
+        assert!(s.is_empty());
+        drop(s);
+        assert_eq!(a.retained(), 0);
+        assert_eq!(m.snapshot().slab_allocs, 0);
+    }
+
+    #[test]
+    fn distinct_sizes_get_distinct_classes() {
+        let (a, m) = arena();
+        drop(a.take(16));
+        drop(a.take(32));
+        assert_eq!(a.retained(), 2);
+        // 24 fits in the 32-capacity slab, not the 16 one
+        let s = a.take(24);
+        assert_eq!(s.len(), 24);
+        assert_eq!(m.snapshot().slab_allocs, 2);
+        assert_eq!(m.snapshot().slab_reuses, 1);
+        assert_eq!(a.retained(), 1, "only the 16-byte slab remains free");
+    }
+
+    #[test]
+    fn steady_state_cycle_never_allocates_again() {
+        let (a, m) = arena();
+        for _ in 0..100 {
+            let s = a.take(128).share();
+            let t = Tensor::slice(&s, 0, 128);
+            drop(s);
+            drop(t);
+        }
+        let snap = m.snapshot();
+        assert_eq!(snap.slab_allocs, 1, "steady state must be allocation-free");
+        assert_eq!(snap.slab_reuses, 99);
+    }
+}

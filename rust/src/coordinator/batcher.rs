@@ -4,15 +4,17 @@
 //! stream, which this component adapts.
 //!
 //! The fill loop parks on the queue's condvar with a deadline
-//! ([`super::queue::Receiver::recv_deadline`]) — there is no sleep/poll
-//! spin, so an idle batcher burns no CPU and a request arriving mid-wait
-//! wakes it immediately.
+//! ([`super::queue::Receiver::recv_many_deadline`]) — there is no
+//! sleep/poll spin, so an idle batcher burns no CPU and a request
+//! arriving mid-wait wakes it immediately.  Everything already queued is
+//! drained under **one** lock acquisition per wakeup, so filling a batch
+//! from a burst costs O(1) locks, not one lock per request.
 
 use std::time::{Duration, Instant};
 
 use crate::metrics::FlushKind;
 
-use super::queue::{Receiver, RecvDeadline};
+use super::queue::{Receiver, RecvMany};
 use super::Request;
 
 /// Batching policy.
@@ -92,15 +94,17 @@ impl Batcher {
     pub fn next_batch_with_reason(&self) -> Option<(Vec<Request>, FlushKind)> {
         let first = self.rx.recv()?;
         let deadline = Instant::now() + self.policy.max_wait;
-        let mut batch = vec![first];
+        let mut batch = Vec::with_capacity(self.policy.max_batch.min(256));
+        batch.push(first);
         let reason = loop {
             if batch.len() >= self.policy.max_batch {
                 break FlushKind::Size;
             }
-            match self.rx.recv_deadline(deadline) {
-                RecvDeadline::Item(r) => batch.push(r),
-                RecvDeadline::TimedOut => break FlushKind::Deadline,
-                RecvDeadline::Closed => break FlushKind::Closed,
+            let want = self.policy.max_batch - batch.len();
+            match self.rx.recv_many_deadline(deadline, want, &mut batch) {
+                RecvMany::Items(_) => continue, // re-check the size bound
+                RecvMany::TimedOut => break FlushKind::Deadline,
+                RecvMany::Closed => break FlushKind::Closed,
             }
         };
         Some((batch, reason))

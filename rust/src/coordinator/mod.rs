@@ -4,12 +4,30 @@
 //! front, and an optional replica router (the "data parallelism"
 //! alternative the paper's conclusion mentions).
 //!
+//! ## Zero-copy batched data plane
+//!
+//! The paper's whole argument is that off-chip data movement, not
+//! compute, bounds Edge-TPU inference; the host must not re-create that
+//! bottleneck in software.  Requests therefore move through the pipeline
+//! **batch-at-once**: a flush is packed into one contiguous arena slab at
+//! ingress ([`arena::Arena`]), every stage executes the whole slab with a
+//! single [`StageBackend::run_batch`] call writing into a recycled output
+//! slab, and each hop moves one batch message under one lock/wakeup
+//! instead of one per request.  Responses are ref-counted
+//! [`Tensor`] views of the final slab — no per-request copy — and when
+//! the caller drops them the slab returns to the arena.  In steady state
+//! the request path performs zero heap allocations
+//! ([`crate::metrics::DataPlaneMetrics`] proves it).
+//!
 //! Numerics are real: each stage executes its AOT-compiled HLO segment via
 //! PJRT (or any other [`StageBackend`]).  Time is tracked twice — real
 //! wall-clock of this host, and the **simulated Edge TPU clock** driven by
 //! the calibrated cost model, which is what reproduces the paper's
-//! latency/speedup numbers.
+//! latency/speedup numbers.  The simulated clock is computed per item
+//! from the same pipeline recurrence as before batching: batch-granular
+//! transport changes how bytes move, not what the simulation reports.
 
+pub mod arena;
 pub mod batcher;
 pub mod queue;
 
@@ -19,15 +37,51 @@ use std::time::Instant;
 
 use anyhow::Result;
 
-use crate::metrics::{ServeMetrics, StageMetrics};
+use crate::metrics::{DataPlaneMetrics, ServeMetrics, StageMetrics};
+
+pub use arena::{Arena, SharedSlab, SlabBuf, Tensor};
 
 use queue::{bounded, Receiver, Sender};
 
 /// What a pipeline stage executes.  Implementations: PJRT segments
 /// (production), native CPU chains, or pure-sim no-ops (tests).
+///
+/// The data plane calls [`StageBackend::run_batch`] once per batch; the
+/// per-item [`StageBackend::run`] remains the reference contract (and the
+/// default `run_batch` falls back to it, so shape-preserving test
+/// backends only implement `run`).
 pub trait StageBackend {
     /// Execute one inference on the stage's segment.
     fn run(&mut self, input: &[i8]) -> Result<Vec<i8>>;
+
+    /// Output tensor element count for a given input element count.
+    /// Defaults to shape-preserving; backends with known boundary shapes
+    /// (PJRT segments, synthetic stages) override it so the pipeline can
+    /// size the batch output slab before executing.
+    fn out_elems(&self, in_elems: usize) -> usize {
+        in_elems
+    }
+
+    /// Execute `n` inferences packed contiguously in `input`, writing the
+    /// `n` outputs contiguously into `output` (sized
+    /// `n * out_elems(input.len() / n)` by the caller).  Backends
+    /// override this to execute the slab without per-item allocation;
+    /// the default delegates to [`StageBackend::run`] per item.
+    fn run_batch(&mut self, n: usize, input: &[i8], output: &mut [i8]) -> Result<()> {
+        debug_assert!(n > 0);
+        let in_len = input.len() / n;
+        let out_len = output.len() / n;
+        for i in 0..n {
+            let out = self.run(&input[i * in_len..(i + 1) * in_len])?;
+            anyhow::ensure!(
+                out.len() == out_len,
+                "stage produced {} elems for item {i}, slab expects {out_len}",
+                out.len()
+            );
+            output[i * out_len..(i + 1) * out_len].copy_from_slice(&out);
+        }
+        Ok(())
+    }
 }
 
 /// Factory that builds a stage backend *inside* its worker thread (PJRT
@@ -59,6 +113,18 @@ pub struct HostCalendar {
     busy: Vec<(f64, f64)>, // disjoint, sorted by start
 }
 
+/// Retained busy-interval backstop.  Under backlog, back-to-back grants
+/// coalesce into few intervals (see below), so many *retained* intervals
+/// imply idle gaps between them — and an idle pipeline has few items in
+/// flight, which is what bounds how far a lagging stage's clock can sit
+/// behind the newest reservation (in-flight items <= queue_capacity *
+/// batch size * n_stages hops).  The two regimes cannot both produce a
+/// request older than thousands of retained intervals, so pruning the
+/// oldest history is safe in practice; without a bound, a long-lived
+/// fragmented calendar would degrade `reserve` to a linear scan over the
+/// whole serving history.
+const MAX_BUSY_INTERVALS: usize = 4096;
+
 impl HostCalendar {
     /// Reserve `dur` seconds at the earliest instant >= `request_t`.
     pub fn reserve(&mut self, request_t: f64, dur: f64) -> f64 {
@@ -81,7 +147,27 @@ impl HostCalendar {
         if idx == self.busy.len() {
             idx = self.busy.partition_point(|&(s, _)| s < t);
         }
-        self.busy.insert(idx, (t, t + dur));
+        // coalesce exact back-to-back reservations (the saturated steady
+        // state: a grant starting precisely where the previous interval
+        // ends, which `t = t.max(e)` produces bit-exactly) so the busy
+        // list stays small instead of growing per item served
+        let end = t + dur;
+        let merge_prev = idx > 0 && self.busy[idx - 1].1 == t;
+        let merge_next = idx < self.busy.len() && self.busy[idx].0 == end;
+        match (merge_prev, merge_next) {
+            (true, true) => {
+                self.busy[idx - 1].1 = self.busy[idx].1;
+                self.busy.remove(idx);
+            }
+            (true, false) => self.busy[idx - 1].1 = end,
+            (false, true) => self.busy[idx].0 = t,
+            (false, false) => self.busy.insert(idx, (t, end)),
+        }
+        // backstop for idle-gap fragmentation: drop the oldest history
+        if self.busy.len() > MAX_BUSY_INTERVALS {
+            let cut = self.busy.len() - MAX_BUSY_INTERVALS;
+            self.busy.drain(..cut);
+        }
         t
     }
 }
@@ -91,7 +177,8 @@ impl HostCalendar {
 pub struct Request {
     /// Caller-chosen id; responses of one serve call are ordered by it.
     pub id: u64,
-    /// Input activation tensor (int8, row-major).
+    /// Input activation tensor (int8, row-major).  Copied **once** into
+    /// an arena slab at pipeline ingress; stages never see this vector.
     pub data: Vec<i8>,
 }
 
@@ -100,48 +187,74 @@ pub struct Request {
 pub struct Response {
     /// The originating request's id.
     pub id: u64,
-    /// Output activation tensor (int8, row-major).
-    pub data: Vec<i8>,
+    /// Output activation tensor (int8, row-major): a ref-counted view of
+    /// the batch's output slab, not an owned copy.  Compares against
+    /// slices/`Vec<i8>` and derefs to `[i8]`.
+    pub data: Tensor,
     /// Real wall-clock latency on this host (PJRT CPU execution).
     pub real_latency_s: f64,
     /// Simulated Edge TPU pipeline completion time for this item.
     pub sim_done_s: f64,
 }
 
-struct Item {
+/// Per-item bookkeeping that rides a batch (ids, clocks); the tensor
+/// bytes themselves live in the batch slab.
+struct ItemMeta {
     id: u64,
-    data: Vec<i8>,
     submitted: Instant,
     /// Simulated time at which this item is available to the next stage.
     sim_arrive_s: f64,
+}
+
+/// The unit of transfer on the data plane: one contiguous slab holding
+/// `metas.len()` tensors of `elem_len` bytes each, moved through the host
+/// queues as a single message.
+struct Batch {
+    data: SlabBuf,
+    elem_len: usize,
+    metas: Vec<ItemMeta>,
+    /// A batch-level failure poisons the whole flush (the pre-batching
+    /// path likewise failed the serve call on the first errored item).
     err: Option<String>,
 }
 
 /// A running pipeline: stage threads + front/back queues.
 pub struct Pipeline {
-    input: Sender<Item>,
-    output: Receiver<Item>,
+    input: Sender<Batch>,
+    output: Receiver<Batch>,
     workers: Vec<JoinHandle<()>>,
     /// (receiver, stages-seen-ready) — mutex'd so `&Pipeline` stays `Sync`
     /// for the replica router's scoped threads.
     ready: std::sync::Mutex<(std::sync::mpsc::Receiver<Result<(), String>>, usize)>,
     n_stages: usize,
+    arena: Arena,
     /// Per-stage execution counters (one entry per TPU worker).
     pub stage_metrics: Vec<Arc<StageMetrics>>,
     /// End-to-end latency histograms for this pipeline.
     pub serve_metrics: Arc<ServeMetrics>,
+    /// Handoff/allocation counters of this pipeline's data plane (shared
+    /// pool-wide when [`PipelineConfig::data_plane`] was supplied).
+    pub data_plane: Arc<DataPlaneMetrics>,
 }
 
 /// Configuration for pipeline construction.
+#[derive(Clone)]
 pub struct PipelineConfig {
-    /// Host queue capacity between stages (the paper used unbounded
-    /// `queue.Queue()`; bounded gives backpressure).
+    /// Host queue capacity between stages, counted in **batches** (the
+    /// paper used unbounded `queue.Queue()`; bounded gives backpressure).
     pub queue_capacity: usize,
+    /// Buffer arena for activation slabs.  Supply one to share recycled
+    /// slabs across pipelines (the serving pool passes a pool-wide
+    /// arena); `None` gives the pipeline a private arena.
+    pub arena: Option<Arena>,
+    /// Data-plane counters.  Supply one to aggregate across pipelines;
+    /// `None` gives the pipeline private counters.
+    pub data_plane: Option<Arc<DataPlaneMetrics>>,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { queue_capacity: 64 }
+        PipelineConfig { queue_capacity: 64, arena: None, data_plane: None }
     }
 }
 
@@ -158,22 +271,27 @@ impl Pipeline {
         let n = factories.len();
         let stage_metrics: Vec<Arc<StageMetrics>> =
             (0..n).map(|_| Arc::new(StageMetrics::default())).collect();
+        let data_plane = cfg.data_plane.clone().unwrap_or_default();
+        let arena =
+            cfg.arena.clone().unwrap_or_else(|| Arena::new(data_plane.clone()));
 
         // shared simulated host calendar (the GIL serialization point)
         let host_clock = Arc::new(std::sync::Mutex::new(HostCalendar::default()));
         // readiness channel: each worker reports once its backend is built
         let (ready_tx, ready_rx) = std::sync::mpsc::channel();
         // build the chain of queues: input -> s0 -> s1 -> ... -> output
-        let (input_tx, mut prev_rx) = bounded::<Item>(cfg.queue_capacity);
+        let (input_tx, mut prev_rx) = bounded::<Batch>(cfg.queue_capacity);
         let mut workers = Vec::with_capacity(n);
         for (i, (factory, sim)) in factories.into_iter().zip(sims).enumerate() {
-            let (tx, rx) = bounded::<Item>(cfg.queue_capacity);
+            let (tx, rx) = bounded::<Batch>(cfg.queue_capacity);
             let metrics = stage_metrics[i].clone();
             let rx_in = prev_rx;
             let host = host_clock.clone();
             let ready = ready_tx.clone();
+            let stage_arena = arena.clone();
+            let dp = data_plane.clone();
             workers.push(std::thread::spawn(move || {
-                stage_loop(factory, sim, rx_in, tx, metrics, host, ready);
+                stage_loop(factory, sim, rx_in, tx, metrics, host, ready, stage_arena, dp);
             }));
             prev_rx = rx;
         }
@@ -183,8 +301,10 @@ impl Pipeline {
             workers,
             ready: std::sync::Mutex::new((ready_rx, 0)),
             n_stages: n,
+            arena,
             stage_metrics,
             serve_metrics: Arc::new(ServeMetrics::default()),
+            data_plane,
         })
     }
 
@@ -205,47 +325,121 @@ impl Pipeline {
 
     /// Run a closed batch through the pipeline (the paper's §V-B workload:
     /// all inputs available up front), blocking until every response is
-    /// back.  Responses are returned in request order.
+    /// back.  The whole batch moves as one slab; responses are returned
+    /// in request order.
     pub fn serve_batch(&self, requests: Vec<Request>) -> Result<Vec<Response>> {
+        self.serve_batch_chunked(requests, usize::MAX)
+    }
+
+    /// Like [`Pipeline::serve_batch`], but splits the requests into
+    /// chunks of at most `max_chunk` items, each moving through the
+    /// pipeline as its own slab — chunks overlap across stages, trading
+    /// per-hop handoff cost for intra-batch pipelining.  `max_chunk = 1`
+    /// reproduces the retired per-request transfer granularity (kept as
+    /// the benchmark baseline in `benches/dataplane.rs`).
+    pub fn serve_batch_chunked(
+        &self,
+        requests: Vec<Request>,
+        max_chunk: usize,
+    ) -> Result<Vec<Response>> {
         let n = requests.len();
+        if n == 0 {
+            return Ok(Vec::new());
+        }
+        let max_chunk = max_chunk.max(1);
+        let elem_len = requests[0].data.len();
+        for r in &requests {
+            anyhow::ensure!(
+                r.data.len() == elem_len,
+                "request {} carries {} elems, batch expects {elem_len}",
+                r.id,
+                r.data.len()
+            );
+        }
         let start = Instant::now();
-        // feed from a separate thread so we can drain concurrently
-        // (bounded queues would otherwise deadlock for large batches)
+        if max_chunk >= n {
+            // single-message fast path (the serve_batch default): pack in
+            // the caller and skip the feeder thread entirely — one batch
+            // in flight can neither deadlock nor need concurrent draining
+            let batch = pack_batch(&self.arena, &self.data_plane, &requests, elem_len, start);
+            return self.serve_prepacked(batch);
+        }
+        // feed from a separate thread so draining proceeds concurrently
+        // (several in-flight chunks through bounded queues would
+        // otherwise deadlock)
         let input = self.input.clone();
+        let arena = self.arena.clone();
+        let dp = self.data_plane.clone();
         let feeder = std::thread::spawn(move || {
-            for r in requests {
-                let item = Item {
-                    id: r.id,
-                    data: r.data,
-                    submitted: start,
-                    sim_arrive_s: 0.0,
-                    err: None,
-                };
-                if input.send(item).is_err() {
+            let mut it = requests.into_iter();
+            let mut remaining = n;
+            while remaining > 0 {
+                let k = remaining.min(max_chunk);
+                let mut chunk = Vec::with_capacity(k);
+                for _ in 0..k {
+                    chunk.push(it.next().expect("remaining tracks the iterator"));
+                }
+                remaining -= k;
+                let batch = pack_batch(&arena, &dp, &chunk, elem_len, start);
+                if input.send(batch).is_err() {
                     break;
                 }
             }
         });
+        let responses = self.drain_responses(n);
+        if responses.is_ok() {
+            // the feeder consumed every request; on error it may instead
+            // be blocked on a bounded queue and unblocks at shutdown (the
+            // pre-batching path behaved identically on stage errors)
+            feeder.join().unwrap();
+        }
+        let mut responses = responses?;
+        responses.sort_by_key(|r| r.id);
+        Ok(responses)
+    }
+
+    /// Send one pre-packed batch and block for its responses (in request
+    /// order).  Used by [`ReplicaRouter`], which packs every shard in the
+    /// caller thread first so the arena sees the full replica-parallel
+    /// demand deterministically on every call.
+    fn serve_prepacked(&self, batch: Batch) -> Result<Vec<Response>> {
+        let n = batch.metas.len();
+        if self.input.send(batch).is_err() {
+            anyhow::bail!("pipeline closed");
+        }
+        let mut responses = self.drain_responses(n)?;
+        responses.sort_by_key(|r| r.id);
+        Ok(responses)
+    }
+
+    /// Pack a request shard into a batch using this pipeline's arena.
+    fn pack(&self, shard: &[Request], elem_len: usize, start: Instant) -> Batch {
+        pack_batch(&self.arena, &self.data_plane, shard, elem_len, start)
+    }
+
+    /// Receive batches until `n` responses are collected (not yet sorted).
+    fn drain_responses(&self, n: usize) -> Result<Vec<Response>> {
         let mut responses = Vec::with_capacity(n);
-        for _ in 0..n {
-            let item = self
+        while responses.len() < n {
+            let batch = self
                 .output
                 .recv()
                 .ok_or_else(|| anyhow::anyhow!("pipeline closed early"))?;
-            if let Some(e) = item.err {
-                anyhow::bail!("stage error on item {}: {e}", item.id);
+            if let Some(e) = batch.err {
+                anyhow::bail!("stage error on batch of {}: {e}", batch.metas.len());
             }
-            let real = item.submitted.elapsed().as_secs_f64();
-            self.serve_metrics.record(real, item.sim_arrive_s);
-            responses.push(Response {
-                id: item.id,
-                data: item.data,
-                real_latency_s: real,
-                sim_done_s: item.sim_arrive_s,
-            });
+            let slab = batch.data.share();
+            for (i, m) in batch.metas.iter().enumerate() {
+                let real = m.submitted.elapsed().as_secs_f64();
+                self.serve_metrics.record(real, m.sim_arrive_s);
+                responses.push(Response {
+                    id: m.id,
+                    data: Tensor::slice(&slab, i * batch.elem_len, batch.elem_len),
+                    real_latency_s: real,
+                    sim_done_s: m.sim_arrive_s,
+                });
+            }
         }
-        feeder.join().unwrap();
-        responses.sort_by_key(|r| r.id);
         Ok(responses)
     }
 
@@ -258,14 +452,40 @@ impl Pipeline {
     }
 }
 
+/// Write `shard` into one contiguous arena slab (the single ingress copy
+/// of the data plane) and attach per-item metadata.
+fn pack_batch(
+    arena: &Arena,
+    dp: &DataPlaneMetrics,
+    shard: &[Request],
+    elem_len: usize,
+    start: Instant,
+) -> Batch {
+    let k = shard.len();
+    let mut slab = arena.take(k * elem_len);
+    let mut metas = Vec::with_capacity(k);
+    for (i, r) in shard.iter().enumerate() {
+        debug_assert_eq!(r.data.len(), elem_len);
+        if elem_len > 0 {
+            slab[i * elem_len..(i + 1) * elem_len].copy_from_slice(&r.data);
+        }
+        metas.push(ItemMeta { id: r.id, submitted: start, sim_arrive_s: 0.0 });
+    }
+    dp.record_handoff(k as u64);
+    Batch { data: slab, elem_len, metas, err: None }
+}
+
+#[allow(clippy::too_many_arguments)] // worker wiring, called once per stage
 fn stage_loop(
     factory: StageFactory,
     sim: StageSim,
-    rx: Receiver<Item>,
-    tx: Sender<Item>,
+    rx: Receiver<Batch>,
+    tx: Sender<Batch>,
     metrics: Arc<StageMetrics>,
     host_clock: Arc<std::sync::Mutex<HostCalendar>>,
     ready: std::sync::mpsc::Sender<Result<(), String>>,
+    arena: Arena,
+    dp: Arc<DataPlaneMetrics>,
 ) {
     let mut backend = match factory() {
         Ok(b) => {
@@ -274,10 +494,10 @@ fn stage_loop(
         }
         Err(e) => {
             let _ = ready.send(Err(e.to_string()));
-            // propagate construction failure on every item, then drain
-            while let Some(mut item) = rx.recv() {
-                item.err = Some(format!("backend init failed: {e}"));
-                if tx.send(item).is_err() {
+            // propagate construction failure on every batch, then drain
+            while let Some(mut batch) = rx.recv() {
+                batch.err = Some(format!("backend init failed: {e}"));
+                if tx.send(batch).is_err() {
                     break;
                 }
             }
@@ -287,26 +507,37 @@ fn stage_loop(
     };
     // simulated clock of THIS stage: when the simulated TPU becomes free
     let mut sim_free_s = 0.0f64;
-    while let Some(mut item) = rx.recv() {
-        let t0 = Instant::now();
-        if item.err.is_none() {
-            match backend.run(&item.data) {
-                Ok(out) => item.data = out,
-                Err(e) => item.err = Some(e.to_string()),
+    while let Some(mut batch) = rx.recv() {
+        let n = batch.metas.len();
+        if batch.err.is_none() && n > 0 {
+            let t0 = Instant::now();
+            let out_len = backend.out_elems(batch.elem_len);
+            let mut out = arena.take(n * out_len);
+            match backend.run_batch(n, &batch.data, &mut out) {
+                Ok(()) => {
+                    // the input slab drops here and returns to the arena
+                    batch.data = out;
+                    batch.elem_len = out_len;
+                }
+                Err(e) => batch.err = Some(e.to_string()),
+            }
+            metrics.record_batch(n as u64, t0.elapsed());
+        }
+        // simulated pipeline recurrence per item (same math as
+        // pipeline::simulate): dispatch waits for input, the TPU, and the
+        // GIL-shared host.  One calendar lock covers the whole batch.
+        {
+            let mut cal = host_clock.lock().unwrap();
+            for m in &mut batch.metas {
+                let request = m.sim_arrive_s.max(sim_free_s);
+                let dispatch = cal.reserve(request, sim.overhead_s);
+                let finish = dispatch + sim.overhead_s + sim.exec_s;
+                sim_free_s = finish;
+                m.sim_arrive_s = finish + sim.hop_out_s;
             }
         }
-        metrics.record(t0.elapsed());
-        // simulated pipeline recurrence (same math as pipeline::simulate):
-        // dispatch waits for input, the TPU, and the GIL-shared host
-        let sim_finish = {
-            let request = item.sim_arrive_s.max(sim_free_s);
-            let dispatch =
-                host_clock.lock().unwrap().reserve(request, sim.overhead_s);
-            dispatch + sim.overhead_s + sim.exec_s
-        };
-        sim_free_s = sim_finish;
-        item.sim_arrive_s = sim_finish + sim.hop_out_s;
-        if tx.send(item).is_err() {
+        dp.record_handoff(n as u64);
+        if tx.send(batch).is_err() {
             break;
         }
     }
@@ -329,18 +560,41 @@ impl ReplicaRouter {
     }
 
     /// Split a batch round-robin across replicas, run them concurrently,
-    /// return responses in request order.
+    /// return responses in request order.  Every shard is packed into its
+    /// slab **in the caller thread before the fan-out**, so the arena
+    /// sees the full replica-parallel demand on every call — steady-state
+    /// allocation behaviour is deterministic, not thread-timing-luck.
     pub fn serve_batch(&self, requests: Vec<Request>) -> Result<Vec<Response>> {
+        if requests.is_empty() {
+            return Ok(Vec::new());
+        }
+        let elem_len = requests[0].data.len();
+        for r in &requests {
+            anyhow::ensure!(
+                r.data.len() == elem_len,
+                "request {} carries {} elems, batch expects {elem_len}",
+                r.id,
+                r.data.len()
+            );
+        }
         let k = self.replicas.len();
         let mut shards: Vec<Vec<Request>> = (0..k).map(|_| Vec::new()).collect();
         for (i, r) in requests.into_iter().enumerate() {
             shards[i % k].push(r);
         }
+        let start = Instant::now();
+        let packed: Vec<(usize, Batch)> = shards
+            .iter()
+            .enumerate()
+            .filter(|(_, shard)| !shard.is_empty())
+            .map(|(i, shard)| (i, self.replicas[i].pack(shard, elem_len, start)))
+            .collect();
         let mut all = Vec::new();
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
-            for (rep, shard) in self.replicas.iter().zip(shards) {
-                handles.push(scope.spawn(move || rep.serve_batch(shard)));
+            for (i, batch) in packed {
+                let rep = &self.replicas[i];
+                handles.push(scope.spawn(move || rep.serve_prepacked(batch)));
             }
             for h in handles {
                 all.extend(h.join().expect("replica thread panicked")?);
@@ -409,6 +663,7 @@ mod tests {
     }
 
     /// A backend that applies an affine int8 map (cheap, deterministic).
+    /// Implements only `run`, so it exercises the default batched path.
     struct AddOne;
 
     impl StageBackend for AddOne {
@@ -498,15 +753,106 @@ mod tests {
     }
 
     #[test]
-    fn bounded_queue_large_batch_no_deadlock() {
+    fn bounded_queue_many_chunks_no_deadlock() {
+        // 500 requests as 63 in-flight chunk messages through capacity-2
+        // queues: the feeder thread + drain loop must not deadlock
         let p = Pipeline::spawn(
             factories(4),
             sims(4, 1e-5),
-            &PipelineConfig { queue_capacity: 2 },
+            &PipelineConfig { queue_capacity: 2, ..Default::default() },
         )
         .unwrap();
-        let out = p.serve_batch(reqs(500)).unwrap();
+        let out = p.serve_batch_chunked(reqs(500), 8).unwrap();
         assert_eq!(out.len(), 500);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+        }
+        p.shutdown();
+    }
+
+    #[test]
+    fn chunked_and_batched_paths_agree() {
+        let mk = || {
+            Pipeline::spawn(factories(3), sims(3, 1e-5), &PipelineConfig::default()).unwrap()
+        };
+        let a = mk();
+        let b = mk();
+        let whole = a.serve_batch(reqs(40)).unwrap();
+        let chunked = b.serve_batch_chunked(reqs(40), 1).unwrap();
+        assert_eq!(whole.len(), chunked.len());
+        for (x, y) in whole.iter().zip(&chunked) {
+            assert_eq!(x.id, y.id);
+            assert_eq!(x.data, y.data, "transfer granularity must not change bytes");
+        }
+        a.shutdown();
+        b.shutdown();
+    }
+
+    #[test]
+    fn mismatched_request_sizes_are_rejected_at_ingress() {
+        let p = Pipeline::spawn(factories(1), sims(1, 1e-5), &PipelineConfig::default())
+            .unwrap();
+        let bad = vec![
+            Request { id: 0, data: vec![0; 8] },
+            Request { id: 1, data: vec![0; 4] },
+        ];
+        let err = p.serve_batch(bad).unwrap_err();
+        assert!(err.to_string().contains("carries"), "{err}");
+        p.shutdown();
+    }
+
+    #[test]
+    fn steady_state_serving_is_allocation_free() {
+        // after the first batch warmed the arena, identical batches must
+        // recycle every slab: the alloc counter freezes
+        let p = Pipeline::spawn(factories(4), sims(4, 1e-6), &PipelineConfig::default())
+            .unwrap();
+        p.wait_ready().unwrap();
+        drop(p.serve_batch(reqs(32)).unwrap()); // warm-up, responses dropped
+        let warm = p.data_plane.snapshot();
+        assert!(warm.slab_allocs > 0, "warm-up must have allocated slabs");
+        for _ in 0..5 {
+            drop(p.serve_batch(reqs(32)).unwrap());
+        }
+        let after = p.data_plane.snapshot();
+        assert_eq!(
+            after.slab_allocs, warm.slab_allocs,
+            "steady state must perform zero per-request allocations: {after:?}"
+        );
+        assert!(after.slab_reuses > warm.slab_reuses);
+        // one handoff per hop per batch: 6 batches x (1 ingress + 4 stages)
+        assert_eq!(after.handoffs, 6 * 5);
+        assert_eq!(after.handoff_items, 6 * 5 * 32);
+        p.shutdown();
+    }
+
+    #[test]
+    fn out_elems_override_sizes_the_output_slab() {
+        // a shape-changing backend using the default run_batch: the slab
+        // is sized by out_elems, and values/order survive
+        struct Doubler;
+        impl StageBackend for Doubler {
+            fn run(&mut self, input: &[i8]) -> Result<Vec<i8>> {
+                let mut out = Vec::with_capacity(input.len() * 2);
+                for &v in input {
+                    out.push(v);
+                    out.push(v.saturating_neg());
+                }
+                Ok(out)
+            }
+            fn out_elems(&self, in_elems: usize) -> usize {
+                in_elems * 2
+            }
+        }
+        let f: Vec<StageFactory> =
+            vec![Box::new(|| Ok(Box::new(Doubler) as Box<dyn StageBackend>))];
+        let p = Pipeline::spawn(f, sims(1, 1e-6), &PipelineConfig::default()).unwrap();
+        let out = p.serve_batch(reqs(9)).unwrap();
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.data.len(), 16);
+            assert_eq!(r.data[0], i as i8);
+            assert_eq!(r.data[1], (i as i8).saturating_neg());
+        }
         p.shutdown();
     }
 

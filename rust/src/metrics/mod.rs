@@ -1,7 +1,10 @@
 //! Serving metrics: per-stage counters/timers, end-to-end latency
-//! histograms, per-tenant batching counters (queue depth / flush reason)
-//! and pool-scheduler re-plan counters, shared across worker threads.
+//! histograms, per-tenant batching counters (queue depth / flush reason),
+//! pool-scheduler re-plan counters, and the data-plane handoff/allocation
+//! counters behind the zero-copy batched request path, shared across
+//! worker threads.
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
@@ -39,6 +42,20 @@ impl StageMetrics {
         g.items += 1;
         g.busy_s += exec.as_secs_f64();
         g.exec.add(exec.as_secs_f64());
+    }
+
+    /// Record one batched backend call covering `items` requests in
+    /// `exec` total: the per-item timing sample is the batch mean (the
+    /// data plane executes whole batches, so per-item wall times are no
+    /// longer observed individually).
+    pub fn record_batch(&self, items: u64, exec: Duration) {
+        if items == 0 {
+            return;
+        }
+        let mut g = self.inner.lock().unwrap();
+        g.items += items;
+        g.busy_s += exec.as_secs_f64();
+        g.exec.add(exec.as_secs_f64() / items as f64);
     }
 
     pub fn snapshot(&self) -> StageSnapshot {
@@ -260,6 +277,77 @@ pub struct TenantSnapshot {
     pub sim_p99_s: f64,
 }
 
+/// Data-plane counters for the zero-copy batched request path: how many
+/// batch messages crossed a host queue (handoffs), how many requests they
+/// carried, and the buffer arena's allocation traffic.  Lock-free
+/// (atomics): these sit on the per-batch hot path of every stage worker.
+///
+/// The steady-state invariant the `make smoke-dataplane` gate asserts is
+/// `slab_allocs` staying **flat** while requests keep completing — the
+/// arena recycles every activation slab, so the per-request allocation
+/// count is zero once the pool is warm.
+#[derive(Debug, Default)]
+pub struct DataPlaneMetrics {
+    handoffs: AtomicU64,
+    handoff_items: AtomicU64,
+    slab_allocs: AtomicU64,
+    slab_alloc_bytes: AtomicU64,
+    slab_reuses: AtomicU64,
+}
+
+impl DataPlaneMetrics {
+    /// Count one batch message crossing a host queue with `items`
+    /// requests aboard (one lock/wakeup moved the whole batch).
+    pub fn record_handoff(&self, items: u64) {
+        self.handoffs.fetch_add(1, Ordering::Relaxed);
+        self.handoff_items.fetch_add(items, Ordering::Relaxed);
+    }
+
+    /// Count one arena miss: a fresh slab of `bytes` was heap-allocated.
+    pub fn record_slab_alloc(&self, bytes: u64) {
+        self.slab_allocs.fetch_add(1, Ordering::Relaxed);
+        self.slab_alloc_bytes.fetch_add(bytes, Ordering::Relaxed);
+    }
+
+    /// Count one arena hit: a retained slab was reused without allocating.
+    pub fn record_slab_reuse(&self) {
+        self.slab_reuses.fetch_add(1, Ordering::Relaxed);
+    }
+
+    /// Take an immutable snapshot of every counter.
+    pub fn snapshot(&self) -> DataPlaneSnapshot {
+        DataPlaneSnapshot {
+            handoffs: self.handoffs.load(Ordering::Relaxed),
+            handoff_items: self.handoff_items.load(Ordering::Relaxed),
+            slab_allocs: self.slab_allocs.load(Ordering::Relaxed),
+            slab_alloc_bytes: self.slab_alloc_bytes.load(Ordering::Relaxed),
+            slab_reuses: self.slab_reuses.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// Immutable view of the data-plane counters.
+#[derive(Debug, Clone, Copy)]
+pub struct DataPlaneSnapshot {
+    /// Batch messages moved across host queues (ingress + stage hops).
+    pub handoffs: u64,
+    /// Requests carried by those batch messages.
+    pub handoff_items: u64,
+    /// Fresh slab heap allocations (arena misses).
+    pub slab_allocs: u64,
+    /// Bytes of those fresh allocations.
+    pub slab_alloc_bytes: u64,
+    /// Slab takes served from the free list (arena hits).
+    pub slab_reuses: u64,
+}
+
+impl DataPlaneSnapshot {
+    /// Mean requests moved per channel handoff (NaN before any handoff).
+    pub fn items_per_handoff(&self) -> f64 {
+        self.handoff_items as f64 / self.handoffs as f64
+    }
+}
+
 /// Pool-scheduler counters: registration, admission and routing totals.
 #[derive(Debug, Default)]
 pub struct SchedulerMetrics {
@@ -454,6 +542,34 @@ mod tests {
         assert_eq!(s.swaps, 2);
         assert_eq!(s.swaps_skipped, 1);
         assert!((s.swap_overhead_s - 4e-3).abs() < 1e-12, "{s:?}");
+    }
+
+    #[test]
+    fn stage_metrics_batched_recording() {
+        let m = StageMetrics::default();
+        m.record_batch(10, Duration::from_millis(20));
+        m.record_batch(0, Duration::from_millis(5)); // ignored
+        let s = m.snapshot();
+        assert_eq!(s.items, 10);
+        assert!((s.busy_s - 0.020).abs() < 1e-9);
+        assert!((s.mean_exec_s - 0.002).abs() < 1e-9, "per-item mean of the batch");
+    }
+
+    #[test]
+    fn data_plane_counters_accumulate() {
+        let m = DataPlaneMetrics::default();
+        m.record_handoff(8);
+        m.record_handoff(2);
+        m.record_slab_alloc(512);
+        m.record_slab_reuse();
+        m.record_slab_reuse();
+        let s = m.snapshot();
+        assert_eq!(s.handoffs, 2);
+        assert_eq!(s.handoff_items, 10);
+        assert_eq!(s.slab_allocs, 1);
+        assert_eq!(s.slab_alloc_bytes, 512);
+        assert_eq!(s.slab_reuses, 2);
+        assert!((s.items_per_handoff() - 5.0).abs() < 1e-12);
     }
 
     #[test]

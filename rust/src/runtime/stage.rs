@@ -23,6 +23,15 @@ impl StageBackend for PjrtStage {
     fn run(&mut self, input: &[i8]) -> Result<Vec<i8>> {
         self.segment.run(input)
     }
+
+    /// Sizes the batch output slab from the segment's boundary shape; the
+    /// trait's default `run_batch` then writes per-sample results straight
+    /// into the slab.  Compiling batched executables (leading batch
+    /// dimension) to replace the per-sample execute loop is an open
+    /// ROADMAP item — overriding `run_batch` then is the one change.
+    fn out_elems(&self, _in_elems: usize) -> usize {
+        self.segment.out_elems
+    }
 }
 
 /// Build a [`StageFactory`] for one segment artifact.

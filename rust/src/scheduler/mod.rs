@@ -55,8 +55,8 @@ pub use allocator::{
 pub use pool::{OpenOptions, ReplanReport, ServingPool, TenantClient};
 pub use registry::{resolve_model, ModelRegistry, Tenant};
 pub use router::{
-    synthetic_reference, synthetic_transform, tenant_salt, BackendKind, PoolRouter,
-    TenantHandle,
+    synthetic_reference, synthetic_transform, synthetic_transform_into, tenant_salt,
+    BackendKind, PoolRouter, TenantHandle, TenantShape,
 };
 
 use anyhow::Result;
@@ -229,7 +229,7 @@ mod tests {
         }
         for _ in 0..4 {
             let r = client.done.recv().unwrap();
-            assert_eq!(r.data.len(), client.out_elems);
+            assert_eq!(r.data.len(), client.out_elems());
         }
         pool.shutdown();
     }

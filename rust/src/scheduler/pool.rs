@@ -16,6 +16,20 @@
 //!   only the deployments whose assignment changed, and redeploy — without
 //!   dropping a single in-flight request.
 //!
+//! ## Data plane
+//!
+//! Every deployment shares the pool's buffer [`Arena`] and
+//! [`DataPlaneMetrics`]: a flush is packed once into an arena slab, moves
+//! batch-at-once through the pipeline, and its responses are pushed into
+//! the completion stream with a single [`send_many`](crate::coordinator::queue::Sender::send_many)
+//! (one lock, at most one wakeup, per batch).  Steady state allocates
+//! nothing per request — `repro dataplane` asserts it on a live pool.
+//!
+//! Immutable plan data ([`Assignment`], the [`PoolPlan`] itself, the
+//! per-tenant [`TenantShape`]) is shared by `Arc` instead of deep-cloned
+//! per worker per re-plan, so an online re-plan copies each changed
+//! assignment exactly once.
+//!
 //! ## Drain / re-plan protocol
 //!
 //! A re-plan holds the pool's state lock, closes the ingress queues of
@@ -44,14 +58,13 @@ use anyhow::{Context, Result};
 use crate::config::SystemConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::queue::{bounded, Receiver, SendError, Sender};
-use crate::coordinator::{Request, Response};
-use crate::metrics::{SchedulerMetrics, TenantMetrics};
+use crate::coordinator::{Arena, PipelineConfig, Request, Response};
+use crate::metrics::{DataPlaneMetrics, SchedulerMetrics, TenantMetrics};
 use crate::runtime::Manifest;
-use crate::util::rng::Rng;
 
-use super::allocator::{allocate, AllocatorConfig, DeviceGrant, PoolPlan};
+use super::allocator::{allocate, AllocatorConfig, Assignment, PoolPlan};
 use super::registry::{ModelRegistry, Tenant};
-use super::router::{build_deployment, synthetic_reference, BackendKind, Deployment};
+use super::router::{build_deployment, BackendKind, Deployment, TenantShape};
 
 /// Completion-queue capacity per tenant: bounds how many responses may sit
 /// unconsumed before the batcher worker backpressures.  Generous, so tests
@@ -63,8 +76,8 @@ const DONE_QUEUE_CAPACITY: usize = 4096;
 pub struct OpenOptions {
     /// Per-tenant dynamic batching policy (size/wait flush).
     pub policy: BatchPolicy,
-    /// Capacity of each tenant's ingress queue and of the host queues
-    /// between pipeline stages (backpressure bound).
+    /// Capacity of each tenant's ingress queue (requests) and of the host
+    /// queues between pipeline stages (batches) — the backpressure bound.
     pub queue_capacity: usize,
 }
 
@@ -102,17 +115,11 @@ impl ReplanReport {
 struct LiveTenant {
     ingress: Sender<Request>,
     worker: Option<JoinHandle<()>>,
-    /// Assignment signature for re-plan diffing (a grant change — e.g. a
-    /// shared tenant promoted to an exclusive TPU — forces a redeploy).
-    tpu_count: usize,
-    replicas: usize,
-    partition_cuts: Vec<usize>,
-    grant: DeviceGrant,
+    /// The assignment this deployment realizes (shared, not re-cloned:
+    /// the re-plan diff reads it, clients share its grant/partition).
+    assignment: Arc<Assignment>,
     /// Shape/verification info mirrored into [`TenantClient`]s.
-    in_elems: usize,
-    out_elems: usize,
-    salt: u64,
-    layer_out_elems: Vec<usize>,
+    shape: Arc<TenantShape>,
     metrics: Arc<TenantMetrics>,
 }
 
@@ -123,15 +130,8 @@ struct LiveTenant {
 pub struct TenantClient {
     /// Model/routing name.
     pub name: String,
-    /// Input tensor element count (what submitted requests must carry).
-    pub in_elems: usize,
-    /// Output tensor element count.
-    pub out_elems: usize,
-    /// Synthetic-backend key (stable across runs and re-plans).
-    pub salt: u64,
-    /// Per-layer output sizes over the whole model, for
-    /// [`synthetic_reference`] checks (partition-invariant).
-    pub layer_out_elems: Vec<usize>,
+    /// Tensor shapes + synthetic verification key (shared, not cloned).
+    pub shape: Arc<TenantShape>,
     /// The tenant's completion stream (cloneable receiver).
     pub done: Receiver<Response>,
     /// The tenant's serving counters (persist across re-plans).
@@ -139,15 +139,24 @@ pub struct TenantClient {
 }
 
 impl TenantClient {
+    /// Input tensor element count (what submitted requests must carry).
+    pub fn in_elems(&self) -> usize {
+        self.shape.in_elems
+    }
+
+    /// Output tensor element count.
+    pub fn out_elems(&self) -> usize {
+        self.shape.out_elems
+    }
+
     /// Deterministic random requests shaped for this tenant, ids `0..n`.
     pub fn synth_requests(&self, n: usize, seed: u64) -> Vec<Request> {
-        let mut rng = Rng::new(seed ^ self.salt);
-        (0..n as u64).map(|id| Request { id, data: rng.i8_vec(self.in_elems) }).collect()
+        self.shape.synth_requests(n, seed)
     }
 
     /// The serial reference output for one request (synthetic backend).
     pub fn reference(&self, input: &[i8]) -> Vec<i8> {
-        synthetic_reference(self.salt, &self.layer_out_elems, input)
+        self.shape.reference(input)
     }
 }
 
@@ -161,7 +170,7 @@ struct PoolState {
     done: BTreeMap<String, DoneChannel>,
     /// Per-tenant counters, persistent across re-plans.
     tenant_metrics: BTreeMap<String, Arc<TenantMetrics>>,
-    plan: PoolPlan,
+    plan: Arc<PoolPlan>,
 }
 
 /// The open-loop multi-tenant serving pool (see the module docs for the
@@ -172,6 +181,10 @@ pub struct ServingPool {
     backend: BackendKind,
     opts: OpenOptions,
     manifest: Option<Manifest>,
+    /// Pool-wide slab arena: shared by every deployment, surviving
+    /// re-plans, so recycled buffers cross tenants and redeployments.
+    arena: Arena,
+    data_plane: Arc<DataPlaneMetrics>,
     state: Mutex<PoolState>,
     /// Pool-level admission/routing/re-plan counters.
     pub metrics: Arc<SchedulerMetrics>,
@@ -179,8 +192,8 @@ pub struct ServingPool {
 
 /// Per-tenant batcher worker: pull batches off the ingress queue under the
 /// flush policy, serve them through the deployment, stream responses into
-/// the completion queue.  Exits (and tears the deployment down) when the
-/// ingress queue is closed and drained.
+/// the completion queue (one `send_many` per batch).  Exits (and tears
+/// the deployment down) when the ingress queue is closed and drained.
 fn tenant_worker(
     deployment: Deployment,
     batcher: Batcher,
@@ -234,11 +247,10 @@ fn tenant_worker(
                         sim_epoch = r.sim_done_s;
                     }
                 }
-                for r in responses {
-                    if done.send(r).is_err() {
-                        break;
-                    }
-                }
+                // the whole batch of responses crosses the completion
+                // queue under one lock/wakeup; a closed stream (pool
+                // shutdown racing the drain) just drops the remainder
+                let _ = done.send_many(responses);
             }
             Err(_) => metrics.record_error(),
         }
@@ -265,25 +277,28 @@ impl ServingPool {
         };
         let total_tpus = alloc.total_tpus;
         let allow_sharing = alloc.allow_sharing;
+        let data_plane = Arc::new(DataPlaneMetrics::default());
         let pool = ServingPool {
             system,
             alloc,
             backend,
             opts,
             manifest,
+            arena: Arena::new(data_plane.clone()),
+            data_plane,
             state: Mutex::new(PoolState {
                 registry,
                 live: BTreeMap::new(),
                 done: BTreeMap::new(),
                 tenant_metrics: BTreeMap::new(),
-                plan: PoolPlan {
+                plan: Arc::new(PoolPlan {
                     total_tpus,
                     assignments: Vec::new(),
                     queued: Vec::new(),
                     rejected: Vec::new(),
                     objective_s: 0.0,
                     sharing_enabled: allow_sharing,
-                },
+                }),
             }),
             metrics: Arc::new(SchedulerMetrics::default()),
         };
@@ -320,13 +335,13 @@ impl ServingPool {
         for name in names {
             let keep = match plan.assignment(&name) {
                 Some(a) => {
-                    let lt = &st.live[&name];
-                    a.candidate.tpu_count == lt.tpu_count
-                        && a.replicas == lt.replicas
-                        && a.candidate.partition.cuts == lt.partition_cuts
+                    let old = &st.live[&name].assignment;
+                    a.candidate.tpu_count == old.candidate.tpu_count
+                        && a.replicas == old.replicas
+                        && a.candidate.partition.cuts == old.candidate.partition.cuts
                         // device renumbering alone is not a change: only
                         // slice/cost/co-resident differences force a drain
-                        && a.grant.same_deployment(&lt.grant)
+                        && a.grant.same_deployment(&old.grant)
                 }
                 None => false,
             };
@@ -340,7 +355,13 @@ impl ServingPool {
             }
         }
 
-        // spawn deployments for new or changed assignments
+        // spawn deployments for new or changed assignments; all of them
+        // share the pool's arena + data-plane counters
+        let pipe = PipelineConfig {
+            queue_capacity: self.opts.queue_capacity,
+            arena: Some(self.arena.clone()),
+            data_plane: Some(self.data_plane.clone()),
+        };
         for a in &plan.assignments {
             if st.live.contains_key(&a.name) {
                 continue;
@@ -351,7 +372,7 @@ impl ServingPool {
                 &self.system,
                 &self.backend,
                 self.manifest.as_ref(),
-                self.opts.queue_capacity,
+                &pipe,
             )?;
             built.deployment.wait_ready()?;
             let (ingress, ingress_rx) = bounded(self.opts.queue_capacity);
@@ -383,14 +404,8 @@ impl ServingPool {
                 LiveTenant {
                     ingress,
                     worker: Some(worker),
-                    tpu_count: a.candidate.tpu_count,
-                    replicas: a.replicas,
-                    partition_cuts: a.candidate.partition.cuts.clone(),
-                    grant: a.grant.clone(),
-                    in_elems: built.in_elems,
-                    out_elems: built.out_elems,
-                    salt: built.salt,
-                    layer_out_elems: built.layer_out_elems,
+                    assignment: Arc::new(a.clone()),
+                    shape: built.shape,
                     metrics,
                 },
             );
@@ -403,7 +418,7 @@ impl ServingPool {
             plan.queued.len() as u64,
             plan.rejected.len() as u64,
         );
-        st.plan = plan;
+        st.plan = Arc::new(plan);
         Ok(drained)
     }
 
@@ -442,7 +457,8 @@ impl ServingPool {
     }
 
     /// A caller handle on one live tenant: shape info, completion stream
-    /// and counters.  Cheap to call; the stream survives re-plans.
+    /// and counters.  Cheap to call (all shared data is `Arc`-cloned);
+    /// the stream survives re-plans.
     pub fn client(&self, model: &str) -> Result<TenantClient> {
         let st = self.state.lock().unwrap();
         let lt = st
@@ -452,10 +468,7 @@ impl ServingPool {
         let done = st.done.get(model).expect("live tenant has a done channel").1.clone();
         Ok(TenantClient {
             name: model.to_string(),
-            in_elems: lt.in_elems,
-            out_elems: lt.out_elems,
-            salt: lt.salt,
-            layer_out_elems: lt.layer_out_elems.clone(),
+            shape: lt.shape.clone(),
             done,
             metrics: lt.metrics.clone(),
         })
@@ -489,8 +502,9 @@ impl ServingPool {
         Ok(ReplanReport::of(&st.plan, drained))
     }
 
-    /// Clone of the most recent pool plan.
-    pub fn plan(&self) -> PoolPlan {
+    /// Shared snapshot of the most recent pool plan (`Arc`, not a deep
+    /// clone — plans are immutable once applied).
+    pub fn plan(&self) -> Arc<PoolPlan> {
         self.state.lock().unwrap().plan.clone()
     }
 
@@ -502,6 +516,12 @@ impl ServingPool {
     /// One tenant's counters (also reachable via [`TenantClient`]).
     pub fn tenant_metrics(&self, name: &str) -> Option<Arc<TenantMetrics>> {
         self.state.lock().unwrap().tenant_metrics.get(name).cloned()
+    }
+
+    /// The pool-wide data-plane counters (handoffs, slab alloc/reuse)
+    /// aggregated across every tenant's deployment, surviving re-plans.
+    pub fn data_plane(&self) -> Arc<DataPlaneMetrics> {
+        self.data_plane.clone()
     }
 
     /// Drain every tenant (in-flight requests complete), join all workers
@@ -525,6 +545,7 @@ impl ServingPool {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::scheduler::allocator::DeviceGrant;
 
     fn pool(names: &[&str], tpus: usize) -> ServingPool {
         let mut reg = ModelRegistry::new();
@@ -553,7 +574,7 @@ mod tests {
         while got < n {
             let r = client.done.recv().expect("stream closed early");
             assert_eq!(r.data, expected[r.id as usize], "{name}: digest mismatch");
-            assert_eq!(r.data.len(), client.out_elems);
+            assert_eq!(r.data.len(), client.out_elems());
             got += 1;
         }
     }
@@ -576,6 +597,9 @@ mod tests {
             );
         }
         assert_eq!(p.metrics.snapshot().routed_requests, 80);
+        let dp = p.data_plane().snapshot();
+        assert!(dp.handoffs >= 2, "batches must have crossed the data plane");
+        assert!(dp.handoff_items >= 80);
         p.shutdown();
     }
 
@@ -706,6 +730,29 @@ mod tests {
         // submitting to the gone tenant errors; the survivor still serves
         assert!(p.submit("fc_small", Request { id: 0, data: vec![0; 4] }).is_err());
         run_and_verify(&p, "conv_a", 8, 4);
+        p.shutdown();
+    }
+
+    #[test]
+    fn arena_survives_replans_and_keeps_recycling() {
+        // warm the pool, re-plan it, and confirm the shared arena still
+        // recycles: a redeploy must not reset the data plane
+        let p = pool(&["fc_small"], 1);
+        run_and_verify(&p, "fc_small", 20, 1);
+        let warm = p.data_plane().snapshot();
+        assert!(warm.slab_allocs > 0);
+        // a registration change re-plans the pool (the newcomer is queued
+        // on 1 TPU); fc_small must keep serving from the warm slabs
+        let report = p
+            .register(Tenant::new("conv_a", super::super::resolve_model("conv_a").unwrap()))
+            .unwrap();
+        assert!(report.queued >= 1 || report.admitted.len() > 1, "{report:?}");
+        run_and_verify(&p, "fc_small", 20, 2);
+        let after = p.data_plane().snapshot();
+        assert!(
+            after.slab_reuses > warm.slab_reuses,
+            "recycling must continue after re-plan attempts: {after:?}"
+        );
         p.shutdown();
     }
 }

@@ -4,7 +4,10 @@
 //! into running [`Pipeline`]s — one per admitted model, or a
 //! [`ReplicaRouter`] of full pipeline copies when the allocator granted
 //! leftover-TPU replicas — and routes request batches by model name with
-//! per-tenant metrics.
+//! per-tenant metrics.  Every deployment of one router shares a single
+//! buffer [`Arena`], so activation slabs retired by one tenant are
+//! recycled by the next — pool-wide, the steady-state request path
+//! allocates nothing.
 //!
 //! Two stage backends:
 //!
@@ -20,7 +23,8 @@
 //!   the same function, which is what lets online re-planning swap a
 //!   tenant's partition mid-run while responses keep verifying against
 //!   the same [`synthetic_reference`].  Order, routing and isolation bugs
-//!   all corrupt the digest.
+//!   all corrupt the digest.  The stage executes whole batches through
+//!   two reused scratch buffers — zero allocations per request.
 
 use std::collections::BTreeMap;
 use std::path::PathBuf;
@@ -30,9 +34,10 @@ use anyhow::{Context, Result};
 
 use crate::config::SystemConfig;
 use crate::coordinator::{
-    Pipeline, PipelineConfig, ReplicaRouter, Request, Response, StageBackend, StageFactory,
+    Arena, Pipeline, PipelineConfig, ReplicaRouter, Request, Response, StageBackend,
+    StageFactory,
 };
-use crate::metrics::{SchedulerMetrics, TenantMetrics};
+use crate::metrics::{DataPlaneMetrics, SchedulerMetrics, TenantMetrics};
 use crate::model::Model;
 use crate::runtime::stage::pjrt_stage_factory;
 use crate::runtime::Manifest;
@@ -65,21 +70,28 @@ fn layer_salt(model_salt: u64, layer: usize) -> u64 {
     model_salt ^ (layer as u64 + 1).wrapping_mul(0x9E3779B97F4A7C15)
 }
 
-/// One synthetic layer application: a keyed, order-sensitive digest of the
-/// input tensor expanded to the output tensor shape.  O(in + out).
-pub fn synthetic_transform(salt: u64, input: &[i8], out_elems: usize) -> Vec<i8> {
+/// One synthetic layer application written into a caller-provided output
+/// buffer: a keyed, order-sensitive digest of the input tensor expanded
+/// to the output tensor shape.  O(in + out), zero allocations.
+pub fn synthetic_transform_into(salt: u64, input: &[i8], out: &mut [i8]) {
     let mut h = salt ^ 0xA076_1D64_78BD_642F;
     for &b in input {
         h = (h ^ (b as u8 as u64)).wrapping_mul(0x100000001b3);
     }
-    (0..out_elems)
-        .map(|j| {
-            let mut x = h ^ (j as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
-            x = x.wrapping_mul(0x2545_F491_4F6C_DD1D);
-            x ^= x >> 29;
-            (x >> 56) as u8 as i8
-        })
-        .collect()
+    for (j, o) in out.iter_mut().enumerate() {
+        let mut x = h ^ (j as u64).wrapping_mul(0xD1B5_4A32_D192_ED03);
+        x = x.wrapping_mul(0x2545_F491_4F6C_DD1D);
+        x ^= x >> 29;
+        *o = (x >> 56) as u8 as i8;
+    }
+}
+
+/// Allocating convenience wrapper over [`synthetic_transform_into`]
+/// (byte-identical output; the batched stage uses the in-place form).
+pub fn synthetic_transform(salt: u64, input: &[i8], out_elems: usize) -> Vec<i8> {
+    let mut out = vec![0i8; out_elems];
+    synthetic_transform_into(salt, input, &mut out);
+    out
 }
 
 /// Serial reference for a synthetic deployment: apply every **layer**'s
@@ -95,29 +107,95 @@ pub fn synthetic_reference(model_salt: u64, layer_out_elems: &[usize], input: &[
     x
 }
 
+/// Apply the layer chain `(salts[i] -> outs[i])` from `src` into `dst`
+/// (`dst.len() == *outs.last()`), ping-ponging intermediates through the
+/// two scratch buffers so nothing is allocated once they reach the chain's
+/// high-water size.
+fn synthetic_chain_into(
+    salts: &[u64],
+    outs: &[usize],
+    scratch_a: &mut Vec<i8>,
+    scratch_b: &mut Vec<i8>,
+    src: &[i8],
+    dst: &mut [i8],
+) {
+    let k = salts.len();
+    debug_assert!(k >= 1 && outs.len() == k);
+    if k == 1 {
+        synthetic_transform_into(salts[0], src, dst);
+        return;
+    }
+    if scratch_a.len() < outs[0] {
+        scratch_a.resize(outs[0], 0);
+    }
+    synthetic_transform_into(salts[0], src, &mut scratch_a[..outs[0]]);
+    let mut cur_in_a = true;
+    let mut cur_len = outs[0];
+    for j in 1..k - 1 {
+        let out_len = outs[j];
+        if cur_in_a {
+            if scratch_b.len() < out_len {
+                scratch_b.resize(out_len, 0);
+            }
+            synthetic_transform_into(salts[j], &scratch_a[..cur_len], &mut scratch_b[..out_len]);
+        } else {
+            if scratch_a.len() < out_len {
+                scratch_a.resize(out_len, 0);
+            }
+            synthetic_transform_into(salts[j], &scratch_b[..cur_len], &mut scratch_a[..out_len]);
+        }
+        cur_in_a = !cur_in_a;
+        cur_len = out_len;
+    }
+    let last_src: &[i8] = if cur_in_a { &scratch_a[..cur_len] } else { &scratch_b[..cur_len] };
+    synthetic_transform_into(salts[k - 1], last_src, dst);
+}
+
 /// One pipeline stage of the synthetic backend: applies the keyed
-/// transforms of the contiguous layer range its segment covers.
+/// transforms of the contiguous layer range its segment covers, a whole
+/// batch per call, through reused scratch buffers.
 struct SyntheticStage {
     /// Per-layer keys, in chain order within the segment.
     salts: Vec<u64>,
     /// Per-layer output tensor sizes, aligned with `salts`.
     outs: Vec<usize>,
     in_elems: usize,
+    scratch_a: Vec<i8>,
+    scratch_b: Vec<i8>,
 }
 
 impl StageBackend for SyntheticStage {
     fn run(&mut self, input: &[i8]) -> Result<Vec<i8>> {
+        let out_len = *self.outs.last().expect("segment covers >= 1 layer");
+        let mut out = vec![0i8; out_len];
+        self.run_batch(1, input, &mut out)?;
+        Ok(out)
+    }
+
+    fn out_elems(&self, _in_elems: usize) -> usize {
+        *self.outs.last().expect("segment covers >= 1 layer")
+    }
+
+    fn run_batch(&mut self, n: usize, input: &[i8], output: &mut [i8]) -> Result<()> {
         anyhow::ensure!(
-            input.len() == self.in_elems,
-            "synthetic stage expects {} input elems, got {}",
+            input.len() == n * self.in_elems,
+            "synthetic stage expects {} input elems per item, got {} for {n} items",
             self.in_elems,
             input.len()
         );
-        let mut x = input.to_vec();
-        for (salt, &out) in self.salts.iter().zip(&self.outs) {
-            x = synthetic_transform(*salt, &x, out);
+        let out_len = *self.outs.last().expect("segment covers >= 1 layer");
+        debug_assert_eq!(output.len(), n * out_len);
+        for i in 0..n {
+            synthetic_chain_into(
+                &self.salts,
+                &self.outs,
+                &mut self.scratch_a,
+                &mut self.scratch_b,
+                &input[i * self.in_elems..(i + 1) * self.in_elems],
+                &mut output[i * out_len..(i + 1) * out_len],
+            );
         }
-        Ok(x)
+        Ok(())
     }
 }
 
@@ -133,8 +211,54 @@ fn synthetic_stage_factory(
         model.layers[a..b].iter().map(|l| l.output_elems() as usize).collect();
     let in_elems = model.layers[a].input_elems() as usize;
     Box::new(move || {
-        Ok(Box::new(SyntheticStage { salts, outs, in_elems }) as Box<dyn StageBackend>)
+        Ok(Box::new(SyntheticStage {
+            salts,
+            outs,
+            in_elems,
+            scratch_a: Vec::new(),
+            scratch_b: Vec::new(),
+        }) as Box<dyn StageBackend>)
     })
+}
+
+/// Immutable tensor-shape and verification info of one tenant's model,
+/// shared by `Arc` across the routing layers (handles, clients, live
+/// deployments) instead of deep-cloning the per-layer size vector at
+/// every re-plan and `client()` call.
+#[derive(Debug)]
+pub struct TenantShape {
+    /// Input tensor element count (what requests must carry).
+    pub in_elems: usize,
+    /// Output tensor element count.
+    pub out_elems: usize,
+    /// Per-layer output sizes over the whole model, for
+    /// [`synthetic_reference`] checks (partition-invariant).
+    pub layer_out_elems: Vec<usize>,
+    /// Synthetic-backend key (stable across runs and re-plans).
+    pub salt: u64,
+}
+
+impl TenantShape {
+    /// Derive the shape info from a model (synthetic key from `name`).
+    pub fn of(name: &str, model: &Model) -> TenantShape {
+        TenantShape {
+            in_elems: model.layers.first().map(|l| l.input_elems() as usize).unwrap_or(0),
+            out_elems: model.layers.last().map(|l| l.output_elems() as usize).unwrap_or(0),
+            layer_out_elems: model.layers.iter().map(|l| l.output_elems() as usize).collect(),
+            salt: tenant_salt(name),
+        }
+    }
+
+    /// Deterministic random request batch shaped for this tenant.
+    pub fn synth_requests(&self, n: usize, seed: u64) -> Vec<Request> {
+        let mut rng = Rng::new(seed ^ self.salt);
+        (0..n as u64).map(|id| Request { id, data: rng.i8_vec(self.in_elems) }).collect()
+    }
+
+    /// The serial reference output for one request (synthetic backend).
+    pub fn reference(&self, input: &[i8]) -> Vec<i8> {
+        synthetic_reference(self.salt, &self.layer_out_elems, input)
+    }
 }
 
 /// One admitted tenant's running pipelines: a single [`Pipeline`] or a
@@ -173,31 +297,25 @@ impl Deployment {
     }
 }
 
-/// A freshly spawned deployment plus the shape/verification info the
-/// routing layers index by.
+/// A freshly spawned deployment plus the shared shape/verification info
+/// the routing layers index by.
 pub(crate) struct BuiltTenant {
     pub(crate) deployment: Deployment,
-    /// Input tensor element count (what requests must carry).
-    pub(crate) in_elems: usize,
-    /// Output tensor element count.
-    pub(crate) out_elems: usize,
-    /// Per-layer output sizes over the whole model, for
-    /// [`synthetic_reference`] checks (partition-invariant).
-    pub(crate) layer_out_elems: Vec<usize>,
-    /// Synthetic-backend key (stable across runs and re-plans).
-    pub(crate) salt: u64,
+    pub(crate) shape: Arc<TenantShape>,
 }
 
 /// Spawn the pipelines for one plan assignment — the shared deployment
 /// path of [`PoolRouter::deploy`] and the open-loop serving pool's
-/// (re-)deployments.  `manifest` must be `Some` for the PJRT backend.
+/// (re-)deployments.  `manifest` must be `Some` for the PJRT backend;
+/// `pipe` carries the queue capacity plus the (typically pool-shared)
+/// arena and data-plane counters.
 pub(crate) fn build_deployment(
     a: &Assignment,
     registry: &ModelRegistry,
     cfg: &SystemConfig,
     backend: &BackendKind,
     manifest: Option<&Manifest>,
-    queue_capacity: usize,
+    pipe: &PipelineConfig,
 ) -> Result<BuiltTenant> {
     let tenant = registry.get(&a.name)?;
     let model = &tenant.model;
@@ -207,14 +325,14 @@ pub(crate) fn build_deployment(
     // by the serving layers (see TenantMetrics::record_swap)
     let sims = stage_sims_for_grant(model, partition, cfg, &a.grant);
     let bounds = partition.bounds();
-    let salt = tenant_salt(&a.name);
+    let shape = Arc::new(TenantShape::of(&a.name, model));
 
     let mut pipelines = Vec::with_capacity(a.replicas);
     for _ in 0..a.replicas {
         let factories: Vec<StageFactory> = match backend {
             BackendKind::Synthetic => bounds
                 .iter()
-                .map(|&(s, e)| synthetic_stage_factory(salt, model, s, e))
+                .map(|&(s, e)| synthetic_stage_factory(shape.salt, model, s, e))
                 .collect(),
             BackendKind::Pjrt { artifact_dir } => {
                 let entry = manifest
@@ -228,7 +346,7 @@ pub(crate) fn build_deployment(
             }
         };
         pipelines.push(
-            Pipeline::spawn(factories, sims.clone(), &PipelineConfig { queue_capacity })
+            Pipeline::spawn(factories, sims.clone(), pipe)
                 .with_context(|| format!("spawning pipeline for {}", a.name))?,
         );
     }
@@ -237,13 +355,7 @@ pub(crate) fn build_deployment(
     } else {
         Deployment::Replicated(ReplicaRouter::new(pipelines))
     };
-    Ok(BuiltTenant {
-        deployment,
-        in_elems: model.layers.first().map(|l| l.input_elems() as usize).unwrap_or(0),
-        out_elems: model.layers.last().map(|l| l.output_elems() as usize).unwrap_or(0),
-        layer_out_elems: model.layers.iter().map(|l| l.output_elems() as usize).collect(),
-        salt,
-    })
+    Ok(BuiltTenant { deployment, shape })
 }
 
 /// One admitted tenant's live deployment.
@@ -262,15 +374,8 @@ pub struct TenantHandle {
     pub strategy_name: &'static str,
     /// Allocator-predicted p99 latency (seconds, simulated clock).
     pub predicted_p99_s: f64,
-    /// Input tensor element count (what requests must carry).
-    pub in_elems: usize,
-    /// Output tensor element count.
-    pub out_elems: usize,
-    /// Per-layer output sizes over the whole model, for
-    /// [`synthetic_reference`] checks (partition-invariant).
-    pub layer_out_elems: Vec<usize>,
-    /// Synthetic-backend key (stable across runs; unused for PJRT).
-    pub salt: u64,
+    /// Tensor shapes + synthetic verification key (shared, not cloned).
+    pub shape: Arc<TenantShape>,
     /// This tenant's serving counters.
     pub metrics: Arc<TenantMetrics>,
     deployment: Deployment,
@@ -292,15 +397,29 @@ pub struct TenantHandle {
 }
 
 impl TenantHandle {
+    /// Input tensor element count (what requests must carry).
+    pub fn in_elems(&self) -> usize {
+        self.shape.in_elems
+    }
+
+    /// Output tensor element count.
+    pub fn out_elems(&self) -> usize {
+        self.shape.out_elems
+    }
+
+    /// Synthetic-backend key (stable across runs; unused for PJRT).
+    pub fn salt(&self) -> u64 {
+        self.shape.salt
+    }
+
     /// Deterministic random request batch shaped for this tenant.
     pub fn synth_requests(&self, n: usize, seed: u64) -> Vec<Request> {
-        let mut rng = Rng::new(seed ^ self.salt);
-        (0..n as u64).map(|id| Request { id, data: rng.i8_vec(self.in_elems) }).collect()
+        self.shape.synth_requests(n, seed)
     }
 
     /// The serial reference output for one request (synthetic backend).
     pub fn reference(&self, input: &[i8]) -> Vec<i8> {
-        synthetic_reference(self.salt, &self.layer_out_elems, input)
+        self.shape.reference(input)
     }
 }
 
@@ -309,11 +428,14 @@ pub struct PoolRouter {
     tenants: BTreeMap<String, TenantHandle>,
     /// Pool-level routing/admission counters.
     pub metrics: Arc<SchedulerMetrics>,
+    /// Handoff/allocation counters of the pool-shared data plane.
+    pub data_plane: Arc<DataPlaneMetrics>,
 }
 
 impl PoolRouter {
     /// Spawn every admitted assignment of `plan` and index the deployments
-    /// by model name.
+    /// by model name.  All deployments share one buffer arena, so slabs
+    /// recycle across tenants.
     pub fn deploy(
         plan: &PoolPlan,
         registry: &ModelRegistry,
@@ -328,11 +450,17 @@ impl PoolRouter {
             }
             BackendKind::Synthetic => None,
         };
+        let data_plane = Arc::new(DataPlaneMetrics::default());
+        let pipe = PipelineConfig {
+            queue_capacity,
+            arena: Some(Arena::new(data_plane.clone())),
+            data_plane: Some(data_plane.clone()),
+        };
 
         let mut tenants = BTreeMap::new();
         for a in &plan.assignments {
             let built =
-                build_deployment(a, registry, cfg, backend, manifest.as_ref(), queue_capacity)?;
+                build_deployment(a, registry, cfg, backend, manifest.as_ref(), &pipe)?;
             tenants.insert(
                 a.name.clone(),
                 TenantHandle {
@@ -343,10 +471,7 @@ impl PoolRouter {
                     partition_label: a.candidate.partition.label(),
                     strategy_name: a.candidate.strategy.name(),
                     predicted_p99_s: a.effective_p99_s,
-                    in_elems: built.in_elems,
-                    out_elems: built.out_elems,
-                    layer_out_elems: built.layer_out_elems,
-                    salt: built.salt,
+                    shape: built.shape,
                     metrics: Arc::new(TenantMetrics::default()),
                     deployment: built.deployment,
                     serve_lock: std::sync::Mutex::new(()),
@@ -363,7 +488,7 @@ impl PoolRouter {
             plan.queued.len() as u64,
             plan.rejected.len() as u64,
         );
-        Ok(PoolRouter { tenants, metrics })
+        Ok(PoolRouter { tenants, metrics, data_plane })
     }
 
     /// Block until every stage backend of every deployment is constructed.
@@ -495,6 +620,37 @@ mod tests {
         assert_ne!(a, synthetic_transform(7, &[1, 2, 4], 8), "input must matter");
         assert_ne!(a, synthetic_transform(8, &[1, 2, 3], 8), "salt must matter");
         assert_ne!(a, synthetic_transform(7, &[2, 1, 3], 8), "order must matter");
+        // the in-place form is the same function
+        let mut buf = vec![0i8; 8];
+        synthetic_transform_into(7, &[1, 2, 3], &mut buf);
+        assert_eq!(a, buf);
+    }
+
+    #[test]
+    fn batched_synthetic_stage_matches_per_item_reference() {
+        // a 3-layer segment with shape changes, run as one batch, must
+        // equal the per-layer serial reference for every item
+        let salt = tenant_salt("batch-check");
+        let salts: Vec<u64> = (0..3).map(|i| layer_salt(salt, i)).collect();
+        let outs = vec![16usize, 32, 8];
+        let mut stage = SyntheticStage {
+            salts: salts.clone(),
+            outs: outs.clone(),
+            in_elems: 4,
+            scratch_a: Vec::new(),
+            scratch_b: Vec::new(),
+        };
+        let n = 5;
+        let input: Vec<i8> = (0..(n * 4) as i64).map(|v| v as i8).collect();
+        let mut output = vec![0i8; n * 8];
+        stage.run_batch(n, &input, &mut output).unwrap();
+        for i in 0..n {
+            let item = &input[i * 4..(i + 1) * 4];
+            let expect = synthetic_reference(salt, &[16, 32, 8], item);
+            assert_eq!(&output[i * 8..(i + 1) * 8], expect.as_slice(), "item {i}");
+        }
+        // wrong input size is rejected
+        assert!(stage.run_batch(2, &input[..7], &mut output[..16]).is_err());
     }
 
     #[test]
@@ -512,7 +668,7 @@ mod tests {
             for (i, r) in out.iter().enumerate() {
                 assert_eq!(r.id, i as u64, "{name}: order preserved");
                 assert_eq!(r.data, expected[i], "{name}: item {i} digest mismatch");
-                assert_eq!(r.data.len(), t.out_elems);
+                assert_eq!(r.data.len(), t.out_elems());
             }
             let snap = t.metrics.snapshot();
             assert_eq!(snap.submitted, 12);
@@ -601,6 +757,39 @@ mod tests {
             assert_eq!(r.id, i as u64);
             assert_eq!(r.data, expected[i]);
         }
+        router.shutdown();
+    }
+
+    #[test]
+    fn slabs_recycle_across_tenants() {
+        // the router's arena is pool-shared: after tenant A's traffic
+        // warmed it, same-shaped tenant B serves without allocating
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        reg.register(super::super::registry::Tenant::new(
+            "fc_twin",
+            super::super::resolve_model("fc_small").unwrap(),
+        ))
+        .unwrap();
+        let cfg = SystemConfig::default();
+        let alloc = AllocatorConfig { total_tpus: 2, ..Default::default() };
+        let plan = allocate(&reg, &cfg, &alloc).unwrap();
+        assert_eq!(plan.assignments.len(), 2, "queued={:?}", plan.queued);
+        let router =
+            PoolRouter::deploy(&plan, &reg, &cfg, &BackendKind::Synthetic, 16).unwrap();
+        router.wait_ready().unwrap();
+        let reqs = router.tenant("fc_small").unwrap().synth_requests(24, 5);
+        drop(router.serve("fc_small", reqs).unwrap());
+        let warm = router.data_plane.snapshot();
+        assert!(warm.slab_allocs > 0);
+        // the twin's batches are the same sizes: everything recycles
+        let reqs = router.tenant("fc_twin").unwrap().synth_requests(24, 6);
+        drop(router.serve("fc_twin", reqs).unwrap());
+        let after = router.data_plane.snapshot();
+        assert_eq!(
+            after.slab_allocs, warm.slab_allocs,
+            "cross-tenant slab reuse must be allocation-free: {after:?}"
+        );
         router.shutdown();
     }
 

@@ -191,8 +191,12 @@ pub fn spawn_pipeline(
         .iter()
         .map(|s| pjrt_stage_factory(PathBuf::from(artifact_dir), (*s).clone()))
         .collect();
-    Pipeline::spawn(factories, plan.sims.clone(), &PipelineConfig { queue_capacity })
-        .context("spawning pipeline")
+    Pipeline::spawn(
+        factories,
+        plan.sims.clone(),
+        &PipelineConfig { queue_capacity, ..Default::default() },
+    )
+    .context("spawning pipeline")
 }
 
 /// Spawn a replicated single-model deployment: `replicas` full copies of

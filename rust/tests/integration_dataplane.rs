@@ -1,0 +1,208 @@
+//! Integration: the zero-copy batched data plane must be observationally
+//! identical to the pre-arena per-request path — synthetic reference
+//! bytes pinned against golden literals (computed independently from the
+//! published transform definition), live responses bit-exact across
+//! exclusive, shared, and replica grants, loadgen CSV tables byte-stable,
+//! and the steady-state allocation counter flat on a live pool.
+
+use tpu_pipeline::cli::{self, Args};
+use tpu_pipeline::config::SystemConfig;
+use tpu_pipeline::coordinator::batcher::BatchPolicy;
+use tpu_pipeline::scheduler::{
+    allocate, synthetic_reference, tenant_salt, AllocatorConfig, BackendKind, ModelRegistry,
+    OpenOptions, PoolRouter, ServingPool, TenantShape,
+};
+use tpu_pipeline::util::rng::Rng;
+
+/// The synthetic data plane's byte contract, pinned to golden literals:
+/// any refactor of the transform, the batch packing, or the slab layout
+/// that changes a single output byte fails here — this is the "identical
+/// to the pre-arena path" guarantee, since these literals were produced
+/// by the pre-batching definition of the transform.
+#[test]
+fn synthetic_reference_matches_golden_bytes() {
+    let salt = tenant_salt("fc_small");
+    assert_eq!(salt, 0x60993f99409f7002, "FNV-1a tenant key changed");
+
+    // fc_small = fc_model(512): 64 -> 512 x4 -> 10
+    let layer_out_elems = [512usize, 512, 512, 512, 10];
+    let input = Rng::new(0xD47A ^ salt).i8_vec(64);
+    assert_eq!(
+        &input[..8],
+        &[-81, 92, -121, -28, -28, 78, 4, -56],
+        "seeded request payloads changed"
+    );
+    let out = synthetic_reference(salt, &layer_out_elems, &input);
+    assert_eq!(
+        out,
+        vec![-27, 17, 36, 15, 14, -20, -74, -75, -108, 11],
+        "synthetic reference bytes drifted from the pre-arena path"
+    );
+}
+
+#[test]
+fn synthetic_transform_matches_golden_bytes() {
+    use tpu_pipeline::scheduler::synthetic_transform;
+    assert_eq!(
+        synthetic_transform(7, &[1, 2, 3], 8),
+        vec![95, -100, 118, 10, 5, -94, 111, 111],
+        "keyed transform bytes drifted"
+    );
+}
+
+/// Serve every grant shape live and verify byte-identity to the serial
+/// reference (which the golden test above pins), through the closed-batch
+/// router: exclusive, time-shared, and replica deployments.
+#[test]
+fn closed_batches_are_byte_identical_across_grant_shapes() {
+    let cfg = SystemConfig::default();
+    let cases: [(&str, Vec<&str>, AllocatorConfig); 3] = [
+        (
+            "exclusive",
+            vec!["fc_small", "conv_a"],
+            AllocatorConfig { total_tpus: 2, ..Default::default() },
+        ),
+        (
+            "shared",
+            vec!["fc_small", "fc_n512"],
+            AllocatorConfig { total_tpus: 1, allow_sharing: true, ..Default::default() },
+        ),
+        (
+            "replica",
+            vec!["fc_small"],
+            AllocatorConfig { total_tpus: 3, ..Default::default() },
+        ),
+    ];
+    for (label, names, alloc) in cases {
+        let mut reg = ModelRegistry::new();
+        for n in &names {
+            reg.register_named(n).unwrap();
+        }
+        let plan = allocate(&reg, &cfg, &alloc).unwrap();
+        assert_eq!(plan.assignments.len(), names.len(), "{label}: {:?}", plan.queued);
+        match label {
+            "shared" => assert!(plan.assignments.iter().all(|a| a.grant.is_shared())),
+            "replica" => assert!(plan.assignments[0].replicas > 1),
+            _ => assert!(plan.assignments.iter().all(|a| !a.grant.is_shared())),
+        }
+        let router =
+            PoolRouter::deploy(&plan, &reg, &cfg, &BackendKind::Synthetic, 16).unwrap();
+        router.wait_ready().unwrap();
+        for name in &names {
+            let t = router.tenant(name).unwrap();
+            let reqs = t.synth_requests(25, 0xD47A);
+            let expected: Vec<Vec<i8>> =
+                reqs.iter().map(|r| t.reference(&r.data)).collect();
+            let out = router.serve(name, reqs).unwrap();
+            assert_eq!(out.len(), 25, "{label}/{name}");
+            for (i, r) in out.iter().enumerate() {
+                assert_eq!(r.id, i as u64, "{label}/{name}: order");
+                assert_eq!(r.data, expected[i], "{label}/{name}: byte drift");
+            }
+        }
+        router.shutdown();
+    }
+}
+
+/// The open-loop pool path (batcher -> slab -> send_many completion)
+/// must deliver the same bytes, including under a shared grant.
+#[test]
+fn open_loop_responses_are_byte_identical_under_sharing() {
+    let mut reg = ModelRegistry::new();
+    reg.register_named("fc_small").unwrap();
+    reg.register_named("fc_n512").unwrap();
+    let pool = ServingPool::deploy(
+        reg,
+        SystemConfig::default(),
+        AllocatorConfig { total_tpus: 1, allow_sharing: true, ..Default::default() },
+        BackendKind::Synthetic,
+        OpenOptions {
+            policy: BatchPolicy {
+                max_batch: 8,
+                max_wait: std::time::Duration::from_millis(1),
+            },
+            queue_capacity: 32,
+        },
+    )
+    .unwrap();
+    for name in ["fc_small", "fc_n512"] {
+        let client = pool.client(name).unwrap();
+        let reqs = client.synth_requests(40, 7);
+        let expected: Vec<Vec<i8>> =
+            reqs.iter().map(|r| client.reference(&r.data)).collect();
+        for r in reqs {
+            pool.submit(name, r).unwrap();
+        }
+        let mut got = 0;
+        while got < 40 {
+            let r = client.done.recv().expect("stream closed early");
+            assert_eq!(r.data, expected[r.id as usize], "{name}: byte drift");
+            got += 1;
+        }
+    }
+    // the pool-wide arena recycled across both tenants
+    let dp = pool.data_plane().snapshot();
+    assert!(dp.slab_reuses > 0, "shared arena must have recycled: {dp:?}");
+    pool.shutdown();
+}
+
+/// `repro loadgen --csv` tables are a pure function of the seed across
+/// every grant shape (the CSV comes from the deterministic queueing
+/// simulation, which the data-plane rework must not touch).
+#[test]
+fn loadgen_csv_is_byte_stable_across_grant_shapes() {
+    let cases = [
+        // exclusive grants
+        "loadgen --models fc_small,conv_a --tpus 2 --seed 7 --requests 80 \
+         --arrivals poisson:600 --csv",
+        // time-shared grants (+ quantum)
+        "loadgen --models fc_small,fc_n512 --tpus 1 --allow-sharing --quantum-us 500 \
+         --seed 7 --requests 80 --arrivals poisson:600 --csv",
+        // replica fan-out
+        "loadgen --models fc_small --tpus 2 --max-tpus-per-model 1 --seed 7 \
+         --requests 80 --arrivals poisson:600 --csv",
+    ];
+    for cmd in cases {
+        let argv: Vec<String> = cmd.split_whitespace().map(String::from).collect();
+        let args = Args::parse(&argv).unwrap();
+        let first = cli::run(&args).unwrap();
+        let second = cli::run(&args).unwrap();
+        assert_eq!(first, second, "CSV must be byte-identical: {cmd}");
+        assert!(first.contains("admitted"), "{cmd}: {first}");
+    }
+}
+
+/// Steady-state zero-allocation on a live pool, exactly as the
+/// `make smoke-dataplane` gate runs it (via the `repro dataplane`
+/// command with a zero budget).
+#[test]
+fn dataplane_smoke_command_passes_with_zero_budget() {
+    let argv: Vec<String> =
+        "dataplane --models fc_small --tpus 1 --alloc-budget 0 --batch 20 \
+         --warmup 2 --iters 3 --open-warmup 15 --open-requests 25"
+            .split_whitespace()
+            .map(String::from)
+            .collect();
+    let args = Args::parse(&argv).unwrap();
+    let out = cli::run(&args).unwrap();
+    assert!(out.contains("PASS"), "{out}");
+    assert!(!out.contains("FAIL"), "{out}");
+    assert!(out.contains("within the allocation budget"), "{out}");
+}
+
+/// TenantShape is the shared (Arc'd) shape record: its request/reference
+/// helpers must agree with the golden pins.
+#[test]
+fn tenant_shape_agrees_with_reference() {
+    let model = tpu_pipeline::scheduler::resolve_model("fc_small").unwrap();
+    let shape = TenantShape::of("fc_small", &model);
+    assert_eq!(shape.in_elems, 64);
+    assert_eq!(shape.out_elems, 10);
+    assert_eq!(shape.layer_out_elems, vec![512, 512, 512, 512, 10]);
+    let reqs = shape.synth_requests(1, 0xD47A);
+    assert_eq!(
+        shape.reference(&reqs[0].data),
+        vec![-27, 17, 36, 15, 14, -20, -74, -75, -108, 11],
+        "shape-derived reference drifted from the golden bytes"
+    );
+}
