@@ -20,7 +20,7 @@ SMOKE_OUT ?= smoke-out
 
 .PHONY: all build test check artifacts python-test clean \
         smoke smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane \
-        bench-quick bench-check bench-baseline
+        smoke-trace bench-quick bench-check bench-baseline
 
 all: build
 
@@ -53,7 +53,7 @@ python-test:
 
 # ---- CI smoke (identical commands locally and in .github/workflows/ci.yml)
 
-smoke: smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane
+smoke: smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane smoke-trace
 
 smoke-scheduler:
 	$(CARGO) run --release --bin repro -- schedule --models fc_big,conv_a,conv_b --tpus 4
@@ -98,6 +98,25 @@ smoke-sharing:
 		--models fc_small,fc_n512 --tpus 1 --allow-sharing --quantum-us 500 \
 		--requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/shared_q_b.csv
 	diff $(SMOKE_OUT)/shared_q_a.csv $(SMOKE_OUT)/shared_q_b.csv
+
+# Telemetry determinism gate (DESIGN.md §13): the Perfetto trace and the
+# metrics JSONL exported by a seeded loadgen run come from the sim clock,
+# so two same-seed runs must be byte-identical; `repro trace` then proves
+# the exported file round-trips through the parser/renderer.
+smoke-trace:
+	mkdir -p $(SMOKE_OUT)
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 --models fc_small,conv_a \
+		--tpus 4 --requests 120 --arrivals poisson:700 --csv \
+		--trace-out $(SMOKE_OUT)/trace_a.json --metrics-out $(SMOKE_OUT)/metrics_a.jsonl \
+		> /dev/null
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 --models fc_small,conv_a \
+		--tpus 4 --requests 120 --arrivals poisson:700 --csv \
+		--trace-out $(SMOKE_OUT)/trace_b.json --metrics-out $(SMOKE_OUT)/metrics_b.jsonl \
+		> /dev/null
+	diff $(SMOKE_OUT)/trace_a.json $(SMOKE_OUT)/trace_b.json
+	diff $(SMOKE_OUT)/metrics_a.jsonl $(SMOKE_OUT)/metrics_b.jsonl
+	$(CARGO) run --release --bin repro -- trace --in $(SMOKE_OUT)/trace_a.json \
+		| grep -q "fc_small/requests"
 
 # Live data-plane gate (DESIGN.md §12): steady-state arena allocations
 # per request must be ZERO across exclusive, shared and replica grants —

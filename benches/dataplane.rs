@@ -23,6 +23,7 @@ use tpu_pipeline::coordinator::{
     Arena, Pipeline, PipelineConfig, Request, StageBackend, StageFactory, StageSim, Tensor,
 };
 use tpu_pipeline::metrics::DataPlaneMetrics;
+use tpu_pipeline::obs::{SpanKind, Tracer};
 use tpu_pipeline::scheduler::{synthetic_transform, synthetic_transform_into};
 use tpu_pipeline::util::bench::{black_box, Bencher};
 use tpu_pipeline::util::rng::Rng;
@@ -149,6 +150,35 @@ fn main() {
     b.bench("arena/take_share_recycle", || {
         let slab = arena.take(BATCH * ELEMS).share();
         Tensor::slice(&slab, 0, ELEMS)
+    });
+
+    // ---- tracer overhead (DESIGN.md §13): the disabled path must be one
+    // branch on a None option; the enabled path one lock-free ring store
+    // (degrading to the counted-drop path once the bounded ring fills —
+    // the tracer's worst case, which is exactly the backstop this gate
+    // wants cheap).  Both land in BENCH_dataplane.json so a regression
+    // that puts allocation or locking on either path shows up in CI.
+    let tracer = std::sync::Arc::new(Tracer::new());
+    let sink = tracer.handle_with_capacity(1 << 16);
+    let enabled: Option<(tpu_pipeline::obs::SpanSink, u32)> = Some((sink, 2));
+    let disabled: Option<(tpu_pipeline::obs::SpanSink, u32)> = None;
+    b.bench("obs/span_record_enabled_1k", || {
+        for i in 0..1000u64 {
+            if let Some((s, track)) = black_box(&enabled) {
+                s.record(SpanKind::Stage, *track, i, i, 1);
+            }
+        }
+    });
+    b.bench("obs/span_record_disabled_1k", || {
+        let mut n = 0u64;
+        for i in 0..1000u64 {
+            if let Some((s, track)) = black_box(&disabled) {
+                s.record(SpanKind::Stage, *track, i, i, 1);
+            } else {
+                n += 1;
+            }
+        }
+        n
     });
 
     b.report("dataplane");

@@ -401,6 +401,7 @@ pub fn run(args: &Args) -> Result<String> {
         "schedule" => schedule(args)?,
         "loadgen" => loadgen(args)?,
         "dataplane" => dataplane(args)?,
+        "trace" => trace_cmd(args)?,
         "" | "help" | "--help" => USAGE.to_string(),
         other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
     };
@@ -652,12 +653,41 @@ pub fn loadgen_table(
     alloc: &crate::scheduler::AllocatorConfig,
     spec: &LoadgenSpec,
 ) -> Result<(Table, crate::scheduler::PoolPlan)> {
+    let (t, plan, _) = loadgen_table_obs(registry, cfg, alloc, spec)?;
+    Ok((t, plan))
+}
+
+/// One admitted tenant's deterministic observability artifacts from a
+/// loadgen run: the simulated span events (tenant-local tracks, see
+/// `obs::span::track_base`), the replica/stage shape needed to name the
+/// tracks, and the metric snapshot pre-rendered as a JSONL line.
+pub struct LoadgenTenantObs {
+    pub model: String,
+    pub replicas: usize,
+    pub n_stages: usize,
+    pub events: Vec<crate::obs::SpanEvent>,
+    pub metrics_line: String,
+}
+
+/// [`loadgen_table`] plus per-tenant span traces and metric lines.  All
+/// three outputs are pure functions of `(registry, cfg, alloc, spec)`, so
+/// the `--trace-out` / `--metrics-out` files diff clean across two runs
+/// of one seed — the contract `make smoke-trace` enforces.
+pub fn loadgen_table_obs(
+    registry: &crate::scheduler::ModelRegistry,
+    cfg: &SystemConfig,
+    alloc: &crate::scheduler::AllocatorConfig,
+    spec: &LoadgenSpec,
+) -> Result<(Table, crate::scheduler::PoolPlan, Vec<LoadgenTenantObs>)> {
     use crate::metrics::FlushKind;
+    use crate::obs::{metric_line_from, num, SimTrace};
     use crate::scheduler::allocate;
-    use crate::util::stats::Summary;
-    use crate::workload::{arrival_seed, simulate_deployment};
+    use crate::util::json::Json;
+    use crate::util::stats::{LatencyHistogram, Summary};
+    use crate::workload::{arrival_seed, simulate_deployment_traced};
 
     let plan = allocate(registry, cfg, alloc)?;
+    let mut obs: Vec<LoadgenTenantObs> = Vec::new();
     let mut t = Table::new(
         format!(
             "Open-loop load generation — seed {} | max_batch {} | max_wait {} ms",
@@ -699,17 +729,46 @@ pub fn loadgen_table(
         // derivation the live pool applies
         let policy = spec.policy.for_slo(tenant.slo_p99_s);
         let dep = crate::serving::deployment_sim(tenant, a, cfg);
-        let run = simulate_deployment(
+        let mut sim_trace = SimTrace::new();
+        let run = simulate_deployment_traced(
             &load.arrivals,
             load.requests,
             arrival_seed(spec.seed, &load.model),
             &policy,
             &dep,
+            Some(&mut sim_trace),
         );
+        // exact percentiles for the table; the exported metric line uses
+        // the streaming histogram (what the live path keeps at O(1) mem)
         let mut lat = Summary::new();
+        let mut hist = LatencyHistogram::new();
         for &l in &run.latencies_s {
             lat.add(l);
+            hist.record(l);
         }
+        let mut fields = std::collections::BTreeMap::new();
+        let mut put = |k: &str, v: Json| {
+            fields.insert(k.to_string(), v);
+        };
+        put("requests", Json::Num(run.latencies_s.len() as f64));
+        put("batches", Json::Num(run.batches.len() as f64));
+        put("flush_size", Json::Num(run.flushes(FlushKind::Size) as f64));
+        put("flush_deadline", Json::Num(run.flushes(FlushKind::Deadline) as f64));
+        put("flush_closed", Json::Num(run.flushes(FlushKind::Closed) as f64));
+        put("swaps", Json::Num(run.swaps as f64));
+        put("swap_overhead_s", num(run.swap_overhead_s));
+        put("p50_s", num(hist.percentile(50.0)));
+        put("p99_s", num(hist.percentile(99.0)));
+        put("p999_s", num(hist.percentile(99.9)));
+        put("mean_s", num(hist.mean()));
+        put("throughput_hz", num(run.throughput_hz()));
+        obs.push(LoadgenTenantObs {
+            model: load.model.clone(),
+            replicas: a.replicas,
+            n_stages: a.candidate.partition.n_segments(),
+            events: sim_trace.into_events(),
+            metrics_line: metric_line_from("loadgen", &load.model, Json::Obj(fields)),
+        });
         t.row(vec![
             load.model.clone(),
             load.arrivals.label(),
@@ -734,7 +793,55 @@ pub fn loadgen_table(
             "admitted".into(),
         ]);
     }
-    Ok((t, plan))
+    Ok((t, plan, obs))
+}
+
+/// Assemble per-tenant sim traces into one Chrome-trace file: tenant `i`'s
+/// local tracks shift onto the global run starting at
+/// `obs::span::track_base(i)`, and every track gets its viewer name
+/// (`model/requests`, `model/batcher`, `model/rep{r}/stage{s}`).
+pub fn loadgen_trace_file(obs: &[LoadgenTenantObs]) -> crate::obs::TraceFile {
+    use crate::obs::span::track_base;
+
+    let mut file = crate::obs::TraceFile::new("repro loadgen");
+    for (idx, o) in obs.iter().enumerate() {
+        let base = track_base(idx);
+        file.name_track(base, format!("{}/requests", o.model));
+        file.name_track(base + 1, format!("{}/batcher", o.model));
+        for rep in 0..o.replicas {
+            for s in 0..o.n_stages {
+                let t = base + 2 + (rep * o.n_stages + s) as u32;
+                file.name_track(t, format!("{}/rep{rep}/stage{s}", o.model));
+            }
+        }
+        for e in &o.events {
+            let mut e = *e;
+            e.track += base;
+            file.events.push(e);
+        }
+    }
+    file.events.sort_by_key(|e| (e.start_us, e.track, e.id));
+    file
+}
+
+/// The loadgen metrics export: one JSONL line per admitted tenant.
+pub fn loadgen_metrics_jsonl(obs: &[LoadgenTenantObs]) -> String {
+    obs.iter().map(|o| o.metrics_line.as_str()).collect()
+}
+
+/// Write the `--trace-out` / `--metrics-out` files of a loadgen run (a
+/// no-op without the flags).  Both files come from the deterministic
+/// simulation, so two runs of one seed write byte-identical bytes.
+pub fn write_loadgen_exports(args: &Args, obs: &[LoadgenTenantObs]) -> Result<()> {
+    if let Some(path) = args.flags.get("trace-out") {
+        std::fs::write(path, loadgen_trace_file(obs).to_json())
+            .with_context(|| format!("writing --trace-out {path:?}"))?;
+    }
+    if let Some(path) = args.flags.get("metrics-out") {
+        std::fs::write(path, loadgen_metrics_jsonl(obs))
+            .with_context(|| format!("writing --metrics-out {path:?}"))?;
+    }
+    Ok(())
 }
 
 /// One-line pool summary appended under the (non-CSV) loadgen table.
@@ -762,7 +869,8 @@ pub fn loadgen_summary(plan: &crate::scheduler::PoolPlan) -> String {
 pub fn loadgen(args: &Args) -> Result<String> {
     let cfg = args.config()?;
     let (registry, alloc, spec) = loadgen_spec(args)?;
-    let (table, plan) = loadgen_table(&registry, &cfg, &alloc, &spec)?;
+    let (table, plan, obs) = loadgen_table_obs(&registry, &cfg, &alloc, &spec)?;
+    write_loadgen_exports(args, &obs)?;
     let mut out = emit(table, args.csv());
     if !args.csv() {
         out.push_str(&loadgen_summary(&plan));
@@ -791,7 +899,10 @@ pub fn loadgen(args: &Args) -> Result<String> {
 pub fn dataplane(args: &Args) -> Result<String> {
     use crate::coordinator::batcher::BatchPolicy;
     use crate::metrics::DataPlaneSnapshot;
+    use crate::obs::{metric_line_from, MetricSource, TraceFile, Tracer};
     use crate::scheduler::{allocate, BackendKind, OpenOptions, PoolRouter, ServingPool};
+    use crate::util::json::Json;
+    use std::sync::Arc;
 
     let cfg = args.config()?;
     let (registry, alloc) = pool_spec(args, "fc_small,conv_a")?;
@@ -848,9 +959,24 @@ pub fn dataplane(args: &Args) -> Result<String> {
         ]);
     };
 
+    // live span tracer, only when asked for: the default (None) path is
+    // what the zero-alloc budget gate measures
+    let tracer: Option<Arc<Tracer>> =
+        args.flags.contains_key("trace-out").then(|| Arc::new(Tracer::new()));
+    // end-of-run metric snapshots, uniformly via MetricSource: rendered as
+    // the human table below and (with --metrics-out) written as JSONL
+    let mut metrics_out: Vec<(String, String, Json)> = Vec::new();
+
     // ---- phase 1: closed batches through the per-model router
     let plan = allocate(&registry, &cfg, &alloc)?;
-    let router = PoolRouter::deploy(&plan, &registry, &cfg, &BackendKind::Synthetic, 64)?;
+    let router = PoolRouter::deploy_traced(
+        &plan,
+        &registry,
+        &cfg,
+        &BackendKind::Synthetic,
+        64,
+        tracer.clone(),
+    )?;
     router.wait_ready()?;
     for name in router.names() {
         let tenant = router.tenant(&name).expect("deployed tenant");
@@ -874,6 +1000,8 @@ pub fn dataplane(args: &Args) -> Result<String> {
         let after = router.data_plane.snapshot();
         row("closed", &name, (iters * batch) as u64, before, after, &mut failures);
     }
+    let dp = &*router.data_plane;
+    metrics_out.push((dp.metric_kind().to_string(), "router".to_string(), dp.metric_json()));
     router.shutdown();
 
     // ---- phase 2: live open-loop pool, one request outstanding
@@ -888,6 +1016,7 @@ pub fn dataplane(args: &Args) -> Result<String> {
                 max_wait: std::time::Duration::from_micros(500),
             },
             queue_capacity: 64,
+            tracer: tracer.clone(),
         },
     )?;
     for name in pool.names() {
@@ -911,9 +1040,34 @@ pub fn dataplane(args: &Args) -> Result<String> {
         let after = pool.data_plane().snapshot();
         row("open", &name, open_requests as u64, before, after, &mut failures);
     }
+    for name in pool.names() {
+        if let Some(m) = pool.tenant_metrics(&name) {
+            metrics_out.push((m.metric_kind().to_string(), name.clone(), m.metric_json()));
+        }
+    }
+    let dp = pool.data_plane();
+    metrics_out.push((dp.metric_kind().to_string(), "pool".to_string(), dp.metric_json()));
+    let sched = &*pool.metrics;
+    metrics_out.push((sched.metric_kind().to_string(), "pool".to_string(), sched.metric_json()));
     pool.shutdown();
 
+    // exports are written even when the budget gate fails below: the
+    // trace is exactly what you want for diagnosing the failure
+    if let Some(path) = args.flags.get("metrics-out") {
+        let jsonl: String = metrics_out
+            .iter()
+            .map(|(k, n, j)| metric_line_from(k, n, j.clone()))
+            .collect();
+        std::fs::write(path, jsonl)
+            .with_context(|| format!("writing --metrics-out {path:?}"))?;
+    }
+    if let (Some(path), Some(tr)) = (args.flags.get("trace-out"), &tracer) {
+        std::fs::write(path, TraceFile::from_tracer("repro dataplane", tr).to_json())
+            .with_context(|| format!("writing --trace-out {path:?}"))?;
+    }
+
     let mut out = t.render();
+    out.push_str(&crate::report::metrics_table(&metrics_out).render());
     if failures.is_empty() {
         out.push_str("data plane: steady state within the allocation budget\n");
         Ok(out)
@@ -921,6 +1075,21 @@ pub fn dataplane(args: &Args) -> Result<String> {
         print!("{out}");
         anyhow::bail!("data-plane alloc budget exceeded: {}", failures.join("; "))
     }
+}
+
+/// `repro trace`: load a `--trace-out` file and render it as an ASCII
+/// Gantt (one row per track; Perfetto-grade inspection stays available by
+/// opening the same file in <https://ui.perfetto.dev>).
+pub fn trace_cmd(args: &Args) -> Result<String> {
+    let path = args
+        .flags
+        .get("in")
+        .ok_or_else(|| anyhow::anyhow!("repro trace needs --in FILE (a --trace-out file)"))?;
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading trace file {path:?}"))?;
+    let file = crate::obs::TraceFile::parse(&text)?;
+    let width = args.usize_flag("width", 100)?.max(10);
+    Ok(crate::trace::trace_ascii(&file, width))
 }
 
 /// Replication (data parallelism) vs profiled segmentation (§V-C remark).
@@ -1032,10 +1201,13 @@ serving (real numerics; PJRT needs `make artifacts`):
         single-model pipelined serving; --replicas N runs N data-parallel
         pipeline copies behind the round-robin ReplicaRouter
   serve-pool --models fc_big,fc_small --tpus 4 [--batch 50]
+        [--trace-out FILE] [--metrics-out FILE]
         deploy the scheduled pool and serve synthetic traffic for every
         admitted model concurrently (native deterministic backend);
         accepts the same pool flags as `schedule` (--weights, --slo-ms,
-        --allow-spill, --max-tpus-per-model, --no-replicas)
+        --allow-spill, --max-tpus-per-model, --no-replicas).
+        --trace-out saves the live span trace (Chrome/Perfetto JSON);
+        --metrics-out saves end-of-run metric snapshots as JSONL
   gantt --kind fc --x 2100 --tpus 3 [--batch 8] [--strategy profiled]
         ASCII pipeline schedule trace
 
@@ -1055,6 +1227,11 @@ open-loop load generation (seeded, bit-reproducible):
           [--no-replicas]    plan without leftover-TPU replica grants
           [--no-live]  print only the deterministic table
           [--csv]      CSV table only (identical across runs of one seed)
+          [--trace-out FILE]    save the deterministic sim span trace as
+              Chrome/Perfetto trace JSON — byte-identical per seed, like
+              the CSV (open in https://ui.perfetto.dev or `repro trace`)
+          [--metrics-out FILE]  save per-tenant metric snapshots as JSONL
+              (streaming-histogram percentiles; byte-identical per seed)
         prints the deterministic per-tenant table (offered rate, replica
         fan-out, grant kind, batch + flush-reason + swap counts,
         p50/p99/mean latency, throughput) from the seeded open-loop
@@ -1066,12 +1243,22 @@ zero-copy data plane (live smoke; `make smoke-dataplane` runs this):
   dataplane --models fc_small,conv_a --tpus 2 [--alloc-budget 0]
             [--batch 50] [--warmup 3] [--iters 5]
             [--open-warmup 40] [--open-requests 80]
+            [--trace-out FILE] [--metrics-out FILE]
             accepts the pool flags of `schedule` (--allow-sharing, ...).
         serves live traffic through the closed-batch router and the
         open-loop pool, then FAILS unless steady-state arena allocations
         per request stay within --alloc-budget (default 0: a warm data
         plane recycles every activation slab).  Responses are verified
-        bit-for-bit against the serial reference throughout
+        bit-for-bit against the serial reference throughout.
+        --trace-out enables the live span tracer (host-clock spans; the
+        budget gate always runs with tracing off) and saves the trace;
+        --metrics-out saves every end-of-run snapshot as JSONL
+
+observability (DESIGN.md §13):
+  trace --in FILE [--width 100]
+        render a saved --trace-out file (Chrome/Perfetto trace JSON) as
+        an ASCII Gantt: one row per track, digits keyed by span id, plus
+        the span/track/drop totals
 ";
 
 #[cfg(test)]
@@ -1350,5 +1537,42 @@ mod tests {
         let out = run(&a).unwrap();
         assert!(out.contains("rejected"), "{out}");
         assert!(out.contains("admitted"), "{out}");
+    }
+
+    #[test]
+    fn loadgen_exports_are_byte_deterministic() {
+        use crate::util::json::Json;
+
+        let a = Args::parse(&argv(
+            "loadgen --models fc_small,conv_a --tpus 4 --seed 7 --requests 60 \
+             --arrivals poisson:700",
+        ))
+        .unwrap();
+        let build = || {
+            let cfg = a.config().unwrap();
+            let (registry, alloc, spec) = loadgen_spec(&a).unwrap();
+            let (_t, _plan, obs) = loadgen_table_obs(&registry, &cfg, &alloc, &spec).unwrap();
+            (loadgen_trace_file(&obs).to_json(), loadgen_metrics_jsonl(&obs))
+        };
+        let (trace1, metrics1) = build();
+        let (trace2, metrics2) = build();
+        assert_eq!(trace1, trace2, "trace export must be byte-identical per seed");
+        assert_eq!(metrics1, metrics2, "metrics export must be byte-identical per seed");
+
+        // the file is Chrome-trace shaped, round-trips, and renders
+        let file = crate::obs::TraceFile::parse(&trace1).unwrap();
+        assert!(!file.events.is_empty());
+        assert!(file.tracks.values().any(|n| n == "fc_small/requests"), "{:?}", file.tracks);
+        let art = crate::trace::trace_ascii(&file, 60);
+        assert!(art.contains("fc_small/requests"), "{art}");
+
+        // one JSONL object per admitted tenant, streaming-histogram fields
+        assert_eq!(metrics1.lines().count(), 2);
+        for line in metrics1.lines() {
+            let doc = Json::parse(line).unwrap();
+            assert_eq!(doc.get("kind").and_then(Json::as_str), Some("loadgen"));
+            assert_eq!(doc.get("requests").and_then(Json::as_u64), Some(60));
+            assert!(doc.get("p99_s").and_then(Json::as_f64).unwrap() > 0.0);
+        }
     }
 }

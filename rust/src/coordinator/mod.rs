@@ -38,6 +38,7 @@ use std::time::Instant;
 use anyhow::Result;
 
 use crate::metrics::{DataPlaneMetrics, ServeMetrics, StageMetrics};
+use crate::obs::{SpanKind, SpanSink, Tracer};
 
 pub use arena::{Arena, SharedSlab, SlabBuf, Tensor};
 
@@ -250,11 +251,25 @@ pub struct PipelineConfig {
     /// Data-plane counters.  Supply one to aggregate across pipelines;
     /// `None` gives the pipeline private counters.
     pub data_plane: Option<Arc<DataPlaneMetrics>>,
+    /// Span tracer for `--trace-out` (DESIGN.md §13).  `None` (the
+    /// default) disables tracing entirely: workers skip span recording
+    /// behind a single branch, keeping the disabled path inside the data
+    /// plane's zero-alloc budget.
+    pub tracer: Option<Arc<Tracer>>,
+    /// First render track of this pipeline's stage spans (stage `i`
+    /// records on `trace_track_base + i`); see `obs::span::track_base`.
+    pub trace_track_base: u32,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { queue_capacity: 64, arena: None, data_plane: None }
+        PipelineConfig {
+            queue_capacity: 64,
+            arena: None,
+            data_plane: None,
+            tracer: None,
+            trace_track_base: 0,
+        }
     }
 }
 
@@ -290,8 +305,11 @@ impl Pipeline {
             let ready = ready_tx.clone();
             let stage_arena = arena.clone();
             let dp = data_plane.clone();
+            // per-worker span sink (its own lock-free ring); None keeps
+            // the worker loop span-free
+            let obs = cfg.tracer.as_ref().map(|t| (t.handle(), cfg.trace_track_base + i as u32));
             workers.push(std::thread::spawn(move || {
-                stage_loop(factory, sim, rx_in, tx, metrics, host, ready, stage_arena, dp);
+                stage_loop(factory, sim, rx_in, tx, metrics, host, ready, stage_arena, dp, obs);
             }));
             prev_rx = rx;
         }
@@ -486,6 +504,7 @@ fn stage_loop(
     ready: std::sync::mpsc::Sender<Result<(), String>>,
     arena: Arena,
     dp: Arc<DataPlaneMetrics>,
+    obs: Option<(SpanSink, u32)>,
 ) {
     let mut backend = match factory() {
         Ok(b) => {
@@ -510,6 +529,7 @@ fn stage_loop(
     while let Some(mut batch) = rx.recv() {
         let n = batch.metas.len();
         if batch.err.is_none() && n > 0 {
+            let start_us = obs.as_ref().map(|(sink, _)| sink.now_us());
             let t0 = Instant::now();
             let out_len = backend.out_elems(batch.elem_len);
             let mut out = arena.take(n * out_len);
@@ -521,7 +541,18 @@ fn stage_loop(
                 }
                 Err(e) => batch.err = Some(e.to_string()),
             }
-            metrics.record_batch(n as u64, t0.elapsed());
+            let exec = t0.elapsed();
+            if let Some((sink, track)) = &obs {
+                let id = batch.metas.first().map(|m| m.id).unwrap_or(0);
+                sink.record(
+                    SpanKind::Stage,
+                    *track,
+                    id,
+                    start_us.unwrap_or(0),
+                    exec.as_micros() as u64,
+                );
+            }
+            metrics.record_batch(n as u64, exec);
         }
         // simulated pipeline recurrence per item (same math as
         // pipeline::simulate): dispatch waits for input, the TPU, and the

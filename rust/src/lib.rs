@@ -34,6 +34,7 @@ pub mod runtime;
 pub mod segment;
 pub mod coordinator;
 pub mod metrics;
+pub mod obs;
 pub mod report;
 pub mod sweep;
 pub mod trace;

@@ -109,7 +109,12 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// artifacts; responses are verified against each tenant's serial
 /// reference.
 fn cmd_serve_pool(args: &Args) -> Result<()> {
+    use anyhow::Context;
+    use std::sync::Arc;
+    use tpu_pipeline::obs::{metric_line_from, MetricSource, TraceFile, Tracer};
+    use tpu_pipeline::report;
     use tpu_pipeline::scheduler::{allocate, plan_table, BackendKind, PoolRouter};
+    use tpu_pipeline::util::json::Json;
 
     let cfg = args.config()?;
     let batch = args.batch()?;
@@ -119,7 +124,16 @@ fn cmd_serve_pool(args: &Args) -> Result<()> {
     let plan = allocate(&registry, &cfg, &alloc)?;
     print!("{}", plan_table(&plan).render());
 
-    let router = PoolRouter::deploy(&plan, &registry, &cfg, &BackendKind::Synthetic, 64)?;
+    let tracer: Option<Arc<Tracer>> =
+        args.flags.contains_key("trace-out").then(|| Arc::new(Tracer::new()));
+    let router = PoolRouter::deploy_traced(
+        &plan,
+        &registry,
+        &cfg,
+        &BackendKind::Synthetic,
+        64,
+        tracer.clone(),
+    )?;
     let reports = serving::serve_pool(&router, batch, 0xC0FFEE, true)?;
     println!("\nserved {} tenant(s) x {batch} requests concurrently:", reports.len());
     for r in &reports {
@@ -138,35 +152,31 @@ fn cmd_serve_pool(args: &Args) -> Result<()> {
             r.verified,
         );
     }
+    // end-of-run metrics: one MetricSource snapshot pass feeds both the
+    // human table and the optional --metrics-out JSONL (identical fields)
+    let mut metrics: Vec<(String, String, Json)> = Vec::new();
     for t in router.tenants() {
-        let s = t.metrics.snapshot();
-        println!(
-            "  {:10} metrics: submitted {} completed {} errors {} | swaps {} \
-             (skipped {}, overhead {}) | real p50 {} p99 {}",
-            t.name,
-            s.submitted,
-            s.completed,
-            s.errors,
-            s.swaps,
-            s.swaps_skipped,
-            fmt_seconds(s.swap_overhead_s),
-            fmt_seconds(s.real_p50_s),
-            fmt_seconds(s.real_p99_s),
-        );
+        let src = &*t.metrics;
+        metrics.push((src.metric_kind().to_string(), t.name.clone(), src.metric_json()));
     }
-    let s = router.metrics.snapshot();
-    println!(
-        "  scheduler: registered {} admitted {} ({} shared) queued {} rejected {} | \
-         routed {} requests in {} batches",
-        s.registered,
-        s.admitted,
-        s.shared,
-        s.queued,
-        s.rejected,
-        s.routed_requests,
-        s.routed_batches
-    );
+    let sched = &*router.metrics;
+    metrics.push((sched.metric_kind().to_string(), "pool".to_string(), sched.metric_json()));
+    let dp = &*router.data_plane;
+    metrics.push((dp.metric_kind().to_string(), "pool".to_string(), dp.metric_json()));
+    print!("{}", report::metrics_table(&metrics).render());
+    if let Some(path) = args.flags.get("metrics-out") {
+        let jsonl: String =
+            metrics.iter().map(|(k, n, j)| metric_line_from(k, n, j.clone())).collect();
+        std::fs::write(path, jsonl)
+            .with_context(|| format!("writing --metrics-out {path:?}"))?;
+    }
     router.shutdown();
+    // drain the tracer after shutdown: all stage workers have joined, so
+    // every recorded span is visible
+    if let (Some(path), Some(tr)) = (args.flags.get("trace-out"), &tracer) {
+        std::fs::write(path, TraceFile::from_tracer("repro serve-pool", tr).to_json())
+            .with_context(|| format!("writing --trace-out {path:?}"))?;
+    }
     Ok(())
 }
 
@@ -205,7 +215,11 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     // clean
     let cfg = args.config()?;
     let (registry, alloc, spec) = cli::loadgen_spec(args)?;
-    let (table, plan) = cli::loadgen_table(&registry, &cfg, &alloc, &spec)?;
+    let (table, plan, obs) = cli::loadgen_table_obs(&registry, &cfg, &alloc, &spec)?;
+    // exports come from the deterministic simulation, so they are written
+    // before any live serving (and in --csv mode too): two runs of one
+    // seed produce byte-identical files — `make smoke-trace` diffs them
+    cli::write_loadgen_exports(args, &obs)?;
     if args.csv() {
         print!("{}", table.csv());
         return Ok(());
@@ -242,7 +256,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         cfg,
         alloc,
         BackendKind::Synthetic,
-        OpenOptions { policy: spec.policy, queue_capacity: 64 },
+        OpenOptions { policy: spec.policy, queue_capacity: 64, tracer: None },
     )?;
     println!("\nlive open-loop run (synthetic backend, bit-exact verification):");
 

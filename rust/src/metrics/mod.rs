@@ -4,11 +4,23 @@
 //! counters behind the zero-copy batched request path, shared across
 //! worker threads.
 
+use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
-use crate::util::stats::{LatencyHistogram, Summary};
+use crate::obs::{num, MetricSource};
+use crate::util::json::Json;
+use crate::util::stats::LatencyHistogram;
+
+/// Build a stable-order JSON object from metric fields.
+fn obj(fields: Vec<(&str, Json)>) -> Json {
+    Json::Obj(fields.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+}
+
+fn uint(v: u64) -> Json {
+    Json::Num(v as f64)
+}
 
 /// Why a dynamic batch was flushed (see `coordinator::batcher`).  Defined
 /// here so both the batcher and the metrics layer can name it without a
@@ -33,7 +45,10 @@ pub struct StageMetrics {
 struct StageInner {
     items: u64,
     busy_s: f64,
-    exec: Summary,
+    /// Streaming log-bucketed histogram of per-item execution time — O(1)
+    /// memory under open-loop load (the former full-sample `Summary` grew
+    /// one `f64` per batch forever).  Its mean stays exact.
+    exec: LatencyHistogram,
 }
 
 impl StageMetrics {
@@ -41,7 +56,7 @@ impl StageMetrics {
         let mut g = self.inner.lock().unwrap();
         g.items += 1;
         g.busy_s += exec.as_secs_f64();
-        g.exec.add(exec.as_secs_f64());
+        g.exec.record(exec.as_secs_f64());
     }
 
     /// Record one batched backend call covering `items` requests in
@@ -55,7 +70,7 @@ impl StageMetrics {
         let mut g = self.inner.lock().unwrap();
         g.items += items;
         g.busy_s += exec.as_secs_f64();
-        g.exec.add(exec.as_secs_f64() / items as f64);
+        g.exec.record(exec.as_secs_f64() / items as f64);
     }
 
     pub fn snapshot(&self) -> StageSnapshot {
@@ -64,8 +79,24 @@ impl StageMetrics {
             items: g.items,
             busy_s: g.busy_s,
             mean_exec_s: g.exec.mean(),
-            p95_exec_s: if g.exec.is_empty() { f64::NAN } else { g.exec.p95() },
+            p95_exec_s: g.exec.percentile(95.0),
         }
+    }
+}
+
+impl MetricSource for StageMetrics {
+    fn metric_kind(&self) -> &'static str {
+        "stage"
+    }
+
+    fn metric_json(&self) -> Json {
+        let s = self.snapshot();
+        obj(vec![
+            ("items", uint(s.items)),
+            ("busy_s", Json::Num(s.busy_s)),
+            ("mean_exec_s", num(s.mean_exec_s)),
+            ("p95_exec_s", num(s.p95_exec_s)),
+        ])
     }
 }
 
@@ -109,18 +140,43 @@ impl ServeMetrics {
         g.sim_latency.record(sim_s);
     }
 
-    pub fn snapshot(&self) -> ServeSnapshot {
-        let g = self.inner.lock().unwrap();
+    fn snapshot_inner(g: &ServeInner) -> ServeSnapshot {
         ServeSnapshot {
             completed: g.completed,
             real_p50_s: g.real_latency.percentile(50.0),
             real_p95_s: g.real_latency.percentile(95.0),
             real_p99_s: g.real_latency.percentile(99.0),
+            real_p999_s: g.real_latency.percentile(99.9),
             real_mean_s: g.real_latency.mean(),
             sim_p50_s: g.sim_latency.percentile(50.0),
             sim_p99_s: g.sim_latency.percentile(99.0),
             sim_mean_s: g.sim_latency.mean(),
         }
+    }
+
+    pub fn snapshot(&self) -> ServeSnapshot {
+        Self::snapshot_inner(&self.inner.lock().unwrap())
+    }
+}
+
+impl MetricSource for ServeMetrics {
+    fn metric_kind(&self) -> &'static str {
+        "serve"
+    }
+
+    fn metric_json(&self) -> Json {
+        let s = self.snapshot();
+        obj(vec![
+            ("completed", uint(s.completed)),
+            ("real_p50_s", num(s.real_p50_s)),
+            ("real_p95_s", num(s.real_p95_s)),
+            ("real_p99_s", num(s.real_p99_s)),
+            ("real_p999_s", num(s.real_p999_s)),
+            ("real_mean_s", num(s.real_mean_s)),
+            ("sim_p50_s", num(s.sim_p50_s)),
+            ("sim_p99_s", num(s.sim_p99_s)),
+            ("sim_mean_s", num(s.sim_mean_s)),
+        ])
     }
 }
 
@@ -131,6 +187,8 @@ pub struct ServeSnapshot {
     pub real_p50_s: f64,
     pub real_p95_s: f64,
     pub real_p99_s: f64,
+    /// p99.9 from the streaming histogram (NaN before the first sample).
+    pub real_p999_s: f64,
     pub real_mean_s: f64,
     pub sim_p50_s: f64,
     pub sim_p99_s: f64,
@@ -144,9 +202,15 @@ pub struct ServeSnapshot {
 pub struct TenantMetrics {
     core: ServeMetrics,
     extra: Mutex<TenantCounters>,
+    /// Mutation generation, bumped after every recording call.  `core`
+    /// and `extra` sit behind separate locks, so two independent lock
+    /// acquisitions could observe a torn cross-lock view (e.g. a swap
+    /// counted whose response is missing); `snapshot` retries until a
+    /// read round saw no bump.
+    gen: AtomicU64,
 }
 
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone, Copy)]
 struct TenantCounters {
     submitted: u64,
     errors: u64,
@@ -162,19 +226,27 @@ struct TenantCounters {
 }
 
 impl TenantMetrics {
+    /// Publish one completed mutation (called after the lock section).
+    fn bump(&self) {
+        self.gen.fetch_add(1, Ordering::Release);
+    }
+
     /// Count `n` requests handed to this tenant's deployment or queue.
     pub fn record_submitted(&self, n: u64) {
         self.extra.lock().unwrap().submitted += n;
+        self.bump();
     }
 
     /// Record one completed response's real and simulated latency.
     pub fn record_response(&self, real_s: f64, sim_s: f64) {
         self.core.record(real_s, sim_s);
+        self.bump();
     }
 
     /// Count one failed batch/serve call.
     pub fn record_error(&self) {
         self.extra.lock().unwrap().errors += 1;
+        self.bump();
     }
 
     /// Record one flushed batch: its size, the ingress-queue depth left
@@ -191,6 +263,8 @@ impl TenantMetrics {
         if queue_depth > g.max_queue_depth {
             g.max_queue_depth = queue_depth;
         }
+        drop(g);
+        self.bump();
     }
 
     /// Record one context switch of a time-shared deployment: the
@@ -200,6 +274,8 @@ impl TenantMetrics {
         let mut g = self.extra.lock().unwrap();
         g.swaps += 1;
         g.swap_overhead_s += overhead_s;
+        drop(g);
+        self.bump();
     }
 
     /// Record a batch flush that landed inside the tenant's current
@@ -208,12 +284,30 @@ impl TenantMetrics {
     /// ever skip).
     pub fn record_swap_skipped(&self) {
         self.extra.lock().unwrap().swaps_skipped += 1;
+        self.bump();
     }
 
-    /// Take an immutable snapshot of every counter.
+    /// Take an immutable snapshot of every counter, consistent across the
+    /// two lock domains: optimistic generation-checked reads first, then
+    /// a fallback that holds both locks at once (which blocks every
+    /// mutator, so the cut is exact).
     pub fn snapshot(&self) -> TenantSnapshot {
-        let c = self.core.snapshot();
-        let e = self.extra.lock().unwrap();
+        for _ in 0..8 {
+            let g0 = self.gen.load(Ordering::Acquire);
+            let c = self.core.snapshot();
+            let e = *self.extra.lock().unwrap();
+            if self.gen.load(Ordering::Acquire) == g0 {
+                return Self::assemble(c, e);
+            }
+        }
+        let core_guard = self.core.inner.lock().unwrap();
+        let extra_guard = self.extra.lock().unwrap();
+        let c = ServeMetrics::snapshot_inner(&core_guard);
+        let e = *extra_guard;
+        Self::assemble(c, e)
+    }
+
+    fn assemble(c: ServeSnapshot, e: TenantCounters) -> TenantSnapshot {
         TenantSnapshot {
             submitted: e.submitted,
             completed: c.completed,
@@ -233,9 +327,39 @@ impl TenantMetrics {
             swap_overhead_s: e.swap_overhead_s,
             real_p50_s: c.real_p50_s,
             real_p99_s: c.real_p99_s,
+            real_p999_s: c.real_p999_s,
             sim_p50_s: c.sim_p50_s,
             sim_p99_s: c.sim_p99_s,
         }
+    }
+}
+
+impl MetricSource for TenantMetrics {
+    fn metric_kind(&self) -> &'static str {
+        "tenant"
+    }
+
+    fn metric_json(&self) -> Json {
+        let s = self.snapshot();
+        obj(vec![
+            ("submitted", uint(s.submitted)),
+            ("completed", uint(s.completed)),
+            ("errors", uint(s.errors)),
+            ("batches", uint(s.batches)),
+            ("mean_batch", num(s.mean_batch)),
+            ("flush_size", uint(s.flush_size)),
+            ("flush_deadline", uint(s.flush_deadline)),
+            ("flush_closed", uint(s.flush_closed)),
+            ("max_queue_depth", uint(s.max_queue_depth)),
+            ("swaps", uint(s.swaps)),
+            ("swaps_skipped", uint(s.swaps_skipped)),
+            ("swap_overhead_s", Json::Num(s.swap_overhead_s)),
+            ("real_p50_s", num(s.real_p50_s)),
+            ("real_p99_s", num(s.real_p99_s)),
+            ("real_p999_s", num(s.real_p999_s)),
+            ("sim_p50_s", num(s.sim_p50_s)),
+            ("sim_p99_s", num(s.sim_p99_s)),
+        ])
     }
 }
 
@@ -271,6 +395,8 @@ pub struct TenantSnapshot {
     pub real_p50_s: f64,
     /// Real wall-clock latency p99 (seconds).
     pub real_p99_s: f64,
+    /// Real wall-clock latency p99.9 (seconds; NaN before any response).
+    pub real_p999_s: f64,
     /// Simulated Edge TPU latency p50 (seconds).
     pub sim_p50_s: f64,
     /// Simulated Edge TPU latency p99 (seconds).
@@ -279,8 +405,12 @@ pub struct TenantSnapshot {
 
 /// Data-plane counters for the zero-copy batched request path: how many
 /// batch messages crossed a host queue (handoffs), how many requests they
-/// carried, and the buffer arena's allocation traffic.  Lock-free
-/// (atomics): these sit on the per-batch hot path of every stage worker.
+/// carried, and the buffer arena's allocation traffic.  Atomics only (no
+/// mutex, no allocation): these sit on the per-batch hot path of every
+/// stage worker.  Related counters are updated under a seqlock-style
+/// generation word, so `snapshot` never observes e.g. `handoff_items`
+/// ahead of its `handoffs` increment (`items_per_handoff` used to exceed
+/// the batch size mid-run).
 ///
 /// The steady-state invariant the `make smoke-dataplane` gate asserts is
 /// `slab_allocs` staying **flat** while requests keep completing — the
@@ -288,6 +418,8 @@ pub struct TenantSnapshot {
 /// count is zero once the pool is warm.
 #[derive(Debug, Default)]
 pub struct DataPlaneMetrics {
+    /// Seqlock generation: odd while a writer is inside an update.
+    gen: AtomicU64,
     handoffs: AtomicU64,
     handoff_items: AtomicU64,
     slab_allocs: AtomicU64,
@@ -296,33 +428,93 @@ pub struct DataPlaneMetrics {
 }
 
 impl DataPlaneMetrics {
+    /// Run `f` inside the write side of the seqlock: flip the generation
+    /// odd (spinning out other writers — updates are a handful of relaxed
+    /// adds, so the critical section is a few nanoseconds), then even.
+    fn write_locked(&self, f: impl FnOnce(&Self)) {
+        let mut cur = self.gen.load(Ordering::Relaxed);
+        loop {
+            if cur & 1 == 0 {
+                match self.gen.compare_exchange_weak(
+                    cur,
+                    cur + 1,
+                    Ordering::Acquire,
+                    Ordering::Relaxed,
+                ) {
+                    Ok(_) => break,
+                    Err(seen) => cur = seen,
+                }
+            } else {
+                std::hint::spin_loop();
+                cur = self.gen.load(Ordering::Relaxed);
+            }
+        }
+        f(self);
+        self.gen.fetch_add(1, Ordering::Release);
+    }
+
     /// Count one batch message crossing a host queue with `items`
     /// requests aboard (one lock/wakeup moved the whole batch).
     pub fn record_handoff(&self, items: u64) {
-        self.handoffs.fetch_add(1, Ordering::Relaxed);
-        self.handoff_items.fetch_add(items, Ordering::Relaxed);
+        self.write_locked(|m| {
+            m.handoffs.fetch_add(1, Ordering::Relaxed);
+            m.handoff_items.fetch_add(items, Ordering::Relaxed);
+        });
     }
 
     /// Count one arena miss: a fresh slab of `bytes` was heap-allocated.
     pub fn record_slab_alloc(&self, bytes: u64) {
-        self.slab_allocs.fetch_add(1, Ordering::Relaxed);
-        self.slab_alloc_bytes.fetch_add(bytes, Ordering::Relaxed);
+        self.write_locked(|m| {
+            m.slab_allocs.fetch_add(1, Ordering::Relaxed);
+            m.slab_alloc_bytes.fetch_add(bytes, Ordering::Relaxed);
+        });
     }
 
     /// Count one arena hit: a retained slab was reused without allocating.
     pub fn record_slab_reuse(&self) {
-        self.slab_reuses.fetch_add(1, Ordering::Relaxed);
+        self.write_locked(|m| {
+            m.slab_reuses.fetch_add(1, Ordering::Relaxed);
+        });
     }
 
-    /// Take an immutable snapshot of every counter.
+    /// Take an immutable snapshot, consistent across every counter: retry
+    /// until a read round saw a stable even generation.
     pub fn snapshot(&self) -> DataPlaneSnapshot {
-        DataPlaneSnapshot {
-            handoffs: self.handoffs.load(Ordering::Relaxed),
-            handoff_items: self.handoff_items.load(Ordering::Relaxed),
-            slab_allocs: self.slab_allocs.load(Ordering::Relaxed),
-            slab_alloc_bytes: self.slab_alloc_bytes.load(Ordering::Relaxed),
-            slab_reuses: self.slab_reuses.load(Ordering::Relaxed),
+        loop {
+            let g0 = self.gen.load(Ordering::Acquire);
+            if g0 & 1 == 1 {
+                std::hint::spin_loop();
+                continue;
+            }
+            let snap = DataPlaneSnapshot {
+                handoffs: self.handoffs.load(Ordering::Relaxed),
+                handoff_items: self.handoff_items.load(Ordering::Relaxed),
+                slab_allocs: self.slab_allocs.load(Ordering::Relaxed),
+                slab_alloc_bytes: self.slab_alloc_bytes.load(Ordering::Relaxed),
+                slab_reuses: self.slab_reuses.load(Ordering::Relaxed),
+            };
+            if self.gen.load(Ordering::Acquire) == g0 {
+                return snap;
+            }
         }
+    }
+}
+
+impl MetricSource for DataPlaneMetrics {
+    fn metric_kind(&self) -> &'static str {
+        "data_plane"
+    }
+
+    fn metric_json(&self) -> Json {
+        let s = self.snapshot();
+        obj(vec![
+            ("handoffs", uint(s.handoffs)),
+            ("handoff_items", uint(s.handoff_items)),
+            ("items_per_handoff", num(s.items_per_handoff())),
+            ("slab_allocs", uint(s.slab_allocs)),
+            ("slab_alloc_bytes", uint(s.slab_alloc_bytes)),
+            ("slab_reuses", uint(s.slab_reuses)),
+        ])
     }
 }
 
@@ -422,6 +614,28 @@ impl SchedulerMetrics {
             replans: g.replans,
             drained_deployments: g.drained_deployments,
         }
+    }
+}
+
+impl MetricSource for SchedulerMetrics {
+    fn metric_kind(&self) -> &'static str {
+        "scheduler"
+    }
+
+    fn metric_json(&self) -> Json {
+        let s = self.snapshot();
+        obj(vec![
+            ("registered", uint(s.registered)),
+            ("admitted", uint(s.admitted)),
+            ("shared", uint(s.shared)),
+            ("queued", uint(s.queued)),
+            ("rejected", uint(s.rejected)),
+            ("routed_batches", uint(s.routed_batches)),
+            ("routed_requests", uint(s.routed_requests)),
+            ("route_misses", uint(s.route_misses)),
+            ("replans", uint(s.replans)),
+            ("drained_deployments", uint(s.drained_deployments)),
+        ])
     }
 }
 
@@ -570,6 +784,106 @@ mod tests {
         assert_eq!(s.slab_alloc_bytes, 512);
         assert_eq!(s.slab_reuses, 2);
         assert!((s.items_per_handoff() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn data_plane_snapshot_is_never_torn() {
+        // regression: `record_handoff` updates two counters; independent
+        // loads used to let `handoff_items` run ahead of `handoffs`, so
+        // items_per_handoff could exceed the batch size mid-run
+        let m = std::sync::Arc::new(DataPlaneMetrics::default());
+        let writers: Vec<_> = (0..4)
+            .map(|_| {
+                let m = m.clone();
+                std::thread::spawn(move || {
+                    for _ in 0..2000 {
+                        m.record_handoff(32);
+                    }
+                })
+            })
+            .collect();
+        for _ in 0..4000 {
+            let s = m.snapshot();
+            assert_eq!(
+                s.handoff_items,
+                s.handoffs * 32,
+                "torn data-plane snapshot: {} items across {} handoffs",
+                s.handoff_items,
+                s.handoffs
+            );
+        }
+        for w in writers {
+            w.join().unwrap();
+        }
+        let s = m.snapshot();
+        assert_eq!(s.handoffs, 8000);
+        assert_eq!(s.handoff_items, 8000 * 32);
+    }
+
+    #[test]
+    fn tenant_snapshot_is_consistent_across_lock_domains() {
+        // regression: `snapshot` took the two internal locks one after
+        // the other, so a writer alternating response (core lock) and
+        // swap (extra lock) could be observed with the later swap but not
+        // the earlier response.  With the generation check the two counts
+        // never drift more than the single in-flight pair apart.
+        let m = std::sync::Arc::new(TenantMetrics::default());
+        let writer = {
+            let m = m.clone();
+            std::thread::spawn(move || {
+                for _ in 0..4000 {
+                    m.record_response(1e-3, 2e-3);
+                    m.record_swap(1e-4);
+                }
+            })
+        };
+        for _ in 0..4000 {
+            let s = m.snapshot();
+            assert!(s.swaps <= s.completed, "swap counted before its response: {s:?}");
+            assert!(s.completed - s.swaps <= 1, "{s:?}");
+        }
+        writer.join().unwrap();
+        let s = m.snapshot();
+        assert_eq!(s.completed, 4000);
+        assert_eq!(s.swaps, 4000);
+    }
+
+    #[test]
+    fn metric_sources_export_stable_json() {
+        let m = TenantMetrics::default();
+        m.record_submitted(3);
+        m.record_response(1e-3, 2e-3);
+        assert_eq!(m.metric_kind(), "tenant");
+        let line_a = crate::obs::metric_line(&m, "fc_small");
+        let line_b = crate::obs::metric_line(&m, "fc_small");
+        assert_eq!(line_a, line_b, "snapshot export must be deterministic at rest");
+        let doc = crate::util::json::Json::parse(line_a.trim_end()).unwrap();
+        assert_eq!(doc.get("kind").and_then(Json::as_str), Some("tenant"));
+        assert_eq!(doc.get("submitted").and_then(Json::as_u64), Some(3));
+        assert_eq!(doc.get("completed").and_then(Json::as_u64), Some(1));
+        // empty histograms export as null, not NaN (invalid JSON)
+        let empty = crate::obs::metric_line(&StageMetrics::default(), "s0");
+        let doc = crate::util::json::Json::parse(empty.trim_end()).unwrap();
+        assert_eq!(doc.get("p95_exec_s"), Some(&Json::Null));
+        let dp = DataPlaneMetrics::default();
+        assert_eq!(dp.metric_kind(), "data_plane");
+        assert!(crate::obs::metric_line(&dp, "pool").contains("\"handoffs\":0"));
+        let sched = SchedulerMetrics::default();
+        assert_eq!(sched.metric_kind(), "scheduler");
+        assert!(crate::obs::metric_line(&sched, "pool").contains("\"admitted\":0"));
+    }
+
+    #[test]
+    fn serve_metrics_p999_tracks_tail() {
+        let m = ServeMetrics::default();
+        for _ in 0..998 {
+            m.record(1e-3, 1e-3);
+        }
+        m.record(0.5, 0.5); // two 500ms outliers in 1000 samples:
+        m.record(0.5, 0.5); // p99 ignores them, p99.9 must not
+        let s = m.snapshot();
+        assert!(s.real_p99_s < 0.01, "{s:?}");
+        assert!(s.real_p999_s > 0.3, "p99.9 must surface the outlier: {s:?}");
     }
 
     #[test]

@@ -1,0 +1,251 @@
+//! Trace and metric export: Chrome/Perfetto trace-event JSON for span
+//! traces, and JSONL metric snapshots through the [`MetricSource`] trait.
+//!
+//! Both formats are built on [`crate::util::json::Json`] (object keys in
+//! `BTreeMap` order, integers printed without exponents), so a trace of
+//! the deterministic simulator serializes byte-identically per seed — the
+//! same reproducibility bar as the loadgen CSVs (`make smoke-trace`).
+//!
+//! [`MetricSource`]: crate::obs::MetricSource
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::obs::span::{SpanEvent, SpanKind, Tracer};
+use crate::obs::MetricSource;
+use crate::util::json::Json;
+
+/// Map a metric value to JSON, turning the NaN/infinity sentinels of
+/// empty histograms into `null` (JSON has no non-finite numbers).
+pub fn num(v: f64) -> Json {
+    if v.is_finite() {
+        Json::Num(v)
+    } else {
+        Json::Null
+    }
+}
+
+/// A span trace plus its render-track names, loadable from / dumpable to
+/// Chrome trace-event JSON (chrome://tracing, <https://ui.perfetto.dev>).
+#[derive(Debug, Clone, Default)]
+pub struct TraceFile {
+    /// Process name shown in the trace viewer (e.g. the repro command).
+    pub process: String,
+    /// Track (Perfetto thread) names, keyed by track id.
+    pub tracks: BTreeMap<u32, String>,
+    /// Spans in deterministic order (see `SpanEvent` ordering).
+    pub events: Vec<SpanEvent>,
+    /// Spans lost to full rings (0 for sim traces).
+    pub dropped: u64,
+}
+
+impl TraceFile {
+    pub fn new(process: impl Into<String>) -> TraceFile {
+        TraceFile { process: process.into(), ..TraceFile::default() }
+    }
+
+    /// Drain a live tracer into a trace file (call at quiescence).
+    pub fn from_tracer(process: impl Into<String>, tracer: &Tracer) -> TraceFile {
+        let (events, dropped) = tracer.drain();
+        TraceFile { process: process.into(), tracks: tracer.track_names(), events, dropped }
+    }
+
+    /// Name a render track.
+    pub fn name_track(&mut self, track: u32, name: impl Into<String>) {
+        self.tracks.insert(track, name.into());
+    }
+
+    /// Viewer label for `track` ("track{N}" when unnamed).
+    pub fn track_label(&self, track: u32) -> String {
+        self.tracks.get(&track).cloned().unwrap_or_else(|| format!("track{track}"))
+    }
+
+    /// Serialize as a Chrome trace-event JSON document: one `ph:"M"`
+    /// process-name record, one per named track, then every span as a
+    /// `ph:"X"` complete event (`ts`/`dur` in microseconds).
+    pub fn to_json(&self) -> String {
+        let mut trace_events = Vec::with_capacity(self.events.len() + self.tracks.len() + 1);
+        let meta = |name: &str, tid: Option<u32>, value: &str| {
+            let mut o = BTreeMap::new();
+            o.insert("ph".to_string(), Json::Str("M".to_string()));
+            o.insert("pid".to_string(), Json::Num(1.0));
+            if let Some(t) = tid {
+                o.insert("tid".to_string(), Json::Num(t as f64));
+            }
+            o.insert("name".to_string(), Json::Str(name.to_string()));
+            let mut args = BTreeMap::new();
+            args.insert("name".to_string(), Json::Str(value.to_string()));
+            o.insert("args".to_string(), Json::Obj(args));
+            Json::Obj(o)
+        };
+        trace_events.push(meta("process_name", None, &self.process));
+        for (&track, name) in &self.tracks {
+            trace_events.push(meta("thread_name", Some(track), name));
+        }
+        for e in &self.events {
+            let mut o = BTreeMap::new();
+            o.insert("ph".to_string(), Json::Str("X".to_string()));
+            o.insert("pid".to_string(), Json::Num(1.0));
+            o.insert("tid".to_string(), Json::Num(e.track as f64));
+            o.insert("name".to_string(), Json::Str(e.kind.label().to_string()));
+            o.insert("ts".to_string(), Json::Num(e.start_us as f64));
+            o.insert("dur".to_string(), Json::Num(e.dur_us as f64));
+            let mut args = BTreeMap::new();
+            args.insert("id".to_string(), Json::Num(e.id as f64));
+            o.insert("args".to_string(), Json::Obj(args));
+            trace_events.push(Json::Obj(o));
+        }
+        let mut top = BTreeMap::new();
+        top.insert("displayTimeUnit".to_string(), Json::Str("ms".to_string()));
+        let mut other = BTreeMap::new();
+        other.insert("dropped".to_string(), Json::Num(self.dropped as f64));
+        top.insert("otherData".to_string(), Json::Obj(other));
+        top.insert("traceEvents".to_string(), Json::Arr(trace_events));
+        let mut s = Json::Obj(top).dump();
+        s.push('\n');
+        s
+    }
+
+    /// Load a trace previously written by [`TraceFile::to_json`].  Events
+    /// with names outside the span vocabulary are skipped (foreign traces
+    /// render partially instead of failing).
+    pub fn parse(text: &str) -> Result<TraceFile> {
+        let doc = Json::parse(text).map_err(|e| anyhow::anyhow!("trace json: {e}"))?;
+        let mut out = TraceFile::default();
+        out.dropped = doc.at(&["otherData", "dropped"]).and_then(Json::as_u64).unwrap_or(0);
+        let events = doc
+            .get("traceEvents")
+            .and_then(Json::as_arr)
+            .ok_or_else(|| anyhow::anyhow!("trace json: missing traceEvents array"))?;
+        for e in events {
+            let ph = e.get("ph").and_then(Json::as_str).unwrap_or("");
+            let name = e.get("name").and_then(Json::as_str).unwrap_or("");
+            match ph {
+                "M" => {
+                    let value = e.at(&["args", "name"]).and_then(Json::as_str).unwrap_or("");
+                    if name == "process_name" {
+                        out.process = value.to_string();
+                    } else if name == "thread_name" {
+                        if let Some(tid) = e.get("tid").and_then(Json::as_u64) {
+                            out.tracks.insert(tid as u32, value.to_string());
+                        }
+                    }
+                }
+                "X" => {
+                    let Some(kind) = SpanKind::from_label(name) else { continue };
+                    out.events.push(SpanEvent {
+                        kind,
+                        track: e.get("tid").and_then(Json::as_u64).unwrap_or(0) as u32,
+                        id: e.at(&["args", "id"]).and_then(Json::as_u64).unwrap_or(0),
+                        start_us: e.get("ts").and_then(Json::as_u64).unwrap_or(0),
+                        dur_us: e.get("dur").and_then(Json::as_u64).unwrap_or(0),
+                    });
+                }
+                _ => {}
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// One JSONL metric-snapshot line: the source's fields plus `kind` (the
+/// snapshot type tag) and `name` (the instance, e.g. a tenant).  Stable
+/// key order, one `\n`-terminated object per line.
+pub fn metric_line(source: &dyn MetricSource, name: &str) -> String {
+    metric_line_from(source.metric_kind(), name, source.metric_json())
+}
+
+/// [`metric_line`] from an already-built snapshot object (the sim-side
+/// exporters build their fields directly).
+pub fn metric_line_from(kind: &str, name: &str, fields: Json) -> String {
+    let mut o = match fields {
+        Json::Obj(o) => o,
+        other => {
+            let mut o = BTreeMap::new();
+            o.insert("value".to_string(), other);
+            o
+        }
+    };
+    o.insert("kind".to_string(), Json::Str(kind.to_string()));
+    o.insert("name".to_string(), Json::Str(name.to_string()));
+    let mut s = Json::Obj(o).dump();
+    s.push('\n');
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::Arc;
+
+    fn sample() -> TraceFile {
+        let mut f = TraceFile::new("unit");
+        f.name_track(0, "tenant/requests");
+        f.name_track(2, "tenant/stage0");
+        f.events = vec![
+            SpanEvent { kind: SpanKind::Flush, track: 1, id: 0, start_us: 10, dur_us: 0 },
+            SpanEvent { kind: SpanKind::Stage, track: 2, id: 4, start_us: 12, dur_us: 30 },
+            SpanEvent { kind: SpanKind::Response, track: 0, id: 4, start_us: 5, dur_us: 40 },
+        ];
+        f
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let f = sample();
+        let text = f.to_json();
+        let back = TraceFile::parse(&text).unwrap();
+        assert_eq!(back.process, "unit");
+        assert_eq!(back.tracks, f.tracks);
+        assert_eq!(back.events, f.events);
+        assert_eq!(back.dropped, 0);
+        // a second serialization is byte-identical (stable key order)
+        assert_eq!(back.to_json(), text);
+    }
+
+    #[test]
+    fn json_is_chrome_trace_shaped() {
+        let text = sample().to_json();
+        let doc = Json::parse(&text).unwrap();
+        assert_eq!(doc.get("displayTimeUnit").and_then(Json::as_str), Some("ms"));
+        let events = doc.get("traceEvents").and_then(Json::as_arr).unwrap();
+        // 1 process meta + 2 track metas + 3 spans
+        assert_eq!(events.len(), 6);
+        assert_eq!(events[0].get("ph").and_then(Json::as_str), Some("M"));
+        let x = &events[3];
+        assert_eq!(x.get("ph").and_then(Json::as_str), Some("X"));
+        assert!(x.get("ts").is_some() && x.get("dur").is_some());
+    }
+
+    #[test]
+    fn from_tracer_carries_track_names_and_drops() {
+        let t = Arc::new(Tracer::new());
+        t.name_track(3, "pool/stage1");
+        let sink = t.handle_with_capacity(2);
+        for i in 0..5 {
+            sink.record(SpanKind::Stage, 3, i, i * 100, 10);
+        }
+        let f = TraceFile::from_tracer("live", &t);
+        assert_eq!(f.events.len(), 2);
+        assert_eq!(f.dropped, 3);
+        assert_eq!(f.track_label(3), "pool/stage1");
+        assert_eq!(f.track_label(9), "track9");
+        let back = TraceFile::parse(&f.to_json()).unwrap();
+        assert_eq!(back.dropped, 3);
+    }
+
+    #[test]
+    fn metric_lines_are_single_json_objects() {
+        let mut fields = BTreeMap::new();
+        fields.insert("completed".to_string(), Json::Num(8.0));
+        fields.insert("p99_s".to_string(), num(f64::NAN));
+        let line = metric_line_from("tenant", "fc_small", Json::Obj(fields));
+        assert!(line.ends_with('\n'));
+        let doc = Json::parse(line.trim_end()).unwrap();
+        assert_eq!(doc.get("kind").and_then(Json::as_str), Some("tenant"));
+        assert_eq!(doc.get("name").and_then(Json::as_str), Some("fc_small"));
+        assert_eq!(doc.get("completed").and_then(Json::as_u64), Some(8));
+        assert_eq!(doc.get("p99_s"), Some(&Json::Null));
+    }
+}

@@ -1,0 +1,34 @@
+//! Unified telemetry layer (DESIGN.md §13): request-lifecycle span
+//! tracing, streaming metric snapshots, and deterministic trace export.
+//!
+//! Three pieces:
+//!
+//! * [`span`] — a lock-free per-thread ring-buffer span tracer for the
+//!   live serving path, and a sim-clock twin ([`span::SimTrace`]) whose
+//!   output is byte-deterministic per seed.
+//! * [`export`] — Chrome/Perfetto trace-event JSON plus JSONL metric
+//!   snapshots, both built on the in-repo stable-order JSON writer.
+//! * [`MetricSource`] — the uniform snapshot interface every metrics
+//!   struct implements, so `--metrics-out` files and the end-of-run human
+//!   tables render from the same data.
+
+pub mod export;
+pub mod span;
+
+pub use export::{metric_line, metric_line_from, num, TraceFile};
+pub use span::{SimTrace, SpanEvent, SpanKind, SpanSink, Tracer};
+
+use crate::util::json::Json;
+
+/// A metrics struct that can export its current counters uniformly: a
+/// stable `kind` tag naming the snapshot type and the counters as one
+/// JSON object (stable key order — the JSONL/`--metrics-out` contract).
+pub trait MetricSource {
+    /// Snapshot-type tag (`"stage"`, `"serve"`, `"tenant"`,
+    /// `"data_plane"`, `"scheduler"`).
+    fn metric_kind(&self) -> &'static str;
+
+    /// Current counters as a JSON object; non-finite values (empty
+    /// histograms) map to `null` via [`num`].
+    fn metric_json(&self) -> Json;
+}

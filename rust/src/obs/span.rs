@@ -1,0 +1,407 @@
+//! Lock-free span tracer for the live serving path, plus a deterministic
+//! sim-clock span recorder for the workload simulator.
+//!
+//! Live side: each worker thread asks the shared [`Tracer`] for a
+//! [`SpanSink`] — a private fixed-capacity ring of atomic slots.  Recording
+//! a span is four relaxed word stores plus one release store (the slot's
+//! validity word), no locks and no allocation, so the hot path stays
+//! inside the data plane's zero-alloc budget; when a ring fills, further
+//! spans are counted as dropped instead of blocking.  [`Tracer::drain`]
+//! merges every ring into one deterministic ordering — call it at
+//! quiescence (workers joined / pool shut down).
+//!
+//! Sim side: [`SimTrace`] records the same [`SpanEvent`]s but stamped from
+//! the simulator's virtual clock (seconds since epoch zero), so two runs
+//! with the same seed yield byte-identical traces (DESIGN.md §13).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+/// What part of the request lifecycle a span covers.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum SpanKind {
+    /// A request entered an ingress queue (instant, duration 0).
+    Enqueue,
+    /// Time a request sat queued between arrival and its batch flush.
+    Wait,
+    /// A dynamic batch flushed into the pipeline (instant, duration 0).
+    Flush,
+    /// One stage backend executing one batch (`run_batch`).
+    Stage,
+    /// A time-shared tenant re-loading parameters after a quantum switch.
+    Swap,
+    /// End-to-end request residency: arrival to response.
+    Response,
+}
+
+impl SpanKind {
+    /// Stable name used in trace files (`ph:"X"` event names).
+    pub fn label(self) -> &'static str {
+        match self {
+            SpanKind::Enqueue => "enqueue",
+            SpanKind::Wait => "wait",
+            SpanKind::Flush => "flush",
+            SpanKind::Stage => "stage",
+            SpanKind::Swap => "swap",
+            SpanKind::Response => "response",
+        }
+    }
+
+    /// Inverse of [`SpanKind::label`] (for loading saved traces).
+    pub fn from_label(s: &str) -> Option<SpanKind> {
+        Some(match s {
+            "enqueue" => SpanKind::Enqueue,
+            "wait" => SpanKind::Wait,
+            "flush" => SpanKind::Flush,
+            "stage" => SpanKind::Stage,
+            "swap" => SpanKind::Swap,
+            "response" => SpanKind::Response,
+            _ => return None,
+        })
+    }
+
+    fn code(self) -> u64 {
+        match self {
+            SpanKind::Enqueue => 0,
+            SpanKind::Wait => 1,
+            SpanKind::Flush => 2,
+            SpanKind::Stage => 3,
+            SpanKind::Swap => 4,
+            SpanKind::Response => 5,
+        }
+    }
+
+    fn from_code(c: u64) -> SpanKind {
+        match c {
+            0 => SpanKind::Enqueue,
+            1 => SpanKind::Wait,
+            2 => SpanKind::Flush,
+            3 => SpanKind::Stage,
+            4 => SpanKind::Swap,
+            _ => SpanKind::Response,
+        }
+    }
+}
+
+/// One completed span: microsecond timestamps on either the monotonic
+/// process clock (live serving, relative to the tracer's epoch) or the
+/// simulator's virtual clock (deterministic loadgen traces).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    pub kind: SpanKind,
+    /// Render track (Perfetto thread id): see [`track_base`].
+    pub track: u32,
+    /// Scope id: request id for lifecycle spans, batch ordinal for
+    /// flush/stage/swap spans.
+    pub id: u64,
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl SpanEvent {
+    /// Deterministic ordering key (start, track, id, kind).
+    fn key(&self) -> (u64, u32, u64, u64) {
+        (self.start_us, self.track, self.id, self.kind.code())
+    }
+}
+
+/// Track-id convention shared by the sim and live paths: each tenant owns
+/// a block of [`TRACKS_PER_TENANT`] consecutive tracks (0 = request
+/// lifecycle, 1 = batcher, 2.. = stage workers per replica), so traces
+/// from either clock domain render identically.
+pub const TRACKS_PER_TENANT: u32 = 64;
+
+/// First track of tenant `idx` (tenants in admission order).
+pub fn track_base(idx: usize) -> u32 {
+    idx as u32 * TRACKS_PER_TENANT
+}
+
+const SLOT_WORDS: usize = 4;
+const VALID_BIT: u64 = 1 << 63;
+
+/// Fixed-capacity span ring: slots of four atomic words
+/// `[start_us, dur_us, id, valid|kind<<32|track]`.  Single producer per
+/// ring (each worker gets its own via [`Tracer::handle`]); the claim
+/// counter keeps growing past capacity so the overflow is observable.
+struct Ring {
+    slots: Vec<[AtomicU64; SLOT_WORDS]>,
+    head: AtomicU64,
+}
+
+impl Ring {
+    fn new(capacity: usize) -> Ring {
+        let slots = (0..capacity.max(1))
+            .map(|_| std::array::from_fn(|_| AtomicU64::new(0)))
+            .collect();
+        Ring { slots, head: AtomicU64::new(0) }
+    }
+
+    fn record(&self, e: SpanEvent) {
+        let claim = self.head.fetch_add(1, Ordering::Relaxed);
+        if claim >= self.slots.len() as u64 {
+            return; // full: count as dropped (head - capacity), never block
+        }
+        let slot = &self.slots[claim as usize];
+        slot[0].store(e.start_us, Ordering::Relaxed);
+        slot[1].store(e.dur_us, Ordering::Relaxed);
+        slot[2].store(e.id, Ordering::Relaxed);
+        // the validity word is published last, so a drain racing a
+        // half-written slot skips it instead of reading torn fields
+        let word = VALID_BIT | (e.kind.code() << 32) | e.track as u64;
+        slot[3].store(word, Ordering::Release);
+    }
+
+    fn drain_into(&self, out: &mut Vec<SpanEvent>) -> u64 {
+        let head = self.head.load(Ordering::Relaxed);
+        let filled = (head as usize).min(self.slots.len());
+        for slot in &self.slots[..filled] {
+            let word = slot[3].load(Ordering::Acquire);
+            if word & VALID_BIT == 0 {
+                continue;
+            }
+            out.push(SpanEvent {
+                kind: SpanKind::from_code((word >> 32) & 0x7FFF_FFFF),
+                track: word as u32,
+                id: slot[2].load(Ordering::Relaxed),
+                start_us: slot[0].load(Ordering::Relaxed),
+                dur_us: slot[1].load(Ordering::Relaxed),
+            });
+        }
+        head.saturating_sub(self.slots.len() as u64)
+    }
+}
+
+/// Spans per [`SpanSink`] ring (per worker thread).
+pub const DEFAULT_RING_CAPACITY: usize = 64 * 1024;
+
+/// Process-wide span collector for the live serving path.  Workers record
+/// through per-thread [`SpanSink`]s; the registry and track names sit
+/// behind a mutex touched only at setup/drain time, never per span.
+pub struct Tracer {
+    epoch: Instant,
+    rings: Mutex<Vec<Arc<Ring>>>,
+    track_names: Mutex<std::collections::BTreeMap<u32, String>>,
+}
+
+impl Default for Tracer {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Tracer {
+    pub fn new() -> Tracer {
+        Tracer {
+            epoch: Instant::now(),
+            rings: Mutex::new(Vec::new()),
+            track_names: Mutex::new(std::collections::BTreeMap::new()),
+        }
+    }
+
+    /// Microseconds since this tracer was created (the live clock domain
+    /// of every span it collects).
+    pub fn now_us(&self) -> u64 {
+        self.epoch.elapsed().as_micros() as u64
+    }
+
+    /// Register a new per-thread sink with the default ring capacity.
+    pub fn handle(self: &Arc<Self>) -> SpanSink {
+        self.handle_with_capacity(DEFAULT_RING_CAPACITY)
+    }
+
+    /// Register a new per-thread sink holding up to `capacity` spans.
+    pub fn handle_with_capacity(self: &Arc<Self>, capacity: usize) -> SpanSink {
+        let ring = Arc::new(Ring::new(capacity));
+        self.rings.lock().unwrap().push(ring.clone());
+        SpanSink { tracer: self.clone(), ring }
+    }
+
+    /// Attach a human-readable name to a render track (setup-time only).
+    pub fn name_track(&self, track: u32, name: impl Into<String>) {
+        self.track_names.lock().unwrap().insert(track, name.into());
+    }
+
+    /// Snapshot of the named tracks.
+    pub fn track_names(&self) -> std::collections::BTreeMap<u32, String> {
+        self.track_names.lock().unwrap().clone()
+    }
+
+    /// Merge every ring into one deterministically ordered event list,
+    /// returning `(events, dropped)`.  Call at quiescence (all recording
+    /// threads joined); a drain racing an in-flight record skips the
+    /// half-written slot.
+    pub fn drain(&self) -> (Vec<SpanEvent>, u64) {
+        let rings = self.rings.lock().unwrap();
+        let mut events = Vec::new();
+        let mut dropped = 0;
+        for ring in rings.iter() {
+            dropped += ring.drain_into(&mut events);
+        }
+        events.sort_by_key(|e| e.key());
+        (events, dropped)
+    }
+}
+
+impl std::fmt::Debug for Tracer {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        let rings = self.rings.lock().unwrap().len();
+        write!(f, "Tracer {{ rings: {rings} }}")
+    }
+}
+
+/// Per-thread recording handle (one private ring).  Cheap to clone the
+/// `Arc`s inside, but each clone still writes the same ring — ask the
+/// tracer for a fresh handle per producer thread instead.
+#[derive(Clone)]
+pub struct SpanSink {
+    tracer: Arc<Tracer>,
+    ring: Arc<Ring>,
+}
+
+impl SpanSink {
+    /// Microseconds since the owning tracer's epoch.
+    pub fn now_us(&self) -> u64 {
+        self.tracer.now_us()
+    }
+
+    /// Record one completed span (lock-free, allocation-free).
+    pub fn record(&self, kind: SpanKind, track: u32, id: u64, start_us: u64, dur_us: u64) {
+        self.ring.record(SpanEvent { kind, track, id, start_us, dur_us });
+    }
+}
+
+impl std::fmt::Debug for SpanSink {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "SpanSink")
+    }
+}
+
+/// Deterministic span recorder for the workload simulator: timestamps are
+/// the sim's virtual clock in seconds, converted to whole microseconds, so
+/// trace files are byte-identical per seed.
+#[derive(Debug, Clone, Default)]
+pub struct SimTrace {
+    events: Vec<SpanEvent>,
+}
+
+impl SimTrace {
+    pub fn new() -> SimTrace {
+        SimTrace::default()
+    }
+
+    /// Record a span from sim-clock seconds (`end_s >= start_s`; negative
+    /// times clamp to zero — the sim epoch).
+    pub fn record_s(&mut self, kind: SpanKind, track: u32, id: u64, start_s: f64, end_s: f64) {
+        let start_us = (start_s.max(0.0) * 1e6).round() as u64;
+        let end_us = (end_s.max(0.0) * 1e6).round() as u64;
+        self.events.push(SpanEvent {
+            kind,
+            track,
+            id,
+            start_us,
+            dur_us: end_us.saturating_sub(start_us),
+        });
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.events.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.events.len()
+    }
+
+    /// Events in the same deterministic order [`Tracer::drain`] uses.
+    pub fn into_events(mut self) -> Vec<SpanEvent> {
+        self.events.sort_by_key(|e| e.key());
+        self.events
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_records_and_drains_in_order() {
+        let t = Arc::new(Tracer::new());
+        let sink = t.handle_with_capacity(16);
+        sink.record(SpanKind::Stage, 2, 7, 100, 50);
+        sink.record(SpanKind::Flush, 1, 0, 40, 0);
+        let (events, dropped) = t.drain();
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 2);
+        assert_eq!(events[0].kind, SpanKind::Flush);
+        assert_eq!(events[0].start_us, 40);
+        assert_eq!(events[1].kind, SpanKind::Stage);
+        assert_eq!(events[1].id, 7);
+        assert_eq!(events[1].dur_us, 50);
+    }
+
+    #[test]
+    fn full_ring_counts_drops_instead_of_blocking() {
+        let t = Arc::new(Tracer::new());
+        let sink = t.handle_with_capacity(4);
+        for i in 0..10 {
+            sink.record(SpanKind::Enqueue, 0, i, i, 0);
+        }
+        let (events, dropped) = t.drain();
+        assert_eq!(events.len(), 4);
+        assert_eq!(dropped, 6);
+    }
+
+    #[test]
+    fn concurrent_sinks_merge_deterministically() {
+        let t = Arc::new(Tracer::new());
+        let handles: Vec<_> = (0..4u32)
+            .map(|track| {
+                let sink = t.handle_with_capacity(1024);
+                std::thread::spawn(move || {
+                    for i in 0..100u64 {
+                        sink.record(SpanKind::Stage, track, i, i * 10, 5);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let (events, dropped) = t.drain();
+        assert_eq!(dropped, 0);
+        assert_eq!(events.len(), 400);
+        // drain order is a deterministic total order regardless of thread
+        // interleaving: sorted by (start, track, id, kind)
+        let keys: Vec<_> = events.iter().map(|e| (e.start_us, e.track)).collect();
+        let mut sorted = keys.clone();
+        sorted.sort();
+        assert_eq!(keys, sorted);
+    }
+
+    #[test]
+    fn kind_labels_roundtrip() {
+        for k in [
+            SpanKind::Enqueue,
+            SpanKind::Wait,
+            SpanKind::Flush,
+            SpanKind::Stage,
+            SpanKind::Swap,
+            SpanKind::Response,
+        ] {
+            assert_eq!(SpanKind::from_label(k.label()), Some(k));
+            assert_eq!(SpanKind::from_code(k.code()), k);
+        }
+        assert_eq!(SpanKind::from_label("nope"), None);
+    }
+
+    #[test]
+    fn sim_trace_stamps_whole_microseconds() {
+        let mut s = SimTrace::new();
+        s.record_s(SpanKind::Response, 0, 3, 1.25e-3, 2.5e-3);
+        s.record_s(SpanKind::Flush, 1, 0, -1.0, 0.0); // clamps to epoch
+        let events = s.into_events();
+        assert_eq!(events[0].start_us, 0);
+        assert_eq!(events[1].start_us, 1250);
+        assert_eq!(events[1].dur_us, 1250);
+    }
+}

@@ -1,6 +1,8 @@
 //! Aligned-text / CSV table rendering for the paper-reproduction harness
 //! (every `repro <table|fig>` command prints through this).
 
+use crate::util::json::Json;
+
 /// A simple column-aligned table.
 #[derive(Debug, Clone, Default)]
 pub struct Table {
@@ -100,6 +102,34 @@ pub fn speedup(v: f64) -> String {
     format!("{v:.1}x")
 }
 
+/// Render `MetricSource` snapshots — `(kind, name, fields)` triples, as
+/// collected by `repro serve-pool` / `repro dataplane` — as one flat
+/// human table, one row per metric field.  The display twin of the
+/// `--metrics-out` JSONL (`obs::metric_line_from`): both read the same
+/// snapshot objects, so the table never drifts from the machine export.
+pub fn metrics_table(entries: &[(String, String, Json)]) -> Table {
+    let mut t = Table::new("End-of-run metrics", &["kind", "name", "metric", "value"]);
+    for (kind, name, fields) in entries {
+        match fields {
+            Json::Obj(map) => {
+                for (k, v) in map {
+                    t.row(vec![kind.clone(), name.clone(), k.clone(), cell(v)]);
+                }
+            }
+            other => t.row(vec![kind.clone(), name.clone(), "value".into(), cell(other)]),
+        }
+    }
+    t
+}
+
+/// One metric value as a table cell ("-" for null, JSON otherwise).
+fn cell(v: &Json) -> String {
+    match v {
+        Json::Null => "-".to_string(),
+        other => other.dump(),
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -123,6 +153,21 @@ mod tests {
     fn arity_checked() {
         let mut t = Table::new("x", &["a", "b"]);
         t.row(vec!["1".into()]);
+    }
+
+    #[test]
+    fn metrics_table_flattens_snapshots() {
+        let mut fields = std::collections::BTreeMap::new();
+        fields.insert("completed".to_string(), Json::Num(40.0));
+        fields.insert("p99_s".to_string(), Json::Null);
+        let entries = vec![("tenant".to_string(), "fc_small".to_string(), Json::Obj(fields))];
+        let s = metrics_table(&entries).render();
+        assert!(s.contains("End-of-run metrics"), "{s}");
+        assert!(s.contains("completed"), "{s}");
+        assert!(s.contains("40"), "{s}");
+        // null metrics (empty histograms) render as "-"
+        let p99_row = s.lines().find(|l| l.contains("p99_s")).unwrap();
+        assert!(p99_row.trim_end().ends_with('-'), "{s}");
     }
 
     #[test]

@@ -60,11 +60,13 @@ use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::queue::{bounded, Receiver, SendError, Sender};
 use crate::coordinator::{Arena, PipelineConfig, Request, Response};
 use crate::metrics::{DataPlaneMetrics, SchedulerMetrics, TenantMetrics};
+use crate::obs::span::track_base;
+use crate::obs::{SpanKind, SpanSink, Tracer};
 use crate::runtime::Manifest;
 
 use super::allocator::{allocate, AllocatorConfig, Assignment, PoolPlan};
 use super::registry::{ModelRegistry, Tenant};
-use super::router::{build_deployment, BackendKind, Deployment, TenantShape};
+use super::router::{build_deployment, name_tenant_tracks, BackendKind, Deployment, TenantShape};
 
 /// Completion-queue capacity per tenant: bounds how many responses may sit
 /// unconsumed before the batcher worker backpressures.  Generous, so tests
@@ -79,11 +81,15 @@ pub struct OpenOptions {
     /// Capacity of each tenant's ingress queue (requests) and of the host
     /// queues between pipeline stages (batches) — the backpressure bound.
     pub queue_capacity: usize,
+    /// Span tracer for `--trace-out` (DESIGN.md §13).  `None` (the
+    /// default) disables tracing; workers then skip recording behind one
+    /// branch, staying inside the data plane's zero-alloc budget.
+    pub tracer: Option<Arc<Tracer>>,
 }
 
 impl Default for OpenOptions {
     fn default() -> Self {
-        OpenOptions { policy: BatchPolicy::default(), queue_capacity: 64 }
+        OpenOptions { policy: BatchPolicy::default(), queue_capacity: 64, tracer: None }
     }
 }
 
@@ -201,6 +207,7 @@ fn tenant_worker(
     metrics: Arc<TenantMetrics>,
     swap_s: f64,
     quantum_s: f64,
+    obs: Option<(SpanSink, u32)>,
 ) {
     // sim latencies are recorded relative to the deployment's sim clock at
     // batch start (the clock is monotonic across batches)
@@ -214,8 +221,14 @@ fn tenant_worker(
     // (`workload::simulate_deployment`).
     let started = std::time::Instant::now();
     let mut last_swap_s = f64::NEG_INFINITY;
+    // batch ordinal: span id of this tenant's Flush/Swap spans
+    let mut batch_idx = 0u64;
     while let Some((batch, kind)) = batcher.next_batch_with_reason() {
         metrics.record_batch(batch.len() as u64, batcher.queue_depth() as u64, kind);
+        if let Some((sink, base)) = &obs {
+            // flush instant on the tenant's batcher track
+            sink.record(SpanKind::Flush, base + 1, batch_idx, sink.now_us(), 0);
+        }
         let batch_swap_s = if swap_s > 0.0 {
             let now_s = started.elapsed().as_secs_f64();
             if now_s >= last_swap_s + quantum_s {
@@ -223,6 +236,11 @@ fn tenant_worker(
                 // last quantum, so this batch swaps the parameters back in
                 last_swap_s = now_s;
                 metrics.record_swap(swap_s);
+                if let Some((sink, base)) = &obs {
+                    // the paid re-load, annotated with its modelled cost
+                    let dur_us = (swap_s * 1e6) as u64;
+                    sink.record(SpanKind::Swap, base + 1, batch_idx, sink.now_us(), dur_us);
+                }
                 swap_s
             } else {
                 metrics.record_swap_skipped();
@@ -246,6 +264,14 @@ fn tenant_worker(
                     if r.sim_done_s > sim_epoch {
                         sim_epoch = r.sim_done_s;
                     }
+                    if let Some((sink, track)) = &obs {
+                        // request lifecycle span: ends now, spans the
+                        // measured wall-clock latency backwards
+                        let end_us = sink.now_us();
+                        let dur_us = (r.real_latency_s * 1e6) as u64;
+                        let start_us = end_us.saturating_sub(dur_us);
+                        sink.record(SpanKind::Response, *track, r.id, start_us, dur_us);
+                    }
                 }
                 // the whole batch of responses crosses the completion
                 // queue under one lock/wakeup; a closed stream (pool
@@ -254,6 +280,7 @@ fn tenant_worker(
             }
             Err(_) => metrics.record_error(),
         }
+        batch_idx += 1;
     }
     deployment.shutdown();
 }
@@ -361,18 +388,28 @@ impl ServingPool {
             queue_capacity: self.opts.queue_capacity,
             arena: Some(self.arena.clone()),
             data_plane: Some(self.data_plane.clone()),
+            tracer: self.opts.tracer.clone(),
+            trace_track_base: 0,
         };
-        for a in &plan.assignments {
+        for (idx, a) in plan.assignments.iter().enumerate() {
             if st.live.contains_key(&a.name) {
                 continue;
             }
+            // per-plan tenant track run (requests, batcher, stages); a
+            // re-plan may renumber tracks, but names follow along
+            let tbase = track_base(idx);
+            if let Some(t) = &self.opts.tracer {
+                let n_stages = a.candidate.partition.n_segments();
+                name_tenant_tracks(t, &a.name, idx, a.replicas, n_stages);
+            }
+            let tenant_pipe = PipelineConfig { trace_track_base: tbase + 2, ..pipe.clone() };
             let built = build_deployment(
                 a,
                 &st.registry,
                 &self.system,
                 &self.backend,
                 self.manifest.as_ref(),
-                &pipe,
+                &tenant_pipe,
             )?;
             built.deployment.wait_ready()?;
             let (ingress, ingress_rx) = bounded(self.opts.queue_capacity);
@@ -396,8 +433,17 @@ impl ServingPool {
             let worker_metrics = metrics.clone();
             let swap_s = a.grant.switch_s();
             let quantum_s = a.grant.quantum_s();
+            let obs = self.opts.tracer.as_ref().map(|t| (t.handle(), tbase));
             let worker = std::thread::spawn(move || {
-                tenant_worker(deployment, batcher, done_tx, worker_metrics, swap_s, quantum_s)
+                tenant_worker(
+                    deployment,
+                    batcher,
+                    done_tx,
+                    worker_metrics,
+                    swap_s,
+                    quantum_s,
+                    obs,
+                )
             });
             st.live.insert(
                 a.name.clone(),

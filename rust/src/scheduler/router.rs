@@ -39,6 +39,8 @@ use crate::coordinator::{
 };
 use crate::metrics::{DataPlaneMetrics, SchedulerMetrics, TenantMetrics};
 use crate::model::Model;
+use crate::obs::span::track_base;
+use crate::obs::Tracer;
 use crate::runtime::stage::pjrt_stage_factory;
 use crate::runtime::Manifest;
 use crate::serving::stage_sims_for_grant;
@@ -328,7 +330,13 @@ pub(crate) fn build_deployment(
     let shape = Arc::new(TenantShape::of(&a.name, model));
 
     let mut pipelines = Vec::with_capacity(a.replicas);
-    for _ in 0..a.replicas {
+    for rep in 0..a.replicas {
+        // each replica gets its own run of stage tracks so live traces lay
+        // out exactly like the deterministic sim's (rep-major, then stage)
+        let rep_pipe = PipelineConfig {
+            trace_track_base: pipe.trace_track_base + (rep * bounds.len()) as u32,
+            ..pipe.clone()
+        };
         let factories: Vec<StageFactory> = match backend {
             BackendKind::Synthetic => bounds
                 .iter()
@@ -346,7 +354,7 @@ pub(crate) fn build_deployment(
             }
         };
         pipelines.push(
-            Pipeline::spawn(factories, sims.clone(), pipe)
+            Pipeline::spawn(factories, sims.clone(), &rep_pipe)
                 .with_context(|| format!("spawning pipeline for {}", a.name))?,
         );
     }
@@ -356,6 +364,28 @@ pub(crate) fn build_deployment(
         Deployment::Replicated(ReplicaRouter::new(pipelines))
     };
     Ok(BuiltTenant { deployment, shape })
+}
+
+/// Register the display names of one tenant's span tracks with `tracer`
+/// (requests, batcher, then rep-major stage tracks), mirroring the track
+/// layout of `workload::simulate_deployment_traced` so live and simulated
+/// traces render identically.
+pub(crate) fn name_tenant_tracks(
+    tracer: &Tracer,
+    name: &str,
+    idx: usize,
+    replicas: usize,
+    n_stages: usize,
+) {
+    let base = track_base(idx);
+    tracer.name_track(base, format!("{name}/requests"));
+    tracer.name_track(base + 1, format!("{name}/batcher"));
+    for rep in 0..replicas {
+        for s in 0..n_stages {
+            let t = base + 2 + (rep * n_stages + s) as u32;
+            tracer.name_track(t, format!("{name}/rep{rep}/stage{s}"));
+        }
+    }
 }
 
 /// One admitted tenant's live deployment.
@@ -443,6 +473,20 @@ impl PoolRouter {
         backend: &BackendKind,
         queue_capacity: usize,
     ) -> Result<PoolRouter> {
+        PoolRouter::deploy_traced(plan, registry, cfg, backend, queue_capacity, None)
+    }
+
+    /// [`deploy`](PoolRouter::deploy) with an optional span tracer: stage
+    /// workers record one `Stage` span per served batch, on per-tenant
+    /// track runs laid out by `obs::span::track_base` (see DESIGN.md §13).
+    pub fn deploy_traced(
+        plan: &PoolPlan,
+        registry: &ModelRegistry,
+        cfg: &SystemConfig,
+        backend: &BackendKind,
+        queue_capacity: usize,
+        tracer: Option<Arc<Tracer>>,
+    ) -> Result<PoolRouter> {
         // PJRT deployments resolve segments through the artifact manifest
         let manifest: Option<Manifest> = match backend {
             BackendKind::Pjrt { artifact_dir } => {
@@ -455,12 +499,20 @@ impl PoolRouter {
             queue_capacity,
             arena: Some(Arena::new(data_plane.clone())),
             data_plane: Some(data_plane.clone()),
+            tracer: tracer.clone(),
+            trace_track_base: 0,
         };
 
         let mut tenants = BTreeMap::new();
-        for a in &plan.assignments {
+        for (idx, a) in plan.assignments.iter().enumerate() {
+            let n_stages = a.candidate.partition.n_segments();
+            if let Some(t) = &tracer {
+                name_tenant_tracks(t, &a.name, idx, a.replicas, n_stages);
+            }
+            let tenant_pipe =
+                PipelineConfig { trace_track_base: track_base(idx) + 2, ..pipe.clone() };
             let built =
-                build_deployment(a, registry, cfg, backend, manifest.as_ref(), &pipe)?;
+                build_deployment(a, registry, cfg, backend, manifest.as_ref(), &tenant_pipe)?;
             tenants.insert(
                 a.name.clone(),
                 TenantHandle {

@@ -1,6 +1,8 @@
 //! Execution traces: CSV/ASCII export of pipeline Gantt schedules for
-//! inspecting stage overlap and bottlenecks.
+//! inspecting stage overlap and bottlenecks, plus the ASCII renderer for
+//! saved span traces (`repro trace`, DESIGN.md §13).
 
+use crate::obs::TraceFile;
 use crate::pipeline::PipelineResult;
 
 /// Gantt schedule as CSV (`stage,item,start_s,end_s`).
@@ -12,6 +14,33 @@ pub fn gantt_csv(result: &PipelineResult) -> String {
     out
 }
 
+/// One labelled row of spans for [`spans_ascii`]: `(start_s, end_s,
+/// glyph)` intervals over a shared time axis.
+pub type SpanRow = (String, Vec<(f64, f64, char)>);
+
+/// Render labelled span rows as a coarse ASCII chart (`width` columns
+/// over `span_s` seconds; '.' = idle).  A span shorter than one column is
+/// clamped to a single cell so it stays visible instead of rounding away.
+pub fn spans_ascii(rows: &[SpanRow], span_s: f64, width: usize) -> String {
+    let width = width.max(1);
+    let span = span_s.max(1e-12);
+    let label_w = rows.iter().map(|(l, _)| l.len()).max().unwrap_or(0);
+    let mut out = String::new();
+    for (label, spans) in rows {
+        let mut cells = vec!['.'; width];
+        for &(start_s, end_s, c) in spans {
+            let a = (((start_s / span) * width as f64) as usize).min(width - 1);
+            let b = ((((end_s / span) * width as f64).ceil() as usize).min(width)).max(a + 1);
+            for cell in cells.iter_mut().take(b).skip(a) {
+                *cell = c;
+            }
+        }
+        out.push_str(&format!("{label:<label_w$} |{}|\n", cells.iter().collect::<String>()));
+    }
+    out.push_str(&format!("{:label_w$}  0 .. {:.3} ms\n", "", span * 1e3));
+    out
+}
+
 /// Coarse ASCII Gantt chart (one row per stage, `width` columns over the
 /// makespan; digits show which item occupies the slot, '.' = idle).
 pub fn gantt_ascii(result: &PipelineResult, width: usize) -> String {
@@ -19,21 +48,53 @@ pub fn gantt_ascii(result: &PipelineResult, width: usize) -> String {
         return String::from("(no gantt recorded)\n");
     }
     let n_stages = result.gantt.iter().map(|e| e.stage).max().unwrap() + 1;
-    let span = result.makespan_s.max(1e-12);
-    let mut rows = vec![vec!['.'; width]; n_stages];
+    let mut rows: Vec<SpanRow> =
+        (0..n_stages).map(|i| (format!("TPU{i}"), Vec::new())).collect();
     for e in &result.gantt {
-        let a = ((e.start_s / span) * width as f64) as usize;
-        let b = (((e.end_s / span) * width as f64).ceil() as usize).min(width);
         let c = char::from_digit((e.item % 10) as u32, 10).unwrap();
-        for cell in rows[e.stage].iter_mut().take(b).skip(a.min(width)) {
-            *cell = c;
-        }
+        rows[e.stage].1.push((e.start_s, e.end_s, c));
     }
-    let mut out = String::new();
-    for (i, row) in rows.iter().enumerate() {
-        out.push_str(&format!("TPU{i} |{}|\n", row.iter().collect::<String>()));
+    spans_ascii(&rows, result.makespan_s, width)
+}
+
+/// Render a saved span trace (see [`crate::obs::export`]) as an ASCII
+/// chart: one row per track in track order, glyphs keyed by span id.
+pub fn trace_ascii(file: &TraceFile, width: usize) -> String {
+    if file.events.is_empty() {
+        return String::from("(no spans recorded)\n");
     }
-    out.push_str(&format!("       0 .. {:.3} ms\n", span * 1e3));
+    let mut tracks: Vec<u32> = file.events.iter().map(|e| e.track).collect();
+    tracks.sort_unstable();
+    tracks.dedup();
+    let span_s = file
+        .events
+        .iter()
+        .map(|e| (e.start_us + e.dur_us) as f64 * 1e-6)
+        .fold(0.0f64, f64::max);
+    let rows: Vec<SpanRow> = tracks
+        .iter()
+        .map(|&t| {
+            let spans = file
+                .events
+                .iter()
+                .filter(|e| e.track == t)
+                .map(|e| {
+                    let start_s = e.start_us as f64 * 1e-6;
+                    let end_s = (e.start_us + e.dur_us) as f64 * 1e-6;
+                    let c = char::from_digit((e.id % 10) as u32, 10).unwrap();
+                    (start_s, end_s, c)
+                })
+                .collect();
+            (file.track_label(t), spans)
+        })
+        .collect();
+    let mut out = spans_ascii(&rows, span_s, width);
+    out.push_str(&format!(
+        "{} spans on {} tracks ({} dropped)\n",
+        file.events.len(),
+        tracks.len(),
+        file.dropped
+    ));
     out
 }
 
@@ -42,7 +103,8 @@ mod tests {
     use super::*;
     use crate::config::LinkConfig;
     use crate::link::Link;
-    use crate::pipeline::{simulate, SimOptions, StageSpec};
+    use crate::obs::{SpanEvent, SpanKind};
+    use crate::pipeline::{simulate, GanttEntry, SimOptions, StageSpec};
 
     fn run() -> PipelineResult {
         let stages: Vec<StageSpec> = [1e-3, 2e-3]
@@ -82,5 +144,44 @@ mod tests {
             &SimOptions::default(),
         );
         assert!(gantt_ascii(&r, 10).contains("no gantt"));
+    }
+
+    #[test]
+    fn zero_width_spans_stay_visible() {
+        // regression: a span shorter than one column used to round to
+        // `a == b` and render as idle
+        let r = PipelineResult {
+            makespan_s: 1.0,
+            latencies_s: vec![],
+            stage_busy_s: vec![1e-6],
+            gantt: vec![GanttEntry { stage: 0, item: 3, start_s: 0.5, end_s: 0.500001 }],
+        };
+        let art = gantt_ascii(&r, 10);
+        assert!(art.contains('3'), "sub-column span must occupy one cell: {art}");
+        // and a span at the very end of the axis must not overflow the row
+        let r2 = PipelineResult {
+            makespan_s: 1.0,
+            latencies_s: vec![],
+            stage_busy_s: vec![1e-9],
+            gantt: vec![GanttEntry { stage: 0, item: 7, start_s: 1.0, end_s: 1.0 }],
+        };
+        let art2 = gantt_ascii(&r2, 10);
+        let bar = art2.lines().next().unwrap();
+        assert!(bar.ends_with("7|"), "{art2}");
+    }
+
+    #[test]
+    fn trace_ascii_renders_tracks() {
+        let mut f = TraceFile::new("unit");
+        f.name_track(0, "fc/requests");
+        f.events = vec![
+            SpanEvent { kind: SpanKind::Response, track: 0, id: 1, start_us: 0, dur_us: 900 },
+            SpanEvent { kind: SpanKind::Stage, track: 2, id: 1, start_us: 100, dur_us: 500 },
+        ];
+        let art = trace_ascii(&f, 40);
+        assert!(art.contains("fc/requests"), "{art}");
+        assert!(art.contains("track2"), "{art}");
+        assert!(art.contains("2 spans on 2 tracks"), "{art}");
+        assert!(trace_ascii(&TraceFile::new("x"), 40).contains("no spans"));
     }
 }

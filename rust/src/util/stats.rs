@@ -198,6 +198,60 @@ mod tests {
     }
 
     #[test]
+    fn histogram_quantiles_track_exact_percentiles() {
+        // golden check against the exact full-sample Summary on a seeded
+        // log-uniform stream (10 us .. 1 s): a log-bucket estimate returns
+        // its bucket's upper bound, so it must sit within one GROWTH
+        // factor of the exact nearest-rank percentile (plus a little rank
+        // slack between the two conventions)
+        let mut h = LatencyHistogram::new();
+        let mut s = Summary::new();
+        let mut state = 0x9E37_79B9_7F4A_7C15u64;
+        for _ in 0..5000 {
+            state = state
+                .wrapping_mul(6_364_136_223_846_793_005)
+                .wrapping_add(1_442_695_040_888_963_407);
+            let u = (state >> 11) as f64 / (1u64 << 53) as f64;
+            let v = 1e-5 * 1e5f64.powf(u);
+            h.record(v);
+            s.add(v);
+        }
+        for q in [50.0, 90.0, 95.0, 99.0, 99.9] {
+            let est = h.percentile(q);
+            let exact = s.percentile(q);
+            assert!(
+                est >= exact * 0.75 && est <= exact * 1.35,
+                "q={q}: histogram {est} vs exact {exact}"
+            );
+        }
+    }
+
+    #[test]
+    fn histogram_merge_equals_combined_stream() {
+        // merging two shards must quantile-match one histogram fed the
+        // union of both streams
+        let mut a = LatencyHistogram::new();
+        let mut b = LatencyHistogram::new();
+        let mut all = LatencyHistogram::new();
+        for i in 1..=400u64 {
+            let v = i as f64 * 2.5e-4;
+            if i % 2 == 0 {
+                a.record(v);
+            } else {
+                b.record(v);
+            }
+            all.record(v);
+        }
+        a.merge(&b);
+        assert_eq!(a.count(), all.count());
+        for q in [50.0, 95.0, 99.0, 99.9] {
+            assert_eq!(a.percentile(q), all.percentile(q), "q={q}");
+        }
+        assert!((a.mean() - all.mean()).abs() < 1e-12);
+        assert_eq!(a.max(), all.max());
+    }
+
+    #[test]
     fn histogram_merge() {
         let mut a = LatencyHistogram::new();
         let mut b = LatencyHistogram::new();

@@ -36,6 +36,7 @@ use anyhow::{Context, Result};
 use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::StageSim;
 use crate::metrics::FlushKind;
+use crate::obs::{SimTrace, SpanKind};
 use crate::util::rng::Rng;
 
 /// A per-tenant arrival process.
@@ -302,6 +303,32 @@ pub fn simulate_deployment(
     policy: &BatchPolicy,
     dep: &DeploymentSim,
 ) -> OpenLoopRun {
+    simulate_deployment_traced(arrivals, n, seed, policy, dep, None)
+}
+
+/// [`simulate_deployment`] with optional span recording: when `trace` is
+/// supplied, every request lifecycle event is stamped on the **sim
+/// clock** (virtual seconds, DESIGN.md §13), so the recorded spans are a
+/// pure function of the arguments — two runs with the same seed serialize
+/// byte-identically.
+///
+/// Track convention (tenant-local; callers shift by
+/// [`crate::obs::span::track_base`] when merging tenants):
+///
+/// * track 0 — request lifecycle: `enqueue` (instant, at arrival),
+///   `wait` (arrival → batch flush), `response` (arrival → done);
+/// * track 1 — batcher: `flush` instants (id = batch ordinal) and `swap`
+///   spans when a flush opens a new scheduling quantum;
+/// * track `2 + rep * n_stages + si` — stage `si` of replica `rep`
+///   executing one request (`stage`, id = request id).
+pub fn simulate_deployment_traced(
+    arrivals: &Arrivals,
+    n: usize,
+    seed: u64,
+    policy: &BatchPolicy,
+    dep: &DeploymentSim,
+    mut trace: Option<&mut SimTrace>,
+) -> OpenLoopRun {
     assert!(policy.max_batch >= 1);
     assert!(!dep.sims.is_empty());
     assert!(dep.replicas >= 1, "deployment needs at least one pipeline");
@@ -381,7 +408,15 @@ pub fn simulate_deployment(
             }
             FlushKind::Deadline => deadline,
         };
+        let batch_idx = batches.len() as u64;
         batches.push(SimBatch { flush_s, len: batch.len(), kind });
+        if let Some(tr) = trace.as_deref_mut() {
+            for &(t, id) in &batch {
+                tr.record_s(SpanKind::Enqueue, 0, id as u64, t, t);
+                tr.record_s(SpanKind::Wait, 0, id as u64, t, flush_s);
+            }
+            tr.record_s(SpanKind::Flush, 1, batch_idx, flush_s, flush_s);
+        }
 
         // time-shared deployment: if this flush opens a new scheduling
         // quantum (the co-resident ran since the last one), each stage
@@ -390,11 +425,16 @@ pub fn simulate_deployment(
         if !dep.switch_s.is_empty() && flush_s >= last_swap_s + dep.quantum_s {
             swaps += 1;
             last_swap_s = flush_s;
+            let before = swap_overhead;
             for rep_clocks in stage_free.iter_mut().take(replicas.min(batch.len())) {
                 for (si, &sw) in dep.switch_s.iter().enumerate() {
                     rep_clocks[si] = rep_clocks[si].max(flush_s) + sw;
                     swap_overhead += sw;
                 }
+            }
+            if let Some(tr) = trace.as_deref_mut() {
+                let end_s = flush_s + (swap_overhead - before);
+                tr.record_s(SpanKind::Swap, 1, batch_idx, flush_s, end_s);
             }
         }
 
@@ -411,9 +451,16 @@ pub fn simulate_deployment(
                 let finish = dispatch + sim.overhead_s + sim.exec_s;
                 stage_free[rep][si] = finish;
                 t_in = finish + sim.hop_out_s;
+                if let Some(tr) = trace.as_deref_mut() {
+                    let track = 2 + (rep * dep.sims.len() + si) as u32;
+                    tr.record_s(SpanKind::Stage, track, id as u64, dispatch, finish);
+                }
             }
             let done = t_in;
             latencies[id] = done - arrival;
+            if let Some(tr) = trace.as_deref_mut() {
+                tr.record_s(SpanKind::Response, 0, id as u64, arrival, done);
+            }
             if done > makespan {
                 makespan = done;
             }
@@ -527,6 +574,38 @@ mod tests {
             assert_eq!(x.batches.iter().map(|b| b.len).sum::<usize>(), 300, "{a:?}");
             assert!(x.latencies_s.iter().all(|&l| l > 0.0), "{a:?}");
         }
+    }
+
+    #[test]
+    fn traced_sim_is_deterministic_and_transparent() {
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(2) };
+        let dep = DeploymentSim {
+            sims: sims(2, 1e-3),
+            replicas: 2,
+            switch_s: vec![5e-4, 5e-4],
+            quantum_s: 0.0,
+        };
+        let arr = Arrivals::Poisson { rate_hz: 700.0 };
+        let plain = simulate_deployment(&arr, 150, 7, &policy, &dep);
+        let mut ta = SimTrace::new();
+        let mut tb = SimTrace::new();
+        let a = simulate_deployment_traced(&arr, 150, 7, &policy, &dep, Some(&mut ta));
+        let b = simulate_deployment_traced(&arr, 150, 7, &policy, &dep, Some(&mut tb));
+        // recording spans must not perturb the simulation itself
+        assert_eq!(a.latencies_s, plain.latencies_s);
+        assert_eq!(a.batches, plain.batches);
+        // and the spans themselves are seed-deterministic
+        let ea = ta.into_events();
+        assert_eq!(ea, tb.into_events());
+        // lifecycle coverage: enqueue/wait/response per request, a flush
+        // per batch, a swap per quantum, a stage span per request x stage
+        let count = |k: SpanKind| ea.iter().filter(|e| e.kind == k).count();
+        assert_eq!(count(SpanKind::Enqueue), 150);
+        assert_eq!(count(SpanKind::Wait), 150);
+        assert_eq!(count(SpanKind::Response), 150);
+        assert_eq!(count(SpanKind::Flush), a.batches.len());
+        assert_eq!(count(SpanKind::Swap), a.swaps);
+        assert_eq!(count(SpanKind::Stage), 150 * 2);
     }
 
     #[test]
