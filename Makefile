@@ -20,7 +20,7 @@ SMOKE_OUT ?= smoke-out
 
 .PHONY: all build test check artifacts python-test clean \
         smoke smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane \
-        smoke-trace bench-quick bench-check bench-baseline
+        smoke-trace smoke-chaos bench-quick bench-check bench-baseline
 
 all: build
 
@@ -53,7 +53,7 @@ python-test:
 
 # ---- CI smoke (identical commands locally and in .github/workflows/ci.yml)
 
-smoke: smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane smoke-trace
+smoke: smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane smoke-trace smoke-chaos
 
 smoke-scheduler:
 	$(CARGO) run --release --bin repro -- schedule --models fc_big,conv_a,conv_b --tpus 4
@@ -128,6 +128,24 @@ smoke-dataplane:
 		--models fc_small,fc_n512 --tpus 1 --allow-sharing --alloc-budget 0
 	$(CARGO) run --release --bin repro -- dataplane \
 		--models fc_small --tpus 3 --alloc-budget 0
+
+# Fault-injection gate (DESIGN.md §14): the seeded chaos sim is a pure
+# function of its flags — two same-seed CSV runs must be byte-identical —
+# and the live drills must survive every fault kind: injected straggler
+# -> hedges fire, tiered overload burst -> exact shed accounting, mid-run
+# device kill -> drain/replay with every response verified bit-exact.
+smoke-chaos:
+	mkdir -p $(SMOKE_OUT)
+	$(CARGO) run --release --bin repro -- chaos --seed 7 --models fc_small,conv_a \
+		--tpus 4 --requests 120 --arrivals poisson:900 \
+		--kills 1 --stragglers 1 --overloads 1 --csv > $(SMOKE_OUT)/chaos_a.csv
+	$(CARGO) run --release --bin repro -- chaos --seed 7 --models fc_small,conv_a \
+		--tpus 4 --requests 120 --arrivals poisson:900 \
+		--kills 1 --stragglers 1 --overloads 1 --csv > $(SMOKE_OUT)/chaos_b.csv
+	diff $(SMOKE_OUT)/chaos_a.csv $(SMOKE_OUT)/chaos_b.csv
+	# replicated single-model pool so the straggler/hedge drill engages
+	$(CARGO) run --release --bin repro -- chaos --seed 7 --models fc_small \
+		--tpus 3 --max-tpus-per-model 1 --live
 
 # ---- CI bench pipeline (DESIGN.md §11)
 

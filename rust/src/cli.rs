@@ -401,6 +401,7 @@ pub fn run(args: &Args) -> Result<String> {
         "schedule" => schedule(args)?,
         "loadgen" => loadgen(args)?,
         "dataplane" => dataplane(args)?,
+        "chaos" => chaos(args)?,
         "trace" => trace_cmd(args)?,
         "" | "help" | "--help" => USAGE.to_string(),
         other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
@@ -493,6 +494,7 @@ pub fn pool_spec(
         switch_cost_us,
         max_residents: args.usize_flag("max-residents", 2)?,
         quantum_us,
+        dead_devices: Vec::new(),
     };
     Ok((registry, alloc))
 }
@@ -1017,6 +1019,7 @@ pub fn dataplane(args: &Args) -> Result<String> {
             },
             queue_capacity: 64,
             tracer: tracer.clone(),
+            ..Default::default()
         },
     )?;
     for name in pool.names() {
@@ -1074,6 +1077,388 @@ pub fn dataplane(args: &Args) -> Result<String> {
     } else {
         print!("{out}");
         anyhow::bail!("data-plane alloc budget exceeded: {}", failures.join("; "))
+    }
+}
+
+/// `repro chaos`: the deterministic fault-injection suite (DESIGN.md §14).
+///
+/// Sim mode (the default) draws a seeded `FaultPlan` per tenant —
+/// device kills, straggler windows, overload spikes — and replays it
+/// through the deterministic chaos queueing sim: the table (and its
+/// `--csv` form) is a pure function of the flags, so two runs of one seed
+/// are byte-identical, which is the golden artifact `make smoke-chaos`
+/// diffs.  Accounting invariants are enforced on every row: offered =
+/// admitted + shed, and every admitted request completes.
+///
+/// `--live` then walks the same fault kinds against a real `ServingPool`
+/// on the synthetic backend: a baseline bit-exact round trip, an injected
+/// replica straggler (hedged dispatch), a tiered overload burst
+/// (admission shedding with exact accounting), and a mid-run
+/// `kill_device` (re-plan + drain replay) — every admitted response is
+/// verified bit-for-bit against the serial reference throughout, and the
+/// command fails if any phase drops or corrupts a request.
+pub fn chaos(args: &Args) -> Result<String> {
+    use crate::scheduler::allocate;
+    use crate::workload::{arrival_seed, simulate_chaos, ChaosConfig, FaultPlan, FaultSpec};
+
+    let cfg = args.config()?;
+    let (registry, alloc, spec) = loadgen_spec(args)?;
+    let fspec = FaultSpec {
+        horizon_s: args.f64_flag("horizon-s", 1.0)?,
+        kills: args.usize_flag("kills", 1)?,
+        stragglers: args.usize_flag("stragglers", 1)?,
+        overloads: args.usize_flag("overloads", 1)?,
+    };
+    anyhow::ensure!(fspec.horizon_s > 0.0, "--horizon-s must be positive");
+    let drain_ms = args.f64_flag("drain-ms", 2.0)?;
+    anyhow::ensure!(drain_ms >= 0.0, "--drain-ms must be non-negative");
+    let ccfg = ChaosConfig {
+        queue_capacity: args.usize_flag("queue-capacity", 64)?.max(1),
+        drain_s: drain_ms / 1e3,
+        hedge: !args.bool_flag("no-hedge"),
+    };
+
+    let plan = allocate(&registry, &cfg, &alloc)?;
+    let mut t = Table::new(
+        format!(
+            "Chaos sim — seed {} | horizon {:.2}s | {} kill(s) {} straggler(s) \
+             {} overload spike(s) | hedge {}",
+            spec.seed,
+            fspec.horizon_s,
+            fspec.kills,
+            fspec.stragglers,
+            fspec.overloads,
+            if ccfg.hedge { "on" } else { "off" },
+        ),
+        &[
+            "model", "arrivals", "replicas", "events", "submitted", "admitted", "shed",
+            "completed", "replayed", "hedged", "kills", "p50_ms", "p99_ms",
+            "makespan_ms", "status",
+        ],
+    );
+    for load in &spec.loads {
+        anyhow::ensure!(
+            load.arrivals.offered_rate_hz().is_some(),
+            "repro chaos is open-loop: closed:... arrivals are not supported"
+        );
+        let Some(a) = plan.assignment(&load.model) else {
+            let status = if plan.rejected.iter().any(|r| r.name == load.model) {
+                "rejected"
+            } else {
+                "queued"
+            };
+            let mut row = vec![load.model.clone(), load.arrivals.label()];
+            row.extend(vec!["-".to_string(); 12]);
+            row.push(status.into());
+            t.row(row);
+            continue;
+        };
+        let tenant = registry.get(&load.model)?;
+        let dep = crate::serving::deployment_sim(tenant, a, &cfg);
+        // one pool-wide fault seed; per-tenant arrival seeds, like loadgen
+        let fplan = FaultPlan::generate(spec.seed, &fspec, alloc.total_tpus, a.replicas);
+        let run = simulate_chaos(
+            &dep,
+            &load.arrivals,
+            load.requests,
+            arrival_seed(spec.seed, &load.model),
+            &fplan,
+            &ccfg,
+        );
+        anyhow::ensure!(
+            run.submitted == run.admitted + run.shed && run.completed == run.admitted,
+            "{}: chaos accounting broke: {run:?}",
+            load.model
+        );
+        t.row(vec![
+            load.model.clone(),
+            load.arrivals.label(),
+            a.replicas.to_string(),
+            format!(
+                "k{}/s{}/o{}",
+                fplan.count("kill"),
+                fplan.count("straggler"),
+                fplan.count("overload")
+            ),
+            run.submitted.to_string(),
+            run.admitted.to_string(),
+            run.shed.to_string(),
+            run.completed.to_string(),
+            run.replayed.to_string(),
+            run.hedged.to_string(),
+            run.kills.to_string(),
+            ms(run.p50_s()),
+            ms(run.p99_s()),
+            ms(run.makespan_s),
+            "admitted".into(),
+        ]);
+    }
+    let mut out = emit(t, args.csv());
+    if !args.csv() {
+        out.push_str(
+            "chaos sim: same --seed => bit-identical table | \
+             shed is accounted, admitted work always completes\n",
+        );
+    }
+    if args.bool_flag("live") {
+        out.push_str(&chaos_live(args, &cfg)?);
+    }
+    Ok(out)
+}
+
+/// The `--live` half of `repro chaos`: phased fault drills against a real
+/// pool.  Counters in the narration vary with thread timing (hedge and
+/// shed counts are load-dependent); the *verdicts* do not — bit-exact
+/// responses, exact admission accounting, and drain-replay on kill are
+/// hard failures.
+fn chaos_live(args: &Args, cfg: &SystemConfig) -> Result<String> {
+    use crate::coordinator::HedgeConfig;
+    use crate::obs::{metric_line_from, MetricSource, TraceFile, Tracer};
+    use crate::scheduler::{Admission, BackendKind, OpenOptions, ServingPool};
+    use crate::util::json::Json;
+    use crate::workload::faults::priority_tier;
+    use std::sync::Arc;
+    use std::time::Duration;
+
+    // one seeded wave: submit, drain, verify every byte against the
+    // serial reference
+    fn wave(pool: &ServingPool, name: &str, n: usize, seed: u64) -> Result<()> {
+        let client = pool.client(name)?;
+        let reqs = client.synth_requests(n, seed);
+        let expected: Vec<Vec<i8>> = reqs.iter().map(|r| client.reference(&r.data)).collect();
+        for r in reqs {
+            pool.submit(name, r)?;
+        }
+        for _ in 0..n {
+            let r = client.done.recv().context("completion stream closed early")?;
+            anyhow::ensure!(
+                r.data == expected[r.id as usize],
+                "byte drift on request {}",
+                r.id
+            );
+        }
+        Ok(())
+    }
+
+    let (registry, alloc, spec) = loadgen_spec(args)?;
+    let requests = args.usize_flag("live-requests", 40)?.max(1);
+    let queue_capacity = args.usize_flag("live-queue-capacity", 8)?.max(2);
+    let tracer: Option<Arc<Tracer>> =
+        args.flags.contains_key("trace-out").then(|| Arc::new(Tracer::new()));
+    let pool = ServingPool::deploy(
+        registry,
+        cfg.clone(),
+        alloc.clone(),
+        BackendKind::Synthetic,
+        OpenOptions {
+            policy: spec.policy,
+            queue_capacity,
+            tracer: tracer.clone(),
+            hedge: Some(HedgeConfig { p99_factor: 2.0, min_samples: 4 }),
+        },
+    )?;
+    let mut out = String::from("\nchaos live (synthetic backend):\n");
+    let mut failures: Vec<String> = Vec::new();
+
+    // ---- phase 1: baseline round trip, every tenant
+    for name in pool.names() {
+        match wave(&pool, &name, requests, spec.seed) {
+            Ok(()) => out.push_str(&format!(
+                "  baseline {name}: {requests} request(s) bit-exact\n"
+            )),
+            Err(e) => failures.push(format!("baseline/{name}: {e}")),
+        }
+    }
+
+    // ---- phase 2: injected straggler -> hedged dispatch
+    let replicated = pool
+        .plan()
+        .assignments
+        .iter()
+        .find(|a| a.replicas > 1)
+        .map(|a| (a.name.clone(), a.replicas));
+    match &replicated {
+        Some((name, replicas)) => {
+            let drill = (|| -> Result<u64> {
+                pool.inject_straggler(name, 0, Duration::from_millis(15))?;
+                for w in 0..2u64 {
+                    wave(&pool, name, requests, spec.seed.wrapping_add(1 + w))?;
+                }
+                pool.clear_straggler(name, 0)?;
+                // responses ship before the worker books the hedge delta
+                std::thread::sleep(Duration::from_millis(50));
+                let snap = pool
+                    .tenant_metrics(name)
+                    .ok_or_else(|| anyhow::anyhow!("no metrics for {name}"))?
+                    .snapshot();
+                anyhow::ensure!(
+                    snap.hedges >= 1,
+                    "slowed replica 0/{replicas} never triggered a hedge"
+                );
+                Ok(snap.hedges)
+            })();
+            match drill {
+                Ok(h) => out.push_str(&format!(
+                    "  straggler {name}: 15 ms on replica 0/{replicas} -> \
+                     {h} hedged dispatch(es), responses bit-exact\n"
+                )),
+                Err(e) => failures.push(format!("straggler/{name}: {e}")),
+            }
+        }
+        None => out.push_str(
+            "  straggler: no replicated tenant in this plan; hedge drill skipped\n",
+        ),
+    }
+
+    // ---- phase 3: tiered overload burst -> shed with exact accounting
+    if let Some(name) = pool.names().first().cloned() {
+        let drill = (|| -> Result<(usize, usize)> {
+            // slow every replica down so the burst actually backs up
+            if let Some((rep_name, replicas)) = &replicated {
+                if rep_name == &name {
+                    for r in 0..*replicas {
+                        pool.inject_straggler(&name, r, Duration::from_millis(10))?;
+                    }
+                }
+            }
+            let client = pool.client(&name)?;
+            let burst = 3 * queue_capacity;
+            let reqs = client.synth_requests(burst, spec.seed ^ 0xB00);
+            let expected: Vec<Vec<i8>> =
+                reqs.iter().map(|r| client.reference(&r.data)).collect();
+            let mut accepted = std::collections::BTreeSet::new();
+            let mut shed = 0usize;
+            for (i, r) in reqs.into_iter().enumerate() {
+                let tier = priority_tier(i);
+                match pool.submit_with_priority(&name, r, tier)? {
+                    Admission::Accepted => {
+                        accepted.insert(i as u64);
+                    }
+                    Admission::Shed => {
+                        anyhow::ensure!(tier != 0, "tier 0 must never be shed");
+                        shed += 1;
+                    }
+                }
+            }
+            anyhow::ensure!(accepted.len() + shed == burst, "admission accounting broke");
+            for _ in 0..accepted.len() {
+                let r = client.done.recv().context("completion stream closed early")?;
+                anyhow::ensure!(accepted.contains(&r.id), "shed request {} completed", r.id);
+                anyhow::ensure!(
+                    r.data == expected[r.id as usize],
+                    "byte drift on request {}",
+                    r.id
+                );
+            }
+            if let Some((rep_name, replicas)) = &replicated {
+                if rep_name == &name {
+                    for r in 0..*replicas {
+                        pool.clear_straggler(&name, r)?;
+                    }
+                }
+            }
+            Ok((accepted.len(), shed))
+        })();
+        match drill {
+            Ok((acc, shed)) => out.push_str(&format!(
+                "  overload {name}: {} offered -> {acc} accepted, {shed} shed \
+                 (tier 0 untouched); accepted responses bit-exact\n",
+                acc + shed,
+            )),
+            Err(e) => failures.push(format!("overload/{name}: {e}")),
+        }
+    }
+
+    // ---- phase 4: mid-run device kill -> re-plan, drain replay, recovery
+    let victim = pool.plan().assignments.first().and_then(|a| a.devices.first().copied());
+    match victim {
+        Some(device) if alloc.total_tpus >= 2 => {
+            let drill = (|| -> Result<String> {
+                // put every tenant's traffic in flight, then yank the device
+                let mut pending = Vec::new();
+                for name in pool.names() {
+                    let client = pool.client(&name)?;
+                    let reqs = client.synth_requests(requests, spec.seed ^ 0xD1E);
+                    let expected: Vec<Vec<i8>> =
+                        reqs.iter().map(|r| client.reference(&r.data)).collect();
+                    for r in reqs {
+                        pool.submit(&name, r)?;
+                    }
+                    pending.push((name, client, expected));
+                }
+                let report = pool.kill_device(device)?;
+                anyhow::ensure!(
+                    report.drained >= 1,
+                    "killing an assigned device must drain at least one deployment"
+                );
+                for (name, client, expected) in &pending {
+                    for _ in 0..requests {
+                        let r =
+                            client.done.recv().context("completion stream closed early")?;
+                        anyhow::ensure!(
+                            r.data == expected[r.id as usize],
+                            "{name}: byte drift on drained request {}",
+                            r.id
+                        );
+                    }
+                }
+                anyhow::ensure!(
+                    pool.dead_devices().contains(&device),
+                    "killed device must stay quarantined"
+                );
+                // the survivors keep serving bit-exact after the re-plan
+                for name in &report.admitted {
+                    wave(&pool, name, requests, spec.seed ^ 0xA11)?;
+                }
+                Ok(format!(
+                    "  kill: device {device} died mid-run -> drained {} deployment(s), \
+                     re-plan admitted {} queued {}; every in-flight + recovery \
+                     response bit-exact\n",
+                    report.drained,
+                    report.admitted.len(),
+                    report.queued,
+                ))
+            })();
+            match drill {
+                Ok(line) => out.push_str(&line),
+                Err(e) => failures.push(format!("kill/device{device}: {e}")),
+            }
+        }
+        _ => out.push_str("  kill: pool too small for a device-kill drill; skipped\n"),
+    }
+
+    // ---- exports (written even on failure: the trace is the diagnosis)
+    let mut metrics_out: Vec<(String, String, Json)> = Vec::new();
+    for name in pool.names() {
+        if let Some(m) = pool.tenant_metrics(&name) {
+            metrics_out.push((m.metric_kind().to_string(), name.clone(), m.metric_json()));
+        }
+    }
+    let sched = &*pool.metrics;
+    metrics_out.push((sched.metric_kind().to_string(), "pool".to_string(), sched.metric_json()));
+    if let Some(path) = args.flags.get("metrics-out") {
+        let jsonl: String = metrics_out
+            .iter()
+            .map(|(k, n, j)| metric_line_from(k, n, j.clone()))
+            .collect();
+        std::fs::write(path, jsonl)
+            .with_context(|| format!("writing --metrics-out {path:?}"))?;
+    }
+    if let (Some(path), Some(tr)) = (args.flags.get("trace-out"), &tracer) {
+        std::fs::write(path, TraceFile::from_tracer("repro chaos", tr).to_json())
+            .with_context(|| format!("writing --trace-out {path:?}"))?;
+    }
+    pool.shutdown();
+
+    if failures.is_empty() {
+        out.push_str(
+            "chaos live: PASS — shed requests accounted, admitted work verified \
+             bit-exact through every fault\n",
+        );
+        Ok(out)
+    } else {
+        print!("{out}");
+        anyhow::bail!("chaos live drills failed: {}", failures.join("; "))
     }
 }
 
@@ -1253,6 +1638,28 @@ zero-copy data plane (live smoke; `make smoke-dataplane` runs this):
         --trace-out enables the live span tracer (host-clock spans; the
         budget gate always runs with tracing off) and saves the trace;
         --metrics-out saves every end-of-run snapshot as JSONL
+
+chaos & failure testing (DESIGN.md §14; `make smoke-chaos` runs this):
+  chaos --models fc_small,conv_a --tpus 4 --seed 7 --requests 200
+        [--arrivals poisson:400]   open-loop specs only (no closed:...)
+        [--kills 1] [--stragglers 1] [--overloads 1] [--horizon-s 1]
+            seeded fault schedule: device deaths (drain + re-plan replay),
+            straggler windows (hedged dispatch), overload spikes
+            (priority-tiered shedding)
+        [--queue-capacity 64] [--drain-ms 2] [--no-hedge]
+        [--csv]      CSV table only — byte-identical across runs of one
+            seed (the golden artifact the smoke target diffs)
+        [--live]     then drill the same fault kinds against a real
+            ServingPool (synthetic backend): baseline round trip, injected
+            replica straggler -> hedges, tiered overload burst -> shed
+            with exact accounting, and a mid-run kill_device -> drained
+            in-flight work replays and verifies bit-exact.  FAILS if any
+            admitted request is lost or corrupted; shed is never silent
+        [--live-requests 40] [--live-queue-capacity 8]
+        [--trace-out FILE]    (--live) save the live span trace, including
+            the chaos/faults track with one span per device kill
+        [--metrics-out FILE]  (--live) end-of-run snapshots as JSONL
+            (hedges, shed, device_kills ride the metric schema)
 
 observability (DESIGN.md §13):
   trace --in FILE [--width 100]
@@ -1532,6 +1939,42 @@ mod tests {
         // fc_n3000 can never fit on-chip -> rejected row, not a crash
         let a = Args::parse(&argv(
             "loadgen --models fc_small,fc_n3000 --tpus 2 --requests 10",
+        ))
+        .unwrap();
+        let out = run(&a).unwrap();
+        assert!(out.contains("rejected"), "{out}");
+        assert!(out.contains("admitted"), "{out}");
+    }
+
+    #[test]
+    fn chaos_csv_is_bit_identical_across_runs() {
+        let cmd = "chaos --models fc_small,conv_a --tpus 2 --seed 7 --requests 80 \
+                   --arrivals poisson:900 --kills 1 --stragglers 1 --overloads 1 --csv";
+        let a = Args::parse(&argv(cmd)).unwrap();
+        let first = run(&a).unwrap();
+        let second = run(&a).unwrap();
+        assert_eq!(first, second, "same seed must render the identical chaos CSV");
+        assert!(first.starts_with("model,arrivals,replicas,events"), "{first}");
+        assert!(first.contains("fc_small"), "{first}");
+        // a different seed changes the run
+        let b = Args::parse(&argv(&cmd.replace("--seed 7", "--seed 8"))).unwrap();
+        assert_ne!(first, run(&b).unwrap(), "seed must matter");
+    }
+
+    #[test]
+    fn chaos_rejects_closed_loop_arrivals() {
+        let a = Args::parse(&argv(
+            "chaos --models fc_small --tpus 1 --arrivals closed:4:0.001 --requests 10",
+        ))
+        .unwrap();
+        let err = run(&a).unwrap_err().to_string();
+        assert!(err.contains("open-loop"), "{err}");
+    }
+
+    #[test]
+    fn chaos_marks_unadmitted_tenants() {
+        let a = Args::parse(&argv(
+            "chaos --models fc_small,fc_n3000 --tpus 2 --requests 20 --csv",
         ))
         .unwrap();
         let out = run(&a).unwrap();

@@ -31,9 +31,11 @@ pub mod arena;
 pub mod batcher;
 pub mod queue;
 
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -575,19 +577,147 @@ fn stage_loop(
     tx.close();
 }
 
+/// Policy for hedged dispatch in [`ReplicaRouter`]: a replica whose
+/// recorded real p99 exceeds `p99_factor` times the healthiest replica's
+/// p99 (both with at least `min_samples` completions) is treated as a
+/// straggler, and its shard is *also* dispatched to the healthiest
+/// replica.  Both copies compute identical bytes (stage backends are
+/// deterministic), so the faster copy defines each response and the
+/// duplicate is dropped on merge — the classic tail-tolerance hedge.
+#[derive(Debug, Clone, Copy)]
+pub struct HedgeConfig {
+    /// Straggler threshold: hedge when `p99 > p99_factor * best_p99`.
+    pub p99_factor: f64,
+    /// Completions a replica must have recorded before its p99 is
+    /// trusted for the hedging decision (cold replicas never hedge).
+    pub min_samples: u64,
+}
+
+impl Default for HedgeConfig {
+    fn default() -> Self {
+        HedgeConfig { p99_factor: 3.0, min_samples: 16 }
+    }
+}
+
+/// Shared handle for injecting artificial per-replica dispatch delays —
+/// the chaos suite's straggler fault.  Clones reach into the same map,
+/// so a delay can be injected after the router has moved into a pool
+/// worker thread.  The delay is slept in the dispatch thread after the
+/// shard is packed, which inflates that replica's recorded real latency
+/// exactly as a contended or thermally-throttled device would.
+#[derive(Debug, Clone, Default)]
+pub struct DelayInjector {
+    delays: Arc<std::sync::Mutex<BTreeMap<usize, Duration>>>,
+}
+
+impl DelayInjector {
+    /// Delay every dispatch to `replica` by `delay` until cleared.
+    pub fn set(&self, replica: usize, delay: Duration) {
+        self.delays.lock().unwrap().insert(replica, delay);
+    }
+
+    /// Remove the injected delay on `replica`, if any.
+    pub fn clear(&self, replica: usize) {
+        self.delays.lock().unwrap().remove(&replica);
+    }
+
+    fn get(&self, replica: usize) -> Option<Duration> {
+        self.delays.lock().unwrap().get(&replica).copied()
+    }
+}
+
 /// Round-robin router over pipeline replicas — the data-parallel
 /// alternative (paper §V-C closing remark).  Each replica is a full copy
 /// of the model on its own TPU set.
 pub struct ReplicaRouter {
     /// The replica pipelines; requests are sharded round-robin across them.
     pub replicas: Vec<Pipeline>,
+    /// Hedged-dispatch policy; `None` (the default) disables hedging.
+    hedge: Option<HedgeConfig>,
+    /// Requests dispatched twice because their home replica straggled.
+    hedged: AtomicU64,
+    /// Injected per-replica dispatch delays (chaos straggler faults).
+    injector: DelayInjector,
 }
 
 impl ReplicaRouter {
     /// Wrap a non-empty set of identical pipelines as one deployment.
     pub fn new(replicas: Vec<Pipeline>) -> Self {
         assert!(!replicas.is_empty());
-        ReplicaRouter { replicas }
+        ReplicaRouter {
+            replicas,
+            hedge: None,
+            hedged: AtomicU64::new(0),
+            injector: DelayInjector::default(),
+        }
+    }
+
+    /// Enable hedged dispatch with the given policy (builder style).
+    pub fn with_hedging(mut self, cfg: HedgeConfig) -> Self {
+        self.hedge = Some(cfg);
+        self
+    }
+
+    /// Handle for injecting straggler delays into this router's replicas.
+    pub fn injector(&self) -> DelayInjector {
+        self.injector.clone()
+    }
+
+    /// Requests dispatched twice so far because their home replica's
+    /// recorded p99 breached the straggler threshold.
+    pub fn hedged_total(&self) -> u64 {
+        self.hedged.load(Ordering::Relaxed)
+    }
+
+    /// For each replica, the backup its shard should also go to —
+    /// `Some(best)` iff hedging is on, the replica's recorded p99
+    /// breached the threshold, and a healthier replica exists.  Based on
+    /// history up to the previous call: the decision must be made before
+    /// dispatch, exactly like a production hedger working from the last
+    /// metrics scrape.
+    fn hedge_targets(&self) -> Vec<Option<usize>> {
+        let k = self.replicas.len();
+        let mut out = vec![None; k];
+        let Some(cfg) = self.hedge else {
+            return out;
+        };
+        if k < 2 {
+            return out;
+        }
+        let stats: Vec<(u64, f64)> = self
+            .replicas
+            .iter()
+            .map(|r| {
+                let s = r.serve_metrics.snapshot();
+                (s.completed, s.real_p99_s)
+            })
+            .collect();
+        // healthiest replica with enough history (ties -> lowest index)
+        let mut best: Option<(usize, f64)> = None;
+        for (i, &(n, p99)) in stats.iter().enumerate() {
+            if n >= cfg.min_samples && p99.is_finite() {
+                let better = match best {
+                    Some((_, b)) => p99 < b,
+                    None => true,
+                };
+                if better {
+                    best = Some((i, p99));
+                }
+            }
+        }
+        let Some((best_i, best_p99)) = best else {
+            return out;
+        };
+        for (i, &(n, p99)) in stats.iter().enumerate() {
+            if i != best_i
+                && n >= cfg.min_samples
+                && p99.is_finite()
+                && p99 > cfg.p99_factor * best_p99
+            {
+                out[i] = Some(best_i);
+            }
+        }
+        out
     }
 
     /// Split a batch round-robin across replicas, run them concurrently,
@@ -595,6 +725,11 @@ impl ReplicaRouter {
     /// slab **in the caller thread before the fan-out**, so the arena
     /// sees the full replica-parallel demand on every call — steady-state
     /// allocation behaviour is deterministic, not thread-timing-luck.
+    ///
+    /// With hedging enabled, a straggling replica's shard is packed and
+    /// dispatched a second time to the healthiest replica; the copy with
+    /// the lower real latency is kept per id (the bytes are identical
+    /// either way).
     pub fn serve_batch(&self, requests: Vec<Request>) -> Result<Vec<Response>> {
         if requests.is_empty() {
             return Ok(Vec::new());
@@ -613,26 +748,56 @@ impl ReplicaRouter {
         for (i, r) in requests.into_iter().enumerate() {
             shards[i % k].push(r);
         }
+        let targets = self.hedge_targets();
         let start = Instant::now();
-        let packed: Vec<(usize, Batch)> = shards
-            .iter()
-            .enumerate()
-            .filter(|(_, shard)| !shard.is_empty())
-            .map(|(i, shard)| (i, self.replicas[i].pack(shard, elem_len, start)))
-            .collect();
+        // per-replica dispatch queues: a replica's own shard plus any
+        // hedged copies routed to it.  One thread serves each queue
+        // sequentially, preserving the invariant of at most one batch in
+        // flight per pipeline (concurrent drains of one output queue
+        // would steal each other's responses).
+        let mut per_rep: Vec<Vec<Batch>> = (0..k).map(|_| Vec::new()).collect();
+        for (i, shard) in shards.iter().enumerate() {
+            if shard.is_empty() {
+                continue;
+            }
+            per_rep[i].push(self.replicas[i].pack(shard, elem_len, start));
+            if let Some(alt) = targets[i] {
+                per_rep[alt].push(self.replicas[alt].pack(shard, elem_len, start));
+                self.hedged.fetch_add(shard.len() as u64, Ordering::Relaxed);
+            }
+        }
         let mut all = Vec::new();
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
-            for (i, batch) in packed {
+            for (i, batches) in per_rep.into_iter().enumerate() {
+                if batches.is_empty() {
+                    continue;
+                }
                 let rep = &self.replicas[i];
-                handles.push(scope.spawn(move || rep.serve_prepacked(batch)));
+                let delay = self.injector.get(i);
+                handles.push(scope.spawn(move || -> Result<Vec<Response>> {
+                    if let Some(d) = delay {
+                        std::thread::sleep(d);
+                    }
+                    let mut got = Vec::new();
+                    for batch in batches {
+                        got.extend(rep.serve_prepacked(batch)?);
+                    }
+                    Ok(got)
+                }));
             }
             for h in handles {
                 all.extend(h.join().expect("replica thread panicked")?);
             }
             Ok(())
         })?;
-        all.sort_by_key(|r| r.id);
+        // hedged ids come back twice with identical bytes; keep the
+        // faster copy of each
+        all.sort_by(|a, b| {
+            a.id.cmp(&b.id)
+                .then(a.real_latency_s.partial_cmp(&b.real_latency_s).unwrap())
+        });
+        all.dedup_by_key(|r| r.id);
         Ok(all)
     }
 
@@ -960,6 +1125,45 @@ mod tests {
             assert_eq!(r.id, i as u64);
             assert_eq!(r.data[0], (i as i8).saturating_add(2));
         }
+        assert_eq!(router.hedged_total(), 0, "hedging is off by default");
+        router.shutdown();
+    }
+
+    #[test]
+    fn hedged_dispatch_fires_on_straggling_replica() {
+        let mk = || {
+            Pipeline::spawn(factories(2), sims(2, 1e-5), &PipelineConfig::default()).unwrap()
+        };
+        let router = ReplicaRouter::new(vec![mk(), mk()])
+            .with_hedging(HedgeConfig { p99_factor: 2.0, min_samples: 4 });
+        let injector = router.injector();
+        let delay = Duration::from_millis(40);
+        injector.set(0, delay);
+        // warm-up: both replicas are cold (below min_samples), so no
+        // hedge fires, but replica 0 records ~delay-inflated latencies
+        let warm = router.serve_batch(reqs(16)).unwrap();
+        assert_eq!(warm.len(), 16);
+        assert_eq!(router.hedged_total(), 0, "cold replicas must not hedge");
+        // replica 0's p99 now dwarfs replica 1's -> its 8-item shard is
+        // dispatched twice and the fast copy wins
+        let out = router.serve_batch(reqs(16)).unwrap();
+        assert_eq!(out.len(), 16);
+        for (i, r) in out.iter().enumerate() {
+            assert_eq!(r.id, i as u64);
+            assert_eq!(r.data[0], (i as i8).saturating_add(2), "hedge must not change bytes");
+        }
+        assert_eq!(router.hedged_total(), 8, "replica 0's whole shard hedges");
+        // the kept copy of every hedged (even-id) request beat the
+        // injected delay, so the hedge actually cut the tail
+        for r in out.iter().filter(|r| r.id % 2 == 0) {
+            assert!(
+                r.real_latency_s < delay.as_secs_f64(),
+                "id {} kept the straggler copy: {}s",
+                r.id,
+                r.real_latency_s
+            );
+        }
+        injector.clear(0);
         router.shutdown();
     }
 }

@@ -35,6 +35,33 @@ struct Shared<T> {
     not_full: Condvar,
 }
 
+impl<T> Shared<T> {
+    /// Park a receiver on `not_empty` until woken or `deadline`.  The
+    /// remaining timeout is recomputed from `deadline` on every call, so
+    /// a spurious condvar wakeup — or a wakeup whose items another
+    /// receiver already stole — re-waits only the *remaining* time,
+    /// never the full original timeout again.  Returns `None` once the
+    /// deadline has passed (the caller reports a timeout), `Some(guard)`
+    /// after a wakeup (the caller re-checks queue state and loops back
+    /// here).  Both deadline-bounded receives funnel through this single
+    /// wait, so the re-wait arithmetic cannot drift between them.
+    fn park_recv_until<'a>(
+        &'a self,
+        mut inner: std::sync::MutexGuard<'a, Inner<T>>,
+        deadline: Instant,
+    ) -> Option<std::sync::MutexGuard<'a, Inner<T>>> {
+        let now = Instant::now();
+        if now >= deadline {
+            return None;
+        }
+        inner.recv_waiters += 1;
+        let (mut guard, _timeout) =
+            self.not_empty.wait_timeout(inner, deadline - now).unwrap();
+        guard.recv_waiters -= 1;
+        Some(guard)
+    }
+}
+
 /// Sending half (cloneable).
 pub struct Sender<T> {
     shared: Arc<Shared<T>>,
@@ -228,18 +255,10 @@ impl<T> Receiver<T> {
             if inner.closed {
                 return RecvDeadline::Closed;
             }
-            let now = Instant::now();
-            if now >= deadline {
-                return RecvDeadline::TimedOut;
+            match self.shared.park_recv_until(inner, deadline) {
+                Some(guard) => inner = guard,
+                None => return RecvDeadline::TimedOut,
             }
-            inner.recv_waiters += 1;
-            let (guard, _timeout) = self
-                .shared
-                .not_empty
-                .wait_timeout(inner, deadline - now)
-                .unwrap();
-            inner = guard;
-            inner.recv_waiters -= 1;
         }
     }
 
@@ -277,18 +296,10 @@ impl<T> Receiver<T> {
             if inner.closed {
                 return RecvMany::Closed;
             }
-            let now = Instant::now();
-            if now >= deadline {
-                return RecvMany::TimedOut;
+            match self.shared.park_recv_until(inner, deadline) {
+                Some(guard) => inner = guard,
+                None => return RecvMany::TimedOut,
             }
-            inner.recv_waiters += 1;
-            let (guard, _timeout) = self
-                .shared
-                .not_empty
-                .wait_timeout(inner, deadline - now)
-                .unwrap();
-            inner = guard;
-            inner.recv_waiters -= 1;
         }
     }
 
@@ -627,6 +638,56 @@ mod tests {
         assert_eq!(r, RecvMany::Items(1), "returns as soon as anything arrived");
         assert_eq!(out, vec![7]);
         t.join().unwrap();
+    }
+
+    #[test]
+    fn stolen_wakeup_rewaits_only_remaining_deadline() {
+        // two receivers park on the same deadline; a 2-item send_many
+        // wakes BOTH (notify_all), one drains both items, and the loser's
+        // wakeup finds the queue empty again.  The loser must re-wait
+        // only the remaining window and time out at ~total — restarting
+        // the full timeout on the stolen wakeup would push it to
+        // ~(wake_at + total), well past the assertion bound.
+        let total = Duration::from_millis(500);
+        let wake_at = Duration::from_millis(200);
+        let (tx, rx) = bounded::<u32>(8);
+        let t0 = Instant::now();
+        let deadline = t0 + total;
+        let mut threads = Vec::new();
+        for _ in 0..2 {
+            let rx = rx.clone();
+            threads.push(thread::spawn(move || {
+                let mut out = Vec::new();
+                let r = rx.recv_many_deadline(deadline, 8, &mut out);
+                (r, out.len(), t0.elapsed())
+            }));
+        }
+        thread::sleep(wake_at); // let both receivers park
+        tx.send_many(vec![1u32, 2]).unwrap();
+        let results: Vec<_> = threads.into_iter().map(|t| t.join().unwrap()).collect();
+        let mut timed_out = Vec::new();
+        let mut drained = 0usize;
+        for (r, n, elapsed) in &results {
+            match r {
+                RecvMany::Items(k) => {
+                    assert_eq!(k, n);
+                    drained += k;
+                }
+                RecvMany::TimedOut => timed_out.push(*elapsed),
+                RecvMany::Closed => panic!("queue was never closed: {results:?}"),
+            }
+        }
+        assert_eq!(drained, 2, "both items drained exactly once: {results:?}");
+        assert_eq!(timed_out.len(), 1, "one receiver must lose the race: {results:?}");
+        assert!(
+            timed_out[0] >= total,
+            "loser returned before its deadline: {results:?}"
+        );
+        assert!(
+            timed_out[0] < total + Duration::from_millis(150),
+            "loser re-waited more than the remaining window \
+             (full-timeout restart after a stolen wakeup): {results:?}"
+        );
     }
 
     #[test]

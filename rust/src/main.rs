@@ -256,7 +256,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         cfg,
         alloc,
         BackendKind::Synthetic,
-        OpenOptions { policy: spec.policy, queue_capacity: 64, tracer: None },
+        OpenOptions { policy: spec.policy, queue_capacity: 64, ..Default::default() },
     )?;
     println!("\nlive open-loop run (synthetic backend, bit-exact verification):");
 

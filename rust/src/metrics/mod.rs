@@ -223,6 +223,8 @@ struct TenantCounters {
     swaps: u64,
     swaps_skipped: u64,
     swap_overhead_s: f64,
+    hedges: u64,
+    shed: u64,
 }
 
 impl TenantMetrics {
@@ -287,6 +289,20 @@ impl TenantMetrics {
         self.bump();
     }
 
+    /// Count `n` requests duplicated onto a healthy replica because their
+    /// assigned replica's tail latency breached the straggler threshold.
+    pub fn record_hedges(&self, n: u64) {
+        self.extra.lock().unwrap().hedges += n;
+        self.bump();
+    }
+
+    /// Count one request turned away by priority-tiered load shedding
+    /// (accounted, never silently lost).
+    pub fn record_shed(&self) {
+        self.extra.lock().unwrap().shed += 1;
+        self.bump();
+    }
+
     /// Take an immutable snapshot of every counter, consistent across the
     /// two lock domains: optimistic generation-checked reads first, then
     /// a fallback that holds both locks at once (which blocks every
@@ -325,6 +341,8 @@ impl TenantMetrics {
             swaps: e.swaps,
             swaps_skipped: e.swaps_skipped,
             swap_overhead_s: e.swap_overhead_s,
+            hedges: e.hedges,
+            shed: e.shed,
             real_p50_s: c.real_p50_s,
             real_p99_s: c.real_p99_s,
             real_p999_s: c.real_p999_s,
@@ -354,6 +372,8 @@ impl MetricSource for TenantMetrics {
             ("swaps", uint(s.swaps)),
             ("swaps_skipped", uint(s.swaps_skipped)),
             ("swap_overhead_s", Json::Num(s.swap_overhead_s)),
+            ("hedges", uint(s.hedges)),
+            ("shed", uint(s.shed)),
             ("real_p50_s", num(s.real_p50_s)),
             ("real_p99_s", num(s.real_p99_s)),
             ("real_p999_s", num(s.real_p999_s)),
@@ -391,6 +411,10 @@ pub struct TenantSnapshot {
     pub swaps_skipped: u64,
     /// Cumulative simulated parameter re-load time across those swaps.
     pub swap_overhead_s: f64,
+    /// Requests duplicated onto a healthy replica by hedged dispatch.
+    pub hedges: u64,
+    /// Requests turned away by priority-tiered load shedding.
+    pub shed: u64,
     /// Real wall-clock latency p50 (seconds).
     pub real_p50_s: f64,
     /// Real wall-clock latency p99 (seconds).
@@ -558,6 +582,7 @@ struct SchedulerInner {
     route_misses: u64,
     replans: u64,
     drained_deployments: u64,
+    device_kills: u64,
 }
 
 impl SchedulerMetrics {
@@ -599,6 +624,12 @@ impl SchedulerMetrics {
         g.drained_deployments += drained;
     }
 
+    /// Count one injected/observed device death the pool re-planned
+    /// around (`ServingPool::kill_device`).
+    pub fn record_device_kill(&self) {
+        self.inner.lock().unwrap().device_kills += 1;
+    }
+
     /// Take an immutable snapshot of every counter.
     pub fn snapshot(&self) -> SchedulerSnapshot {
         let g = self.inner.lock().unwrap();
@@ -613,6 +644,7 @@ impl SchedulerMetrics {
             route_misses: g.route_misses,
             replans: g.replans,
             drained_deployments: g.drained_deployments,
+            device_kills: g.device_kills,
         }
     }
 }
@@ -635,6 +667,7 @@ impl MetricSource for SchedulerMetrics {
             ("route_misses", uint(s.route_misses)),
             ("replans", uint(s.replans)),
             ("drained_deployments", uint(s.drained_deployments)),
+            ("device_kills", uint(s.device_kills)),
         ])
     }
 }
@@ -662,6 +695,8 @@ pub struct SchedulerSnapshot {
     pub replans: u64,
     /// Deployments drained (and redeployed or retired) across all re-plans.
     pub drained_deployments: u64,
+    /// Device deaths the pool re-planned around (chaos or operator).
+    pub device_kills: u64,
 }
 
 #[cfg(test)]
@@ -716,6 +751,7 @@ mod tests {
         m.record_route_miss();
         m.record_replan(2);
         m.record_replan(0);
+        m.record_device_kill();
         let s = m.snapshot();
         assert_eq!(s.registered, 5);
         assert_eq!(s.admitted, 3);
@@ -727,6 +763,21 @@ mod tests {
         assert_eq!(s.route_misses, 1);
         assert_eq!(s.replans, 2);
         assert_eq!(s.drained_deployments, 2);
+        assert_eq!(s.device_kills, 1);
+    }
+
+    #[test]
+    fn tenant_chaos_counters_accumulate() {
+        let m = TenantMetrics::default();
+        m.record_hedges(3);
+        m.record_hedges(2);
+        m.record_shed();
+        let s = m.snapshot();
+        assert_eq!(s.hedges, 5);
+        assert_eq!(s.shed, 1);
+        let line = crate::obs::metric_line(&m, "fc_small");
+        assert!(line.contains("\"hedges\":5"), "{line}");
+        assert!(line.contains("\"shed\":1"), "{line}");
     }
 
     #[test]

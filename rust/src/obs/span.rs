@@ -33,6 +33,9 @@ pub enum SpanKind {
     Swap,
     /// End-to-end request residency: arrival to response.
     Response,
+    /// An injected fault and the pool's recovery from it (device kill →
+    /// re-plan complete), recorded on the chaos track.
+    Fault,
 }
 
 impl SpanKind {
@@ -45,6 +48,7 @@ impl SpanKind {
             SpanKind::Stage => "stage",
             SpanKind::Swap => "swap",
             SpanKind::Response => "response",
+            SpanKind::Fault => "fault",
         }
     }
 
@@ -57,6 +61,7 @@ impl SpanKind {
             "stage" => SpanKind::Stage,
             "swap" => SpanKind::Swap,
             "response" => SpanKind::Response,
+            "fault" => SpanKind::Fault,
             _ => return None,
         })
     }
@@ -69,6 +74,7 @@ impl SpanKind {
             SpanKind::Stage => 3,
             SpanKind::Swap => 4,
             SpanKind::Response => 5,
+            SpanKind::Fault => 6,
         }
     }
 
@@ -79,6 +85,7 @@ impl SpanKind {
             2 => SpanKind::Flush,
             3 => SpanKind::Stage,
             4 => SpanKind::Swap,
+            6 => SpanKind::Fault,
             _ => SpanKind::Response,
         }
     }
@@ -387,6 +394,7 @@ mod tests {
             SpanKind::Stage,
             SpanKind::Swap,
             SpanKind::Response,
+            SpanKind::Fault,
         ] {
             assert_eq!(SpanKind::from_label(k.label()), Some(k));
             assert_eq!(SpanKind::from_code(k.code()), k);

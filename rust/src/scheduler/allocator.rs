@@ -99,6 +99,12 @@ pub struct AllocatorConfig {
     /// into every shared candidate's p99 (the latency↔throughput trade
     /// of arXiv 2602.17808's collaborative scheduling).
     pub quantum_us: f64,
+    /// Pool device ids currently out of service (chaos device kills,
+    /// real hardware loss).  A dead device holds no residual slice
+    /// capacity and never counts as a replica leftover; re-planning with
+    /// a freshly-dead device is how the live pool migrates its tenants
+    /// off it.
+    pub dead_devices: Vec<usize>,
 }
 
 impl Default for AllocatorConfig {
@@ -113,6 +119,7 @@ impl Default for AllocatorConfig {
             switch_cost_us: None,
             max_residents: 2,
             quantum_us: 0.0,
+            dead_devices: Vec::new(),
         }
     }
 }
@@ -502,12 +509,21 @@ struct DevicePool {
 }
 
 impl DevicePool {
-    fn new(total_tpus: usize, max_residents: usize) -> Self {
-        DevicePool {
+    fn new(total_tpus: usize, max_residents: usize, dead: &[usize]) -> Self {
+        let mut pool = DevicePool {
             residual: vec![1.0; total_tpus],
             residents: vec![0; total_tpus],
             max_residents: max_residents as u32,
+        };
+        for &d in dead {
+            if d < total_tpus {
+                // no residual slice, resident-saturated, excluded from
+                // free_count: a dead device can host nothing
+                pool.residual[d] = 0.0;
+                pool.residents[d] = (max_residents as u32).max(1);
+            }
         }
+        pool
     }
 
     /// Deterministically pick `k` devices for a `slice` grant, or `None`
@@ -646,6 +662,27 @@ pub fn allocate(
     if let Some(us) = alloc.switch_cost_us {
         anyhow::ensure!(us >= 0.0, "switch cost must be non-negative");
     }
+    let mut dead = alloc.dead_devices.clone();
+    dead.sort_unstable();
+    dead.dedup();
+    for &d in &dead {
+        anyhow::ensure!(
+            d < alloc.total_tpus,
+            "dead device {d} out of range (pool has {} TPUs)",
+            alloc.total_tpus
+        );
+    }
+    anyhow::ensure!(
+        dead.len() < alloc.total_tpus,
+        "every pool device is dead ({} of {})",
+        dead.len(),
+        alloc.total_tpus
+    );
+    let pool_desc = if dead.is_empty() {
+        format!("{} total", alloc.total_tpus)
+    } else {
+        format!("{} total, {} dead", alloc.total_tpus, dead.len())
+    };
 
     // deterministic order: weight desc, then name (registry order is
     // name-sorted already)
@@ -750,7 +787,7 @@ pub fn allocate(
         switch: &switch,
         slices: &slices,
         quantum_s,
-        pool: DevicePool::new(alloc.total_tpus, alloc.max_residents),
+        pool: DevicePool::new(alloc.total_tpus, alloc.max_residents, &dead),
         lb,
         best_cost: f64::INFINITY,
         best_choice: vec![None; n],
@@ -761,7 +798,7 @@ pub fn allocate(
     // replay the winning choices through a fresh pool: place() is a
     // deterministic function of the pool state, so the replayed device
     // picks are exactly the search's
-    let mut pool = DevicePool::new(alloc.total_tpus, alloc.max_residents);
+    let mut pool = DevicePool::new(alloc.total_tpus, alloc.max_residents, &dead);
     let mut assignments = Vec::new();
     let mut queued = Vec::new();
     for (i, (t, cands)) in searchable.iter().enumerate() {
@@ -770,8 +807,8 @@ pub fn allocate(
             let reason = if !alloc.allow_sharing {
                 format!(
                     "needs {} TPU(s) but the pool auction left none \
-                     ({} total)",
-                    min_k, alloc.total_tpus
+                     ({pool_desc})",
+                    min_k
                 )
             } else if shared_gated[i] && !shared_open[i] {
                 // sharing genuinely cannot help this tenant: every
@@ -784,8 +821,8 @@ pub fn allocate(
             } else {
                 format!(
                     "needs {} TPU(s) but no device kept enough residual slice \
-                     capacity ({} total, max {} residents)",
-                    min_k, alloc.total_tpus, alloc.max_residents
+                     capacity ({pool_desc}, max {} residents)",
+                    min_k, alloc.max_residents
                 )
             };
             queued.push(Rejection { name: t.name.clone(), reason });
@@ -1459,6 +1496,72 @@ mod tests {
         assert!(!a.same_deployment(&shared(&[0, 1], &["a", "b"], 1.0 / 3.0)));
         assert!(!a.same_deployment(&DeviceGrant::Exclusive));
         assert!(DeviceGrant::Exclusive.same_deployment(&DeviceGrant::Exclusive));
+    }
+
+    #[test]
+    fn dead_devices_are_never_granted() {
+        let reg = registry(&["fc_big", "conv_a", "conv_b"]);
+        // killing device 0 leaves 3 live devices: the 4-TPU plan no
+        // longer fits, someone queues, and nobody lands on device 0
+        let alloc = AllocatorConfig { dead_devices: vec![0], ..Default::default() };
+        let plan = allocate(&reg, &cfg(), &alloc).unwrap();
+        assert!(
+            plan.assignments.iter().all(|a| !a.devices.contains(&0)),
+            "dead device granted: {:?}",
+            plan.assignments
+        );
+        let placed: usize = plan.assignments.iter().map(|a| a.devices.len()).sum();
+        assert!(placed <= 3, "only 3 live devices exist");
+        assert_eq!(plan.assignments.len() + plan.queued.len(), 3);
+        assert!(!plan.queued.is_empty(), "3 live TPUs cannot hold the 4-TPU plan");
+        assert!(plan.queued[0].reason.contains("dead"), "{}", plan.queued[0].reason);
+    }
+
+    #[test]
+    fn dead_device_excluded_from_replica_grants() {
+        let reg = registry(&["fc_small"]);
+        let alloc = AllocatorConfig {
+            total_tpus: 3,
+            dead_devices: vec![1],
+            ..Default::default()
+        };
+        let plan = allocate(&reg, &cfg(), &alloc).unwrap();
+        let a = plan.assignment("fc_small").unwrap();
+        assert!(!a.devices.contains(&1), "{a:?}");
+        assert_eq!(plan.tpus_used(), 2, "replicas must soak only live devices: {a:?}");
+    }
+
+    #[test]
+    fn dead_devices_never_host_shared_slices() {
+        let mut reg = ModelRegistry::new();
+        reg.register(Tenant::new("a", fc_model(512))).unwrap();
+        reg.register(Tenant::new("b", fc_model(512))).unwrap();
+        let alloc = AllocatorConfig {
+            total_tpus: 2,
+            allow_sharing: true,
+            dead_devices: vec![0],
+            ..Default::default()
+        };
+        let plan = allocate(&reg, &cfg(), &alloc).unwrap();
+        assert_eq!(plan.assignments.len(), 2, "queued={:?}", plan.queued);
+        for a in &plan.assignments {
+            assert_eq!(a.devices, vec![1], "only the live device may host: {a:?}");
+        }
+    }
+
+    #[test]
+    fn dead_device_validation_errors() {
+        let reg = registry(&["fc_small"]);
+        let oob = AllocatorConfig { dead_devices: vec![7], ..Default::default() };
+        let err = allocate(&reg, &cfg(), &oob).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        let all_dead = AllocatorConfig {
+            total_tpus: 1,
+            dead_devices: vec![0],
+            ..Default::default()
+        };
+        let err = allocate(&reg, &cfg(), &all_dead).unwrap_err();
+        assert!(err.to_string().contains("dead"), "{err}");
     }
 
     #[test]

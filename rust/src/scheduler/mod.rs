@@ -52,7 +52,7 @@ pub use allocator::{
     allocate, candidates_for, AllocatorConfig, Assignment, Candidate, DeviceGrant, PoolPlan,
     Rejection,
 };
-pub use pool::{OpenOptions, ReplanReport, ServingPool, TenantClient};
+pub use pool::{Admission, OpenOptions, ReplanReport, ServingPool, TenantClient};
 pub use registry::{resolve_model, ModelRegistry, Tenant};
 pub use router::{
     synthetic_reference, synthetic_transform, synthetic_transform_into, tenant_salt,

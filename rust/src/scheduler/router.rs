@@ -34,8 +34,8 @@ use anyhow::{Context, Result};
 
 use crate::config::SystemConfig;
 use crate::coordinator::{
-    Arena, Pipeline, PipelineConfig, ReplicaRouter, Request, Response, StageBackend,
-    StageFactory,
+    Arena, DelayInjector, HedgeConfig, Pipeline, PipelineConfig, ReplicaRouter, Request,
+    Response, StageBackend, StageFactory,
 };
 use crate::metrics::{DataPlaneMetrics, SchedulerMetrics, TenantMetrics};
 use crate::model::Model;
@@ -297,6 +297,15 @@ impl Deployment {
             Deployment::Replicated(r) => r.shutdown(),
         }
     }
+
+    /// Requests dispatched twice by the hedging policy so far (0 for a
+    /// single-pipeline deployment, which has nothing to hedge against).
+    pub(crate) fn hedged_total(&self) -> u64 {
+        match self {
+            Deployment::Single(_) => 0,
+            Deployment::Replicated(r) => r.hedged_total(),
+        }
+    }
 }
 
 /// A freshly spawned deployment plus the shared shape/verification info
@@ -304,6 +313,10 @@ impl Deployment {
 pub(crate) struct BuiltTenant {
     pub(crate) deployment: Deployment,
     pub(crate) shape: Arc<TenantShape>,
+    /// Chaos hook: per-replica artificial dispatch delays (replicated
+    /// deployments only).  Lets fault-injection harnesses manufacture a
+    /// straggler without touching the stage backends.
+    pub(crate) injector: Option<DelayInjector>,
 }
 
 /// Spawn the pipelines for one plan assignment — the shared deployment
@@ -318,6 +331,7 @@ pub(crate) fn build_deployment(
     backend: &BackendKind,
     manifest: Option<&Manifest>,
     pipe: &PipelineConfig,
+    hedge: Option<&HedgeConfig>,
 ) -> Result<BuiltTenant> {
     let tenant = registry.get(&a.name)?;
     let model = &tenant.model;
@@ -358,12 +372,20 @@ pub(crate) fn build_deployment(
                 .with_context(|| format!("spawning pipeline for {}", a.name))?,
         );
     }
-    let deployment = if pipelines.len() == 1 {
-        Deployment::Single(pipelines.pop().unwrap())
+    if pipelines.len() == 1 {
+        Ok(BuiltTenant {
+            deployment: Deployment::Single(pipelines.pop().unwrap()),
+            shape,
+            injector: None,
+        })
     } else {
-        Deployment::Replicated(ReplicaRouter::new(pipelines))
-    };
-    Ok(BuiltTenant { deployment, shape })
+        let mut router = ReplicaRouter::new(pipelines);
+        if let Some(h) = hedge {
+            router = router.with_hedging(h.clone());
+        }
+        let injector = Some(router.injector());
+        Ok(BuiltTenant { deployment: Deployment::Replicated(router), shape, injector })
+    }
 }
 
 /// Register the display names of one tenant's span tracks with `tracer`
@@ -511,8 +533,15 @@ impl PoolRouter {
             }
             let tenant_pipe =
                 PipelineConfig { trace_track_base: track_base(idx) + 2, ..pipe.clone() };
-            let built =
-                build_deployment(a, registry, cfg, backend, manifest.as_ref(), &tenant_pipe)?;
+            let built = build_deployment(
+                a,
+                registry,
+                cfg,
+                backend,
+                manifest.as_ref(),
+                &tenant_pipe,
+                None,
+            )?;
             tenants.insert(
                 a.name.clone(),
                 TenantHandle {

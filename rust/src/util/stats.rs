@@ -251,6 +251,91 @@ mod tests {
         assert_eq!(a.max(), all.max());
     }
 
+    /// Seeded LCG stream for the cross-shard tests (self-contained so the
+    /// shard split is reproducible without the crate RNG).
+    fn seeded_stream(seed: u64, n: usize) -> Vec<f64> {
+        let mut state = seed;
+        (0..n)
+            .map(|_| {
+                state = state
+                    .wrapping_mul(6_364_136_223_846_793_005)
+                    .wrapping_add(1_442_695_040_888_963_407);
+                let u = (state >> 11) as f64 / (1u64 << 53) as f64;
+                // log-uniform 10 us .. 1 s, like real latency tails
+                1e-5 * 1e5f64.powf(u)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn histogram_cross_shard_merge_is_order_and_shard_invariant() {
+        // per-worker shards merged in any order must agree exactly with a
+        // single histogram fed the whole stream — the contract that lets
+        // the pool aggregate per-replica ServeMetrics without a shared
+        // lock on the hot path
+        for seed in [1u64, 7, 0xBAD5EED] {
+            let samples = seeded_stream(seed, 3000);
+            for nshards in [2usize, 3, 5] {
+                let mut shards = vec![LatencyHistogram::new(); nshards];
+                let mut all = LatencyHistogram::new();
+                for (i, &v) in samples.iter().enumerate() {
+                    shards[i % nshards].record(v);
+                    all.record(v);
+                }
+                // fold in reverse order: merge must be order-insensitive
+                let mut merged = LatencyHistogram::new();
+                for shard in shards.iter().rev() {
+                    merged.merge(shard);
+                }
+                assert_eq!(merged.count(), all.count(), "seed {seed} shards {nshards}");
+                // sums re-associate across shards, so allow float slack
+                assert!(
+                    (merged.mean() - all.mean()).abs() <= 1e-9 * all.mean().abs(),
+                    "seed {seed} shards {nshards}: mean {} vs {}",
+                    merged.mean(),
+                    all.mean()
+                );
+                assert_eq!(merged.max(), all.max(), "seed {seed} shards {nshards}");
+                for q in [0.0, 10.0, 50.0, 90.0, 99.0, 99.9, 100.0] {
+                    assert_eq!(
+                        merged.percentile(q),
+                        all.percentile(q),
+                        "seed {seed} shards {nshards} q={q}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn histogram_percentiles_are_monotone_in_q() {
+        // estimates come from cumulative bucket counts, so they must never
+        // decrease as q grows — on a fresh stream and on a merged one
+        let mut h = LatencyHistogram::new();
+        for v in seeded_stream(42, 2000) {
+            h.record(v);
+        }
+        let mut other = LatencyHistogram::new();
+        for v in seeded_stream(43, 500) {
+            other.record(v);
+        }
+        for hist in [&h, &{
+            let mut m = h.clone();
+            m.merge(&other);
+            m
+        }] {
+            let mut last = f64::NEG_INFINITY;
+            let mut q = 0.0;
+            while q <= 100.0 {
+                let p = hist.percentile(q);
+                assert!(p.is_finite(), "q={q}");
+                assert!(p >= last, "percentile must be monotone: q={q} {p} < {last}");
+                last = p;
+                q += 0.5;
+            }
+        }
+    }
+
     #[test]
     fn histogram_merge() {
         let mut a = LatencyHistogram::new();

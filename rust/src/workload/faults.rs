@@ -1,0 +1,690 @@
+//! Seeded fault injection: reproducible device-death, straggler-delay and
+//! overload-spike schedules, plus a deterministic chaos queueing sim.
+//!
+//! A [`FaultPlan`] is a pure function of `(seed, spec, pool shape)`: the
+//! same inputs always generate the identical event list, on every
+//! platform (the PRNG is the in-repo xoshiro256++, salted so the fault
+//! stream never aliases the arrival or payload streams).  The same plan
+//! drives both halves of `repro chaos`:
+//!
+//! * **sim mode** — [`simulate_chaos`] replays the plan against a
+//!   deterministic replicated-server model of one tenant's deployment
+//!   (kills force drained work onto survivors, stragglers trigger hedged
+//!   duplicates, overload spikes force priority-tiered shedding) and
+//!   yields bit-reproducible counters and latency percentiles;
+//! * **live mode** — the CLI walks the same events against a real
+//!   [`ServingPool`](crate::scheduler::ServingPool): `DeviceKill` becomes
+//!   `kill_device` (re-plan + drain replay), `Straggler` becomes an
+//!   injected replica delay (hedged dispatch in the `ReplicaRouter`), and
+//!   `OverloadSpike` becomes a tiered submit burst (admission shedding).
+//!
+//! The fault *model* is intentionally coarse — events fire at plan time
+//! regardless of what the pool is doing — because the point is coverage
+//! of the reaction paths, not failure realism (DESIGN.md §14).
+
+use std::collections::VecDeque;
+
+use crate::coordinator::StageSim;
+use crate::util::rng::Rng;
+use crate::util::stats::Summary;
+use crate::workload::{arrival_times, Arrivals, DeploymentSim};
+
+/// Salt separating the fault-schedule PRNG stream from the arrival
+/// (`ARRIVAL_STREAM_SALT`) and request-payload streams.
+pub const CHAOS_STREAM_SALT: u64 = 0xC4A0_5F17_0D1E_FEED;
+
+/// One kind of injected fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FaultKind {
+    /// A TPU device dies: the pool must re-plan around it and replay the
+    /// drained in-flight work on the survivors.
+    DeviceKill {
+        /// Device index in `0..total_tpus`.
+        device: usize,
+    },
+    /// One replica slows down by `factor` for `duration_s` seconds —
+    /// the hedging trigger.
+    Straggler {
+        /// Replica ordinal in `0..replicas`.
+        replica: usize,
+        /// Service-time multiplier while the window is open (> 1).
+        factor: f64,
+        /// Window length in seconds.
+        duration_s: f64,
+    },
+    /// Offered load multiplies by `rate_mult` for `duration_s` seconds —
+    /// the shedding trigger.
+    OverloadSpike {
+        /// Arrival-rate multiplier while the window is open (> 1).
+        rate_mult: f64,
+        /// Window length in seconds.
+        duration_s: f64,
+    },
+}
+
+impl FaultKind {
+    /// Stable label for tables / CSV (`kill` / `straggler` / `overload`).
+    pub fn label(&self) -> &'static str {
+        match self {
+            FaultKind::DeviceKill { .. } => "kill",
+            FaultKind::Straggler { .. } => "straggler",
+            FaultKind::OverloadSpike { .. } => "overload",
+        }
+    }
+
+    /// Tie-break ordering for events sharing one timestamp.
+    fn code(&self) -> u8 {
+        match self {
+            FaultKind::DeviceKill { .. } => 0,
+            FaultKind::Straggler { .. } => 1,
+            FaultKind::OverloadSpike { .. } => 2,
+        }
+    }
+}
+
+/// One scheduled fault.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultEvent {
+    /// Injection instant, seconds from run start.
+    pub t_s: f64,
+    pub kind: FaultKind,
+}
+
+/// How many of each fault to draw, and over what horizon.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FaultSpec {
+    /// Scheduling horizon: every event lands inside `[0, horizon_s)`.
+    pub horizon_s: f64,
+    /// Device deaths to schedule (skipped when the pool has no devices).
+    pub kills: usize,
+    /// Straggler windows to schedule (skipped without replicas).
+    pub stragglers: usize,
+    /// Overload spikes to schedule.
+    pub overloads: usize,
+}
+
+impl Default for FaultSpec {
+    fn default() -> Self {
+        FaultSpec { horizon_s: 1.0, kills: 1, stragglers: 1, overloads: 1 }
+    }
+}
+
+/// A reproducible fault schedule: [`FaultPlan::generate`] with the same
+/// `(seed, spec, devices, replicas)` always yields the identical plan.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultPlan {
+    /// The user-facing seed the schedule was drawn from.
+    pub seed: u64,
+    /// Events sorted by `(t_s, kind)`.
+    pub events: Vec<FaultEvent>,
+}
+
+impl FaultPlan {
+    /// Draw a fault schedule.  Draw order is fixed (kills, then
+    /// stragglers, then overloads) so the PRNG stream — and therefore the
+    /// plan — is a pure function of the arguments.
+    pub fn generate(seed: u64, spec: &FaultSpec, devices: usize, replicas: usize) -> FaultPlan {
+        let mut rng = Rng::new(seed ^ CHAOS_STREAM_SALT);
+        let h = spec.horizon_s.max(f64::MIN_POSITIVE);
+        let mut events = Vec::new();
+        for _ in 0..spec.kills {
+            // mid-run, so there is always in-flight work to drain
+            let t_s = rng.f64_range(0.25, 0.75) * h;
+            if devices > 0 {
+                let device = rng.below(devices as u64) as usize;
+                events.push(FaultEvent { t_s, kind: FaultKind::DeviceKill { device } });
+            }
+        }
+        for _ in 0..spec.stragglers {
+            let t_s = rng.f64_range(0.1, 0.6) * h;
+            let factor = rng.f64_range(3.0, 8.0);
+            let duration_s = rng.f64_range(0.15, 0.35) * h;
+            if replicas > 0 {
+                let replica = rng.below(replicas as u64) as usize;
+                events.push(FaultEvent {
+                    t_s,
+                    kind: FaultKind::Straggler { replica, factor, duration_s },
+                });
+            }
+        }
+        for _ in 0..spec.overloads {
+            let t_s = rng.f64_range(0.1, 0.5) * h;
+            let rate_mult = rng.f64_range(2.0, 5.0);
+            let duration_s = rng.f64_range(0.05, 0.2) * h;
+            events.push(FaultEvent { t_s, kind: FaultKind::OverloadSpike { rate_mult, duration_s } });
+        }
+        events.sort_by(|a, b| {
+            a.t_s
+                .partial_cmp(&b.t_s)
+                .expect("fault times are finite")
+                .then(a.kind.code().cmp(&b.kind.code()))
+        });
+        FaultPlan { seed, events }
+    }
+
+    /// Count of events of the given label (`kill`/`straggler`/`overload`).
+    pub fn count(&self, label: &str) -> usize {
+        self.events.iter().filter(|e| e.kind.label() == label).count()
+    }
+}
+
+/// Knobs of the deterministic chaos sim (mirrors the live pool's
+/// admission/hedging defaults so sim and live exercise the same policy).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChaosConfig {
+    /// Ingress queue capacity the shed thresholds are fractions of.
+    pub queue_capacity: usize,
+    /// Seconds a killed replica's drained work waits before replaying on
+    /// the survivors (models the drain/redeploy pause).
+    pub drain_s: f64,
+    /// When false, stragglers slow requests down but nothing hedges.
+    pub hedge: bool,
+}
+
+impl Default for ChaosConfig {
+    fn default() -> Self {
+        ChaosConfig { queue_capacity: 64, drain_s: 2e-3, hedge: true }
+    }
+}
+
+/// Number of priority tiers the shedding policy distinguishes.
+pub const SHED_TIERS: u8 = 3;
+
+/// Deterministic priority tier for request `id`: round-robin over
+/// `0..SHED_TIERS`, so every tier sees the same arrival process.  Tier 0
+/// is never shed; the live `submit_with_priority` uses the same policy.
+pub fn priority_tier(id: usize) -> u8 {
+    (id % SHED_TIERS as usize) as u8
+}
+
+/// Backlog ceiling for a tier, as a fraction of queue capacity: tier 0 is
+/// unsheddable, tier 1 sheds at 3/4 occupancy, tier 2 at 1/2 — lower
+/// tiers are turned away *before* the backlog can breach anyone's SLO.
+pub fn shed_threshold(tier: u8, queue_capacity: usize) -> usize {
+    match tier {
+        0 => usize::MAX,
+        1 => (queue_capacity * 3) / 4,
+        _ => queue_capacity / 2,
+    }
+}
+
+/// Outcome of one [`simulate_chaos`] run.  `submitted == admitted + shed`
+/// and `completed == admitted` always hold: shed requests are counted,
+/// admitted requests are never lost — the accounting invariant the live
+/// chaos smoke enforces bit-exactly.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChaosRun {
+    /// Total requests offered (base schedule + overload extras).
+    pub submitted: usize,
+    /// Requests past admission.
+    pub admitted: usize,
+    /// Requests turned away by tiered shedding.
+    pub shed: usize,
+    /// Requests completed (== admitted).
+    pub completed: usize,
+    /// Dispatches replayed onto survivors after a device kill.
+    pub replayed: usize,
+    /// Requests duplicated onto a healthy replica by hedged dispatch.
+    pub hedged: usize,
+    /// Device kills that actually removed a replica.
+    pub kills: usize,
+    /// Final per-request latency (offered instant to completion, across
+    /// any kill replays), ordered by request id.
+    pub latencies_s: Vec<f64>,
+    /// Completion time of the last request.
+    pub makespan_s: f64,
+}
+
+impl ChaosRun {
+    fn summary(&self) -> Summary {
+        let mut s = Summary::new();
+        for &v in &self.latencies_s {
+            s.add(v);
+        }
+        s
+    }
+
+    /// Exact nearest-rank p50 over the final latencies.
+    pub fn p50_s(&self) -> f64 {
+        self.summary().p50()
+    }
+
+    /// Exact nearest-rank p99 over the final latencies.
+    pub fn p99_s(&self) -> f64 {
+        self.summary().p99()
+    }
+}
+
+/// Per-item service model of one replica: the pipeline's end-to-end
+/// traversal (latency) and its bottleneck stage (server occupancy — the
+/// steady-state spacing between completions of a full pipeline).
+fn service_model(sims: &[StageSim]) -> (f64, f64) {
+    let latency: f64 = sims.iter().map(|s| s.overhead_s + s.exec_s + s.hop_out_s).sum();
+    let bottleneck = sims
+        .iter()
+        .map(|s| s.overhead_s + s.exec_s)
+        .fold(0.0f64, f64::max)
+        .max(f64::MIN_POSITIVE);
+    (latency, bottleneck)
+}
+
+/// A replica server in the chaos sim.
+#[derive(Debug, Clone, Copy)]
+struct Replica {
+    alive: bool,
+    free_t: f64,
+    slow_until: f64,
+    slow_factor: f64,
+}
+
+impl Replica {
+    fn slowdown(&self, at_s: f64) -> f64 {
+        if at_s < self.slow_until {
+            self.slow_factor
+        } else {
+            1.0
+        }
+    }
+}
+
+/// One queued submission.  `arrival_s` is the original offered instant —
+/// latency is measured from it even across a kill replay — and `replay`
+/// marks drained work, which skips admission (it was already admitted).
+#[derive(Debug, Clone, Copy)]
+struct Item {
+    t_s: f64,
+    id: usize,
+    arrival_s: f64,
+    replay: bool,
+}
+
+/// Deterministic chaos queueing sim: seeded open arrivals (plus overload
+/// extras) against `dep.replicas` replicated servers, reacting to the
+/// fault plan with kill-drain-replay, hedged dispatch and tiered
+/// shedding.  Pure function of its arguments — same inputs, bit-identical
+/// [`ChaosRun`] — which is what makes the `repro chaos` CSV a golden
+/// artifact.
+///
+/// Device kills map onto replicas as `device % replicas` (the sim models
+/// one tenant; the live pool re-plans the real device set instead).  A
+/// kill that would remove the last live replica is ignored, mirroring the
+/// live allocator queueing the tenant rather than serving on nothing.
+///
+/// # Panics
+/// On [`Arrivals::Closed`]: chaos runs are open-loop by construction.
+pub fn simulate_chaos(
+    dep: &DeploymentSim,
+    arrivals: &Arrivals,
+    n: usize,
+    seed: u64,
+    plan: &FaultPlan,
+    cfg: &ChaosConfig,
+) -> ChaosRun {
+    assert!(!dep.sims.is_empty());
+    assert!(dep.replicas >= 1);
+    let (latency_s, bottleneck_s) = service_model(&dep.sims);
+    // a shared grant's swap tax rides on every item: the chaos sim does
+    // not model quantum phase, it charges the amortized per-stage re-load
+    // like the allocator's own p99 estimate does
+    let latency_s = latency_s + dep.switch_s.iter().sum::<f64>();
+
+    // offered schedule: base arrivals + overload-spike extras (ids keep
+    // growing, so every request has a stable identity and tier)
+    let mut offered: Vec<Item> = arrival_times(arrivals, n, seed)
+        .into_iter()
+        .enumerate()
+        .map(|(id, t_s)| Item { t_s, id, arrival_s: t_s, replay: false })
+        .collect();
+    let base_rate = arrivals.offered_rate_hz().unwrap_or(0.0);
+    let mut extra_rng = Rng::new(seed ^ CHAOS_STREAM_SALT ^ 0x5EED);
+    let mut next_id = n;
+    for ev in &plan.events {
+        if let FaultKind::OverloadSpike { rate_mult, duration_s } = ev.kind {
+            let extra = ((rate_mult - 1.0) * base_rate * duration_s).round() as usize;
+            for _ in 0..extra {
+                let t_s = ev.t_s + extra_rng.f64() * duration_s;
+                offered.push(Item { t_s, id: next_id, arrival_s: t_s, replay: false });
+                next_id += 1;
+            }
+        }
+    }
+    offered.sort_by(|a, b| {
+        a.t_s.partial_cmp(&b.t_s).expect("arrival times are finite").then(a.id.cmp(&b.id))
+    });
+    let submitted = offered.len();
+
+    let mut replicas: Vec<Replica> = vec![
+        Replica { alive: true, free_t: 0.0, slow_until: f64::NEG_INFINITY, slow_factor: 1.0 };
+        dep.replicas
+    ];
+    // per-replica in-flight/finished ledger for kill replay:
+    // (id, arrival, done); a kill moves its owed entries to `replays`
+    let mut ledgers: Vec<Vec<(usize, f64, f64)>> = vec![Vec::new(); dep.replicas];
+    // samples of work that can no longer be disturbed by a kill
+    let mut finished: Vec<(usize, f64, f64)> = Vec::new();
+    let mut replays: VecDeque<Item> = VecDeque::new();
+    let (mut shed, mut replayed, mut hedged, mut kills) = (0usize, 0usize, 0usize, 0usize);
+    let mut rr = 0usize; // round-robin cursor over live replicas
+    let mut makespan = 0.0f64;
+    let mut cursor = 0usize;
+    let mut next_event = 0usize;
+
+    loop {
+        // strict event-driven merge: the earliest of (fault event, replay,
+        // offered arrival) is handled next, so time only moves forward
+        let t_offered = offered.get(cursor).map(|p| p.t_s);
+        let t_replay = replays.front().map(|p| p.t_s);
+        let t_item = match (t_offered, t_replay) {
+            (Some(a), Some(b)) => Some(a.min(b)),
+            (a, b) => a.or(b),
+        };
+        let fire_event = next_event < plan.events.len()
+            && match t_item {
+                Some(t) => plan.events[next_event].t_s <= t,
+                None => true,
+            };
+        if fire_event {
+            let ev = plan.events[next_event];
+            next_event += 1;
+            match ev.kind {
+                FaultKind::DeviceKill { device } => {
+                    let r = device % replicas.len();
+                    let live = replicas.iter().filter(|x| x.alive).count();
+                    if !replicas[r].alive || live <= 1 {
+                        continue; // never kill the last live replica
+                    }
+                    replicas[r].alive = false;
+                    kills += 1;
+                    // drain: completions this replica still owed replay on
+                    // the survivors after the drain pause, keeping their
+                    // original arrival (latency accrues across the replay,
+                    // like the live pool's drained requests)
+                    let ledger = std::mem::take(&mut ledgers[r]);
+                    for (id, arrival_s, done) in ledger {
+                        if done > ev.t_s {
+                            replayed += 1;
+                            replays.push_back(Item {
+                                t_s: ev.t_s + cfg.drain_s,
+                                id,
+                                arrival_s,
+                                replay: true,
+                            });
+                        } else {
+                            finished.push((id, arrival_s, done));
+                        }
+                    }
+                }
+                FaultKind::Straggler { replica, factor, duration_s } => {
+                    let r = replica % replicas.len();
+                    replicas[r].slow_until = ev.t_s + duration_s;
+                    replicas[r].slow_factor = factor;
+                }
+                FaultKind::OverloadSpike { .. } => {} // folded into arrivals
+            }
+            continue;
+        }
+        // no fireable event: take the earliest item, replays first on ties
+        let item = match (t_offered, t_replay) {
+            (Some(a), Some(b)) if b <= a => replays.pop_front().expect("peeked"),
+            (Some(_), _) => {
+                cursor += 1;
+                offered[cursor - 1]
+            }
+            (None, Some(_)) => replays.pop_front().expect("peeked"),
+            (None, None) => break,
+        };
+
+        // tiered admission: backlog = admitted work not yet complete
+        if !item.replay {
+            let depth = ledgers
+                .iter()
+                .flat_map(|l| l.iter())
+                .filter(|&&(_, _, done)| done > item.t_s)
+                .count()
+                + replays.len();
+            let tier = priority_tier(item.id);
+            if depth >= shed_threshold(tier, cfg.queue_capacity) {
+                shed += 1;
+                continue;
+            }
+        }
+
+        let live: Vec<usize> = (0..replicas.len()).filter(|&i| replicas[i].alive).collect();
+        debug_assert!(!live.is_empty(), "at least one replica always survives");
+        let primary = live[rr % live.len()];
+        rr += 1;
+
+        let start_p = item.t_s.max(replicas[primary].free_t);
+        let slow_p = replicas[primary].slowdown(start_p);
+        let hedge = cfg.hedge && slow_p > 1.0 && live.len() > 1;
+        let (winner, done) = if hedge {
+            // duplicate onto the least-loaded healthy alternative; the
+            // first response wins, both replicas pay the service time
+            let alt = live
+                .iter()
+                .copied()
+                .filter(|&i| i != primary)
+                .min_by(|&a, &b| {
+                    replicas[a]
+                        .free_t
+                        .partial_cmp(&replicas[b].free_t)
+                        .expect("clocks are finite")
+                        .then(a.cmp(&b))
+                })
+                .expect("live.len() > 1");
+            hedged += 1;
+            let done_p = start_p + latency_s * slow_p;
+            replicas[primary].free_t = start_p + bottleneck_s * slow_p;
+            let start_a = item.t_s.max(replicas[alt].free_t);
+            let slow_a = replicas[alt].slowdown(start_a);
+            let done_a = start_a + latency_s * slow_a;
+            replicas[alt].free_t = start_a + bottleneck_s * slow_a;
+            if done_a < done_p {
+                (alt, done_a)
+            } else {
+                (primary, done_p)
+            }
+        } else {
+            replicas[primary].free_t = start_p + bottleneck_s * slow_p;
+            (primary, start_p + latency_s * slow_p)
+        };
+
+        ledgers[winner].push((item.id, item.arrival_s, done));
+        if done > makespan {
+            makespan = done;
+        }
+    }
+
+    // every admitted request has exactly one surviving sample: kills moved
+    // their replica's owed entries into the replay queue, so ledgers plus
+    // `finished` hold one final completion per admitted id
+    let mut samples = finished;
+    for ledger in ledgers {
+        samples.extend(ledger);
+    }
+    samples.sort_by(|a, b| a.0.cmp(&b.0));
+    let admitted = submitted - shed;
+    debug_assert_eq!(samples.len(), admitted, "one final completion per admitted id");
+    let latencies_s: Vec<f64> = samples.iter().map(|&(_, a, d)| d - a).collect();
+
+    ChaosRun {
+        submitted,
+        admitted,
+        shed,
+        completed: samples.len(),
+        replayed,
+        hedged,
+        kills,
+        latencies_s,
+        makespan_s: makespan,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn dep(replicas: usize) -> DeploymentSim {
+        let sims: Vec<StageSim> = (0..2)
+            .map(|i| StageSim {
+                exec_s: 1e-3,
+                hop_out_s: if i == 1 { 0.0 } else { 1e-4 },
+                overhead_s: 2e-4,
+            })
+            .collect();
+        DeploymentSim { sims, replicas, switch_s: Vec::new(), quantum_s: 0.0 }
+    }
+
+    fn arr() -> Arrivals {
+        Arrivals::Poisson { rate_hz: 900.0 }
+    }
+
+    #[test]
+    fn plan_is_seed_deterministic_and_sorted() {
+        let spec = FaultSpec { horizon_s: 2.0, kills: 3, stragglers: 3, overloads: 3 };
+        let a = FaultPlan::generate(7, &spec, 4, 2);
+        let b = FaultPlan::generate(7, &spec, 4, 2);
+        assert_eq!(a, b, "same seed must give the identical plan");
+        assert_ne!(a, FaultPlan::generate(8, &spec, 4, 2), "seed must matter");
+        assert_eq!(a.events.len(), 9);
+        for w in a.events.windows(2) {
+            assert!(w[0].t_s <= w[1].t_s, "events must be time-sorted: {a:?}");
+        }
+        for e in &a.events {
+            assert!(e.t_s >= 0.0 && e.t_s < 2.0, "{e:?} outside horizon");
+            if let FaultKind::DeviceKill { device } = e.kind {
+                assert!(device < 4);
+            }
+        }
+        assert_eq!(a.count("kill") + a.count("straggler") + a.count("overload"), 9);
+    }
+
+    #[test]
+    fn plan_skips_infeasible_faults() {
+        let spec = FaultSpec { horizon_s: 1.0, kills: 2, stragglers: 2, overloads: 1 };
+        let p = FaultPlan::generate(3, &spec, 0, 0);
+        assert_eq!(p.count("kill"), 0, "no devices, no kills");
+        assert_eq!(p.count("straggler"), 0, "no replicas, no stragglers");
+        assert_eq!(p.count("overload"), 1);
+    }
+
+    #[test]
+    fn chaos_sim_is_bit_deterministic() {
+        let spec = FaultSpec { horizon_s: 0.5, kills: 1, stragglers: 1, overloads: 1 };
+        let plan = FaultPlan::generate(7, &spec, 4, 3);
+        let d = dep(3);
+        let cfg = ChaosConfig::default();
+        let a = simulate_chaos(&d, &arr(), 300, 7, &plan, &cfg);
+        let b = simulate_chaos(&d, &arr(), 300, 7, &plan, &cfg);
+        assert_eq!(a, b, "same inputs must give a bit-identical run");
+        let other_plan = FaultPlan::generate(8, &spec, 4, 3);
+        let c = simulate_chaos(&d, &arr(), 300, 8, &other_plan, &cfg);
+        assert_ne!(a.latencies_s, c.latencies_s, "seed must matter");
+    }
+
+    #[test]
+    fn accounting_never_loses_admitted_work() {
+        for seed in [1u64, 7, 42, 1234] {
+            let spec = FaultSpec { horizon_s: 0.5, kills: 2, stragglers: 1, overloads: 2 };
+            let plan = FaultPlan::generate(seed, &spec, 4, 2);
+            let run = simulate_chaos(&dep(2), &arr(), 250, seed, &plan, &ChaosConfig::default());
+            assert_eq!(run.submitted, run.admitted + run.shed, "seed {seed}: {run:?}");
+            assert_eq!(run.completed, run.admitted, "seed {seed}: admitted work must finish");
+            assert_eq!(run.latencies_s.len(), run.completed, "seed {seed}");
+            assert!(run.latencies_s.iter().all(|&l| l > 0.0), "seed {seed}");
+        }
+    }
+
+    #[test]
+    fn device_kill_replays_in_flight_work() {
+        // one kill into a loaded 2-replica deployment: the dead replica's
+        // in-flight completions must replay on the survivor, and latency
+        // keeps accruing from the original arrival
+        let plan = FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent { t_s: 0.05, kind: FaultKind::DeviceKill { device: 0 } }],
+        };
+        let run = simulate_chaos(
+            &dep(2),
+            &Arrivals::Poisson { rate_hz: 2000.0 },
+            400,
+            9,
+            &plan,
+            &ChaosConfig::default(),
+        );
+        assert_eq!(run.kills, 1);
+        assert!(run.replayed > 0, "a loaded replica must have in-flight work: {run:?}");
+        assert_eq!(run.completed, run.admitted, "{run:?}");
+    }
+
+    #[test]
+    fn last_replica_is_never_killed() {
+        let plan = FaultPlan {
+            seed: 0,
+            events: vec![
+                FaultEvent { t_s: 0.01, kind: FaultKind::DeviceKill { device: 0 } },
+                FaultEvent { t_s: 0.02, kind: FaultKind::DeviceKill { device: 1 } },
+            ],
+        };
+        let run = simulate_chaos(&dep(2), &arr(), 100, 3, &plan, &ChaosConfig::default());
+        assert_eq!(run.kills, 1, "second kill would strand the pool: {run:?}");
+        assert_eq!(run.completed, run.admitted);
+    }
+
+    #[test]
+    fn straggler_triggers_hedges_and_hedging_helps() {
+        let plan = FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent {
+                t_s: 0.02,
+                kind: FaultKind::Straggler { replica: 0, factor: 10.0, duration_s: 0.3 },
+            }],
+        };
+        let hedged = simulate_chaos(&dep(3), &arr(), 300, 5, &plan, &ChaosConfig::default());
+        assert!(hedged.hedged > 0, "straggler window must trigger hedges: {hedged:?}");
+        let unhedged = simulate_chaos(
+            &dep(3),
+            &arr(),
+            300,
+            5,
+            &plan,
+            &ChaosConfig { hedge: false, ..ChaosConfig::default() },
+        );
+        assert_eq!(unhedged.hedged, 0);
+        assert!(
+            hedged.p99_s() <= unhedged.p99_s(),
+            "hedging must not hurt the tail: {} vs {}",
+            hedged.p99_s(),
+            unhedged.p99_s()
+        );
+    }
+
+    #[test]
+    fn overload_sheds_low_tiers_only() {
+        // tiny queue + a hard spike: tier 1/2 requests shed, tier 0 never
+        let plan = FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent {
+                t_s: 0.05,
+                kind: FaultKind::OverloadSpike { rate_mult: 6.0, duration_s: 0.2 },
+            }],
+        };
+        let cfg = ChaosConfig { queue_capacity: 8, ..ChaosConfig::default() };
+        let run = simulate_chaos(&dep(1), &arr(), 300, 11, &plan, &cfg);
+        assert!(run.submitted > 300, "spike must add offered load: {run:?}");
+        assert!(run.shed > 0, "an 8-deep queue under a 6x spike must shed: {run:?}");
+        assert_eq!(run.submitted, run.admitted + run.shed);
+        assert_eq!(run.completed, run.admitted, "shed is accounted, admitted completes");
+    }
+
+    #[test]
+    fn tier_policy_is_monotone() {
+        assert_eq!(shed_threshold(0, 64), usize::MAX);
+        assert_eq!(shed_threshold(1, 64), 48);
+        assert_eq!(shed_threshold(2, 64), 32);
+        assert!(shed_threshold(1, 64) > shed_threshold(2, 64));
+        for id in 0..9 {
+            assert_eq!(priority_tier(id), (id % 3) as u8);
+        }
+    }
+}

@@ -39,6 +39,12 @@ use crate::metrics::FlushKind;
 use crate::obs::{SimTrace, SpanKind};
 use crate::util::rng::Rng;
 
+pub mod faults;
+
+pub use faults::{
+    simulate_chaos, ChaosConfig, ChaosRun, FaultEvent, FaultKind, FaultPlan, FaultSpec,
+};
+
 /// A per-tenant arrival process.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum Arrivals {

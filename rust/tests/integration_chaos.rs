@@ -1,0 +1,215 @@
+//! Integration: the deterministic fault-injection suite (DESIGN.md §14)
+//! end-to-end — the `repro chaos` CSV as a per-seed golden artifact, and
+//! the live pool's reactions to each fault kind: device kill (re-plan +
+//! drain replay, bit-exact), injected straggler (hedged dispatch), and
+//! overload (priority-tiered shedding that turns low tiers away *before*
+//! the backlog can breach anyone's SLO, with exact accounting — shed is
+//! never silent, admitted work is never lost).
+
+use std::collections::BTreeSet;
+use std::time::Duration;
+
+use tpu_pipeline::cli::{self, Args};
+use tpu_pipeline::config::SystemConfig;
+use tpu_pipeline::coordinator::HedgeConfig;
+use tpu_pipeline::scheduler::{
+    Admission, AllocatorConfig, BackendKind, ModelRegistry, OpenOptions, ServingPool,
+    TenantClient,
+};
+
+fn run(cmd: &str) -> String {
+    let argv: Vec<String> = cmd.split_whitespace().map(String::from).collect();
+    cli::run(&Args::parse(&argv).unwrap()).unwrap()
+}
+
+fn pool(models: &[&str], tpus: usize, opts: OpenOptions) -> ServingPool {
+    let mut registry = ModelRegistry::new();
+    for m in models {
+        registry.register_named(m).unwrap();
+    }
+    ServingPool::deploy(
+        registry,
+        SystemConfig::default(),
+        AllocatorConfig { total_tpus: tpus, ..Default::default() },
+        BackendKind::Synthetic,
+        opts,
+    )
+    .unwrap()
+}
+
+/// Submit a seeded wave and verify every response byte against the serial
+/// reference.
+fn wave(pool: &ServingPool, client: &TenantClient, name: &str, n: usize, seed: u64) {
+    let reqs = client.synth_requests(n, seed);
+    let expected: Vec<Vec<i8>> = reqs.iter().map(|r| client.reference(&r.data)).collect();
+    for r in reqs {
+        pool.submit(name, r).unwrap();
+    }
+    for _ in 0..n {
+        let r = client.done.recv().expect("completion stream closed early");
+        assert_eq!(r.data, expected[r.id as usize], "{name}: byte drift on {}", r.id);
+    }
+}
+
+/// `repro chaos --csv` is a golden artifact: a pure function of its flags,
+/// byte-identical across runs of one seed, sensitive to the seed, and
+/// scheduling every requested fault kind on a replicated deployment.
+#[test]
+fn chaos_csv_is_a_per_seed_golden_artifact() {
+    let cmd = "chaos --models fc_small --tpus 3 --max-tpus-per-model 1 --seed 7 \
+               --requests 120 --arrivals poisson:900 --kills 1 --stragglers 1 \
+               --overloads 1 --csv";
+    let first = run(cmd);
+    let second = run(cmd);
+    assert_eq!(first, second, "same seed must render the identical chaos CSV");
+    assert!(first.starts_with("model,arrivals,replicas,events"), "{first}");
+
+    let header: Vec<&str> = first.lines().next().unwrap().split(',').collect();
+    let row: Vec<&str> = first.lines().nth(1).unwrap().split(',').collect();
+    let col = |name: &str| {
+        row[header.iter().position(|c| *c == name).unwrap_or_else(|| panic!("{name}"))]
+    };
+    assert_eq!(col("replicas"), "3", "{first}");
+    // one of each fault kind actually landed in the schedule
+    assert_eq!(col("events"), "k1/s1/o1", "{first}");
+    // accounting invariants hold in the rendered artifact itself
+    let n = |name: &str| col(name).parse::<u64>().unwrap();
+    assert_eq!(n("submitted"), n("admitted") + n("shed"), "{first}");
+    assert_eq!(n("completed"), n("admitted"), "{first}");
+
+    let other = run(&cmd.replace("--seed 7", "--seed 8"));
+    assert_ne!(first, other, "the seed must drive the fault schedule");
+}
+
+/// A device dies mid-run with work in flight: the pool re-plans around
+/// it, the drained requests replay on the survivors, and every admitted
+/// request — drained or fresh — verifies bit-exact.  Nothing is lost.
+#[test]
+fn device_kill_mid_run_recovers_bit_exact() {
+    let p = pool(&["fc_small", "conv_a"], 4, OpenOptions::default());
+    let names = p.names();
+    let n = 40usize;
+    let mut pending = Vec::new();
+    for name in &names {
+        let client = p.client(name).unwrap();
+        let reqs = client.synth_requests(n, 0xC0FFEE);
+        let expected: Vec<Vec<i8>> =
+            reqs.iter().map(|r| client.reference(&r.data)).collect();
+        for r in reqs {
+            p.submit(name, r).unwrap();
+        }
+        pending.push((name.clone(), client, expected));
+    }
+
+    let victim = p.plan().assignments[0].devices[0];
+    let report = p.kill_device(victim).unwrap();
+    assert!(report.drained >= 1, "an assigned device must drain its deployment");
+
+    for (name, client, expected) in &pending {
+        for _ in 0..n {
+            let r = client.done.recv().expect("drain must replay, not drop");
+            assert_eq!(r.data, expected[r.id as usize], "{name}: drift on {}", r.id);
+        }
+    }
+    assert!(p.dead_devices().contains(&victim));
+    assert_eq!(p.metrics.snapshot().device_kills, 1);
+    for a in p.plan().assignments.iter() {
+        assert!(
+            a.devices.iter().all(|d| d != &victim),
+            "{}: dead device must leave the plan",
+            a.name
+        );
+    }
+    // survivors keep serving bit-exact after the re-plan
+    for name in &report.admitted {
+        let client = p.client(name).unwrap();
+        wave(&p, &client, name, 20, 0xAF7E);
+    }
+    p.shutdown();
+}
+
+/// An injected replica straggler must trigger hedged dispatch — and the
+/// hedge's first-response-wins merge must never corrupt or duplicate a
+/// response (every wave verifies bit-exact).
+#[test]
+fn hedge_fires_on_injected_straggler() {
+    let p = pool(
+        &["fc_small"],
+        3,
+        OpenOptions {
+            hedge: Some(HedgeConfig { p99_factor: 2.0, min_samples: 4 }),
+            ..Default::default()
+        },
+    );
+    assert_eq!(p.plan().assignment("fc_small").unwrap().replicas, 3);
+    let client = p.client("fc_small").unwrap();
+    // warm every replica's latency record, then slow replica 0 down
+    wave(&p, &client, "fc_small", 30, 51);
+    p.inject_straggler("fc_small", 0, Duration::from_millis(15)).unwrap();
+    wave(&p, &client, "fc_small", 30, 52);
+    wave(&p, &client, "fc_small", 30, 53);
+    // responses ship before the worker books the hedge delta — settle
+    std::thread::sleep(Duration::from_millis(50));
+    let snap = p.tenant_metrics("fc_small").unwrap().snapshot();
+    assert!(snap.hedges >= 1, "straggling replica must trigger hedges: {snap:?}");
+    assert_eq!(snap.completed, 90, "hedging must not duplicate completions");
+    p.shutdown();
+}
+
+/// Tiered shedding under a backlog: tier 0 is never turned away, lower
+/// tiers shed once the queue crosses their (lower) thresholds — before
+/// the backlog can grow into an SLO breach — and the accounting is exact:
+/// submitted == completed for accepted work, shed requests get a verdict
+/// at admission time and never a response.
+#[test]
+fn shedding_turns_low_tiers_away_before_the_backlog_breaches() {
+    let p = pool(
+        &["fc_small"],
+        3,
+        OpenOptions { queue_capacity: 4, ..Default::default() },
+    );
+    let replicas = p.plan().assignment("fc_small").unwrap().replicas;
+    assert_eq!(replicas, 3);
+    // slow every replica so the burst actually backs the ingress queue up
+    for r in 0..replicas {
+        p.inject_straggler("fc_small", r, Duration::from_millis(20)).unwrap();
+    }
+    let client = p.client("fc_small").unwrap();
+    let reqs = client.synth_requests(60, 0x5105);
+    let expected: Vec<Vec<i8>> = reqs.iter().map(|r| client.reference(&r.data)).collect();
+
+    let mut accepted: BTreeSet<u64> = BTreeSet::new();
+    let mut shed_by_tier = [0u64; 3];
+    for (i, r) in reqs.into_iter().enumerate() {
+        // tier pattern 0,2,1,0,2,1,...: blocking tier-0 keeps the queue
+        // near-full while the low-tier attempts probe admission
+        let tier = [0u8, 2, 1][i % 3];
+        match p.submit_with_priority("fc_small", r, tier).unwrap() {
+            Admission::Accepted => {
+                accepted.insert(i as u64);
+            }
+            Admission::Shed => {
+                assert_ne!(tier, 0, "tier 0 must never be shed");
+                shed_by_tier[tier as usize] += 1;
+            }
+        }
+    }
+    let shed: u64 = shed_by_tier.iter().sum();
+    assert!(shed >= 1, "a 4-deep queue behind 20 ms replicas must shed");
+    assert_eq!(shed_by_tier[0], 0);
+    assert_eq!(accepted.len() as u64 + shed, 60, "every request got a verdict");
+
+    // every accepted request completes bit-exact; shed ones never appear
+    for _ in 0..accepted.len() {
+        let r = client.done.recv().expect("stream closed with accepted work pending");
+        assert!(accepted.contains(&r.id), "shed request {} must not complete", r.id);
+        assert_eq!(r.data, expected[r.id as usize], "byte drift on {}", r.id);
+    }
+    std::thread::sleep(Duration::from_millis(50));
+    assert!(client.done.try_recv().is_none(), "no response may trail the accounting");
+    let snap = p.tenant_metrics("fc_small").unwrap().snapshot();
+    assert_eq!(snap.shed, shed, "shed must be metered, not silent");
+    assert_eq!(snap.submitted, accepted.len() as u64);
+    assert_eq!(snap.completed, accepted.len() as u64);
+    p.shutdown();
+}

@@ -122,7 +122,7 @@ fn open_loop_responses_are_byte_identical_under_sharing() {
                 max_wait: std::time::Duration::from_millis(1),
             },
             queue_capacity: 32,
-            tracer: None,
+            ..Default::default()
         },
     )
     .unwrap();

@@ -144,7 +144,7 @@ fn loadgen_shared_deployment_reproducible_and_serves_live() {
         SystemConfig::default(),
         alloc,
         BackendKind::Synthetic,
-        OpenOptions { policy: spec.policy, queue_capacity: 32, tracer: None },
+        OpenOptions { policy: spec.policy, queue_capacity: 32, ..Default::default() },
     )
     .unwrap();
     let reports = serving::serve_open_loop(&pool, &spec.loads, spec.seed, true).unwrap();
@@ -178,7 +178,7 @@ fn loadgen_replicated_deployment_reproducible_and_serves_live() {
         SystemConfig::default(),
         alloc,
         BackendKind::Synthetic,
-        OpenOptions { policy: spec.policy, queue_capacity: 32, tracer: None },
+        OpenOptions { policy: spec.policy, queue_capacity: 32, ..Default::default() },
     )
     .unwrap();
     assert_eq!(pool.plan().assignment("fc_small").unwrap().replicas, 2);
@@ -212,7 +212,7 @@ fn loadgen_cli_live_smoke() {
         cfg,
         alloc,
         BackendKind::Synthetic,
-        OpenOptions { policy: spec.policy, queue_capacity: 16, tracer: None },
+        OpenOptions { policy: spec.policy, queue_capacity: 16, ..Default::default() },
     )
     .unwrap();
     let reports = serving::serve_open_loop(&pool, &spec.loads, spec.seed, true).unwrap();

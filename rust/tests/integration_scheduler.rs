@@ -6,7 +6,8 @@
 use tpu_pipeline::cli::{self, Args};
 use tpu_pipeline::config::SystemConfig;
 use tpu_pipeline::scheduler::{
-    allocate, AllocatorConfig, BackendKind, ModelRegistry, PoolRouter,
+    allocate, AllocatorConfig, BackendKind, ModelRegistry, OpenOptions, PoolRouter,
+    ServingPool,
 };
 use tpu_pipeline::serving;
 
@@ -137,4 +138,144 @@ fn replicated_tenant_round_trips() {
     assert_eq!(reports.len(), 1);
     assert_eq!(reports[0].tpu_count * reports[0].replicas, 3);
     router.shutdown();
+}
+
+fn open_pool(models: &[&str], tpus: usize) -> ServingPool {
+    let mut registry = ModelRegistry::new();
+    for m in models {
+        registry.register_named(m).unwrap();
+    }
+    ServingPool::deploy(
+        registry,
+        SystemConfig::default(),
+        AllocatorConfig { total_tpus: tpus, ..Default::default() },
+        BackendKind::Synthetic,
+        OpenOptions::default(),
+    )
+    .unwrap()
+}
+
+/// Re-plan race: a fault-triggered `kill_device` drain racing a
+/// `deregister` of another tenant.  Whichever order the state lock
+/// serializes them in, every in-flight request of *both* tenants must
+/// complete bit-exact — the deregistered tenant drains through its old
+/// deployment before its stream closes, the survivor's drained work
+/// replays on the re-planned deployment — and the pool keeps serving.
+#[test]
+fn kill_device_races_deregister_without_losing_in_flight() {
+    let pool = open_pool(&["fc_small", "conv_a"], 4);
+    let n = 30usize;
+    let mut clients = Vec::new();
+    for name in ["fc_small", "conv_a"] {
+        let client = pool.client(name).unwrap();
+        let reqs = client.synth_requests(n, 0xACE);
+        let expected: Vec<Vec<i8>> =
+            reqs.iter().map(|r| client.reference(&r.data)).collect();
+        for r in reqs {
+            pool.submit(name, r).unwrap();
+        }
+        clients.push((name, client, expected));
+    }
+
+    std::thread::scope(|s| {
+        let killer = s.spawn(|| pool.kill_device(0).unwrap());
+        let remover = s.spawn(|| pool.deregister("conv_a").unwrap());
+        killer.join().unwrap();
+        remover.join().unwrap();
+    });
+
+    for (name, client, expected) in &clients {
+        let mut got = 0;
+        while got < n {
+            let r = client
+                .done
+                .recv()
+                .unwrap_or_else(|| panic!("{name}: stream closed with in-flight work"));
+            assert_eq!(r.data, expected[r.id as usize], "{name}: byte drift on {}", r.id);
+            got += 1;
+        }
+    }
+    // the deregistered tenant's stream closes only after its drain
+    let (_, conv_client, _) = &clients[1];
+    assert!(conv_client.done.recv().is_none(), "deregistered stream must close");
+
+    // quarantine + re-plan state is consistent and the survivor serves on
+    assert_eq!(pool.dead_devices(), vec![0]);
+    let plan = pool.plan();
+    assert_eq!(plan.assignments.len(), 1, "only fc_small remains");
+    assert!(
+        plan.assignments[0].devices.iter().all(|&d| d != 0),
+        "dead device must leave the plan: {:?}",
+        plan.assignments[0].devices
+    );
+    let snap = pool.metrics.snapshot();
+    assert_eq!(snap.device_kills, 1);
+    assert!(snap.replans >= 2, "kill + deregister each re-plan: {snap:?}");
+
+    let (_, fc_client, _) = &clients[0];
+    let reqs = fc_client.synth_requests(10, 0xF00D);
+    let expected: Vec<Vec<i8>> =
+        reqs.iter().map(|r| fc_client.reference(&r.data)).collect();
+    for r in reqs {
+        pool.submit("fc_small", r).unwrap();
+    }
+    for _ in 0..10 {
+        let r = fc_client.done.recv().expect("survivor must keep serving");
+        assert_eq!(r.data, expected[r.id as usize]);
+    }
+    pool.shutdown();
+}
+
+/// Two concurrent device kills against one replicated tenant: the state
+/// lock serializes the re-plans, no deployment is ever doubled (exactly
+/// one response per request, no stragglers on the stream), and the
+/// shrunken deployment still answers bit-exact.
+#[test]
+fn concurrent_kills_never_double_deploy() {
+    let pool = open_pool(&["fc_small"], 3);
+    assert_eq!(pool.plan().assignments[0].replicas, 3);
+    let client = pool.client("fc_small").unwrap();
+    let n = 30usize;
+    let reqs = client.synth_requests(n, 0xCAFE);
+    let expected: Vec<Vec<i8>> = reqs.iter().map(|r| client.reference(&r.data)).collect();
+    for r in reqs {
+        pool.submit("fc_small", r).unwrap();
+    }
+
+    std::thread::scope(|s| {
+        let a = s.spawn(|| pool.kill_device(0).unwrap());
+        let b = s.spawn(|| pool.kill_device(1).unwrap());
+        a.join().unwrap();
+        b.join().unwrap();
+    });
+
+    let mut seen = vec![false; n];
+    for _ in 0..n {
+        let r = client.done.recv().expect("stream closed with in-flight work");
+        assert!(!seen[r.id as usize], "request {} answered twice", r.id);
+        seen[r.id as usize] = true;
+        assert_eq!(r.data, expected[r.id as usize], "byte drift on {}", r.id);
+    }
+    assert!(seen.iter().all(|&s| s), "every in-flight request must complete");
+
+    assert_eq!(pool.dead_devices(), vec![0, 1]);
+    let plan = pool.plan();
+    assert_eq!(plan.assignments[0].replicas, 1, "two kills shrink 3 replicas to 1");
+    assert_eq!(plan.assignments[0].devices, vec![2]);
+    assert_eq!(pool.metrics.snapshot().device_kills, 2);
+
+    // a doubled deployment would leak duplicate responses: after a fresh
+    // verified wave the stream must be exactly empty
+    let reqs = client.synth_requests(20, 0xD00D);
+    let expected: Vec<Vec<i8>> = reqs.iter().map(|r| client.reference(&r.data)).collect();
+    for r in reqs {
+        pool.submit("fc_small", r).unwrap();
+    }
+    for _ in 0..20 {
+        let r = client.done.recv().expect("shrunken deployment must serve");
+        assert_eq!(r.data, expected[r.id as usize]);
+    }
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    assert!(client.done.try_recv().is_none(), "no duplicate responses may trail");
+    pool.shutdown();
 }
