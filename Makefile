@@ -20,7 +20,7 @@ SMOKE_OUT ?= smoke-out
 
 .PHONY: all build test check artifacts python-test clean \
         smoke smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane \
-        smoke-trace smoke-chaos bench-quick bench-check bench-baseline
+        smoke-trace smoke-chaos smoke-cache bench-quick bench-check bench-baseline
 
 all: build
 
@@ -53,7 +53,7 @@ python-test:
 
 # ---- CI smoke (identical commands locally and in .github/workflows/ci.yml)
 
-smoke: smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane smoke-trace smoke-chaos
+smoke: smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane smoke-trace smoke-chaos smoke-cache
 
 smoke-scheduler:
 	$(CARGO) run --release --bin repro -- schedule --models fc_big,conv_a,conv_b --tpus 4
@@ -147,6 +147,33 @@ smoke-chaos:
 	$(CARGO) run --release --bin repro -- chaos --seed 7 --models fc_small \
 		--tpus 3 --max-tpus-per-model 1 --live
 
+# Segment-parameter cache gate (DESIGN.md §15): a cache-on shared loadgen
+# run is byte-identical per seed (warm/cold classification rides the sim
+# clock), and --cache-budget-bytes 0 reproduces the cache-off table
+# byte-for-byte — the new columns only appear with a non-zero budget.
+smoke-cache:
+	mkdir -p $(SMOKE_OUT)
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 \
+		--models fc_small,fc_n512 --tpus 1 --allow-sharing --quantum-us 500 \
+		--cache-budget-bytes 1073741824 --prefetch \
+		--requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/cache_a.csv
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 \
+		--models fc_small,fc_n512 --tpus 1 --allow-sharing --quantum-us 500 \
+		--cache-budget-bytes 1073741824 --prefetch \
+		--requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/cache_b.csv
+	diff $(SMOKE_OUT)/cache_a.csv $(SMOKE_OUT)/cache_b.csv
+	grep -q "cache_hits" $(SMOKE_OUT)/cache_a.csv
+	# budget 0 must fall back to the flat model byte-for-byte
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 \
+		--models fc_small,fc_n512 --tpus 1 --allow-sharing --quantum-us 500 \
+		--requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/cache_off.csv
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 \
+		--models fc_small,fc_n512 --tpus 1 --allow-sharing --quantum-us 500 \
+		--cache-budget-bytes 0 \
+		--requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/cache_zero.csv
+	diff $(SMOKE_OUT)/cache_off.csv $(SMOKE_OUT)/cache_zero.csv
+	! grep -q "cache_hits" $(SMOKE_OUT)/cache_zero.csv
+
 # ---- CI bench pipeline (DESIGN.md §11)
 
 bench-quick:
@@ -166,9 +193,17 @@ bench-check:
 
 # Re-measure on the reference runner and commit the result to activate
 # the checked-in regression gate (takes precedence over the rolling one).
+# Until someone does, benches/baseline/*.json hold empty bootstrap files
+# and bench-check gates against the rolling CI cache only — run this ON
+# THE REFERENCE RUNNER (not a laptop), review the copied JSON, and commit
+# it to arm the absolute pin.
 bench-baseline: bench-quick
 	cp $(BENCH_OUT)/BENCH_scheduler.json $(BENCH_OUT)/BENCH_loadgen.json \
 	   $(BENCH_OUT)/BENCH_dataplane.json benches/baseline/
+	@echo "bench-baseline: copied quick-mode results into benches/baseline/."
+	@echo "  Review and commit them to arm the absolute regression pin"
+	@echo "  (scripts/bench_check.py prefers a non-empty checked-in baseline"
+	@echo "  over the rolling CI cache; see DESIGN.md §11)."
 
 clean:
 	rm -rf $(ARTIFACTS) $(BENCH_OUT) $(SMOKE_OUT)

@@ -70,5 +70,23 @@ fn main() {
         });
     }
 
+    // cache-aware placement: the parameter-cache budget adds warm/cold
+    // pricing and the post-placement co-residency packing pass on top of
+    // the sharing search, so its extra cost is tracked against the flat
+    // allocate_sharing scenarios above
+    for m in [2usize, 4] {
+        let reg = registry(m);
+        let alloc = AllocatorConfig {
+            total_tpus: 4,
+            allow_sharing: true,
+            cache_budget_bytes: 64 << 20,
+            prefetch: true,
+            ..Default::default()
+        };
+        b.bench(&format!("allocate_cache/m{m}_n4"), || {
+            allocate(black_box(&reg), &cfg, &alloc).unwrap()
+        });
+    }
+
     b.report("scheduler");
 }

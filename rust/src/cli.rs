@@ -412,10 +412,10 @@ pub fn run(args: &Args) -> Result<String> {
 /// Parse the shared pool flags — `--models`, `--weights`, `--slo-ms`,
 /// `--tpus`, `--batch`, `--max-tpus-per-model`, `--allow-spill`,
 /// `--no-replicas`, `--allow-sharing`, `--switch-cost-us`,
-/// `--max-residents`, `--quantum-us` — into a registry + allocator
-/// config.  Shared by `repro schedule`, `repro serve-pool` and
-/// `repro loadgen` so planning and deployment always see the same
-/// tenancy spec.
+/// `--max-residents`, `--quantum-us`, `--cache-budget-bytes`,
+/// `--prefetch` — into a registry + allocator config.  Shared by
+/// `repro schedule`, `repro serve-pool` and `repro loadgen` so planning
+/// and deployment always see the same tenancy spec.
 pub fn pool_spec(
     args: &Args,
     default_models: &str,
@@ -478,7 +478,11 @@ pub fn pool_spec(
         Some(v) => {
             let us: f64 =
                 v.parse().with_context(|| format!("bad --switch-cost-us {v:?}"))?;
-            anyhow::ensure!(us >= 0.0, "--switch-cost-us must be non-negative");
+            anyhow::ensure!(
+                us.is_finite(),
+                "--switch-cost-us must be a finite number of microseconds (got {us})"
+            );
+            anyhow::ensure!(us >= 0.0, "--switch-cost-us must be non-negative (got {us})");
             Some(us)
         }
     };
@@ -494,6 +498,8 @@ pub fn pool_spec(
         switch_cost_us,
         max_residents: args.usize_flag("max-residents", 2)?,
         quantum_us,
+        cache_budget_bytes: args.u64_flag("cache-budget-bytes", 0)?,
+        prefetch: args.bool_flag("prefetch"),
         dead_devices: Vec::new(),
     };
     Ok((registry, alloc))
@@ -532,7 +538,16 @@ pub fn schedule(args: &Args) -> Result<String> {
                 } else {
                     String::new()
                 };
-                format!(" shared {}{}", plan.shared_count(), quantum)
+                let cache = if plan.cache_enabled {
+                    format!(
+                        " | cache budget {} B{}",
+                        alloc.cache_budget_bytes,
+                        if alloc.prefetch { " + prefetch" } else { "" },
+                    )
+                } else {
+                    String::new()
+                };
+                format!(" shared {}{}{}", plan.shared_count(), quantum, cache)
             } else {
                 String::new()
             },
@@ -667,6 +682,9 @@ pub struct LoadgenTenantObs {
     pub model: String,
     pub replicas: usize,
     pub n_stages: usize,
+    /// Whether the tenant's grant carries a parameter-cache effect (names
+    /// the `{model}/cache` prefetch track in the exported trace).
+    pub cache: bool,
     pub events: Vec<crate::obs::SpanEvent>,
     pub metrics_line: String,
 }
@@ -690,6 +708,19 @@ pub fn loadgen_table_obs(
 
     let plan = allocate(registry, cfg, alloc)?;
     let mut obs: Vec<LoadgenTenantObs> = Vec::new();
+    // cache-enabled plans grow four columns after swap_over_ms; with a
+    // zero budget the header (and every row) is byte-identical to today
+    let mut headers = vec![
+        "model", "arrivals", "offered_hz", "requests", "tpus", "replicas", "split",
+        "grant", "quantum_us", "batches", "flush_size", "flush_deadline",
+        "flush_closed", "swaps", "swap_over_ms",
+    ];
+    if plan.cache_enabled {
+        headers.extend(["cache_hits", "cache_misses", "prefetches", "hit_rate"]);
+    }
+    headers.extend([
+        "p50_ms", "p99_ms", "mean_ms", "throughput_hz", "max_wait_ms", "status",
+    ]);
     let mut t = Table::new(
         format!(
             "Open-loop load generation — seed {} | max_batch {} | max_wait {} ms",
@@ -697,12 +728,7 @@ pub fn loadgen_table_obs(
             spec.policy.max_batch,
             spec.policy.max_wait.as_secs_f64() * 1e3,
         ),
-        &[
-            "model", "arrivals", "offered_hz", "requests", "tpus", "replicas", "split",
-            "grant", "quantum_us", "batches", "flush_size", "flush_deadline",
-            "flush_closed", "swaps", "swap_over_ms", "p50_ms", "p99_ms", "mean_ms",
-            "throughput_hz", "max_wait_ms", "status",
-        ],
+        &headers,
     );
     for load in &spec.loads {
         let offered = match load.arrivals.offered_rate_hz() {
@@ -721,7 +747,10 @@ pub fn loadgen_table_obs(
                 offered,
                 load.requests.to_string(),
             ];
-            row.extend(vec!["-".to_string(); 16]);
+            row.extend(vec![
+                "-".to_string();
+                16 + if plan.cache_enabled { 4 } else { 0 }
+            ]);
             row.push(status.into());
             t.row(row);
             continue;
@@ -759,6 +788,11 @@ pub fn loadgen_table_obs(
         put("flush_closed", Json::Num(run.flushes(FlushKind::Closed) as f64));
         put("swaps", Json::Num(run.swaps as f64));
         put("swap_overhead_s", num(run.swap_overhead_s));
+        if plan.cache_enabled {
+            put("cache_hits", Json::Num(run.cache_hits as f64));
+            put("cache_misses", Json::Num(run.cache_misses as f64));
+            put("prefetches", Json::Num(run.prefetches as f64));
+        }
         put("p50_s", num(hist.percentile(50.0)));
         put("p99_s", num(hist.percentile(99.0)));
         put("p999_s", num(hist.percentile(99.9)));
@@ -768,10 +802,11 @@ pub fn loadgen_table_obs(
             model: load.model.clone(),
             replicas: a.replicas,
             n_stages: a.candidate.partition.n_segments(),
+            cache: a.grant.cache().is_some(),
             events: sim_trace.into_events(),
             metrics_line: metric_line_from("loadgen", &load.model, Json::Obj(fields)),
         });
-        t.row(vec![
+        let mut row = vec![
             load.model.clone(),
             load.arrivals.label(),
             offered,
@@ -787,6 +822,18 @@ pub fn loadgen_table_obs(
             run.flushes(FlushKind::Closed).to_string(),
             run.swaps.to_string(),
             ms(run.swap_overhead_s),
+        ];
+        if plan.cache_enabled {
+            row.push(run.cache_hits.to_string());
+            row.push(run.cache_misses.to_string());
+            row.push(run.prefetches.to_string());
+            row.push(if run.swaps > 0 {
+                format!("{:.0}%", 100.0 * run.cache_hits as f64 / run.swaps as f64)
+            } else {
+                "-".to_string()
+            });
+        }
+        row.extend([
             ms(lat.p50()),
             ms(lat.p99()),
             ms(lat.mean()),
@@ -794,6 +841,7 @@ pub fn loadgen_table_obs(
             ms(policy.max_wait.as_secs_f64()),
             "admitted".into(),
         ]);
+        t.row(row);
     }
     Ok((t, plan, obs))
 }
@@ -815,6 +863,12 @@ pub fn loadgen_trace_file(obs: &[LoadgenTenantObs]) -> crate::obs::TraceFile {
                 let t = base + 2 + (rep * o.n_stages + s) as u32;
                 file.name_track(t, format!("{}/rep{rep}/stage{s}", o.model));
             }
+        }
+        if o.cache {
+            file.name_track(
+                base + crate::obs::span::CACHE_TRACK,
+                format!("{}/cache", o.model),
+            );
         }
         for e in &o.events {
             let mut e = *e;
@@ -1561,7 +1615,7 @@ multi-tenant pool scheduler (cost-model simulation; no artifacts needed):
            [--weights 2,1,1] [--slo-ms 20,-,50] [--allow-spill]
            [--max-tpus-per-model 4] [--no-replicas]
            [--allow-sharing] [--switch-cost-us US] [--max-residents 2]
-           [--quantum-us US]
+           [--quantum-us US] [--cache-budget-bytes N] [--prefetch]
         memory-aware admission + per-model (tpu_count, strategy, p99)
         chosen by the pool allocator; models: fc_small fc_big fc_huge
         conv_a conv_b conv_big pyramid, or fc_n<width> / conv_f<filters>.
@@ -1577,6 +1631,14 @@ multi-tenant pool scheduler (cost-model simulation; no artifacts needed):
         --quantum-us sets the scheduling-quantum length: longer quanta
         swap less often under overload (throughput) at a priced-in
         (1-slice)*quantum worst-case wait (latency); 0 swaps per flush.
+        --cache-budget-bytes N gives every device a host-staging cache
+        of N bytes for segment parameters: co-residents whose combined
+        footprint fits it swap warm (near-zero re-load), partially
+        fitting groups pay only the unpinned fraction, and the packing
+        pass prefers device groups that fit together (the cache_warm
+        column shows each grant's warm fraction).  --prefetch overlaps
+        the residual re-load with the tail of the previous quantum.
+        0 (the default) disables the cache model byte-for-byte.
         Tenants with --slo-ms also print their derived batch policy
         (max_wait shrinks under tight SLOs)
 
@@ -1609,6 +1671,12 @@ open-loop load generation (seeded, bit-reproducible):
           [--quantum-us US]  scheduling-quantum length: flushes inside the
               quantum keep parameters resident (fewer swaps, more
               throughput, later p99 — the quantum_us column echoes it)
+          [--cache-budget-bytes N] [--prefetch]  per-device parameter
+              cache (see schedule): cache-enabled runs add deterministic
+              cache_hits / cache_misses / prefetches / hit_rate columns
+              (hits + misses == swaps), a {model}/cache prefetch track in
+              --trace-out, and cache counters in --metrics-out; budget 0
+              reproduces the cache-less output byte-for-byte
           [--no-replicas]    plan without leftover-TPU replica grants
           [--no-live]  print only the deterministic table
           [--csv]      CSV table only (identical across runs of one seed)
@@ -1916,6 +1984,73 @@ mod tests {
             assert!(cells[grant_col].starts_with("shared"), "{line}");
             let swaps: usize = cells[swaps_col].parse().unwrap();
             assert!(swaps >= 1, "shared tenants must report swaps: {line}");
+        }
+    }
+
+    #[test]
+    fn schedule_cache_budget_zero_is_byte_identical_and_nan_is_rejected() {
+        let base = "schedule --models fc_small,fc_n512 --tpus 1 --allow-sharing";
+        let plain = run(&Args::parse(&argv(base)).unwrap()).unwrap();
+        let zero =
+            run(&Args::parse(&argv(&format!("{base} --cache-budget-bytes 0"))).unwrap())
+                .unwrap();
+        assert_eq!(plain, zero, "a zero cache budget must be byte-inert");
+        assert!(!plain.contains("cache_warm"), "{plain}");
+        let on = run(&Args::parse(&argv(&format!(
+            "{base} --cache-budget-bytes 1073741824 --prefetch"
+        )))
+        .unwrap())
+        .unwrap();
+        assert!(on.contains("cache_warm"), "{on}");
+        assert!(on.contains("cache budget 1073741824 B + prefetch"), "{on}");
+        // NaN / negative pinned switch costs die in arg parsing with a
+        // clear message (satellite: validation used to be test-only)
+        let nan =
+            Args::parse(&argv("schedule --models fc_small --switch-cost-us NaN")).unwrap();
+        let err = format!("{:#}", run(&nan).unwrap_err());
+        assert!(err.contains("finite"), "{err}");
+        let neg =
+            Args::parse(&argv("schedule --models fc_small --switch-cost-us -3")).unwrap();
+        let err = format!("{:#}", run(&neg).unwrap_err());
+        assert!(err.contains("non-negative"), "{err}");
+    }
+
+    #[test]
+    fn loadgen_cache_budget_warms_swaps_and_zero_budget_is_byte_identical() {
+        let base = "loadgen --models fc_small,fc_n512 --tpus 1 --allow-sharing --seed 7 \
+                    --requests 60 --arrivals poisson:900 --csv";
+        let plain = run(&Args::parse(&argv(base)).unwrap()).unwrap();
+        let zero =
+            run(&Args::parse(&argv(&format!("{base} --cache-budget-bytes 0"))).unwrap())
+                .unwrap();
+        assert_eq!(plain, zero, "a zero cache budget must be byte-inert");
+        assert!(!plain.lines().next().unwrap().contains("cache_hits"), "{plain}");
+
+        let cmd = format!("{base} --cache-budget-bytes 1073741824");
+        let a = Args::parse(&argv(&cmd)).unwrap();
+        let on = run(&a).unwrap();
+        assert_eq!(on, run(&a).unwrap(), "cache runs must stay seed-stable");
+        let header = on.lines().next().unwrap();
+        let col = |name: &str| {
+            header
+                .split(',')
+                .position(|c| c == name)
+                .unwrap_or_else(|| panic!("missing column {name}: {header}"))
+        };
+        let (swaps_c, hits_c, miss_c) =
+            (col("swaps"), col("cache_hits"), col("cache_misses"));
+        let rate_c = col("hit_rate");
+        for line in on.lines().skip(1) {
+            let cells: Vec<&str> = line.split(',').collect();
+            let swaps: usize = cells[swaps_c].parse().unwrap();
+            let hits: usize = cells[hits_c].parse().unwrap();
+            let misses: usize = cells[miss_c].parse().unwrap();
+            assert_eq!(hits + misses, swaps, "accounting invariant: {line}");
+            assert_eq!(
+                misses, 1,
+                "a 1 GiB budget pins both tenants: only the compulsory first miss: {line}"
+            );
+            assert!(cells[rate_c].ends_with('%'), "{line}");
         }
     }
 

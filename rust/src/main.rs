@@ -315,9 +315,19 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     for name in pool.names() {
         if let Some(m) = pool.tenant_metrics(&name) {
             let s = m.snapshot();
+            // cache counters only exist on cache-enabled deployments;
+            // cache-off runs print today's line byte-for-byte
+            let cache = if s.cache_hits + s.cache_misses > 0 {
+                format!(
+                    " | cache hits {} misses {} prefetches {}",
+                    s.cache_hits, s.cache_misses, s.prefetches
+                )
+            } else {
+                String::new()
+            };
             println!(
                 "  {:10} batches {} (size {} / deadline {} / closed {}) mean batch {:.1} \
-                 max queue depth {} | swaps {} (skipped {}, overhead {}) | real p50 {} p99 {}",
+                 max queue depth {} | swaps {} (skipped {}, overhead {}){} | real p50 {} p99 {}",
                 name,
                 s.batches,
                 s.flush_size,
@@ -328,6 +338,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
                 s.swaps,
                 s.swaps_skipped,
                 fmt_seconds(s.swap_overhead_s),
+                cache,
                 fmt_seconds(s.real_p50_s),
                 fmt_seconds(s.real_p99_s),
             );

@@ -223,6 +223,9 @@ struct TenantCounters {
     swaps: u64,
     swaps_skipped: u64,
     swap_overhead_s: f64,
+    cache_hits: u64,
+    cache_misses: u64,
+    prefetches: u64,
     hedges: u64,
     shed: u64,
 }
@@ -289,6 +292,26 @@ impl TenantMetrics {
         self.bump();
     }
 
+    /// Record the parameter-cache outcome of one quantum-gated swap: a
+    /// warm hit skipped the re-load entirely, a miss paid (part of) the
+    /// cold cost, and a prefetch overlapped some of that cost with the
+    /// tail of the previous quantum.  Only recorded when the deployment
+    /// carries a cache effect (`--cache-budget-bytes > 0`), so cache-off
+    /// runs keep every counter at zero.
+    pub fn record_cache(&self, hit: bool, prefetched: bool) {
+        let mut g = self.extra.lock().unwrap();
+        if hit {
+            g.cache_hits += 1;
+        } else {
+            g.cache_misses += 1;
+        }
+        if prefetched {
+            g.prefetches += 1;
+        }
+        drop(g);
+        self.bump();
+    }
+
     /// Count `n` requests duplicated onto a healthy replica because their
     /// assigned replica's tail latency breached the straggler threshold.
     pub fn record_hedges(&self, n: u64) {
@@ -341,6 +364,9 @@ impl TenantMetrics {
             swaps: e.swaps,
             swaps_skipped: e.swaps_skipped,
             swap_overhead_s: e.swap_overhead_s,
+            cache_hits: e.cache_hits,
+            cache_misses: e.cache_misses,
+            prefetches: e.prefetches,
             hedges: e.hedges,
             shed: e.shed,
             real_p50_s: c.real_p50_s,
@@ -359,7 +385,7 @@ impl MetricSource for TenantMetrics {
 
     fn metric_json(&self) -> Json {
         let s = self.snapshot();
-        obj(vec![
+        let mut fields = vec![
             ("submitted", uint(s.submitted)),
             ("completed", uint(s.completed)),
             ("errors", uint(s.errors)),
@@ -379,7 +405,15 @@ impl MetricSource for TenantMetrics {
             ("real_p999_s", num(s.real_p999_s)),
             ("sim_p50_s", num(s.sim_p50_s)),
             ("sim_p99_s", num(s.sim_p99_s)),
-        ])
+        ];
+        // cache counters only exist on cache-enabled deployments; omit
+        // them when untouched so cache-off exports stay byte-identical
+        if s.cache_hits + s.cache_misses + s.prefetches > 0 {
+            fields.push(("cache_hits", uint(s.cache_hits)));
+            fields.push(("cache_misses", uint(s.cache_misses)));
+            fields.push(("prefetches", uint(s.prefetches)));
+        }
+        obj(fields)
     }
 }
 
@@ -411,6 +445,15 @@ pub struct TenantSnapshot {
     pub swaps_skipped: u64,
     /// Cumulative simulated parameter re-load time across those swaps.
     pub swap_overhead_s: f64,
+    /// Quantum-gated swaps whose parameters were still cache-resident
+    /// (0 unless the plan was cache-enabled).
+    pub cache_hits: u64,
+    /// Quantum-gated swaps that paid a (partial) cold re-load
+    /// (0 unless the plan was cache-enabled; `hits + misses == swaps`).
+    pub cache_misses: u64,
+    /// Swaps whose residual re-load overlapped the previous quantum's
+    /// tail via prefetch (0 unless `--prefetch`).
+    pub prefetches: u64,
     /// Requests duplicated onto a healthy replica by hedged dispatch.
     pub hedges: u64,
     /// Requests turned away by priority-tiered load shedding.
@@ -807,6 +850,26 @@ mod tests {
         assert_eq!(s.swaps, 2);
         assert_eq!(s.swaps_skipped, 1);
         assert!((s.swap_overhead_s - 4e-3).abs() < 1e-12, "{s:?}");
+    }
+
+    #[test]
+    fn tenant_cache_counters_accumulate_and_gate_the_export() {
+        let m = TenantMetrics::default();
+        // untouched counters stay out of the JSON export entirely, so
+        // cache-off runs keep today's byte-identical metric lines
+        let off = crate::obs::metric_line(&m, "fc_small");
+        assert!(!off.contains("cache_hits"), "{off}");
+        m.record_cache(false, false); // compulsory first miss
+        m.record_cache(true, false);
+        m.record_cache(false, true); // partial miss, prefetch-overlapped
+        let s = m.snapshot();
+        assert_eq!(s.cache_hits, 1);
+        assert_eq!(s.cache_misses, 2);
+        assert_eq!(s.prefetches, 1);
+        let line = crate::obs::metric_line(&m, "fc_small");
+        assert!(line.contains("\"cache_hits\":1"), "{line}");
+        assert!(line.contains("\"cache_misses\":2"), "{line}");
+        assert!(line.contains("\"prefetches\":1"), "{line}");
     }
 
     #[test]

@@ -36,6 +36,9 @@ pub enum SpanKind {
     /// An injected fault and the pool's recovery from it (device kill →
     /// re-plan complete), recorded on the chaos track.
     Fault,
+    /// A parameter-cache prefetch overlapping the tail of the previous
+    /// quantum (recorded on the tenant's [`CACHE_TRACK`]).
+    Prefetch,
 }
 
 impl SpanKind {
@@ -49,6 +52,7 @@ impl SpanKind {
             SpanKind::Swap => "swap",
             SpanKind::Response => "response",
             SpanKind::Fault => "fault",
+            SpanKind::Prefetch => "prefetch",
         }
     }
 
@@ -62,6 +66,7 @@ impl SpanKind {
             "swap" => SpanKind::Swap,
             "response" => SpanKind::Response,
             "fault" => SpanKind::Fault,
+            "prefetch" => SpanKind::Prefetch,
             _ => return None,
         })
     }
@@ -75,6 +80,7 @@ impl SpanKind {
             SpanKind::Swap => 4,
             SpanKind::Response => 5,
             SpanKind::Fault => 6,
+            SpanKind::Prefetch => 7,
         }
     }
 
@@ -86,6 +92,7 @@ impl SpanKind {
             3 => SpanKind::Stage,
             4 => SpanKind::Swap,
             6 => SpanKind::Fault,
+            7 => SpanKind::Prefetch,
             _ => SpanKind::Response,
         }
     }
@@ -123,6 +130,10 @@ pub const TRACKS_PER_TENANT: u32 = 64;
 pub fn track_base(idx: usize) -> u32 {
     idx as u32 * TRACKS_PER_TENANT
 }
+
+/// Tenant-local track (offset from [`track_base`]) carrying parameter-cache
+/// spans: the last track of the tenant's block, far above any stage worker.
+pub const CACHE_TRACK: u32 = TRACKS_PER_TENANT - 1;
 
 const SLOT_WORDS: usize = 4;
 const VALID_BIT: u64 = 1 << 63;
@@ -395,6 +406,7 @@ mod tests {
             SpanKind::Swap,
             SpanKind::Response,
             SpanKind::Fault,
+            SpanKind::Prefetch,
         ] {
             assert_eq!(SpanKind::from_label(k.label()), Some(k));
             assert_eq!(SpanKind::from_code(k.code()), k);

@@ -62,6 +62,7 @@ use crate::segment::Partition;
 use crate::util::mib;
 use crate::util::stats::Summary;
 
+use super::paramcache::{plan_effect, CacheEffect, ParamCache};
 use super::registry::{ModelRegistry, Tenant};
 
 /// Allocator knobs.
@@ -105,6 +106,18 @@ pub struct AllocatorConfig {
     /// a freshly-dead device is how the live pool migrates its tenants
     /// off it.
     pub dead_devices: Vec<usize>,
+    /// Per-device host staging budget (bytes) for the segment-parameter
+    /// cache ([`super::paramcache`]).  Co-resident stages pinned within
+    /// the budget swap *warm* (near-zero cost) instead of paying the
+    /// cold host-bandwidth re-load.  `0` (the default) disables the
+    /// cache entirely: every swap is cold and plans are byte-identical
+    /// to the flat-cost allocator's.
+    pub cache_budget_bytes: u64,
+    /// Overlap the next resident's parameter load with the tail of the
+    /// current quantum: hides up to `(1 - slice) * quantum` seconds of
+    /// whatever cold traffic the cache budget could not pin.  Inert
+    /// with a zero quantum (no window) or a zero cache budget.
+    pub prefetch: bool,
 }
 
 impl Default for AllocatorConfig {
@@ -120,6 +133,8 @@ impl Default for AllocatorConfig {
             max_residents: 2,
             quantum_us: 0.0,
             dead_devices: Vec::new(),
+            cache_budget_bytes: 0,
+            prefetch: false,
         }
     }
 }
@@ -146,6 +161,11 @@ pub enum DeviceGrant {
         /// different pipeline depths may overlap partially, so the map is
         /// per device, not per TPU set.
         residents: Vec<(usize, Vec<String>)>,
+        /// Planned segment-parameter cache outcome for this grant
+        /// (pinned warm fraction + prefetch window), `None` when the
+        /// cache is disabled — `switch_s` above always stays the *cold*
+        /// cost, and consumers scale it by the effect at swap time.
+        cache: Option<CacheEffect>,
     },
 }
 
@@ -180,6 +200,15 @@ impl DeviceGrant {
         matches!(self, DeviceGrant::Shared { .. })
     }
 
+    /// Planned segment-parameter cache effect (`None` when exclusive or
+    /// the cache is disabled).
+    pub fn cache(&self) -> Option<CacheEffect> {
+        match self {
+            DeviceGrant::Exclusive => None,
+            DeviceGrant::Shared { cache, .. } => *cache,
+        }
+    }
+
     /// Whether two grants describe the same deployment behaviour.  The
     /// live pool's re-plan diff uses this instead of `==`: concrete
     /// device ids are bookkeeping (stage sims, slice dilation and swap
@@ -196,12 +225,14 @@ impl DeviceGrant {
                     switch_s: w1,
                     quantum_s: q1,
                     residents: r1,
+                    cache: c1,
                 },
                 DeviceGrant::Shared {
                     slice: s2,
                     switch_s: w2,
                     quantum_s: q2,
                     residents: r2,
+                    cache: c2,
                 },
             ) => {
                 let names = |r: &[(usize, Vec<String>)]| {
@@ -210,7 +241,7 @@ impl DeviceGrant {
                     groups.sort();
                     groups
                 };
-                s1 == s2 && w1 == w2 && q1 == q2 && names(r1) == names(r2)
+                s1 == s2 && w1 == w2 && q1 == q2 && c1 == c2 && names(r1) == names(r2)
             }
             _ => false,
         }
@@ -256,6 +287,10 @@ pub struct Candidate {
     /// its TPUs: re-loading every segment's on-chip weights from host
     /// memory over the off-chip bandwidth term (seconds per swap).
     pub switch_s: f64,
+    /// Per-stage on-chip weight bytes, in stage order — the footprint
+    /// the segment-parameter cache pins per device (stage `i` of a
+    /// shared grant runs on its `i`-th device).
+    pub stage_weight_bytes: Vec<u64>,
 }
 
 /// Why a tenant was not admitted.
@@ -326,6 +361,11 @@ pub struct PoolPlan {
     /// Whether time-multiplexed sharing was enabled for this plan (drives
     /// the extended `repro schedule` columns).
     pub sharing_enabled: bool,
+    /// Whether the segment-parameter cache was enabled (sharing on and
+    /// a non-zero `cache_budget_bytes`) — drives the cache-hit-rate
+    /// columns; off keeps every output byte-identical to the flat-cost
+    /// allocator's.
+    pub cache_enabled: bool,
 }
 
 impl PoolPlan {
@@ -377,11 +417,13 @@ fn evaluate(
     let mut device_bytes = 0u64;
     let mut host_bytes = 0u64;
     let mut uses_host = false;
+    let mut stage_weight_bytes = Vec::new();
     for &(a, b) in &partition.bounds() {
         let placement = place(&model.layers[a..b], &cfg.device);
         device_bytes += placement.device_bytes();
         host_bytes += placement.host_bytes();
         uses_host |= placement.uses_host();
+        stage_weight_bytes.push(placement.device_bytes() + placement.host_bytes());
     }
     let stages = build_stages(model, &partition, cfg);
     let link = Link::new(cfg.link.clone());
@@ -406,6 +448,7 @@ fn evaluate(
         host_mib: mib(host_bytes),
         uses_host,
         switch_s,
+        stage_weight_bytes,
     }
 }
 
@@ -506,14 +549,26 @@ struct DevicePool {
     residual: Vec<f64>,
     residents: Vec<u32>,
     max_residents: u32,
+    /// Per-device segment-parameter bytes staged by already-placed
+    /// *shared* residents (cache pressure); tracked only when the
+    /// cache budget is non-zero.
+    load_bytes: Vec<u64>,
+    cache_budget: u64,
 }
 
 impl DevicePool {
-    fn new(total_tpus: usize, max_residents: usize, dead: &[usize]) -> Self {
+    fn new(
+        total_tpus: usize,
+        max_residents: usize,
+        dead: &[usize],
+        cache_budget: u64,
+    ) -> Self {
         let mut pool = DevicePool {
             residual: vec![1.0; total_tpus],
             residents: vec![0; total_tpus],
             max_residents: max_residents as u32,
+            load_bytes: vec![0; total_tpus],
+            cache_budget,
         };
         for &d in dead {
             if d < total_tpus {
@@ -532,7 +587,21 @@ impl DevicePool {
     /// onto the most-loaded devices with enough residual (ties by device
     /// index), so riders overlap existing fractional tenants and whole
     /// devices stay available for exclusive grants and replicas.
-    fn place(&mut self, k: usize, slice: f64) -> Option<Vec<usize>> {
+    ///
+    /// `stage_bytes` (stage `i` lands on the `i`-th chosen device) is
+    /// non-empty only for fractional grants under a non-zero cache
+    /// budget: the packing then *prefers* devices where the tenant's
+    /// parameters still fit the staging budget next to the residents
+    /// already there, and the returned pressure — the co-residents'
+    /// staged bytes on the most loaded chosen device — prices the
+    /// tenant's expected hit rate.  Empty `stage_bytes` leaves both the
+    /// ordering and the returned pressure (0) exactly as before.
+    fn place(
+        &mut self,
+        k: usize,
+        slice: f64,
+        stage_bytes: &[u64],
+    ) -> Option<(Vec<usize>, u64)> {
         let exclusive = slice >= 1.0 - SLICE_EPS;
         let mut eligible: Vec<usize> = (0..self.residual.len())
             .filter(|&d| {
@@ -544,26 +613,41 @@ impl DevicePool {
             return None;
         }
         if !exclusive {
+            let rep_bytes = stage_bytes.iter().copied().max().unwrap_or(0);
+            let cache_on = self.cache_budget > 0 && !stage_bytes.is_empty();
             eligible.sort_by(|&a, &b| {
-                self.residual[a]
-                    .partial_cmp(&self.residual[b])
-                    .unwrap()
+                let overflows = |d: usize| {
+                    cache_on && self.load_bytes[d] + rep_bytes > self.cache_budget
+                };
+                overflows(a)
+                    .cmp(&overflows(b))
+                    .then(
+                        self.residual[a].partial_cmp(&self.residual[b]).unwrap(),
+                    )
                     .then(a.cmp(&b))
             });
         }
         let mut chosen: Vec<usize> = eligible.into_iter().take(k).collect();
         chosen.sort_unstable();
-        for &d in &chosen {
+        let mut pressure = 0u64;
+        for (i, &d) in chosen.iter().enumerate() {
             self.residual[d] -= slice;
             self.residents[d] += 1;
+            if let Some(&bytes) = stage_bytes.get(i) {
+                pressure = pressure.max(self.load_bytes[d]);
+                self.load_bytes[d] += bytes;
+            }
         }
-        Some(chosen)
+        Some((chosen, pressure))
     }
 
-    fn unplace(&mut self, devices: &[usize], slice: f64) {
-        for &d in devices {
+    fn unplace(&mut self, devices: &[usize], slice: f64, stage_bytes: &[u64]) {
+        for (i, &d) in devices.iter().enumerate() {
             self.residual[d] += slice;
             self.residents[d] -= 1;
+            if let Some(&bytes) = stage_bytes.get(i) {
+                self.load_bytes[d] -= bytes;
+            }
         }
     }
 
@@ -588,6 +672,10 @@ struct Search<'a> {
     /// (just `1` when sharing is off).
     slices: &'a [f64],
     quantum_s: f64,
+    /// Segment-parameter cache knobs (0 budget = cache off: switch
+    /// costs stay cold and the search explores exactly as before).
+    cache_budget: u64,
+    prefetch: bool,
     pool: DevicePool,
     /// Admissible lower bound on the cost of tenants `i..`: suffix sums
     /// of each tenant's cheapest option (swap overhead and SLO penalties
@@ -618,6 +706,34 @@ impl Search<'_> {
         let (weight, slo) = (self.weights[idx], self.slos[idx]);
         for (ci, cand) in cands[idx].iter().enumerate() {
             for (si, &slice) in slices.iter().enumerate() {
+                // cache pressure depends on the chosen devices, so
+                // placement happens *before* pricing (with the cache
+                // off the reorder is behaviour-neutral: the step never
+                // reads the placement)
+                let fractional = slice < 1.0 - SLICE_EPS;
+                let stage_bytes: &[u64] = if fractional && self.cache_budget > 0 {
+                    &cand.stage_weight_bytes
+                } else {
+                    &[]
+                };
+                let Some((devices, pressure)) =
+                    self.pool.place(cand.tpu_count, slice, stage_bytes)
+                else {
+                    continue;
+                };
+                let switch_s = if stage_bytes.is_empty() {
+                    switch[idx][ci]
+                } else {
+                    plan_effect(
+                        stage_bytes,
+                        self.cache_budget,
+                        pressure,
+                        self.prefetch,
+                        slice,
+                        self.quantum_s,
+                    )
+                    .effective_switch_s(switch[idx][ci])
+                };
                 // a None step is the hard SLO gate on a shared option;
                 // the queue-reason flags are precomputed in allocate()
                 let Some(step) = admission_step(
@@ -625,17 +741,15 @@ impl Search<'_> {
                     cand.p99_s,
                     slo,
                     slice,
-                    switch[idx][ci],
+                    switch_s,
                     self.quantum_s,
                 ) else {
-                    continue;
-                };
-                let Some(devices) = self.pool.place(cand.tpu_count, slice) else {
+                    self.pool.unplace(&devices, slice, stage_bytes);
                     continue;
                 };
                 self.current[idx] = Some((ci, si));
                 self.run(idx + 1, cost + step);
-                self.pool.unplace(&devices, slice);
+                self.pool.unplace(&devices, slice, stage_bytes);
             }
         }
         // or queue this tenant
@@ -660,7 +774,11 @@ pub fn allocate(
     );
     anyhow::ensure!(alloc.quantum_us >= 0.0, "quantum must be non-negative");
     if let Some(us) = alloc.switch_cost_us {
-        anyhow::ensure!(us >= 0.0, "switch cost must be non-negative");
+        anyhow::ensure!(
+            us.is_finite(),
+            "switch cost must be a finite number of microseconds (got {us})"
+        );
+        anyhow::ensure!(us >= 0.0, "switch cost must be non-negative (got {us})");
     }
     let mut dead = alloc.dead_devices.clone();
     dead.sort_unstable();
@@ -728,6 +846,27 @@ pub fn allocate(
     };
     let quantum_s = alloc.quantum_us * 1e-6;
     let n = cand_sets.len();
+    let cache_enabled = alloc.allow_sharing && alloc.cache_budget_bytes > 0;
+
+    // best-case (zero-pressure) cache-adjusted switch cost of a shared
+    // option: what the queue-reason flags and the suffix lower bound
+    // price.  Never above any in-search, pressure-dependent cost, so
+    // the bound stays admissible; with the cache off it is the cold
+    // cost itself.
+    let best_switch = |cand: &Candidate, cold: f64, slice: f64| -> f64 {
+        if !cache_enabled {
+            return cold;
+        }
+        plan_effect(
+            &cand.stage_weight_bytes,
+            alloc.cache_budget_bytes,
+            0,
+            alloc.prefetch,
+            slice,
+            quantum_s,
+        )
+        .effective_switch_s(cold)
+    };
 
     // per-tenant queue-reason flags, pool-state-independent so they are
     // computed once up front: whether any shared option survives the
@@ -743,7 +882,7 @@ pub fn allocate(
                         cand.p99_s,
                         slos[i],
                         slice,
-                        switch[i][ci],
+                        best_switch(cand, switch[i][ci], slice),
                         quantum_s,
                     ) {
                         Some(_) => shared_open[i] = true,
@@ -767,7 +906,7 @@ pub fn allocate(
                         cand.p99_s,
                         slos[i],
                         slice,
-                        switch[i][ci],
+                        best_switch(cand, switch[i][ci], slice),
                         quantum_s,
                     ) {
                         if step < cheapest {
@@ -787,7 +926,14 @@ pub fn allocate(
         switch: &switch,
         slices: &slices,
         quantum_s,
-        pool: DevicePool::new(alloc.total_tpus, alloc.max_residents, &dead),
+        cache_budget: if cache_enabled { alloc.cache_budget_bytes } else { 0 },
+        prefetch: alloc.prefetch,
+        pool: DevicePool::new(
+            alloc.total_tpus,
+            alloc.max_residents,
+            &dead,
+            if cache_enabled { alloc.cache_budget_bytes } else { 0 },
+        ),
         lb,
         best_cost: f64::INFINITY,
         best_choice: vec![None; n],
@@ -798,7 +944,12 @@ pub fn allocate(
     // replay the winning choices through a fresh pool: place() is a
     // deterministic function of the pool state, so the replayed device
     // picks are exactly the search's
-    let mut pool = DevicePool::new(alloc.total_tpus, alloc.max_residents, &dead);
+    let mut pool = DevicePool::new(
+        alloc.total_tpus,
+        alloc.max_residents,
+        &dead,
+        if cache_enabled { alloc.cache_budget_bytes } else { 0 },
+    );
     let mut assignments = Vec::new();
     let mut queued = Vec::new();
     for (i, (t, cands)) in searchable.iter().enumerate() {
@@ -830,9 +981,16 @@ pub fn allocate(
         };
         let cand = cands[ci].clone();
         let slice = slices[si];
-        let devices =
-            pool.place(cand.tpu_count, slice).expect("search placement must replay");
-        let (grant, effective_p99_s) = if slice >= 1.0 - SLICE_EPS {
+        let fractional = slice < 1.0 - SLICE_EPS;
+        let stage_bytes: &[u64] = if fractional && cache_enabled {
+            &cand.stage_weight_bytes
+        } else {
+            &[]
+        };
+        let (devices, _) = pool
+            .place(cand.tpu_count, slice, stage_bytes)
+            .expect("search placement must replay");
+        let (grant, effective_p99_s) = if !fractional {
             (DeviceGrant::Exclusive, cand.p99_s)
         } else {
             let sw = switch[i][ci];
@@ -842,6 +1000,7 @@ pub fn allocate(
                     switch_s: sw,
                     quantum_s,
                     residents: Vec::new(), // filled below, once all are placed
+                    cache: None,           // packing pass fills it below
                 },
                 shared_eff_p99(cand.p99_s, slice, sw, quantum_s),
             )
@@ -892,9 +1051,69 @@ pub fn allocate(
         }
     }
 
+    // cache-aware packing pass: pin co-resident stages (smallest first,
+    // ties by tenant name then stage index) into each device's staging
+    // cache and attach the resulting warm/prefetch effect to every
+    // shared grant, so the deployed effective p99 prices the *residual*
+    // switch cost instead of the full cold one.  `switch_s` on the
+    // grant stays the cold cost; consumers scale it by the effect.
+    if cache_enabled {
+        let mut pinned: std::collections::BTreeSet<(String, usize)> =
+            std::collections::BTreeSet::new();
+        let mut shared_devices: Vec<usize> = assignments
+            .iter()
+            .filter(|a| a.grant.is_shared())
+            .flat_map(|a| a.devices.iter().copied())
+            .collect();
+        shared_devices.sort_unstable();
+        shared_devices.dedup();
+        for d in shared_devices {
+            let mut entries: Vec<(u64, &str, usize)> = assignments
+                .iter()
+                .filter(|a| a.grant.is_shared())
+                .filter_map(|a| {
+                    a.devices.iter().position(|&dev| dev == d).map(|stage| {
+                        (a.candidate.stage_weight_bytes[stage], a.name.as_str(), stage)
+                    })
+                })
+                .collect();
+            entries.sort();
+            let mut cache = ParamCache::new(alloc.cache_budget_bytes);
+            for (bytes, name, stage) in entries {
+                if cache.pin(name, stage, bytes) {
+                    pinned.insert((name.to_string(), stage));
+                }
+            }
+        }
+        for a in &mut assignments {
+            let DeviceGrant::Shared { slice, switch_s, cache, .. } = &mut a.grant
+            else {
+                continue;
+            };
+            let total: u64 = a.candidate.stage_weight_bytes.iter().sum();
+            let mut warm = 0u64;
+            for (stage, &bytes) in a.candidate.stage_weight_bytes.iter().enumerate() {
+                if pinned.contains(&(a.name.clone(), stage)) {
+                    warm += bytes;
+                }
+            }
+            let warm_frac = if total == 0 { 1.0 } else { warm as f64 / total as f64 };
+            let prefetch_s =
+                if alloc.prefetch { (1.0 - *slice) * quantum_s } else { 0.0 };
+            let effect = CacheEffect { warm_frac, prefetch_s };
+            *cache = Some(effect);
+            a.effective_p99_s = shared_eff_p99(
+                a.candidate.p99_s,
+                *slice,
+                effect.effective_switch_s(*switch_s),
+                quantum_s,
+            );
+        }
+    }
+
     // the reported objective reflects what will actually be deployed,
-    // including the p99 improvement from replica grants and the swap
-    // inflation of shared grants
+    // including the p99 improvement from replica grants, the swap
+    // inflation of shared grants and the cache's warm-swap discount
     let objective_s =
         assignments.iter().map(|a| a.weight * a.effective_p99_s).sum();
     Ok(PoolPlan {
@@ -904,6 +1123,7 @@ pub fn allocate(
         rejected,
         objective_s,
         sharing_enabled: alloc.allow_sharing,
+        cache_enabled,
     })
 }
 
@@ -936,8 +1156,8 @@ fn grant_replicas(
             return;
         };
         let a = &mut assignments[best];
-        let extra = pool
-            .place(a.candidate.tpu_count, 1.0)
+        let (extra, _) = pool
+            .place(a.candidate.tpu_count, 1.0, &[])
             .expect("free-device count checked by the filter above");
         leftover -= a.candidate.tpu_count;
         a.devices.extend(extra);
@@ -1485,6 +1705,7 @@ mod tests {
                 .iter()
                 .map(|&d| (d, names.iter().map(|n| n.to_string()).collect()))
                 .collect(),
+            cache: None,
         };
         let a = shared(&[0, 1], &["a", "b"], 0.5);
         // same group on different device ids: same deployment, not ==
@@ -1496,6 +1717,162 @@ mod tests {
         assert!(!a.same_deployment(&shared(&[0, 1], &["a", "b"], 1.0 / 3.0)));
         assert!(!a.same_deployment(&DeviceGrant::Exclusive));
         assert!(DeviceGrant::Exclusive.same_deployment(&DeviceGrant::Exclusive));
+        // a changed cache effect is a real deployment change too (the
+        // worker's swap charging depends on it)
+        let mut warmed = shared(&[0, 1], &["a", "b"], 0.5);
+        if let DeviceGrant::Shared { cache, .. } = &mut warmed {
+            *cache = Some(CacheEffect { warm_frac: 1.0, prefetch_s: 0.0 });
+        }
+        assert!(!a.same_deployment(&warmed));
+    }
+
+    #[test]
+    fn cache_budget_zero_keeps_flat_cost_plans_identical() {
+        let mut reg = ModelRegistry::new();
+        reg.register(Tenant::new("a", fc_model(512)).with_weight(2.0)).unwrap();
+        reg.register(Tenant::new("b", fc_model(512))).unwrap();
+        let base = AllocatorConfig {
+            total_tpus: 1,
+            allow_sharing: true,
+            ..Default::default()
+        };
+        let flat = allocate(&reg, &cfg(), &base).unwrap();
+        let zeroed = AllocatorConfig {
+            cache_budget_bytes: 0,
+            prefetch: false,
+            ..base.clone()
+        };
+        let plan = allocate(&reg, &cfg(), &zeroed).unwrap();
+        assert!(!plan.cache_enabled);
+        assert_eq!(flat.assignments.len(), plan.assignments.len());
+        for (x, y) in flat.assignments.iter().zip(&plan.assignments) {
+            assert_eq!(x.name, y.name);
+            assert_eq!(x.devices, y.devices);
+            assert_eq!(x.grant, y.grant);
+            assert_eq!(x.grant.cache(), None, "budget 0 must never attach an effect");
+            assert_eq!(x.effective_p99_s, y.effective_p99_s);
+        }
+        assert_eq!(flat.objective_s, plan.objective_s);
+    }
+
+    #[test]
+    fn cache_budget_warms_co_residents_and_lowers_planned_p99() {
+        let mut reg = ModelRegistry::new();
+        reg.register(Tenant::new("a", fc_model(512)).with_weight(2.0)).unwrap();
+        reg.register(Tenant::new("b", fc_model(512))).unwrap();
+        let base = AllocatorConfig {
+            total_tpus: 1,
+            allow_sharing: true,
+            ..Default::default()
+        };
+        let flat = allocate(&reg, &cfg(), &base).unwrap();
+        let cached =
+            AllocatorConfig { cache_budget_bytes: 1 << 30, ..base.clone() };
+        let plan = allocate(&reg, &cfg(), &cached).unwrap();
+        assert!(plan.cache_enabled);
+        assert_eq!(plan.assignments.len(), 2, "queued={:?}", plan.queued);
+        for a in &plan.assignments {
+            let eff = a.grant.cache().expect("shared grants carry a cache effect");
+            assert_eq!(eff.warm_frac, 1.0, "a 1 GiB budget pins both: {a:?}");
+            // fully warm => the planned p99 is pure slice dilation
+            assert!((a.effective_p99_s - 2.0 * a.candidate.p99_s).abs() < 1e-9);
+            let was = flat.assignment(&a.name).unwrap().effective_p99_s;
+            assert!(a.effective_p99_s < was, "warm swaps must beat cold: {a:?}");
+            // the grant still records the cold cost (first swaps pay it)
+            assert!(a.grant.switch_s() > 0.0);
+        }
+        assert!(plan.objective_s < flat.objective_s);
+    }
+
+    #[test]
+    fn partial_budget_pins_smallest_entries_name_tie_broken() {
+        let mut reg = ModelRegistry::new();
+        reg.register(Tenant::new("a", fc_model(512)).with_weight(2.0)).unwrap();
+        reg.register(Tenant::new("b", fc_model(512))).unwrap();
+        let probe = AllocatorConfig {
+            total_tpus: 1,
+            allow_sharing: true,
+            cache_budget_bytes: 1 << 30,
+            ..Default::default()
+        };
+        let warm = allocate(&reg, &cfg(), &probe).unwrap();
+        let bytes: u64 = warm
+            .assignment("a")
+            .unwrap()
+            .candidate
+            .stage_weight_bytes
+            .iter()
+            .sum();
+        assert!(bytes > 0);
+        // a budget that fits exactly one resident: equal sizes tie-break
+        // by name, so "a" pins warm and "b" stays cold
+        let alloc = AllocatorConfig { cache_budget_bytes: bytes, ..probe };
+        let plan = allocate(&reg, &cfg(), &alloc).unwrap();
+        let a = plan.assignment("a").unwrap().grant.cache().unwrap();
+        let b = plan.assignment("b").unwrap().grant.cache().unwrap();
+        assert_eq!(a.warm_frac, 1.0, "{plan:?}");
+        assert_eq!(b.warm_frac, 0.0, "{plan:?}");
+    }
+
+    #[test]
+    fn prefetch_hides_residual_cost_only_with_a_quantum_window() {
+        let mut reg = ModelRegistry::new();
+        reg.register(Tenant::new("a", fc_model(512)).with_weight(2.0)).unwrap();
+        reg.register(Tenant::new("b", fc_model(512))).unwrap();
+        let probe = AllocatorConfig {
+            total_tpus: 1,
+            allow_sharing: true,
+            cache_budget_bytes: 1 << 30,
+            ..Default::default()
+        };
+        let bytes: u64 = allocate(&reg, &cfg(), &probe)
+            .unwrap()
+            .assignment("a")
+            .unwrap()
+            .candidate
+            .stage_weight_bytes
+            .iter()
+            .sum();
+        // budget fits one resident => "b" keeps a cold remainder
+        let no_window = AllocatorConfig {
+            cache_budget_bytes: bytes,
+            prefetch: true,
+            quantum_us: 0.0,
+            ..probe.clone()
+        };
+        let plan = allocate(&reg, &cfg(), &no_window).unwrap();
+        let cold = plan.assignment("b").unwrap();
+        assert_eq!(
+            cold.grant.cache().unwrap().prefetch_s,
+            0.0,
+            "zero quantum leaves no window to prefetch in"
+        );
+        // a long quantum gives the prefetch a window that swallows the
+        // cold remainder entirely
+        let windowed =
+            AllocatorConfig { quantum_us: 1_000_000.0, ..no_window.clone() };
+        let plan_w = allocate(&reg, &cfg(), &windowed).unwrap();
+        let b = plan_w.assignment("b").unwrap();
+        let eff = b.grant.cache().unwrap();
+        assert!(eff.prefetch_s > 0.0);
+        assert_eq!(eff.effective_switch_s(b.grant.switch_s()), 0.0, "{eff:?}");
+    }
+
+    #[test]
+    fn nan_switch_cost_is_rejected_with_a_clear_error() {
+        let reg = registry(&["fc_small"]);
+        let bad = AllocatorConfig {
+            switch_cost_us: Some(f64::NAN),
+            ..Default::default()
+        };
+        let err = allocate(&reg, &cfg(), &bad).unwrap_err();
+        assert!(err.to_string().contains("finite"), "{err}");
+        let neg = AllocatorConfig {
+            switch_cost_us: Some(-5.0),
+            ..Default::default()
+        };
+        let err = allocate(&reg, &cfg(), &neg).unwrap_err();
+        assert!(err.to_string().contains("non-negative"), "{err}");
     }
 
     #[test]

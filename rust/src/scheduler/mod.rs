@@ -44,6 +44,7 @@
 //! mid-run registration churn).
 
 pub mod allocator;
+pub mod paramcache;
 pub mod pool;
 pub mod registry;
 pub mod router;
@@ -52,6 +53,7 @@ pub use allocator::{
     allocate, candidates_for, AllocatorConfig, Assignment, Candidate, DeviceGrant, PoolPlan,
     Rejection,
 };
+pub use paramcache::{CacheEffect, ParamCache};
 pub use pool::{Admission, OpenOptions, ReplanReport, ServingPool, TenantClient};
 pub use registry::{resolve_model, ModelRegistry, Tenant};
 pub use router::{
@@ -124,7 +126,9 @@ impl PoolScheduler {
 /// grant kind (`excl` / `shared 1/N`), the concrete device ids (so
 /// overlapping per-device slices are visible), and the predicted p99
 /// inflation from co-residency — so whole-TPU plans render exactly as
-/// before.
+/// before.  A non-zero `--cache-budget-bytes` adds one more: the
+/// planned warm fraction of each shared grant's parameter bytes
+/// (`cache_warm`), so cache-off plans also render exactly as before.
 pub fn plan_table(plan: &PoolPlan) -> Table {
     let shared_cols = plan.sharing_enabled;
     let mut headers = vec![
@@ -135,6 +139,9 @@ pub fn plan_table(plan: &PoolPlan) -> Table {
         headers.push("grant");
         headers.push("devices");
         headers.push("swap_over_ms");
+    }
+    if plan.cache_enabled {
+        headers.push("cache_warm");
     }
     headers.push("status");
     let mut t = Table::new(
@@ -171,6 +178,12 @@ pub fn plan_table(plan: &PoolPlan) -> Table {
             );
             row.push(ms(a.swap_overhead_s()));
         }
+        if plan.cache_enabled {
+            row.push(match a.grant.cache() {
+                Some(eff) => format!("{:.0}%", eff.warm_frac * 100.0),
+                None => "-".to_string(), // exclusive: nothing ever swaps
+            });
+        }
         row.push(if a.slo_violated() {
             "admitted (SLO at risk)".into()
         } else {
@@ -178,7 +191,8 @@ pub fn plan_table(plan: &PoolPlan) -> Table {
         });
         t.row(row);
     }
-    let dashes = if shared_cols { 12 } else { 9 };
+    let dashes =
+        (if shared_cols { 12 } else { 9 }) + usize::from(plan.cache_enabled);
     for q in &plan.queued {
         let mut row = vec![q.name.clone()];
         row.extend(vec!["-".to_string(); dashes]);
@@ -252,6 +266,23 @@ mod tests {
         assert!(!off.contains("grant"), "{off}");
         assert!(!off.contains("devices"), "{off}");
         assert!(!off.contains("swap_over_ms"), "{off}");
+    }
+
+    #[test]
+    fn plan_table_grows_cache_column_only_with_a_budget() {
+        let mut s = PoolScheduler::new(
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: 1, allow_sharing: true, ..Default::default() },
+        );
+        s.registry.register_named("fc_small").unwrap();
+        s.registry.register_named("fc_n512").unwrap();
+        let off = plan_table(&s.plan().unwrap()).render();
+        assert!(!off.contains("cache_warm"), "{off}");
+
+        s.alloc.cache_budget_bytes = 1 << 30;
+        let on = plan_table(&s.plan().unwrap()).render();
+        assert!(on.contains("cache_warm"), "{on}");
+        assert!(on.contains("100%"), "a 1 GiB budget pins both tenants: {on}");
     }
 
     #[test]

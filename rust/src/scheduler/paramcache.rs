@@ -1,0 +1,319 @@
+//! Per-device segment-parameter cache model: warm/cold swap costs,
+//! quantum-boundary prefetch, and the LRU-with-pinning staging cache
+//! behind them (DESIGN.md §15).
+//!
+//! The cost model charges every context switch of a time-shared device
+//! as a full *cold* re-load of the incoming tenant's segment parameters
+//! over the off-chip host-bandwidth term — exactly the traffic the
+//! paper identifies as the dominant inference cost (and arXiv
+//! 2109.14320 identifies as the highest-leverage thing to remove).
+//! Real deployments keep a host-side staging area warm: parameters
+//! pinned there skip the re-load entirely (a *warm* swap, near-zero
+//! cost), and a prefetch issued at the quantum boundary overlaps the
+//! next resident's load with the tail of the current quantum, hiding up
+//! to `(1 - slice) * quantum` seconds of whatever cold traffic remains.
+//!
+//! Two layers live here:
+//!
+//! * [`CacheEffect`] — the *planned* outcome of pinning + prefetch for
+//!   one shared grant, attached to `DeviceGrant::Shared` by the
+//!   allocator's packing pass and replayed identically by the live pool
+//!   worker, the pool router and the deterministic workload sim (so
+//!   `repro loadgen` stays byte-identical per seed).
+//! * [`ParamCache`] — the runtime LRU-with-pinning structure keyed by
+//!   `(tenant, stage)` over a per-device byte budget, which the packing
+//!   pass uses to decide what stays pinned.
+//!
+//! With a zero budget every swap is cold and every cost, column and
+//! trace byte matches the pre-cache behaviour — the whole module is
+//! additive.
+
+use std::collections::BTreeMap;
+
+/// Planned cache outcome of one shared grant: what fraction of the
+/// tenant's parameter bytes stay pinned in the per-device staging
+/// budget, and how much of the residual cold traffic the
+/// quantum-boundary prefetch can hide.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CacheEffect {
+    /// Fraction of the tenant's segment-parameter bytes pinned in the
+    /// host staging cache (`0.0` = fully cold, `1.0` = fully warm).
+    pub warm_frac: f64,
+    /// Seconds of cold re-load the quantum-boundary prefetch overlaps
+    /// with the tail of the previous resident's quantum (`0.0` when
+    /// prefetch is off or the quantum is zero — no window to hide in).
+    pub prefetch_s: f64,
+}
+
+/// How one quantum-gated swap was classified under a [`CacheEffect`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SwapClass {
+    /// Fraction of the cold re-load cost actually charged.
+    pub frac: f64,
+    /// Warm hit: residency + prefetch hid the entire swap cost.
+    pub hit: bool,
+    /// A quantum-boundary prefetch was issued for the unpinned bytes.
+    pub prefetched: bool,
+}
+
+impl CacheEffect {
+    /// Fraction of the cold swap cost still charged after pinning and
+    /// prefetch.  The *first* swap of a deployment is always a full
+    /// cold load (compulsory miss: nothing is resident yet).
+    pub fn residual_frac(&self, cold_s: f64, first: bool) -> f64 {
+        if first {
+            return 1.0;
+        }
+        if cold_s <= 0.0 {
+            return 0.0;
+        }
+        ((((1.0 - self.warm_frac) * cold_s) - self.prefetch_s).max(0.0)) / cold_s
+    }
+
+    /// Steady-state per-swap cost under this effect (the quantity the
+    /// allocator prices into shared candidates' p99).
+    pub fn effective_switch_s(&self, cold_s: f64) -> f64 {
+        cold_s * self.residual_frac(cold_s, false)
+    }
+
+    /// Classify one quantum-gated swap: the charged cost fraction, the
+    /// hit/miss verdict and whether a prefetch was issued.  Shared
+    /// verbatim by the live pool worker, the pool router and the
+    /// deterministic workload sim so all three count identically.
+    pub fn classify(&self, cold_s: f64, first: bool) -> SwapClass {
+        let frac = self.residual_frac(cold_s, first);
+        SwapClass {
+            frac,
+            hit: !first && frac <= 0.0,
+            prefetched: !first
+                && self.prefetch_s > 0.0
+                && (1.0 - self.warm_frac) * cold_s > 0.0,
+        }
+    }
+}
+
+/// Plan the cache effect of one shared placement: greedily pin the
+/// tenant's smallest stages (ties by stage index) into whatever budget
+/// the co-residents already staged on those devices left over
+/// (`pressure_bytes`), and size the prefetch window to the tail of the
+/// quantum the tenant does not own.  With `pressure_bytes = 0` this is
+/// the best case any placement can reach, which keeps the allocator's
+/// suffix lower bound admissible.
+pub fn plan_effect(
+    stage_bytes: &[u64],
+    budget_bytes: u64,
+    pressure_bytes: u64,
+    prefetch: bool,
+    slice: f64,
+    quantum_s: f64,
+) -> CacheEffect {
+    let available = budget_bytes.saturating_sub(pressure_bytes);
+    let total: u64 = stage_bytes.iter().sum();
+    let mut order: Vec<usize> = (0..stage_bytes.len()).collect();
+    order.sort_by_key(|&i| (stage_bytes[i], i));
+    let mut pinned = 0u64;
+    for i in order {
+        if pinned + stage_bytes[i] <= available {
+            pinned += stage_bytes[i];
+        } else {
+            break; // smallest-first: nothing later fits either
+        }
+    }
+    let warm_frac = if total == 0 { 1.0 } else { pinned as f64 / total as f64 };
+    let prefetch_s = if prefetch { (1.0 - slice) * quantum_s } else { 0.0 };
+    CacheEffect { warm_frac, prefetch_s }
+}
+
+/// One staged entry.
+#[derive(Debug, Clone)]
+struct Entry {
+    bytes: u64,
+    last_use: u64,
+    pinned: bool,
+}
+
+/// LRU-with-pinning host staging cache keyed by `(tenant, stage)` over
+/// a per-device byte budget.  Pinned entries are never evicted; misses
+/// stage the entry after evicting least-recently-used unpinned entries
+/// (ties broken by key order, so eviction is deterministic).
+#[derive(Debug)]
+pub struct ParamCache {
+    budget: u64,
+    used: u64,
+    tick: u64,
+    entries: BTreeMap<(String, usize), Entry>,
+}
+
+impl ParamCache {
+    /// Empty cache over `budget_bytes` of host staging memory.
+    pub fn new(budget_bytes: u64) -> Self {
+        ParamCache { budget: budget_bytes, used: 0, tick: 0, entries: BTreeMap::new() }
+    }
+
+    /// The configured staging budget.
+    pub fn budget_bytes(&self) -> u64 {
+        self.budget
+    }
+
+    /// Bytes currently staged (pinned + unpinned).
+    pub fn resident_bytes(&self) -> u64 {
+        self.used
+    }
+
+    /// Whether `(tenant, stage)` is currently staged.
+    pub fn contains(&self, tenant: &str, stage: usize) -> bool {
+        self.entries.contains_key(&(tenant.to_string(), stage))
+    }
+
+    /// Touch `(tenant, stage)` on a swap: `true` = warm hit (already
+    /// staged), `false` = cold miss.  A miss stages the entry, evicting
+    /// LRU unpinned entries as needed; an entry that cannot fit even
+    /// after evicting every unpinned entry is served cold and not
+    /// staged.
+    pub fn access(&mut self, tenant: &str, stage: usize, bytes: u64) -> bool {
+        self.tick += 1;
+        let key = (tenant.to_string(), stage);
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.last_use = self.tick;
+            return true;
+        }
+        if self.stage_in(bytes) {
+            self.entries
+                .insert(key, Entry { bytes, last_use: self.tick, pinned: false });
+        }
+        false
+    }
+
+    /// Pin `(tenant, stage)` so it can never be evicted, staging it
+    /// first if absent.  `false` when it cannot fit alongside the other
+    /// pinned entries.
+    pub fn pin(&mut self, tenant: &str, stage: usize, bytes: u64) -> bool {
+        self.tick += 1;
+        let key = (tenant.to_string(), stage);
+        if let Some(e) = self.entries.get_mut(&key) {
+            e.last_use = self.tick;
+            e.pinned = true;
+            return true;
+        }
+        if !self.stage_in(bytes) {
+            return false;
+        }
+        self.entries.insert(key, Entry { bytes, last_use: self.tick, pinned: true });
+        true
+    }
+
+    /// Make room for `bytes`, evicting LRU unpinned entries; `true`
+    /// when the bytes fit afterwards (`used` is charged on success).
+    fn stage_in(&mut self, bytes: u64) -> bool {
+        if bytes > self.budget {
+            return false;
+        }
+        while self.used + bytes > self.budget {
+            let victim = self
+                .entries
+                .iter()
+                .filter(|(_, e)| !e.pinned)
+                .min_by_key(|(k, e)| (e.last_use, (*k).clone()))
+                .map(|(k, _)| k.clone());
+            let Some(victim) = victim else {
+                return false; // everything left is pinned
+            };
+            let e = self.entries.remove(&victim).expect("victim key just observed");
+            self.used -= e.bytes;
+        }
+        self.used += bytes;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn residual_frac_covers_first_warm_and_partial_swaps() {
+        let eff = CacheEffect { warm_frac: 0.75, prefetch_s: 0.0 };
+        // compulsory miss: the first swap is always fully cold
+        assert_eq!(eff.residual_frac(1.0, true), 1.0);
+        // steady state: only the unpinned quarter is charged
+        assert!((eff.residual_frac(1.0, false) - 0.25).abs() < 1e-12);
+        assert!((eff.effective_switch_s(2.0) - 0.5).abs() < 1e-12);
+        // fully warm => free swaps; zero cold cost => nothing to charge
+        let warm = CacheEffect { warm_frac: 1.0, prefetch_s: 0.0 };
+        assert_eq!(warm.residual_frac(1.0, false), 0.0);
+        assert_eq!(eff.residual_frac(0.0, false), 0.0);
+    }
+
+    #[test]
+    fn prefetch_hides_residual_cost_but_never_goes_negative() {
+        let eff = CacheEffect { warm_frac: 0.5, prefetch_s: 0.2 };
+        // residual = (0.5 * 1.0 - 0.2) / 1.0
+        assert!((eff.residual_frac(1.0, false) - 0.3).abs() < 1e-12);
+        // a prefetch window longer than the cold remainder clamps to 0
+        let wide = CacheEffect { warm_frac: 0.5, prefetch_s: 10.0 };
+        assert_eq!(wide.residual_frac(1.0, false), 0.0);
+        assert!(wide.classify(1.0, false).hit);
+    }
+
+    #[test]
+    fn classify_counts_hits_misses_and_prefetches() {
+        let eff = CacheEffect { warm_frac: 0.5, prefetch_s: 0.1 };
+        let first = eff.classify(1.0, true);
+        assert!(!first.hit && !first.prefetched);
+        assert_eq!(first.frac, 1.0);
+        let steady = eff.classify(1.0, false);
+        assert!(!steady.hit, "0.4 of the cold cost is still charged");
+        assert!(steady.prefetched);
+        // fully pinned => hit, and nothing left to prefetch
+        let warm = CacheEffect { warm_frac: 1.0, prefetch_s: 0.1 };
+        let hit = warm.classify(1.0, false);
+        assert!(hit.hit && !hit.prefetched);
+    }
+
+    #[test]
+    fn plan_effect_pins_smallest_stages_within_the_leftover_budget() {
+        let stages = [30u64, 10, 20];
+        // 35 bytes left: stages of 10 and 20 pin, 30 does not
+        let eff = plan_effect(&stages, 35, 0, false, 0.5, 0.0);
+        assert!((eff.warm_frac - 0.5).abs() < 1e-12);
+        assert_eq!(eff.prefetch_s, 0.0);
+        // co-residents already staged 30 of the 35 => only 5 left
+        let squeezed = plan_effect(&stages, 35, 30, false, 0.5, 0.0);
+        assert_eq!(squeezed.warm_frac, 0.0);
+        // prefetch window = the co-residents' share of the quantum
+        let pf = plan_effect(&stages, 35, 0, true, 0.25, 2.0);
+        assert!((pf.prefetch_s - 1.5).abs() < 1e-12);
+        // a weightless pipeline is trivially warm
+        assert_eq!(plan_effect(&[], 0, 0, false, 0.5, 0.0).warm_frac, 1.0);
+    }
+
+    #[test]
+    fn lru_evicts_unpinned_entries_deterministically() {
+        let mut c = ParamCache::new(100);
+        assert!(!c.access("a", 0, 60), "first touch is a miss");
+        assert!(c.access("a", 0, 60), "second touch is warm");
+        // b does not fit next to a => a (LRU, unpinned) is evicted
+        assert!(!c.access("b", 0, 50));
+        assert!(!c.contains("a", 0));
+        assert!(c.contains("b", 0));
+        assert_eq!(c.resident_bytes(), 50);
+        // an entry larger than the whole budget is never staged
+        assert!(!c.access("huge", 0, 1_000));
+        assert!(!c.contains("huge", 0));
+    }
+
+    #[test]
+    fn pinned_entries_survive_pressure() {
+        let mut c = ParamCache::new(100);
+        assert!(c.pin("a", 0, 60));
+        // b cannot evict the pinned entry, so it is served cold forever
+        assert!(!c.access("b", 0, 50));
+        assert!(!c.access("b", 0, 50));
+        assert!(c.contains("a", 0));
+        // but a smaller rider co-resides warm next to the pin
+        assert!(!c.access("c", 0, 40));
+        assert!(c.access("c", 0, 40));
+        // a second pin that cannot fit is refused
+        assert!(!c.pin("d", 0, 50));
+    }
+}

@@ -62,11 +62,12 @@ use crate::coordinator::queue::{bounded, Receiver, SendError, Sender};
 use crate::coordinator::{Arena, DelayInjector, HedgeConfig, PipelineConfig, Request, Response};
 use crate::metrics::{DataPlaneMetrics, SchedulerMetrics, TenantMetrics};
 use crate::workload::faults::shed_threshold;
-use crate::obs::span::track_base;
+use crate::obs::span::{track_base, CACHE_TRACK};
 use crate::obs::{SpanKind, SpanSink, Tracer};
 use crate::runtime::Manifest;
 
 use super::allocator::{allocate, AllocatorConfig, Assignment, PoolPlan};
+use super::paramcache::CacheEffect;
 use super::registry::{ModelRegistry, Tenant};
 use super::router::{build_deployment, name_tenant_tracks, BackendKind, Deployment, TenantShape};
 
@@ -243,6 +244,7 @@ fn tenant_worker(
     metrics: Arc<TenantMetrics>,
     swap_s: f64,
     quantum_s: f64,
+    cache: Option<CacheEffect>,
     obs: Option<(SpanSink, u32)>,
 ) {
     // sim latencies are recorded relative to the deployment's sim clock at
@@ -272,15 +274,43 @@ fn tenant_worker(
             let now_s = started.elapsed().as_secs_f64();
             if now_s >= last_swap_s + quantum_s {
                 // time-shared deployment: the co-resident ran since the
-                // last quantum, so this batch swaps the parameters back in
+                // last quantum, so this batch swaps the parameters back
+                // in — at the full cold cost, unless a cache-enabled plan
+                // kept part (or all) of them staged within the budget
+                let first = last_swap_s == f64::NEG_INFINITY;
                 last_swap_s = now_s;
-                metrics.record_swap(swap_s);
-                if let Some((sink, base)) = &obs {
-                    // the paid re-load, annotated with its modelled cost
-                    let dur_us = (swap_s * 1e6) as u64;
-                    sink.record(SpanKind::Swap, base + 1, batch_idx, sink.now_us(), dur_us);
+                let paid = match cache {
+                    Some(eff) => {
+                        let class = eff.classify(swap_s, first);
+                        metrics.record_cache(class.hit, class.prefetched);
+                        if class.prefetched {
+                            if let Some((sink, base)) = &obs {
+                                // the overlapped load ends at the quantum
+                                // boundary (= now): span it backwards
+                                let dur_us = (eff.prefetch_s * 1e6) as u64;
+                                let end_us = sink.now_us();
+                                sink.record(
+                                    SpanKind::Prefetch,
+                                    base + CACHE_TRACK,
+                                    batch_idx,
+                                    end_us.saturating_sub(dur_us),
+                                    dur_us,
+                                );
+                            }
+                        }
+                        swap_s * class.frac
+                    }
+                    None => swap_s,
+                };
+                metrics.record_swap(paid);
+                if paid > 0.0 {
+                    if let Some((sink, base)) = &obs {
+                        // the paid re-load, annotated with its modelled cost
+                        let dur_us = (paid * 1e6) as u64;
+                        sink.record(SpanKind::Swap, base + 1, batch_idx, sink.now_us(), dur_us);
+                    }
                 }
-                swap_s
+                paid
             } else {
                 metrics.record_swap_skipped();
                 0.0
@@ -348,6 +378,7 @@ impl ServingPool {
         };
         let total_tpus = alloc.total_tpus;
         let allow_sharing = alloc.allow_sharing;
+        let cache_enabled = allow_sharing && alloc.cache_budget_bytes > 0;
         let data_plane = Arc::new(DataPlaneMetrics::default());
         let pool = ServingPool {
             system,
@@ -370,6 +401,7 @@ impl ServingPool {
                     rejected: Vec::new(),
                     objective_s: 0.0,
                     sharing_enabled: allow_sharing,
+                    cache_enabled,
                 }),
             }),
             metrics: Arc::new(SchedulerMetrics::default()),
@@ -395,6 +427,8 @@ impl ServingPool {
                 rejected: Vec::new(),
                 objective_s: 0.0,
                 sharing_enabled: self.alloc.allow_sharing,
+                cache_enabled: self.alloc.allow_sharing
+                    && self.alloc.cache_budget_bytes > 0,
             }
         } else {
             // fold the pool's fault record into the allocator's view: a
@@ -453,7 +487,7 @@ impl ServingPool {
             let tbase = track_base(idx);
             if let Some(t) = &self.opts.tracer {
                 let n_stages = a.candidate.partition.n_segments();
-                name_tenant_tracks(t, &a.name, idx, a.replicas, n_stages);
+                name_tenant_tracks(t, &a.name, idx, a.replicas, n_stages, a.grant.cache().is_some());
             }
             let tenant_pipe = PipelineConfig { trace_track_base: tbase + 2, ..pipe.clone() };
             let built = build_deployment(
@@ -488,6 +522,7 @@ impl ServingPool {
             let worker_metrics = metrics.clone();
             let swap_s = a.grant.switch_s();
             let quantum_s = a.grant.quantum_s();
+            let cache = a.grant.cache();
             let obs = self.opts.tracer.as_ref().map(|t| (t.handle(), tbase));
             let worker = std::thread::spawn(move || {
                 tenant_worker(
@@ -497,6 +532,7 @@ impl ServingPool {
                     worker_metrics,
                     swap_s,
                     quantum_s,
+                    cache,
                     obs,
                 )
             });
@@ -907,6 +943,58 @@ mod tests {
         // exclusive deployments never swap: the counter froze
         let after = p.tenant_metrics("rider").unwrap().snapshot();
         assert_eq!(after.swaps, before.swaps, "{after:?}");
+        p.shutdown();
+    }
+
+    #[test]
+    fn kill_drill_replans_with_pinned_switch_cost_and_cache_knobs() {
+        // regression (ISSUE 8 satellite): the kill-drill re-plan runs off
+        // `self.alloc` with only `dead_devices` overridden, so an
+        // operator-pinned `--switch-cost-us` and the cache knobs must
+        // survive into the post-kill plan verbatim
+        let mut reg = ModelRegistry::new();
+        reg.register(
+            Tenant::new("owner", super::super::resolve_model("fc_small").unwrap())
+                .with_weight(2.0),
+        )
+        .unwrap();
+        reg.register(Tenant::new("rider", super::super::resolve_model("fc_small").unwrap()))
+            .unwrap();
+        let p = ServingPool::deploy(
+            reg,
+            SystemConfig::default(),
+            AllocatorConfig {
+                total_tpus: 2,
+                allow_sharing: true,
+                switch_cost_us: Some(1500.0),
+                cache_budget_bytes: 1 << 30,
+                prefetch: true,
+                ..Default::default()
+            },
+            BackendKind::Synthetic,
+            OpenOptions::default(),
+        )
+        .unwrap();
+        let report = p.kill_device(0).unwrap();
+        assert_eq!(report.admitted.len(), 2, "both tenants must share the survivor: {report:?}");
+        let plan = p.plan();
+        assert!(plan.cache_enabled, "cache knobs lost in the kill re-plan");
+        for name in ["owner", "rider"] {
+            let a = plan.assignment(name).unwrap();
+            assert!(a.grant.is_shared(), "{name}: {:?}", a.grant);
+            assert!(
+                (a.grant.switch_s() - 1.5e-3).abs() < 1e-12,
+                "{name}: pinned --switch-cost-us lost in the kill re-plan: {:?}",
+                a.grant
+            );
+            let eff = a.grant.cache().expect("cache-enabled plans fill the effect");
+            assert!(
+                (eff.warm_frac - 1.0).abs() < 1e-12,
+                "{name}: a 1 GiB budget pins both co-residents: {eff:?}"
+            );
+        }
+        run_and_verify(&p, "owner", 8, 51);
+        run_and_verify(&p, "rider", 8, 52);
         p.shutdown();
     }
 

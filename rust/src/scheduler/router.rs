@@ -39,7 +39,7 @@ use crate::coordinator::{
 };
 use crate::metrics::{DataPlaneMetrics, SchedulerMetrics, TenantMetrics};
 use crate::model::Model;
-use crate::obs::span::track_base;
+use crate::obs::span::{track_base, CACHE_TRACK};
 use crate::obs::Tracer;
 use crate::runtime::stage::pjrt_stage_factory;
 use crate::runtime::Manifest;
@@ -398,6 +398,7 @@ pub(crate) fn name_tenant_tracks(
     idx: usize,
     replicas: usize,
     n_stages: usize,
+    cache: bool,
 ) {
     let base = track_base(idx);
     tracer.name_track(base, format!("{name}/requests"));
@@ -407,6 +408,11 @@ pub(crate) fn name_tenant_tracks(
             let t = base + 2 + (rep * n_stages + s) as u32;
             tracer.name_track(t, format!("{name}/rep{rep}/stage{s}"));
         }
+    }
+    // cache-enabled shared grants get a lane for their prefetch spans;
+    // cache-off traces keep the exact track set they have today
+    if cache {
+        tracer.name_track(base + CACHE_TRACK, format!("{name}/cache"));
     }
 }
 
@@ -529,7 +535,7 @@ impl PoolRouter {
         for (idx, a) in plan.assignments.iter().enumerate() {
             let n_stages = a.candidate.partition.n_segments();
             if let Some(t) = &tracer {
-                name_tenant_tracks(t, &a.name, idx, a.replicas, n_stages);
+                name_tenant_tracks(t, &a.name, idx, a.replicas, n_stages, a.grant.cache().is_some());
             }
             let tenant_pipe =
                 PipelineConfig { trace_track_base: track_base(idx) + 2, ..pipe.clone() };
@@ -613,9 +619,21 @@ impl PoolRouter {
                 let swap_s = if t.grant.is_shared() {
                     let now_s = t.started.elapsed().as_secs_f64();
                     if now_s >= last_swap + t.grant.quantum_s() {
+                        let first = last_swap == f64::NEG_INFINITY;
                         st.1 = now_s;
-                        t.metrics.record_swap(t.grant.switch_s());
-                        t.grant.switch_s()
+                        let cold = t.grant.switch_s();
+                        // a cache-enabled grant keeps part (or all) of
+                        // the parameters staged, shrinking the re-load
+                        let paid = match t.grant.cache() {
+                            Some(eff) => {
+                                let class = eff.classify(cold, first);
+                                t.metrics.record_cache(class.hit, class.prefetched);
+                                cold * class.frac
+                            }
+                            None => cold,
+                        };
+                        t.metrics.record_swap(paid);
+                        paid
                     } else {
                         t.metrics.record_swap_skipped();
                         0.0

@@ -145,6 +145,7 @@ pub fn deployment_sim(
         replicas: a.replicas,
         switch_s,
         quantum_s: a.grant.quantum_s(),
+        cache: a.grant.cache(),
     }
 }
 
@@ -702,6 +703,7 @@ mod tests {
             switch_s: total,
             quantum_s: 0.0,
             residents: vec![(0, vec!["a".into(), "b".into()])],
+            cache: None,
         };
         let shared = stage_sims_for_grant(&m, &part, &cfg, &grant);
         for (e, s) in excl.iter().zip(&shared) {

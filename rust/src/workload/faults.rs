@@ -532,7 +532,7 @@ mod tests {
                 overhead_s: 2e-4,
             })
             .collect();
-        DeploymentSim { sims, replicas, switch_s: Vec::new(), quantum_s: 0.0 }
+        DeploymentSim { sims, replicas, switch_s: Vec::new(), quantum_s: 0.0, cache: None }
     }
 
     fn arr() -> Arrivals {

@@ -37,6 +37,7 @@ use crate::coordinator::batcher::BatchPolicy;
 use crate::coordinator::StageSim;
 use crate::metrics::FlushKind;
 use crate::obs::{SimTrace, SpanKind};
+use crate::scheduler::paramcache::CacheEffect;
 use crate::util::rng::Rng;
 
 pub mod faults;
@@ -225,6 +226,16 @@ pub struct OpenLoopRun {
     /// Total simulated parameter re-load time across those swaps, summed
     /// over stages and replicas.
     pub swap_overhead_s: f64,
+    /// Warm swaps under a segment-parameter cache: residency + prefetch
+    /// hid the entire re-load.  0 when the deployment carries no cache.
+    pub cache_hits: usize,
+    /// Cold or partial swaps under the cache (the first swap is always a
+    /// compulsory miss); `cache_hits + cache_misses == swaps` whenever a
+    /// cache is attached.
+    pub cache_misses: usize,
+    /// Quantum-boundary prefetches issued (a miss with a non-zero
+    /// prefetch window and unpinned bytes to fetch).
+    pub prefetches: usize,
 }
 
 impl OpenLoopRun {
@@ -263,12 +274,24 @@ pub struct DeploymentSim {
     /// of the last paid re-load keeps the parameters resident and skips
     /// the swap.  `0` (PR 3's model) re-loads on every flush.
     pub quantum_s: f64,
+    /// Planned segment-parameter cache effect for this grant
+    /// ([`DeviceGrant::cache`](crate::scheduler::DeviceGrant::cache)):
+    /// scales every quantum-opening re-load by its residual fraction and
+    /// counts hits/misses/prefetches.  `None` (cache off) charges the
+    /// full cold cost, byte-identical to the flat model.
+    pub cache: Option<CacheEffect>,
 }
 
 impl DeploymentSim {
     /// An exclusive single-pipeline deployment (the pre-sharing model).
     pub fn exclusive(sims: Vec<StageSim>) -> Self {
-        DeploymentSim { sims, replicas: 1, switch_s: Vec::new(), quantum_s: 0.0 }
+        DeploymentSim {
+            sims,
+            replicas: 1,
+            switch_s: Vec::new(),
+            quantum_s: 0.0,
+            cache: None,
+        }
     }
 }
 
@@ -326,7 +349,12 @@ pub fn simulate_deployment(
 /// * track 1 — batcher: `flush` instants (id = batch ordinal) and `swap`
 ///   spans when a flush opens a new scheduling quantum;
 /// * track `2 + rep * n_stages + si` — stage `si` of replica `rep`
-///   executing one request (`stage`, id = request id).
+///   executing one request (`stage`, id = request id);
+/// * track [`CACHE_TRACK`](crate::obs::span::CACHE_TRACK) (the last
+///   tenant-local track) — segment-parameter cache: `prefetch` spans
+///   overlapping the tail of the previous quantum (only recorded for
+///   deployments carrying a cache effect, so cache-off traces are
+///   byte-identical).
 pub fn simulate_deployment_traced(
     arrivals: &Arrivals,
     n: usize,
@@ -376,6 +404,9 @@ pub fn simulate_deployment_traced(
     let mut makespan = 0.0f64;
     let mut swaps = 0usize;
     let mut swap_overhead = 0.0f64;
+    let mut cache_hits = 0usize;
+    let mut cache_misses = 0usize;
+    let mut prefetches = 0usize;
     // simulated instant of the last paid re-load: flushes inside the
     // scheduling quantum keep the parameters resident (quantum_s = 0
     // degenerates to one swap per flush)
@@ -430,10 +461,42 @@ pub fn simulate_deployment_traced(
         // memory before serving; flushes inside the quantum skip it
         if !dep.switch_s.is_empty() && flush_s >= last_swap_s + dep.quantum_s {
             swaps += 1;
+            let first = last_swap_s == f64::NEG_INFINITY;
             last_swap_s = flush_s;
+            // segment-parameter cache: the planned effect scales the cold
+            // re-load down to its residual fraction (first swap = full
+            // compulsory miss); no cache charges the full cold cost,
+            // bit-identical to the flat model (`frac` is exactly 1.0)
+            let cold_total: f64 = dep.switch_s.iter().sum();
+            let frac = match dep.cache {
+                Some(eff) => {
+                    let class = eff.classify(cold_total, first);
+                    if class.hit {
+                        cache_hits += 1;
+                    } else {
+                        cache_misses += 1;
+                    }
+                    if class.prefetched {
+                        prefetches += 1;
+                        if let Some(tr) = trace.as_deref_mut() {
+                            let start = (flush_s - eff.prefetch_s).max(0.0);
+                            tr.record_s(
+                                SpanKind::Prefetch,
+                                crate::obs::span::CACHE_TRACK,
+                                batch_idx,
+                                start,
+                                flush_s,
+                            );
+                        }
+                    }
+                    class.frac
+                }
+                None => 1.0,
+            };
             let before = swap_overhead;
             for rep_clocks in stage_free.iter_mut().take(replicas.min(batch.len())) {
                 for (si, &sw) in dep.switch_s.iter().enumerate() {
+                    let sw = sw * frac;
                     rep_clocks[si] = rep_clocks[si].max(flush_s) + sw;
                     swap_overhead += sw;
                 }
@@ -493,6 +556,9 @@ pub fn simulate_deployment_traced(
         makespan_s: makespan,
         swaps,
         swap_overhead_s: swap_overhead,
+        cache_hits,
+        cache_misses,
+        prefetches,
     }
 }
 
@@ -590,6 +656,7 @@ mod tests {
             replicas: 2,
             switch_s: vec![5e-4, 5e-4],
             quantum_s: 0.0,
+            cache: None,
         };
         let arr = Arrivals::Poisson { rate_hz: 700.0 };
         let plain = simulate_deployment(&arr, 150, 7, &policy, &dep);
@@ -658,7 +725,13 @@ mod tests {
         let hot = Arrivals::Poisson { rate_hz: 3000.0 };
         let one =
             simulate_deployment(&hot, 300, 5, &policy, &DeploymentSim::exclusive(s.clone()));
-        let fan = DeploymentSim { sims: s, replicas: 2, switch_s: Vec::new(), quantum_s: 0.0 };
+        let fan = DeploymentSim {
+            sims: s,
+            replicas: 2,
+            switch_s: Vec::new(),
+            quantum_s: 0.0,
+            cache: None,
+        };
         let two = simulate_deployment(&hot, 300, 5, &policy, &fan);
         let again = simulate_deployment(&hot, 300, 5, &policy, &fan);
         assert_eq!(two.latencies_s, again.latencies_s, "fan-out must stay deterministic");
@@ -691,8 +764,13 @@ mod tests {
         // stages' parameters at 3 ms each
         let dilated: Vec<StageSim> =
             s.iter().map(|x| StageSim { exec_s: 2.0 * x.exec_s, ..*x }).collect();
-        let dep =
-            DeploymentSim { sims: dilated, replicas: 1, switch_s: vec![3e-3; 2], quantum_s: 0.0 };
+        let dep = DeploymentSim {
+            sims: dilated,
+            replicas: 1,
+            switch_s: vec![3e-3; 2],
+            quantum_s: 0.0,
+            cache: None,
+        };
         let shared = simulate_deployment(&arr, 120, 9, &policy, &dep);
         let again = simulate_deployment(&arr, 120, 9, &policy, &dep);
         assert_eq!(shared.latencies_s, again.latencies_s);
@@ -708,6 +786,86 @@ mod tests {
     }
 
     #[test]
+    fn cached_deployment_discounts_swaps_and_counts_them() {
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+        let dilated: Vec<StageSim> =
+            sims(2, 1e-3).iter().map(|x| StageSim { exec_s: 2.0 * x.exec_s, ..*x }).collect();
+        let arr = Arrivals::Poisson { rate_hz: 800.0 };
+        let base = DeploymentSim {
+            sims: dilated.clone(),
+            replicas: 1,
+            switch_s: vec![3e-3; 2],
+            quantum_s: 0.0,
+            cache: None,
+        };
+        let flat = simulate_deployment(&arr, 120, 9, &policy, &base);
+        // cache off: the counters never move
+        assert_eq!(flat.cache_hits, 0);
+        assert_eq!(flat.cache_misses, 0);
+        assert_eq!(flat.prefetches, 0);
+
+        // a fully-warm effect pays only the compulsory first re-load
+        let warm = DeploymentSim {
+            cache: Some(CacheEffect { warm_frac: 1.0, prefetch_s: 0.0 }),
+            ..base.clone()
+        };
+        let run = simulate_deployment(&arr, 120, 9, &policy, &warm);
+        let again = simulate_deployment(&arr, 120, 9, &policy, &warm);
+        assert_eq!(run.latencies_s, again.latencies_s, "cached sim must stay deterministic");
+        assert_eq!(run.cache_hits, again.cache_hits);
+        assert_eq!(run.cache_hits + run.cache_misses, run.swaps, "hits + misses == swaps");
+        assert_eq!(run.cache_misses, 1, "only the first swap is a compulsory miss");
+        assert!(
+            (run.swap_overhead_s - 6e-3).abs() < 1e-12,
+            "warm run pays exactly one cold re-load, got {}",
+            run.swap_overhead_s
+        );
+        assert!(run.swap_overhead_s < flat.swap_overhead_s);
+        let mean =
+            |r: &OpenLoopRun| r.latencies_s.iter().sum::<f64>() / r.latencies_s.len() as f64;
+        assert!(mean(&run) <= mean(&flat), "warm swaps must not cost latency");
+
+        // an all-cold effect counts misses but reproduces the flat
+        // timings bit-for-bit (frac is exactly 1.0 on every swap)
+        let cold = DeploymentSim {
+            cache: Some(CacheEffect { warm_frac: 0.0, prefetch_s: 0.0 }),
+            ..base.clone()
+        };
+        let run = simulate_deployment(&arr, 120, 9, &policy, &cold);
+        assert_eq!(run.latencies_s, flat.latencies_s);
+        assert_eq!(run.swap_overhead_s, flat.swap_overhead_s);
+        assert_eq!(run.cache_misses, run.swaps);
+        assert_eq!(run.cache_hits, 0);
+    }
+
+    #[test]
+    fn prefetch_spans_land_on_the_cache_track() {
+        let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
+        let dilated: Vec<StageSim> =
+            sims(2, 1e-3).iter().map(|x| StageSim { exec_s: 2.0 * x.exec_s, ..*x }).collect();
+        let arr = Arrivals::Poisson { rate_hz: 800.0 };
+        let dep = DeploymentSim {
+            sims: dilated,
+            replicas: 1,
+            switch_s: vec![3e-3; 2],
+            quantum_s: 0.05,
+            cache: Some(CacheEffect { warm_frac: 0.5, prefetch_s: 1e-3 }),
+        };
+        let mut tr = SimTrace::new();
+        let run = simulate_deployment_traced(&arr, 120, 9, &policy, &dep, Some(&mut tr));
+        assert_eq!(run.cache_hits + run.cache_misses, run.swaps);
+        assert!(run.prefetches > 0, "non-first quantum swaps must prefetch");
+        let events = tr.into_events();
+        let pf: Vec<_> =
+            events.iter().filter(|e| e.kind == SpanKind::Prefetch).collect();
+        assert_eq!(pf.len(), run.prefetches, "one prefetch span per counted prefetch");
+        assert!(
+            pf.iter().all(|e| e.track == crate::obs::span::CACHE_TRACK),
+            "prefetch spans must land on the cache track"
+        );
+    }
+
+    #[test]
     fn larger_quantum_swaps_less_and_never_loses_throughput() {
         let policy = BatchPolicy { max_batch: 8, max_wait: Duration::from_millis(1) };
         let dilated: Vec<StageSim> =
@@ -720,6 +878,7 @@ mod tests {
                 replicas: 1,
                 switch_s: vec![3e-3; 2],
                 quantum_s,
+                cache: None,
             };
             let run = simulate_deployment(&arr, 120, 9, &policy, &dep);
             let again = simulate_deployment(&arr, 120, 9, &policy, &dep);

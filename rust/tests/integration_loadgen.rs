@@ -161,6 +161,72 @@ fn loadgen_shared_deployment_reproducible_and_serves_live() {
     pool.shutdown();
 }
 
+/// PR 8 acceptance: a cache budget large enough to hold both co-residents
+/// leaves only the compulsory first miss (strictly fewer cold swaps than a
+/// budget that pins nothing) without losing simulated throughput, budget 0
+/// reproduces the flat table byte-for-byte, and `hits + misses == swaps`
+/// holds on every admitted row.
+#[test]
+fn loadgen_cache_budget_monotone_and_zero_is_byte_identical() {
+    let base = "loadgen --models fc_small,fc_n512 --tpus 1 --allow-sharing --seed 11 \
+                --requests 80 --arrivals poisson:600 --csv";
+    let flat = run(base);
+    assert!(
+        !flat.lines().next().unwrap().contains("cache_misses"),
+        "cache columns must stay hidden without a budget:\n{flat}"
+    );
+    assert_eq!(
+        run(&format!("{base} --cache-budget-bytes 0")),
+        flat,
+        "budget 0 must disable the cache model byte-for-byte"
+    );
+
+    // (swaps, cache_hits, cache_misses, throughput_hz) per admitted row
+    let parse = |out: &str| -> Vec<(u64, u64, u64, f64)> {
+        let header: Vec<&str> = out.lines().next().unwrap().split(',').collect();
+        let col = |name: &str| {
+            header
+                .iter()
+                .position(|h| *h == name)
+                .unwrap_or_else(|| panic!("no {name} column in {header:?}"))
+        };
+        let (sw, hit, miss, thr) =
+            (col("swaps"), col("cache_hits"), col("cache_misses"), col("throughput_hz"));
+        out.lines()
+            .skip(1)
+            .map(|l| {
+                let f: Vec<&str> = l.split(',').collect();
+                (
+                    f[sw].parse().unwrap(),
+                    f[hit].parse().unwrap(),
+                    f[miss].parse().unwrap(),
+                    f[thr].parse().unwrap(),
+                )
+            })
+            .collect()
+    };
+    let tiny = parse(&run(&format!("{base} --cache-budget-bytes 1")));
+    let big = parse(&run(&format!("{base} --cache-budget-bytes 1073741824")));
+    assert_eq!(tiny.len(), 2, "both tenants admitted");
+    assert_eq!(big.len(), 2);
+    for (t, b) in tiny.iter().zip(&big) {
+        // every quantum-gated swap is classified exactly once
+        assert_eq!(t.1 + t.2, t.0, "tiny budget: hits + misses == swaps");
+        assert_eq!(b.1 + b.2, b.0, "big budget: hits + misses == swaps");
+        // a 1-byte budget pins nothing (every swap stays cold); a budget
+        // fitting both co-residents leaves only the compulsory first miss
+        assert_eq!(t.2, t.0, "1-byte budget must keep every swap cold");
+        assert_eq!(b.2, 1, "fitting budget leaves only the compulsory miss");
+        assert!(t.2 > b.2, "larger budget must cut cold swaps: {} -> {}", t.2, b.2);
+        assert!(
+            b.3 >= t.3 - 1e-9,
+            "warm swaps must not lose throughput: {} -> {}",
+            t.3,
+            b.3
+        );
+    }
+}
+
 /// Replica fan-out end-to-end: the table models the round-robin shards
 /// deterministically and the live replicated pipelines verify bit-exact.
 #[test]

@@ -93,17 +93,21 @@ def main():
         fb_sc = fb.get("scenarios", {})
         if fb_sc:
             print(
-                f"bench_check: checked-in baseline {args.baseline} is empty — "
-                f"gating against the rolling baseline {args.fallback}"
+                f"bench_check: rolling-only mode (checked-in baseline "
+                f"{args.baseline} is the empty bootstrap) — gating against the "
+                f"rolling baseline {args.fallback}; run `make bench-baseline` "
+                "on the reference runner and commit the result to arm the "
+                "absolute pin"
             )
             base_sc = fb_sc
             rolling = True
 
     if not base_sc:
         print(
-            f"bench_check: baseline {args.baseline} has no scenarios — regression "
-            "gate inactive (populate it with `make bench-baseline` on the "
-            "reference runner, or let the CI rolling baseline accumulate)"
+            f"bench_check: rolling-only mode with no rolling baseline either — "
+            f"regression gate INACTIVE ({args.baseline} is the empty bootstrap; "
+            "populate it with `make bench-baseline` on the reference runner, "
+            "or let the CI rolling baseline accumulate from the next run)"
         )
         return 0
 
