@@ -20,7 +20,8 @@ SMOKE_OUT ?= smoke-out
 
 .PHONY: all build test check artifacts python-test clean \
         smoke smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane \
-        smoke-trace smoke-chaos smoke-cache bench-quick bench-check bench-baseline
+        smoke-trace smoke-chaos smoke-cache smoke-calibrate \
+        bench-quick bench-check bench-baseline
 
 all: build
 
@@ -53,7 +54,7 @@ python-test:
 
 # ---- CI smoke (identical commands locally and in .github/workflows/ci.yml)
 
-smoke: smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane smoke-trace smoke-chaos smoke-cache
+smoke: smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane smoke-trace smoke-chaos smoke-cache smoke-calibrate
 
 smoke-scheduler:
 	$(CARGO) run --release --bin repro -- schedule --models fc_big,conv_a,conv_b --tpus 4
@@ -173,6 +174,38 @@ smoke-cache:
 		--requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/cache_zero.csv
 	diff $(SMOKE_OUT)/cache_off.csv $(SMOKE_OUT)/cache_zero.csv
 	! grep -q "cache_hits" $(SMOKE_OUT)/cache_zero.csv
+
+# Online-calibration gate (DESIGN.md §16): the seeded drift scenario is
+# byte-identical per seed and converges — the drifted tenant recalibrates
+# (the ledger is non-empty) and the detector then quiesces; a no-drift
+# run of the same seed keeps an empty ledger; and loadgen without
+# --calibrate stays byte-identical to a pre-calibration run.
+smoke-calibrate:
+	mkdir -p $(SMOKE_OUT)
+	$(CARGO) run --release --bin repro -- calibrate --seed 11 \
+		--models fc_small,conv_a --tpus 2 --drift fc_small \
+		--csv > $(SMOKE_OUT)/calibrate_a.csv
+	$(CARGO) run --release --bin repro -- calibrate --seed 11 \
+		--models fc_small,conv_a --tpus 2 --drift fc_small \
+		--csv > $(SMOKE_OUT)/calibrate_b.csv
+	diff $(SMOKE_OUT)/calibrate_a.csv $(SMOKE_OUT)/calibrate_b.csv
+	grep -q "recalibrate" $(SMOKE_OUT)/calibrate_a.csv
+	# the same seed without injected drift must keep an empty ledger
+	$(CARGO) run --release --bin repro -- calibrate --seed 11 \
+		--models fc_small,conv_a --tpus 2 \
+		--csv > $(SMOKE_OUT)/calibrate_quiet.csv
+	! grep -q "recalibrate" $(SMOKE_OUT)/calibrate_quiet.csv
+	# loadgen --calibrate appends after byte-identical normal output
+	$(CARGO) run --release --bin repro -- loadgen --seed 9 \
+		--models fc_small --tpus 1 --requests 120 \
+		--csv > $(SMOKE_OUT)/calibrate_lg_off.csv
+	$(CARGO) run --release --bin repro -- loadgen --seed 9 \
+		--models fc_small --tpus 1 --requests 120 \
+		--csv --calibrate > $(SMOKE_OUT)/calibrate_lg_on.csv
+	head -n $$(wc -l < $(SMOKE_OUT)/calibrate_lg_off.csv) \
+		$(SMOKE_OUT)/calibrate_lg_on.csv \
+		| diff $(SMOKE_OUT)/calibrate_lg_off.csv -
+	grep -q "observed_p99_ms" $(SMOKE_OUT)/calibrate_lg_on.csv
 
 # ---- CI bench pipeline (DESIGN.md §11)
 

@@ -88,5 +88,45 @@ fn main() {
         });
     }
 
+    // online calibration: the detector arithmetic alone (per-window cost
+    // of the live calibrate_tick, minus the re-plan), and the full
+    // closed-loop simulation including the drift-triggered re-plans
+    {
+        use tpu_pipeline::scheduler::{CalibrateConfig, CalibrateScenario, Calibrator};
+
+        b.bench("calibrate/end_window_m4", || {
+            let mut cal = Calibrator::new(CalibrateConfig::default());
+            for w in 0..4u64 {
+                for name in ["fc_small", "fc_big", "conv_a", "conv_b"] {
+                    for i in 0..64u64 {
+                        // seeded spread across histogram buckets
+                        let lat = 1e-3 * (1.0 + ((w * 64 + i) % 7) as f64 * 0.1);
+                        cal.observe(name, black_box(lat));
+                    }
+                }
+                black_box(cal.end_window());
+            }
+            cal.window()
+        });
+
+        let reg = registry(2);
+        let alloc = AllocatorConfig { total_tpus: 4, ..Default::default() };
+        let mut drifting = CalibrateScenario::new(11);
+        drifting.drifted = vec!["fc_small".to_string()];
+        for (label, scenario) in
+            [("steady", CalibrateScenario::new(11)), ("drift", drifting)]
+        {
+            b.bench(&format!("calibrate/sim_{label}_m2_n4"), || {
+                tpu_pipeline::scheduler::simulate_calibration(
+                    black_box(&reg),
+                    &cfg,
+                    &alloc,
+                    &scenario,
+                )
+                .unwrap()
+            });
+        }
+    }
+
     b.report("scheduler");
 }

@@ -13,7 +13,7 @@
 use anyhow::Result;
 use tpu_pipeline::config::SystemConfig;
 use tpu_pipeline::scheduler::{
-    resolve_model, AllocatorConfig, BackendKind, ModelRegistry, OpenOptions, ServingPool,
+    resolve_model, AllocatorConfig, BackendKind, DeployOptions, ModelRegistry, ServingPool,
     Tenant,
 };
 use tpu_pipeline::serving;
@@ -28,7 +28,7 @@ fn main() -> Result<()> {
         SystemConfig::default(),
         AllocatorConfig { total_tpus: 4, replicate_leftover: false, ..Default::default() },
         BackendKind::Synthetic,
-        OpenOptions::default(),
+        DeployOptions::default(),
     )?;
     println!("deployed open-loop pool: {:?}", pool.names());
 

@@ -23,7 +23,8 @@
 use anyhow::Result;
 use tpu_pipeline::config::SystemConfig;
 use tpu_pipeline::scheduler::{
-    allocate, plan_table, AllocatorConfig, BackendKind, ModelRegistry, PoolRouter, Tenant,
+    allocate, plan_table, AllocatorConfig, BackendKind, DeployOptions, ModelRegistry, PoolRouter,
+    Tenant,
 };
 use tpu_pipeline::serving;
 use tpu_pipeline::util::fmt_seconds;
@@ -67,7 +68,13 @@ fn run_pool(
     print!("{}", plan_table(&plan).render());
     assert!(!plan.assignments.is_empty(), "nothing admitted");
 
-    let router = PoolRouter::deploy(&plan, registry, cfg, &BackendKind::Synthetic, 64)?;
+    let router = PoolRouter::deploy(
+        &plan,
+        registry,
+        cfg,
+        &BackendKind::Synthetic,
+        DeployOptions::new().with_queue_capacity(64),
+    )?;
     let reports = serving::serve_pool(&router, batch, 0xFEED, true)?;
 
     println!("served {} tenant(s) x {batch} interleaved requests:", reports.len());

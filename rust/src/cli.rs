@@ -402,6 +402,7 @@ pub fn run(args: &Args) -> Result<String> {
         "loadgen" => loadgen(args)?,
         "dataplane" => dataplane(args)?,
         "chaos" => chaos(args)?,
+        "calibrate" => calibrate(args)?,
         "trace" => trace_cmd(args)?,
         "" | "help" | "--help" => USAGE.to_string(),
         other => anyhow::bail!("unknown command {other:?}\n{USAGE}"),
@@ -487,21 +488,36 @@ pub fn pool_spec(
         }
     };
     let quantum_us = args.f64_flag("quantum-us", 0.0)?;
+    anyhow::ensure!(
+        quantum_us.is_finite(),
+        "--quantum-us must be a finite number of microseconds (got {quantum_us})"
+    );
     anyhow::ensure!(quantum_us >= 0.0, "--quantum-us must be non-negative");
-    let alloc = AllocatorConfig {
-        total_tpus: args.usize_flag("tpus", 4)?,
-        batch: args.batch()?,
-        max_tpus_per_model: args.usize_flag("max-tpus-per-model", 4)?,
-        allow_host_spill: args.bool_flag("allow-spill"),
-        replicate_leftover: !args.bool_flag("no-replicas"),
-        allow_sharing: args.bool_flag("allow-sharing"),
-        switch_cost_us,
-        max_residents: args.usize_flag("max-residents", 2)?,
-        quantum_us,
-        cache_budget_bytes: args.u64_flag("cache-budget-bytes", 0)?,
-        prefetch: args.bool_flag("prefetch"),
-        dead_devices: Vec::new(),
-    };
+    if let Some(v) = args.flags.get("cache-budget-bytes") {
+        anyhow::ensure!(
+            !v.trim().starts_with('-'),
+            "--cache-budget-bytes must be non-negative (got {v})"
+        );
+    }
+    // one validated construction path for every planner-facing command
+    // (schedule / serve-pool / loadgen / dataplane / chaos / calibrate):
+    // the builder re-checks the cross-knob invariants the per-flag guards
+    // above cannot see (e.g. sharing needs max_residents >= 2)
+    let mut b = AllocatorConfig::builder()
+        .total_tpus(args.usize_flag("tpus", 4)?)
+        .batch(args.batch()?)
+        .max_tpus_per_model(args.usize_flag("max-tpus-per-model", 4)?)
+        .allow_host_spill(args.bool_flag("allow-spill"))
+        .replicate_leftover(!args.bool_flag("no-replicas"))
+        .allow_sharing(args.bool_flag("allow-sharing"))
+        .max_residents(args.usize_flag("max-residents", 2)?)
+        .quantum_us(quantum_us)
+        .cache_budget_bytes(args.u64_flag("cache-budget-bytes", 0)?)
+        .prefetch(args.bool_flag("prefetch"));
+    if let Some(us) = switch_cost_us {
+        b = b.switch_cost_us(us);
+    }
+    let alloc = b.build()?;
     Ok((registry, alloc))
 }
 
@@ -931,6 +947,11 @@ pub fn loadgen(args: &Args) -> Result<String> {
     if !args.csv() {
         out.push_str(&loadgen_summary(&plan));
     }
+    // --calibrate appends the calibration report *after* the unchanged
+    // loadgen output, so flag-off runs stay byte-identical
+    if let Some(report) = loadgen_calibration(args, &registry, &cfg, &alloc, &spec)? {
+        out.push_str(&report);
+    }
     Ok(out)
 }
 
@@ -956,7 +977,7 @@ pub fn dataplane(args: &Args) -> Result<String> {
     use crate::coordinator::batcher::BatchPolicy;
     use crate::metrics::DataPlaneSnapshot;
     use crate::obs::{metric_line_from, MetricSource, TraceFile, Tracer};
-    use crate::scheduler::{allocate, BackendKind, OpenOptions, PoolRouter, ServingPool};
+    use crate::scheduler::{allocate, BackendKind, DeployOptions, PoolRouter, ServingPool};
     use crate::util::json::Json;
     use std::sync::Arc;
 
@@ -1025,14 +1046,12 @@ pub fn dataplane(args: &Args) -> Result<String> {
 
     // ---- phase 1: closed batches through the per-model router
     let plan = allocate(&registry, &cfg, &alloc)?;
-    let router = PoolRouter::deploy_traced(
-        &plan,
-        &registry,
-        &cfg,
-        &BackendKind::Synthetic,
-        64,
-        tracer.clone(),
-    )?;
+    let mut router_opts = DeployOptions::new().with_queue_capacity(64);
+    if let Some(t) = tracer.clone() {
+        router_opts = router_opts.with_tracer(t);
+    }
+    let router =
+        PoolRouter::deploy(&plan, &registry, &cfg, &BackendKind::Synthetic, router_opts)?;
     router.wait_ready()?;
     for name in router.names() {
         let tenant = router.tenant(&name).expect("deployed tenant");
@@ -1066,7 +1085,7 @@ pub fn dataplane(args: &Args) -> Result<String> {
         cfg,
         alloc,
         BackendKind::Synthetic,
-        OpenOptions {
+        DeployOptions {
             policy: BatchPolicy {
                 max_batch: args.usize_flag("max-batch", 8)?,
                 max_wait: std::time::Duration::from_micros(500),
@@ -1268,7 +1287,7 @@ pub fn chaos(args: &Args) -> Result<String> {
 fn chaos_live(args: &Args, cfg: &SystemConfig) -> Result<String> {
     use crate::coordinator::HedgeConfig;
     use crate::obs::{metric_line_from, MetricSource, TraceFile, Tracer};
-    use crate::scheduler::{Admission, BackendKind, OpenOptions, ServingPool};
+    use crate::scheduler::{Admission, BackendKind, DeployOptions, ServingPool};
     use crate::util::json::Json;
     use crate::workload::faults::priority_tier;
     use std::sync::Arc;
@@ -1304,11 +1323,12 @@ fn chaos_live(args: &Args, cfg: &SystemConfig) -> Result<String> {
         cfg.clone(),
         alloc.clone(),
         BackendKind::Synthetic,
-        OpenOptions {
+        DeployOptions {
             policy: spec.policy,
             queue_capacity,
             tracer: tracer.clone(),
             hedge: Some(HedgeConfig { p99_factor: 2.0, min_samples: 4 }),
+            calibrate: None,
         },
     )?;
     let mut out = String::from("\nchaos live (synthetic backend):\n");
@@ -1516,6 +1536,166 @@ fn chaos_live(args: &Args, cfg: &SystemConfig) -> Result<String> {
     }
 }
 
+/// Parse the calibration-scenario flags — `--windows`,
+/// `--window-requests`, `--drift MODEL[,MODEL..]`, `--drift-onset`,
+/// `--drift-threshold`, `--sustain-windows`, `--cooldown-windows`,
+/// `--min-samples` — on top of a default scenario.  Shared by
+/// `repro calibrate` and `repro loadgen --calibrate`, so both harnesses
+/// accept the same grammar.
+pub fn calibrate_scenario(
+    args: &Args,
+    registry: &crate::scheduler::ModelRegistry,
+    seed: u64,
+) -> Result<crate::scheduler::CalibrateScenario> {
+    use crate::scheduler::CalibrateScenario;
+
+    let mut sc = CalibrateScenario::new(seed);
+    sc.windows = args.usize_flag("windows", sc.windows)?;
+    anyhow::ensure!(sc.windows >= 1, "--windows must be at least 1");
+    sc.requests_per_window = args.usize_flag("window-requests", sc.requests_per_window)?;
+    anyhow::ensure!(sc.requests_per_window >= 1, "--window-requests must be at least 1");
+    sc.drift_onset_window = args.usize_flag("drift-onset", sc.drift_onset_window)?;
+    if let Some(spec) = args.flags.get("drift") {
+        for name in spec.split(',').map(str::trim).filter(|n| !n.is_empty()) {
+            anyhow::ensure!(
+                registry.get(name).is_ok(),
+                "--drift names unregistered model {name:?}"
+            );
+            sc.drifted.push(name.to_string());
+        }
+        anyhow::ensure!(!sc.drifted.is_empty(), "--drift must name at least one model");
+    }
+    sc.calibrate.drift_threshold =
+        args.f64_flag("drift-threshold", sc.calibrate.drift_threshold)?;
+    sc.calibrate.sustain_windows =
+        args.usize_flag("sustain-windows", sc.calibrate.sustain_windows as usize)? as u32;
+    sc.calibrate.cooldown_windows =
+        args.usize_flag("cooldown-windows", sc.calibrate.cooldown_windows as usize)? as u32;
+    sc.calibrate.min_samples = args.u64_flag("min-samples", sc.calibrate.min_samples)?;
+    sc.calibrate.validate()?;
+    Ok(sc)
+}
+
+/// Render a calibration run as the `repro calibrate` report table: one
+/// row per (window, tenant) with predicted vs observed p99, the measured
+/// drift, and the action the detector took.
+pub fn calibration_table(run: &crate::scheduler::CalibrationRun) -> Table {
+    let windows = run.rows.last().map(|r| r.window + 1).unwrap_or(0);
+    let mut t = Table::new(
+        format!(
+            "Online calibration — {windows} window(s), {} re-plan(s)",
+            run.ledger.len()
+        ),
+        &[
+            "window", "model", "samples", "predicted_p99_ms", "observed_p99_ms",
+            "drift_pct", "action",
+        ],
+    );
+    for r in &run.rows {
+        t.row(vec![
+            r.window.to_string(),
+            r.model.clone(),
+            r.samples.to_string(),
+            format!("{:.3}", r.predicted_p99_s * 1e3),
+            format!("{:.3}", r.observed_p99_s * 1e3),
+            format!("{:+.1}", r.drift * 100.0),
+            r.action.clone(),
+        ]);
+    }
+    t
+}
+
+/// The human-mode tail of the calibration report: the re-plan ledger
+/// (every drift-triggered recalibration, in firing order) plus the final
+/// cost model for tenants whose scale moved off 1.0.
+pub fn calibration_summary(run: &crate::scheduler::CalibrationRun) -> String {
+    let mut s = String::new();
+    if run.ledger.is_empty() {
+        s.push_str("\nre-plan ledger: empty (no sustained drift)\n");
+    } else {
+        s.push_str(&format!("\nre-plan ledger ({} entries):\n", run.ledger.len()));
+        for r in &run.ledger {
+            s.push_str(&format!(
+                "  window {:>2}  {:12} drift {:+.1}% -> cost_scale x{:.2} (re-plan)\n",
+                r.window,
+                r.tenant,
+                r.drift * 100.0,
+                r.scale,
+            ));
+        }
+        s.push_str("final cost model:\n");
+        for (name, scale) in &run.final_scales {
+            if *scale != 1.0 {
+                let p99 = run
+                    .final_plan
+                    .assignment(name)
+                    .map(|a| format!("{:.3} ms", a.effective_p99_s * 1e3))
+                    .unwrap_or_else(|| "-".to_string());
+                s.push_str(&format!(
+                    "  {name:12} x{scale:.2} (re-planned predicted p99 {p99})\n"
+                ));
+            }
+        }
+    }
+    s
+}
+
+/// `repro calibrate`: close the profiling loop, deterministically — drive
+/// the seeded multi-window calibration simulation (DESIGN.md §16) over the
+/// scheduled pool, with the hidden true cost of `--drift` tenants jumping
+/// by a seeded factor at `--drift-onset`.  The calibrator measures
+/// predicted-vs-observed p99 per window, rewrites drifting tenants' cost
+/// models, and re-plans; the report shows every window's drift and the
+/// re-plan ledger.  Pure function of the seed: `--csv` output is
+/// byte-identical across runs (`make smoke-calibrate` diffs it).
+pub fn calibrate(args: &Args) -> Result<String> {
+    use crate::scheduler::{calibration_csv, simulate_calibration};
+
+    let cfg = args.config()?;
+    let (registry, alloc) = pool_spec(args, "fc_big,fc_small")?;
+    let scenario = calibrate_scenario(args, &registry, args.u64_flag("seed", 7)?)?;
+    let run = simulate_calibration(&registry, &cfg, &alloc, &scenario)?;
+    if args.csv() {
+        return Ok(calibration_csv(&run));
+    }
+    let mut out = calibration_table(&run).render();
+    out.push_str(&calibration_summary(&run));
+    Ok(out)
+}
+
+/// The `--calibrate` rider on `repro loadgen`: when the flag is present,
+/// run the calibration simulation over the *same* registry/plan inputs
+/// and seed as the loadgen tables and return the report to append (CSV in
+/// `--csv` mode, rendered table + ledger otherwise).  Returns `None`
+/// without the flag, keeping default loadgen output byte-identical.
+pub fn loadgen_calibration(
+    args: &Args,
+    registry: &crate::scheduler::ModelRegistry,
+    cfg: &SystemConfig,
+    alloc: &crate::scheduler::AllocatorConfig,
+    spec: &LoadgenSpec,
+) -> Result<Option<String>> {
+    use crate::scheduler::{calibration_csv, simulate_calibration};
+
+    if !args.bool_flag("calibrate") {
+        return Ok(None);
+    }
+    let mut scenario = calibrate_scenario(args, registry, spec.seed)?;
+    scenario.policy = spec.policy;
+    if let Some(l) = spec.loads.first() {
+        scenario.arrivals = l.arrivals.clone();
+    }
+    let run = simulate_calibration(registry, cfg, alloc, &scenario)?;
+    Ok(Some(if args.csv() {
+        calibration_csv(&run)
+    } else {
+        let mut s = String::from("\n");
+        s.push_str(&calibration_table(&run).render());
+        s.push_str(&calibration_summary(&run));
+        s
+    }))
+}
+
 /// `repro trace`: load a `--trace-out` file and render it as an ASCII
 /// Gantt (one row per track; Perfetto-grade inspection stays available by
 /// opening the same file in <https://ui.perfetto.dev>).
@@ -1685,6 +1865,9 @@ open-loop load generation (seeded, bit-reproducible):
               the CSV (open in https://ui.perfetto.dev or `repro trace`)
           [--metrics-out FILE]  save per-tenant metric snapshots as JSONL
               (streaming-histogram percentiles; byte-identical per seed)
+          [--calibrate]  append the deterministic calibration report
+              (same grammar as `repro calibrate`, same seed as the run);
+              without the flag, output is byte-identical to before
         prints the deterministic per-tenant table (offered rate, replica
         fan-out, grant kind, batch + flush-reason + swap counts,
         p50/p99/mean latency, throughput) from the seeded open-loop
@@ -1728,6 +1911,29 @@ chaos & failure testing (DESIGN.md §14; `make smoke-chaos` runs this):
             the chaos/faults track with one span per device kill
         [--metrics-out FILE]  (--live) end-of-run snapshots as JSONL
             (hedges, shed, device_kills ride the metric schema)
+
+online cost-model calibration (DESIGN.md §16; `make smoke-calibrate`):
+  calibrate --models fc_big,fc_small --tpus 4 --seed 7
+        [--windows 6] [--window-requests 120]   calibration windows and
+            requests offered to every tenant per window
+        [--drift MODEL[,MODEL..]] [--drift-onset 2]   from window
+            --drift-onset on, the named tenants' hidden true cost jumps
+            by a seeded factor (1.8x..2.5x) the profile does not know
+        [--drift-threshold 0.5] [--sustain-windows 2]
+        [--cooldown-windows 3] [--min-samples 20]   detector knobs: fire
+            only after drift holds --sustain-windows windows, then hold
+            --cooldown-windows (flap guard; hysteresis keeps a borderline
+            tenant from resetting its streak)
+        [--csv]      CSV report only — byte-identical across runs of one
+            seed (the golden artifact `make smoke-calibrate` diffs)
+        accepts the pool flags of `schedule` (--weights, --slo-ms,
+        --allow-sharing, ...).  Simulates the closed profiling loop:
+        per window, predicted-vs-observed p99 per tenant; on sustained
+        drift the calibrator rewrites that tenant's cost model
+        (cost_scale) and re-plans the pool.  The report shows every
+        window's drift, the re-plan ledger, and the final cost model.
+        The same loop runs live inside a ServingPool deployed with
+        DeployOptions::with_calibration (calibrate_tick / ticker thread)
 
 observability (DESIGN.md §13):
   trace --in FILE [--width 100]
@@ -2152,5 +2358,74 @@ mod tests {
             assert_eq!(doc.get("requests").and_then(Json::as_u64), Some(60));
             assert!(doc.get("p99_s").and_then(Json::as_f64).unwrap() > 0.0);
         }
+    }
+
+    #[test]
+    fn calibrate_csv_is_bit_identical_and_drift_recalibrates() {
+        let a = Args::parse(&argv(
+            "calibrate --models fc_small,conv_a --tpus 2 --seed 11 --drift fc_small --csv",
+        ))
+        .unwrap();
+        let first = run(&a).unwrap();
+        assert_eq!(first, run(&a).unwrap(), "calibrate CSV must be byte-identical per seed");
+        assert!(
+            first.starts_with(
+                "window,model,samples,predicted_p99_ms,observed_p99_ms,drift_pct,action\n"
+            ),
+            "{first}"
+        );
+        assert!(first.contains("baseline"), "{first}");
+        assert!(first.contains("recalibrate"), "sustained drift must fire: {first}");
+
+        // naming an unregistered model is a flag error, not a silent no-op
+        let bad =
+            Args::parse(&argv("calibrate --models fc_small --tpus 1 --drift ghost")).unwrap();
+        let err = run(&bad).unwrap_err().to_string();
+        assert!(err.contains("unregistered model"), "{err}");
+    }
+
+    #[test]
+    fn calibrate_without_drift_keeps_an_empty_ledger() {
+        let a = Args::parse(&argv("calibrate --models fc_small,conv_a --tpus 2 --seed 11"))
+            .unwrap();
+        let out = run(&a).unwrap();
+        assert_eq!(out, run(&a).unwrap(), "calibrate report must be seed-stable");
+        assert!(out.contains("re-plan ledger: empty"), "{out}");
+        assert!(!out.contains("recalibrate"), "{out}");
+    }
+
+    #[test]
+    fn loadgen_calibrate_appends_report_after_unchanged_output() {
+        let plain = Args::parse(&argv(
+            "loadgen --models fc_small --tpus 1 --seed 9 --requests 80 --csv",
+        ))
+        .unwrap();
+        let base = run(&plain).unwrap();
+        let a = Args::parse(&argv(
+            "loadgen --models fc_small --tpus 1 --seed 9 --requests 80 --csv --calibrate",
+        ))
+        .unwrap();
+        let first = run(&a).unwrap();
+        assert_eq!(first, run(&a).unwrap(), "--calibrate CSV must be byte-identical per seed");
+        assert!(
+            first.starts_with(&base),
+            "--calibrate must append after the unchanged loadgen output"
+        );
+        assert!(first.len() > base.len(), "--calibrate must actually append a report");
+        assert!(first.contains("window,model,samples"), "{first}");
+    }
+
+    #[test]
+    fn pool_flag_validation_pins_quantum_and_cache_messages() {
+        let a = Args::parse(&argv("schedule --models fc_small --quantum-us nan")).unwrap();
+        let err = run(&a).unwrap_err().to_string();
+        assert!(
+            err.contains("--quantum-us must be a finite number of microseconds"),
+            "{err}"
+        );
+        let b =
+            Args::parse(&argv("schedule --models fc_small --cache-budget-bytes=-5")).unwrap();
+        let err = run(&b).unwrap_err().to_string();
+        assert!(err.contains("--cache-budget-bytes must be non-negative"), "{err}");
     }
 }

@@ -113,7 +113,7 @@ fn cmd_serve_pool(args: &Args) -> Result<()> {
     use std::sync::Arc;
     use tpu_pipeline::obs::{metric_line_from, MetricSource, TraceFile, Tracer};
     use tpu_pipeline::report;
-    use tpu_pipeline::scheduler::{allocate, plan_table, BackendKind, PoolRouter};
+    use tpu_pipeline::scheduler::{allocate, plan_table, BackendKind, DeployOptions, PoolRouter};
     use tpu_pipeline::util::json::Json;
 
     let cfg = args.config()?;
@@ -126,14 +126,11 @@ fn cmd_serve_pool(args: &Args) -> Result<()> {
 
     let tracer: Option<Arc<Tracer>> =
         args.flags.contains_key("trace-out").then(|| Arc::new(Tracer::new()));
-    let router = PoolRouter::deploy_traced(
-        &plan,
-        &registry,
-        &cfg,
-        &BackendKind::Synthetic,
-        64,
-        tracer.clone(),
-    )?;
+    let mut opts = DeployOptions::new().with_queue_capacity(64);
+    if let Some(t) = tracer.clone() {
+        opts = opts.with_tracer(t);
+    }
+    let router = PoolRouter::deploy(&plan, &registry, &cfg, &BackendKind::Synthetic, opts)?;
     let reports = serving::serve_pool(&router, batch, 0xC0FFEE, true)?;
     println!("\nserved {} tenant(s) x {batch} requests concurrently:", reports.len());
     for r in &reports {
@@ -204,7 +201,7 @@ fn churn_flag(args: &Args, key: &str) -> Result<Option<(String, f64)>> {
 /// mid-run to exercise online re-planning with drain.
 fn cmd_loadgen(args: &Args) -> Result<()> {
     use tpu_pipeline::scheduler::{
-        resolve_model, BackendKind, OpenOptions, ServingPool, Tenant,
+        resolve_model, BackendKind, DeployOptions, ServingPool, Tenant,
     };
     use tpu_pipeline::util::fmt_seconds;
     use tpu_pipeline::workload::TenantLoad;
@@ -220,12 +217,21 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
     // before any live serving (and in --csv mode too): two runs of one
     // seed produce byte-identical files — `make smoke-trace` diffs them
     cli::write_loadgen_exports(args, &obs)?;
+    // --calibrate appends the deterministic calibration report after the
+    // unchanged loadgen output (flag off: byte-identical to before)
+    let calibration = cli::loadgen_calibration(args, &registry, &cfg, &alloc, &spec)?;
     if args.csv() {
         print!("{}", table.csv());
+        if let Some(report) = calibration {
+            print!("{report}");
+        }
         return Ok(());
     }
     print!("{}", table.render());
     print!("{}", cli::loadgen_summary(&plan));
+    if let Some(report) = calibration {
+        print!("{report}");
+    }
     if args.bool_flag("no-live") {
         return Ok(());
     }
@@ -256,7 +262,7 @@ fn cmd_loadgen(args: &Args) -> Result<()> {
         cfg,
         alloc,
         BackendKind::Synthetic,
-        OpenOptions { policy: spec.policy, queue_capacity: 64, ..Default::default() },
+        DeployOptions { policy: spec.policy, queue_capacity: 64, ..Default::default() },
     )?;
     println!("\nlive open-loop run (synthetic backend, bit-exact verification):");
 

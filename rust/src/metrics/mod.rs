@@ -228,6 +228,7 @@ struct TenantCounters {
     prefetches: u64,
     hedges: u64,
     shed: u64,
+    drift: f64,
 }
 
 impl TenantMetrics {
@@ -326,6 +327,22 @@ impl TenantMetrics {
         self.bump();
     }
 
+    /// Publish the calibrator's latest predicted-vs-observed p99 drift
+    /// for this tenant — a gauge, overwritten at every calibration
+    /// window (`scheduler::calibrate`), not an accumulating counter.
+    pub fn record_drift(&self, drift: f64) {
+        self.extra.lock().unwrap().drift = drift;
+        self.bump();
+    }
+
+    /// Clone of the tenant's lifetime *simulated*-latency histogram.  The
+    /// online calibrator diffs successive clones (`delta_since`) to build
+    /// its windowed view of recent behavior, so the hot recording path
+    /// needs no extra per-window state.
+    pub fn sim_latency_hist(&self) -> LatencyHistogram {
+        self.core.inner.lock().unwrap().sim_latency.clone()
+    }
+
     /// Take an immutable snapshot of every counter, consistent across the
     /// two lock domains: optimistic generation-checked reads first, then
     /// a fallback that holds both locks at once (which blocks every
@@ -369,6 +386,7 @@ impl TenantMetrics {
             prefetches: e.prefetches,
             hedges: e.hedges,
             shed: e.shed,
+            drift: e.drift,
             real_p50_s: c.real_p50_s,
             real_p99_s: c.real_p99_s,
             real_p999_s: c.real_p999_s,
@@ -412,6 +430,11 @@ impl MetricSource for TenantMetrics {
             fields.push(("cache_hits", uint(s.cache_hits)));
             fields.push(("cache_misses", uint(s.cache_misses)));
             fields.push(("prefetches", uint(s.prefetches)));
+        }
+        // the drift gauge only moves when online calibration is enabled;
+        // omit it at rest so calibration-off exports stay byte-identical
+        if s.drift != 0.0 {
+            fields.push(("drift", num(s.drift)));
         }
         obj(fields)
     }
@@ -458,6 +481,9 @@ pub struct TenantSnapshot {
     pub hedges: u64,
     /// Requests turned away by priority-tiered load shedding.
     pub shed: u64,
+    /// Latest calibration-window p99 drift (observed/expected − 1); 0
+    /// until the online calibrator publishes a window for this tenant.
+    pub drift: f64,
     /// Real wall-clock latency p50 (seconds).
     pub real_p50_s: f64,
     /// Real wall-clock latency p99 (seconds).
@@ -626,6 +652,7 @@ struct SchedulerInner {
     replans: u64,
     drained_deployments: u64,
     device_kills: u64,
+    replans_calibration: u64,
 }
 
 impl SchedulerMetrics {
@@ -673,6 +700,13 @@ impl SchedulerMetrics {
         self.inner.lock().unwrap().device_kills += 1;
     }
 
+    /// Count `n` tenants recalibrated by a drift-triggered re-plan (the
+    /// online calibrator's write-back path; the re-plan itself is also
+    /// counted in `replans` by the caller).
+    pub fn record_replan_calibration(&self, n: u64) {
+        self.inner.lock().unwrap().replans_calibration += n;
+    }
+
     /// Take an immutable snapshot of every counter.
     pub fn snapshot(&self) -> SchedulerSnapshot {
         let g = self.inner.lock().unwrap();
@@ -688,6 +722,7 @@ impl SchedulerMetrics {
             replans: g.replans,
             drained_deployments: g.drained_deployments,
             device_kills: g.device_kills,
+            replans_calibration: g.replans_calibration,
         }
     }
 }
@@ -699,7 +734,7 @@ impl MetricSource for SchedulerMetrics {
 
     fn metric_json(&self) -> Json {
         let s = self.snapshot();
-        obj(vec![
+        let mut fields = vec![
             ("registered", uint(s.registered)),
             ("admitted", uint(s.admitted)),
             ("shared", uint(s.shared)),
@@ -711,7 +746,13 @@ impl MetricSource for SchedulerMetrics {
             ("replans", uint(s.replans)),
             ("drained_deployments", uint(s.drained_deployments)),
             ("device_kills", uint(s.device_kills)),
-        ])
+        ];
+        // only calibration-enabled pools ever move this counter; omit it
+        // at zero so calibration-off exports stay byte-identical
+        if s.replans_calibration > 0 {
+            fields.push(("replans_calibration", uint(s.replans_calibration)));
+        }
+        obj(fields)
     }
 }
 
@@ -740,6 +781,8 @@ pub struct SchedulerSnapshot {
     pub drained_deployments: u64,
     /// Device deaths the pool re-planned around (chaos or operator).
     pub device_kills: u64,
+    /// Tenants recalibrated by drift-triggered re-plans (also in `replans`).
+    pub replans_calibration: u64,
 }
 
 #[cfg(test)]
@@ -795,6 +838,16 @@ mod tests {
         m.record_replan(2);
         m.record_replan(0);
         m.record_device_kill();
+        // calibration-off pools never move the counter: it stays out of
+        // the export entirely (pinned metric lines keep their bytes)
+        assert!(!crate::obs::metric_line(&m, "pool").contains("replans_calibration"));
+        m.record_replan_calibration(1);
+        let s = m.snapshot();
+        assert_eq!(s.replans_calibration, 1);
+        assert!(
+            crate::obs::metric_line(&m, "pool").contains("\"replans_calibration\":1"),
+            "non-zero calibration re-plans must export"
+        );
         let s = m.snapshot();
         assert_eq!(s.registered, 5);
         assert_eq!(s.admitted, 3);
@@ -870,6 +923,37 @@ mod tests {
         assert!(line.contains("\"cache_hits\":1"), "{line}");
         assert!(line.contains("\"cache_misses\":2"), "{line}");
         assert!(line.contains("\"prefetches\":1"), "{line}");
+    }
+
+    #[test]
+    fn tenant_drift_gauge_overwrites_and_gates_the_export() {
+        let m = TenantMetrics::default();
+        // calibration-off runs never record drift: the field stays out of
+        // the JSON export, keeping today's metric lines byte-identical
+        let off = crate::obs::metric_line(&m, "fc_small");
+        assert!(!off.contains("drift"), "{off}");
+        m.record_drift(0.42);
+        m.record_drift(0.17); // a gauge: the newer window overwrites
+        let s = m.snapshot();
+        assert!((s.drift - 0.17).abs() < 1e-12, "{s:?}");
+        let line = crate::obs::metric_line(&m, "fc_small");
+        assert!(line.contains("\"drift\":0.17"), "{line}");
+    }
+
+    #[test]
+    fn tenant_sim_latency_hist_is_cloneable_and_diffable() {
+        let m = TenantMetrics::default();
+        m.record_response(1e-3, 2e-3);
+        m.record_response(1e-3, 2e-3);
+        let early = m.sim_latency_hist();
+        assert_eq!(early.count(), 2);
+        for _ in 0..10 {
+            m.record_response(1e-3, 8e-3);
+        }
+        let late = m.sim_latency_hist();
+        let delta = late.delta_since(&early);
+        assert_eq!(delta.count(), 10, "delta must cover only the new window");
+        assert!(delta.percentile(99.0) > 4e-3, "window p99 reflects recent samples only");
     }
 
     #[test]

@@ -39,6 +39,9 @@ pub enum SpanKind {
     /// A parameter-cache prefetch overlapping the tail of the previous
     /// quantum (recorded on the tenant's [`CACHE_TRACK`]).
     Prefetch,
+    /// A drift-triggered online recalibration: cost-model write-back plus
+    /// the re-plan that followed, recorded on the chaos/control track.
+    Recalibrate,
 }
 
 impl SpanKind {
@@ -53,6 +56,7 @@ impl SpanKind {
             SpanKind::Response => "response",
             SpanKind::Fault => "fault",
             SpanKind::Prefetch => "prefetch",
+            SpanKind::Recalibrate => "recalibrate",
         }
     }
 
@@ -67,6 +71,7 @@ impl SpanKind {
             "response" => SpanKind::Response,
             "fault" => SpanKind::Fault,
             "prefetch" => SpanKind::Prefetch,
+            "recalibrate" => SpanKind::Recalibrate,
             _ => return None,
         })
     }
@@ -81,6 +86,7 @@ impl SpanKind {
             SpanKind::Response => 5,
             SpanKind::Fault => 6,
             SpanKind::Prefetch => 7,
+            SpanKind::Recalibrate => 8,
         }
     }
 
@@ -93,6 +99,7 @@ impl SpanKind {
             4 => SpanKind::Swap,
             6 => SpanKind::Fault,
             7 => SpanKind::Prefetch,
+            8 => SpanKind::Recalibrate,
             _ => SpanKind::Response,
         }
     }
@@ -407,6 +414,7 @@ mod tests {
             SpanKind::Response,
             SpanKind::Fault,
             SpanKind::Prefetch,
+            SpanKind::Recalibrate,
         ] {
             assert_eq!(SpanKind::from_label(k.label()), Some(k));
             assert_eq!(SpanKind::from_code(k.code()), k);

@@ -139,6 +139,150 @@ impl Default for AllocatorConfig {
     }
 }
 
+impl AllocatorConfig {
+    /// Typed builder over the planner knobs, starting from the defaults;
+    /// [`AllocatorConfigBuilder::build`] runs [`AllocatorConfig::validate`]
+    /// so an invalid knob combination never escapes construction.
+    pub fn builder() -> AllocatorConfigBuilder {
+        AllocatorConfigBuilder::default()
+    }
+
+    /// Validate every knob in one place.  [`allocate`] calls this on
+    /// entry, so struct-literal configs keep working; programmatic
+    /// callers (the calibration loop re-invokes planning) should go
+    /// through [`AllocatorConfig::builder`], which validates eagerly.
+    /// The error strings are stable — CLI tests and operators match on
+    /// them.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(self.total_tpus >= 1, "pool needs at least one TPU");
+        anyhow::ensure!(self.batch >= 1, "profiling batch must be at least 1");
+        anyhow::ensure!(
+            !self.allow_sharing || self.max_residents >= 2,
+            "sharing needs max_residents >= 2"
+        );
+        anyhow::ensure!(
+            self.quantum_us.is_finite(),
+            "quantum must be a finite number of microseconds (got {})",
+            self.quantum_us
+        );
+        anyhow::ensure!(self.quantum_us >= 0.0, "quantum must be non-negative");
+        if let Some(us) = self.switch_cost_us {
+            anyhow::ensure!(
+                us.is_finite(),
+                "switch cost must be a finite number of microseconds (got {us})"
+            );
+            anyhow::ensure!(us >= 0.0, "switch cost must be non-negative (got {us})");
+        }
+        let mut dead = self.dead_devices.clone();
+        dead.sort_unstable();
+        dead.dedup();
+        for &d in &dead {
+            anyhow::ensure!(
+                d < self.total_tpus,
+                "dead device {d} out of range (pool has {} TPUs)",
+                self.total_tpus
+            );
+        }
+        anyhow::ensure!(
+            dead.len() < self.total_tpus,
+            "every pool device is dead ({} of {})",
+            dead.len(),
+            self.total_tpus
+        );
+        Ok(())
+    }
+}
+
+/// Builder for [`AllocatorConfig`]: one method per knob, validated on
+/// [`build`](AllocatorConfigBuilder::build).  This is the consolidated
+/// construction path the CLI flag group and the calibration loop share;
+/// plain struct literals stay supported for tests and embedders that
+/// already hold a known-valid config.
+#[derive(Debug, Clone, Default)]
+pub struct AllocatorConfigBuilder {
+    cfg: AllocatorConfig,
+}
+
+impl AllocatorConfigBuilder {
+    /// TPUs in the pool.
+    pub fn total_tpus(mut self, n: usize) -> Self {
+        self.cfg.total_tpus = n;
+        self
+    }
+
+    /// Profiling (and serving) batch size.
+    pub fn batch(mut self, n: usize) -> Self {
+        self.cfg.batch = n;
+        self
+    }
+
+    /// Per-model pipeline-depth ceiling.
+    pub fn max_tpus_per_model(mut self, n: usize) -> Self {
+        self.cfg.max_tpus_per_model = n;
+        self
+    }
+
+    /// Admit candidates that stream weights from host memory.
+    pub fn allow_host_spill(mut self, on: bool) -> Self {
+        self.cfg.allow_host_spill = on;
+        self
+    }
+
+    /// Hand leftover TPUs out as pipeline replicas.
+    pub fn replicate_leftover(mut self, on: bool) -> Self {
+        self.cfg.replicate_leftover = on;
+        self
+    }
+
+    /// Let the search grant time-multiplexed per-device slices.
+    pub fn allow_sharing(mut self, on: bool) -> Self {
+        self.cfg.allow_sharing = on;
+        self
+    }
+
+    /// Pin the per-swap context-switch cost (µs, whole pipeline).
+    pub fn switch_cost_us(mut self, us: f64) -> Self {
+        self.cfg.switch_cost_us = Some(us);
+        self
+    }
+
+    /// Maximum co-resident tenants per device.
+    pub fn max_residents(mut self, n: usize) -> Self {
+        self.cfg.max_residents = n;
+        self
+    }
+
+    /// Scheduling-quantum length for time-shared devices (µs).
+    pub fn quantum_us(mut self, us: f64) -> Self {
+        self.cfg.quantum_us = us;
+        self
+    }
+
+    /// Pool device ids currently out of service.
+    pub fn dead_devices(mut self, dead: Vec<usize>) -> Self {
+        self.cfg.dead_devices = dead;
+        self
+    }
+
+    /// Per-device host staging budget for the segment-parameter cache.
+    pub fn cache_budget_bytes(mut self, bytes: u64) -> Self {
+        self.cfg.cache_budget_bytes = bytes;
+        self
+    }
+
+    /// Overlap residual parameter loads with the previous quantum tail.
+    pub fn prefetch(mut self, on: bool) -> Self {
+        self.cfg.prefetch = on;
+        self
+    }
+
+    /// Validate and return the finished config.
+    pub fn build(self) -> Result<AllocatorConfig> {
+        self.cfg.validate()?;
+        Ok(self.cfg)
+    }
+}
+
 /// How an assignment occupies its TPUs — the abstraction that replaces
 /// the old implicit "whole devices only" invariant.
 #[derive(Debug, Clone, PartialEq)]
@@ -765,37 +909,11 @@ pub fn allocate(
     cfg: &SystemConfig,
     alloc: &AllocatorConfig,
 ) -> Result<PoolPlan> {
-    anyhow::ensure!(alloc.total_tpus >= 1, "pool needs at least one TPU");
-    anyhow::ensure!(alloc.batch >= 1, "profiling batch must be at least 1");
+    alloc.validate()?;
     anyhow::ensure!(!registry.is_empty(), "no models registered");
-    anyhow::ensure!(
-        !alloc.allow_sharing || alloc.max_residents >= 2,
-        "sharing needs max_residents >= 2"
-    );
-    anyhow::ensure!(alloc.quantum_us >= 0.0, "quantum must be non-negative");
-    if let Some(us) = alloc.switch_cost_us {
-        anyhow::ensure!(
-            us.is_finite(),
-            "switch cost must be a finite number of microseconds (got {us})"
-        );
-        anyhow::ensure!(us >= 0.0, "switch cost must be non-negative (got {us})");
-    }
     let mut dead = alloc.dead_devices.clone();
     dead.sort_unstable();
     dead.dedup();
-    for &d in &dead {
-        anyhow::ensure!(
-            d < alloc.total_tpus,
-            "dead device {d} out of range (pool has {} TPUs)",
-            alloc.total_tpus
-        );
-    }
-    anyhow::ensure!(
-        dead.len() < alloc.total_tpus,
-        "every pool device is dead ({} of {})",
-        dead.len(),
-        alloc.total_tpus
-    );
     let pool_desc = if dead.is_empty() {
         format!("{} total", alloc.total_tpus)
     } else {
@@ -812,7 +930,17 @@ pub fn allocate(
     let mut rejected = Vec::new();
     let mut searchable: Vec<(&Tenant, Vec<Candidate>)> = Vec::new();
     for t in tenants {
-        let cands = candidates_for(&t.model, cfg, alloc);
+        let mut cands = candidates_for(&t.model, cfg, alloc);
+        // online calibration rewrites a tenant's profiled cost model as
+        // a scale on its predicted latencies (observed/predicted); 1.0
+        // (the default) leaves candidates bit-identical, and a uniform
+        // positive scale preserves the best-p99-first order
+        if t.cost_scale != 1.0 {
+            for c in &mut cands {
+                c.p99_s *= t.cost_scale;
+                c.per_item_s *= t.cost_scale;
+            }
+        }
         if cands.is_empty() {
             let single = place(&t.model.layers, &cfg.device);
             rejected.push(Rejection {
@@ -1174,7 +1302,10 @@ fn grant_replicas(
             cfg,
             shard,
         );
-        a.effective_p99_s = re.p99_s;
+        // the re-simulated prediction carries the tenant's calibration
+        // scale, like the candidates did (x * 1.0 is exact, so the
+        // uncalibrated path stays bit-identical)
+        a.effective_p99_s = re.p99_s * tenant.cost_scale;
         if leftover == 0 {
             return;
         }
@@ -1953,5 +2084,112 @@ mod tests {
         let alloc = AllocatorConfig { batch: 0, ..Default::default() };
         let err = allocate(&reg, &cfg(), &alloc).unwrap_err();
         assert!(err.to_string().contains("batch"), "{err}");
+    }
+
+    #[test]
+    fn builder_matches_struct_literal_and_validates_eagerly() {
+        let built = AllocatorConfig::builder()
+            .total_tpus(3)
+            .batch(25)
+            .allow_sharing(true)
+            .max_residents(3)
+            .switch_cost_us(42.0)
+            .quantum_us(500.0)
+            .cache_budget_bytes(1 << 20)
+            .prefetch(true)
+            .build()
+            .unwrap();
+        assert_eq!(built.total_tpus, 3);
+        assert_eq!(built.batch, 25);
+        assert!(built.allow_sharing);
+        assert_eq!(built.max_residents, 3);
+        assert_eq!(built.switch_cost_us, Some(42.0));
+        assert_eq!(built.quantum_us, 500.0);
+        assert_eq!(built.cache_budget_bytes, 1 << 20);
+        assert!(built.prefetch);
+        // untouched knobs keep their defaults
+        assert!(built.replicate_leftover);
+        assert!(built.dead_devices.is_empty());
+        // invalid combinations die at build(), with allocate()'s messages
+        let err = AllocatorConfig::builder().total_tpus(0).build().unwrap_err();
+        assert!(err.to_string().contains("at least one TPU"), "{err}");
+        let err = AllocatorConfig::builder()
+            .allow_sharing(true)
+            .max_residents(1)
+            .build()
+            .unwrap_err();
+        assert!(err.to_string().contains("max_residents"), "{err}");
+        let err = AllocatorConfig::builder().quantum_us(f64::NAN).build().unwrap_err();
+        assert!(err.to_string().contains("finite"), "{err}");
+        let err = AllocatorConfig::builder().switch_cost_us(-1.0).build().unwrap_err();
+        assert!(err.to_string().contains("non-negative"), "{err}");
+    }
+
+    #[test]
+    fn validate_agrees_with_allocate_on_every_knob_error() {
+        // validate() is the single source of truth allocate() defers to:
+        // each invalid config must fail both, with the same message
+        let reg = registry(&["fc_small"]);
+        let bads = [
+            AllocatorConfig { total_tpus: 0, ..Default::default() },
+            AllocatorConfig { batch: 0, ..Default::default() },
+            AllocatorConfig { allow_sharing: true, max_residents: 1, ..Default::default() },
+            AllocatorConfig { quantum_us: -1.0, ..Default::default() },
+            AllocatorConfig { quantum_us: f64::INFINITY, ..Default::default() },
+            AllocatorConfig { switch_cost_us: Some(f64::NAN), ..Default::default() },
+            AllocatorConfig { dead_devices: vec![9], ..Default::default() },
+        ];
+        for bad in bads {
+            let v = bad.validate().unwrap_err().to_string();
+            let a = allocate(&reg, &cfg(), &bad).unwrap_err().to_string();
+            assert_eq!(v, a, "{bad:?}");
+        }
+        assert!(AllocatorConfig::default().validate().is_ok());
+    }
+
+    #[test]
+    fn cost_scale_rewrites_predictions_and_default_is_inert() {
+        let mut reg = ModelRegistry::new();
+        reg.register(Tenant::new("fc_small", fc_model(512))).unwrap();
+        let alloc = AllocatorConfig { total_tpus: 1, ..Default::default() };
+        let base = allocate(&reg, &cfg(), &alloc).unwrap();
+        // scale 1.0 (explicit) is bit-identical to the default path
+        let mut reg1 = ModelRegistry::new();
+        reg1.register(Tenant::new("fc_small", fc_model(512)).with_cost_scale(1.0)).unwrap();
+        let same = allocate(&reg1, &cfg(), &alloc).unwrap();
+        assert_eq!(
+            base.assignment("fc_small").unwrap().effective_p99_s,
+            same.assignment("fc_small").unwrap().effective_p99_s
+        );
+        assert_eq!(base.objective_s, same.objective_s);
+        // a 2x observed/predicted ratio doubles the prediction
+        let mut reg2 = ModelRegistry::new();
+        reg2.register(Tenant::new("fc_small", fc_model(512)).with_cost_scale(2.0)).unwrap();
+        let scaled = allocate(&reg2, &cfg(), &alloc).unwrap();
+        let b = base.assignment("fc_small").unwrap();
+        let s = scaled.assignment("fc_small").unwrap();
+        assert!((s.candidate.p99_s - 2.0 * b.candidate.p99_s).abs() < 1e-12, "{s:?}");
+        assert!((s.effective_p99_s - 2.0 * b.effective_p99_s).abs() < 1e-12, "{s:?}");
+    }
+
+    #[test]
+    fn cost_scale_flips_a_weighted_auction() {
+        // two equal-weight tenants tie for one 3-TPU slot; calibrating
+        // alpha's cost model up makes it the more expensive admission, so
+        // the auction flips to beta — the drift-triggered re-plan story
+        let mk = |alpha_scale: f64| {
+            let mut reg = ModelRegistry::new();
+            reg.register(
+                Tenant::new("alpha", fc_model(2580)).with_cost_scale(alpha_scale),
+            )
+            .unwrap();
+            reg.register(Tenant::new("beta", fc_model(2580))).unwrap();
+            let alloc = AllocatorConfig { total_tpus: 3, ..Default::default() };
+            allocate(&reg, &cfg(), &alloc).unwrap()
+        };
+        assert_eq!(mk(1.0).assignments[0].name, "alpha", "tie-break baseline");
+        let flipped = mk(3.0);
+        assert_eq!(flipped.assignments[0].name, "beta");
+        assert_eq!(flipped.queued[0].name, "alpha");
     }
 }

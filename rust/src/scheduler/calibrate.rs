@@ -1,0 +1,733 @@
+//! Online cost-model calibration: close the profiling loop (DESIGN.md
+//! §16).
+//!
+//! The allocator places tenants by a **profiled** cost model; the paper's
+//! profiles are taken once, offline.  In a long-running pool the true
+//! service time drifts away from the profile (input mix shifts, thermal
+//! throttling, co-residency interference), and a plan optimized against
+//! stale costs silently misallocates TPUs.  This module watches the
+//! observed per-tenant latency distribution, measures **drift** against
+//! an expected p99, and — when drift sustains past a threshold — rewrites
+//! the tenant's profiled cost model (`Tenant::cost_scale`) and triggers a
+//! re-segmentation + re-plan through the pool's existing drain/redeploy
+//! path, so no in-flight request is ever lost.
+//!
+//! Three guards keep the loop from flapping:
+//!
+//! * **sustain** — drift must exceed the threshold for
+//!   [`sustain_windows`](CalibrateConfig::sustain_windows) consecutive
+//!   windows before anything fires (one bursty window is not drift);
+//! * **hysteresis** — between `threshold - hysteresis` and `threshold`
+//!   the sustain counter *holds* instead of resetting, so a p99
+//!   oscillating around the trigger line cannot reset the evidence;
+//! * **cooldown + budget** — after a recalibration the tenant is immune
+//!   for [`cooldown_windows`](CalibrateConfig::cooldown_windows), and at
+//!   most [`max_replans_per_window`](CalibrateConfig::max_replans_per_window)
+//!   tenants may recalibrate in any one window (re-plans drain live
+//!   deployments; a storm of them is worse than the drift).
+//!
+//! Drift is **self-baselined**: the first window with enough samples
+//! establishes the tenant's expected p99 (the "profiling window"), and
+//! drift is measured as `observed_p99 / expected_p99 - 1`.  Observed
+//! open-loop latencies include queueing and batching wait that the
+//! allocator's pipeline prediction deliberately excludes, so comparing
+//! against the plan's `effective_p99_s` directly would read steady-state
+//! queueing as permanent drift; the plan prediction is still reported in
+//! the calibration table for the predicted-vs-observed gap.  On a fire,
+//! the correction `scale' = scale * (1 + drift)` rebases both the cost
+//! model and the expected p99 to what was actually observed, so a
+//! calibrated tenant is quiescent by construction.
+//!
+//! The same [`Calibrator`] runs in three harnesses, in lockstep:
+//!
+//! * **live** — `ServingPool::calibrate_tick` diffs each tenant's
+//!   lifetime sim-latency histogram ([`ingest_lifetime`]
+//!   (Calibrator::ingest_lifetime)), and applies fired recalibrations
+//!   through the pool's re-plan path;
+//! * **sim** — [`simulate_calibration`] replays seeded windows against
+//!   the deterministic workload simulation with a hidden injected drift
+//!   factor ([`crate::workload::drift_factor`]), so `repro calibrate` /
+//!   `repro loadgen --calibrate` are byte-identical per seed;
+//! * **report** — [`calibration_csv`] renders the per-window
+//!   predicted-vs-observed table and [`CalibrationRun::ledger`] the
+//!   re-plan ledger.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::config::SystemConfig;
+use crate::coordinator::batcher::BatchPolicy;
+use crate::util::stats::{LatencyHistogram, WindowedHistogram};
+use crate::workload::{arrival_seed, drift_factor, simulate_deployment, Arrivals};
+
+use super::allocator::{allocate, AllocatorConfig, PoolPlan};
+use super::registry::ModelRegistry;
+
+/// Knobs of the online calibrator (all windows are calibration windows,
+/// i.e. ticks of [`Calibrator::end_window`]).
+#[derive(Debug, Clone)]
+pub struct CalibrateConfig {
+    /// Relative drift (`observed_p99 / expected_p99 - 1`) at or above
+    /// which a window counts toward the sustain requirement.
+    pub drift_threshold: f64,
+    /// Width of the hold band below the threshold: a drift in
+    /// `[threshold - hysteresis, threshold)` neither advances nor resets
+    /// the sustain counter.
+    pub hysteresis: f64,
+    /// Consecutive over-threshold windows required before a
+    /// recalibration fires.
+    pub sustain_windows: u32,
+    /// Windows a tenant is immune after its own recalibration.
+    pub cooldown_windows: u32,
+    /// Cross-tenant budget: at most this many recalibrations may fire in
+    /// any single window.
+    pub max_replans_per_window: u32,
+    /// Minimum samples in the recent window before drift is evaluated
+    /// (sparse windows are skipped, not treated as zero drift).
+    pub min_samples: u64,
+}
+
+impl Default for CalibrateConfig {
+    fn default() -> Self {
+        CalibrateConfig {
+            drift_threshold: 0.5,
+            hysteresis: 0.15,
+            sustain_windows: 2,
+            cooldown_windows: 3,
+            max_replans_per_window: 1,
+            min_samples: 20,
+        }
+    }
+}
+
+impl CalibrateConfig {
+    /// Validate the knobs (the CLI parses them from flags).
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.drift_threshold.is_finite() && self.drift_threshold > 0.0,
+            "drift threshold must be positive and finite (got {})",
+            self.drift_threshold
+        );
+        anyhow::ensure!(
+            self.hysteresis.is_finite() && (0.0..=self.drift_threshold).contains(&self.hysteresis),
+            "hysteresis must be finite and within [0, threshold] (got {})",
+            self.hysteresis
+        );
+        anyhow::ensure!(self.sustain_windows >= 1, "sustain windows must be at least 1");
+        anyhow::ensure!(
+            self.max_replans_per_window >= 1,
+            "re-plan budget must allow at least one re-plan per window"
+        );
+        anyhow::ensure!(self.min_samples >= 1, "min samples must be at least 1");
+        Ok(())
+    }
+}
+
+/// One fired recalibration: the ledger entry `repro calibrate` prints
+/// and the tests pin.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Recalibration {
+    /// Calibration window in which the correction fired (0-based).
+    pub window: u64,
+    /// The recalibrated tenant.
+    pub tenant: String,
+    /// Sustained relative drift that triggered it.
+    pub drift: f64,
+    /// The tenant's new cumulative [`cost_scale`](super::Tenant::cost_scale).
+    pub scale: f64,
+}
+
+/// Per-tenant calibration state.
+#[derive(Debug)]
+struct TenantCal {
+    /// Lifetime high-water mark of the live metrics histogram, so each
+    /// [`Calibrator::ingest_lifetime`] only absorbs the new samples.
+    seen: LatencyHistogram,
+    /// Recent observed latencies (two-bank windowed, O(1) mergeable).
+    win: WindowedHistogram,
+    /// Self-baselined expected p99; `None` until the first window with
+    /// enough samples (the profiling window).
+    expected_p99_s: Option<f64>,
+    /// Cumulative cost-model correction (starts at 1.0, uncalibrated).
+    scale: f64,
+    /// Consecutive over-threshold windows (the sustain counter).
+    over: u32,
+    /// Remaining immunity windows after this tenant's last fire.
+    cooldown: u32,
+    /// Drift measured in the most recent evaluated window (gauge).
+    last_drift: f64,
+}
+
+impl Default for TenantCal {
+    fn default() -> Self {
+        TenantCal {
+            seen: LatencyHistogram::new(),
+            win: WindowedHistogram::new(),
+            expected_p99_s: None,
+            scale: 1.0,
+            over: 0,
+            cooldown: 0,
+            last_drift: 0.0,
+        }
+    }
+}
+
+/// The online calibrator: per-tenant windowed observations in, a
+/// deterministic re-plan ledger out.  Pure state machine — it never
+/// touches the pool itself; callers apply the returned
+/// [`Recalibration`]s (write `cost_scale`, re-plan).
+#[derive(Debug)]
+pub struct Calibrator {
+    cfg: CalibrateConfig,
+    tenants: BTreeMap<String, TenantCal>,
+    window: u64,
+}
+
+impl Calibrator {
+    /// A calibrator with no observations yet.
+    pub fn new(cfg: CalibrateConfig) -> Self {
+        Calibrator { cfg, tenants: BTreeMap::new(), window: 0 }
+    }
+
+    /// The configured knobs.
+    pub fn config(&self) -> &CalibrateConfig {
+        &self.cfg
+    }
+
+    /// Calibration windows completed so far.
+    pub fn window(&self) -> u64 {
+        self.window
+    }
+
+    /// Record one observed latency for `tenant` in the current window
+    /// (the deterministic-sim ingestion path).
+    pub fn observe(&mut self, tenant: &str, lat_s: f64) {
+        self.tenants.entry(tenant.to_string()).or_default().win.record(lat_s);
+    }
+
+    /// Absorb the *new* samples of a lifetime latency histogram (the
+    /// live ingestion path): diffs `hist` against the last snapshot seen
+    /// for `tenant`, so the hot path needs no extra instrumentation —
+    /// the tick clones the metrics histogram it already keeps.
+    pub fn ingest_lifetime(&mut self, tenant: &str, hist: &LatencyHistogram) {
+        let tc = self.tenants.entry(tenant.to_string()).or_default();
+        let delta = hist.delta_since(&tc.seen);
+        tc.win.absorb(&delta);
+        tc.seen = hist.clone();
+    }
+
+    /// Drift measured for `tenant` in its most recent evaluated window
+    /// (0.0 before the baseline is established).
+    pub fn last_drift(&self, tenant: &str) -> f64 {
+        self.tenants.get(tenant).map_or(0.0, |t| t.last_drift)
+    }
+
+    /// Cumulative cost-model correction for `tenant` (1.0 when
+    /// uncalibrated or unknown).
+    pub fn scale(&self, tenant: &str) -> f64 {
+        self.tenants.get(tenant).map_or(1.0, |t| t.scale)
+    }
+
+    /// Close the current window: evaluate drift for every tenant (name
+    /// order, so the ledger is deterministic), advance the windowed
+    /// banks, and return the recalibrations that fired.
+    pub fn end_window(&mut self) -> Vec<Recalibration> {
+        let mut fired = Vec::new();
+        for (name, tc) in &mut self.tenants {
+            let mut fired_now = false;
+            if tc.win.window_count() >= self.cfg.min_samples {
+                let obs_p99 = tc.win.recent_percentile(99.0);
+                match tc.expected_p99_s {
+                    None => {
+                        // profiling window: establish the baseline
+                        tc.expected_p99_s = Some(obs_p99);
+                        tc.last_drift = 0.0;
+                    }
+                    Some(expected) if expected > 0.0 => {
+                        let drift = obs_p99 / expected - 1.0;
+                        tc.last_drift = drift;
+                        if drift >= self.cfg.drift_threshold {
+                            tc.over += 1;
+                        } else if drift < self.cfg.drift_threshold - self.cfg.hysteresis {
+                            tc.over = 0;
+                        } // else: hold inside the hysteresis band
+                        if tc.over >= self.cfg.sustain_windows
+                            && tc.cooldown == 0
+                            && (fired.len() as u32) < self.cfg.max_replans_per_window
+                        {
+                            tc.scale *= 1.0 + drift;
+                            // rebase: the corrected model predicts what
+                            // we just observed, so a calibrated tenant
+                            // reads as zero drift from here on
+                            tc.expected_p99_s = Some(obs_p99);
+                            tc.win = WindowedHistogram::new();
+                            tc.over = 0;
+                            tc.cooldown = self.cfg.cooldown_windows;
+                            fired_now = true;
+                            fired.push(Recalibration {
+                                window: self.window,
+                                tenant: name.clone(),
+                                drift,
+                                scale: tc.scale,
+                            });
+                        }
+                    }
+                    Some(_) => {}
+                }
+            }
+            if !fired_now && tc.cooldown > 0 {
+                tc.cooldown -= 1;
+            }
+            tc.win.reset_window();
+        }
+        self.window += 1;
+        fired
+    }
+}
+
+/// One seeded drift scenario for the deterministic calibration loop
+/// (`repro calibrate` and `repro loadgen --calibrate`).
+#[derive(Debug, Clone)]
+pub struct CalibrateScenario {
+    /// Run seed: arrivals, payloads and injected drift all derive from
+    /// it, so the whole run is byte-identical per seed.
+    pub seed: u64,
+    /// Calibration windows to simulate.
+    pub windows: usize,
+    /// Requests offered to each tenant per window.
+    pub requests_per_window: usize,
+    /// Window (0-based) at which the hidden true cost of the drifted
+    /// tenants jumps by their seeded [`drift_factor`]; earlier windows
+    /// match the profile exactly.
+    pub drift_onset_window: usize,
+    /// Tenants whose true cost drifts (empty: a pure no-drift run).
+    pub drifted: Vec<String>,
+    /// Arrival process driven against every tenant.
+    pub arrivals: Arrivals,
+    /// Batching policy (per tenant it is tightened to the SLO via
+    /// [`BatchPolicy::for_slo`], exactly like the live pool).
+    pub policy: BatchPolicy,
+    /// Calibrator knobs.
+    pub calibrate: CalibrateConfig,
+}
+
+impl CalibrateScenario {
+    /// A 6-window no-drift scenario at moderate Poisson load.
+    pub fn new(seed: u64) -> Self {
+        CalibrateScenario {
+            seed,
+            windows: 6,
+            requests_per_window: 120,
+            drift_onset_window: 2,
+            drifted: Vec::new(),
+            arrivals: Arrivals::Poisson { rate_hz: 400.0 },
+            policy: BatchPolicy::default(),
+            calibrate: CalibrateConfig::default(),
+        }
+    }
+}
+
+/// One tenant-window row of the calibration report.
+#[derive(Debug, Clone)]
+pub struct WindowRow {
+    /// Calibration window (0-based).
+    pub window: u64,
+    /// Tenant name.
+    pub model: String,
+    /// Observed samples in the window.
+    pub samples: u64,
+    /// The plan's predicted p99 at the time of the window (reflects any
+    /// cost-scale corrections already applied).
+    pub predicted_p99_s: f64,
+    /// Observed p99 of the window's latencies (with injected drift).
+    pub observed_p99_s: f64,
+    /// Drift the calibrator measured this window.
+    pub drift: f64,
+    /// What the calibrator did: `-`, `baseline`, or `recalibrate(xS)`.
+    pub action: String,
+}
+
+/// Result of one deterministic calibration run.
+#[derive(Debug)]
+pub struct CalibrationRun {
+    /// Per-tenant-per-window report rows, window-major then name order.
+    pub rows: Vec<WindowRow>,
+    /// Every recalibration that fired, in order.
+    pub ledger: Vec<Recalibration>,
+    /// The plan in force after the last window (carries the corrected
+    /// cost model).
+    pub final_plan: PoolPlan,
+    /// Final per-tenant cost scales, name order.
+    pub final_scales: Vec<(String, f64)>,
+}
+
+/// Salt mixing the window index into each window's arrival seed, so
+/// windows draw distinct (but seed-deterministic) schedules.
+const WINDOW_SALT: u64 = 0x9E37_79B9_7F4A_7C15;
+
+/// Run the closed calibration loop deterministically: plan, simulate
+/// each window's open-loop serving per tenant, inject the hidden seeded
+/// drift factor from the onset window on, feed observations to the
+/// [`Calibrator`], and re-plan whenever it fires.  Pure function of its
+/// arguments — two runs with the same scenario are byte-identical, which
+/// is what `repro calibrate` and the golden-CSV tests pin.
+pub fn simulate_calibration(
+    registry: &ModelRegistry,
+    system: &SystemConfig,
+    alloc: &AllocatorConfig,
+    scenario: &CalibrateScenario,
+) -> Result<CalibrationRun> {
+    scenario.calibrate.validate()?;
+    let mut reg = registry.clone();
+    let mut plan = allocate(&reg, system, alloc)?;
+    let mut cal = Calibrator::new(scenario.calibrate.clone());
+    let mut rows: Vec<WindowRow> = Vec::new();
+    let mut ledger: Vec<Recalibration> = Vec::new();
+
+    for w in 0..scenario.windows {
+        let mut window_rows: Vec<WindowRow> = Vec::new();
+        for a in &plan.assignments {
+            let tenant = reg.get(&a.name)?;
+            let dep = crate::serving::deployment_sim(tenant, a, system);
+            let policy = scenario.policy.for_slo(a.slo_p99_s);
+            let seed =
+                arrival_seed(scenario.seed ^ (w as u64).wrapping_mul(WINDOW_SALT), &a.name);
+            let run = simulate_deployment(
+                &scenario.arrivals,
+                scenario.requests_per_window,
+                seed,
+                &policy,
+                &dep,
+            );
+            // hidden truth: from the onset window on, the drifted
+            // tenants' real cost is `factor` times the profile — applied
+            // at the latency level (a deliberate simplification: the
+            // queueing structure is profiled-shaped, only the magnitude
+            // drifts), which is exactly the signal the calibrator sees
+            let factor = if w >= scenario.drift_onset_window
+                && scenario.drifted.iter().any(|d| d == &a.name)
+            {
+                drift_factor(scenario.seed, &a.name)
+            } else {
+                1.0
+            };
+            let mut obs = LatencyHistogram::new();
+            for &l in &run.latencies_s {
+                let v = l * factor;
+                obs.record(v);
+                cal.observe(&a.name, v);
+            }
+            window_rows.push(WindowRow {
+                window: w as u64,
+                model: a.name.clone(),
+                samples: obs.count(),
+                predicted_p99_s: a.effective_p99_s,
+                observed_p99_s: obs.percentile(99.0),
+                drift: 0.0,           // filled after end_window
+                action: String::new(), // filled after end_window
+            });
+        }
+        let had_baseline: Vec<bool> = window_rows
+            .iter()
+            .map(|r| cal.tenants.get(&r.model).is_some_and(|t| t.expected_p99_s.is_some()))
+            .collect();
+        let fired = cal.end_window();
+        for (row, had) in window_rows.iter_mut().zip(had_baseline) {
+            row.drift = cal.last_drift(&row.model);
+            row.action = if let Some(f) = fired.iter().find(|f| f.tenant == row.model) {
+                format!("recalibrate(x{:.2})", f.scale)
+            } else if !had {
+                "baseline".to_string()
+            } else {
+                "-".to_string()
+            };
+        }
+        rows.extend(window_rows);
+        if !fired.is_empty() {
+            for f in &fired {
+                if let Some(t) = reg.get_mut(&f.tenant) {
+                    t.cost_scale = f.scale;
+                }
+            }
+            plan = allocate(&reg, system, alloc)?;
+            ledger.extend(fired);
+        }
+    }
+
+    let final_scales = reg.iter().map(|t| (t.name.clone(), t.cost_scale)).collect();
+    Ok(CalibrationRun { rows, ledger, final_plan: plan, final_scales })
+}
+
+/// Render a calibration run as the golden CSV (`repro calibrate --csv`
+/// and `repro loadgen --calibrate` both emit exactly this, so the
+/// byte-identity tests share one renderer).
+pub fn calibration_csv(run: &CalibrationRun) -> String {
+    let mut out =
+        String::from("window,model,samples,predicted_p99_ms,observed_p99_ms,drift_pct,action\n");
+    for r in &run.rows {
+        out.push_str(&format!(
+            "{},{},{},{:.3},{:.3},{:+.1},{}\n",
+            r.window,
+            r.model,
+            r.samples,
+            r.predicted_p99_s * 1e3,
+            r.observed_p99_s * 1e3,
+            r.drift * 100.0,
+            r.action,
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::registry::ModelRegistry;
+
+    fn pool(names: &[&str], tpus: usize) -> (ModelRegistry, SystemConfig, AllocatorConfig) {
+        let mut reg = ModelRegistry::new();
+        for n in names {
+            reg.register_named(n).unwrap();
+        }
+        let alloc = AllocatorConfig { total_tpus: tpus, ..Default::default() };
+        (reg, SystemConfig::default(), alloc)
+    }
+
+    /// The exact bucket bound a single recorded value reads back as —
+    /// lets tests pick drift ratios that are quantization-proof.
+    fn bucket_bound(v: f64) -> f64 {
+        let mut h = LatencyHistogram::new();
+        h.record(v);
+        h.percentile(99.0)
+    }
+
+    #[test]
+    fn no_drift_means_zero_replans() {
+        let (reg, sys, alloc) = pool(&["fc_small", "conv_a"], 4);
+        let scenario = CalibrateScenario::new(7);
+        let run = simulate_calibration(&reg, &sys, &alloc, &scenario).unwrap();
+        assert!(run.ledger.is_empty(), "no injected drift must never re-plan: {:?}", run.ledger);
+        assert!(run.final_scales.iter().all(|(_, s)| *s == 1.0), "{:?}", run.final_scales);
+        assert_eq!(run.rows.len(), scenario.windows * 2, "one row per tenant per window");
+        assert!(
+            run.rows.iter().all(|r| !r.action.starts_with("recalibrate")),
+            "{:?}",
+            run.rows
+        );
+        // window 0 is the profiling window for both tenants
+        assert!(run.rows.iter().take(2).all(|r| r.action == "baseline"), "{:?}", &run.rows[..2]);
+    }
+
+    #[test]
+    fn injected_drift_recalibrates_exactly_once_then_quiesces() {
+        let (reg, sys, alloc) = pool(&["fc_small", "conv_a"], 4);
+        let mut scenario = CalibrateScenario::new(7);
+        scenario.windows = 8;
+        scenario.drifted = vec!["fc_small".to_string()];
+        let run = simulate_calibration(&reg, &sys, &alloc, &scenario).unwrap();
+        assert_eq!(run.ledger.len(), 1, "exactly one corrective re-plan: {:?}", run.ledger);
+        let fire = &run.ledger[0];
+        assert_eq!(fire.tenant, "fc_small");
+        assert!(fire.drift >= scenario.calibrate.drift_threshold, "{fire:?}");
+        assert!(fire.scale > 1.0, "{fire:?}");
+        assert!(
+            fire.window >= (scenario.drift_onset_window + 1) as u64,
+            "sustain requires more than one drifted window: {fire:?}"
+        );
+        // the undrifted tenant is untouched
+        let conv = run.final_scales.iter().find(|(n, _)| n == "conv_a").unwrap();
+        assert_eq!(conv.1, 1.0);
+        let fc = run.final_scales.iter().find(|(n, _)| n == "fc_small").unwrap();
+        assert_eq!(fc.1, fire.scale);
+        // quiescence: after the fire, no further action and drift back
+        // under the threshold on every evaluated fc_small window
+        for r in run.rows.iter().filter(|r| r.model == "fc_small" && r.window > fire.window) {
+            assert!(!r.action.starts_with("recalibrate"), "{r:?}");
+            assert!(
+                r.drift < scenario.calibrate.drift_threshold,
+                "post-calibration drift must stay under threshold: {r:?}"
+            );
+        }
+        // the corrected plan predicts the drifted tenant slower
+        let final_p99 = run.final_plan.assignment("fc_small").unwrap().effective_p99_s;
+        assert!(final_p99 > 0.0);
+    }
+
+    #[test]
+    fn cooldown_blocks_immediate_refires() {
+        let cfg = CalibrateConfig {
+            sustain_windows: 1,
+            cooldown_windows: 3,
+            min_samples: 10,
+            ..Default::default()
+        };
+        let mut cal = Calibrator::new(cfg);
+        let base = bucket_bound(1e-3);
+        let feed = |cal: &mut Calibrator, v: f64| {
+            for _ in 0..50 {
+                cal.observe("t", v);
+            }
+        };
+        feed(&mut cal, base * 0.99); // window 0: baseline
+        assert!(cal.end_window().is_empty());
+        feed(&mut cal, base * 1.7); // >= two buckets up: drift 0.5625
+        let first = cal.end_window();
+        assert_eq!(first.len(), 1, "sustained drift past threshold must fire");
+        assert_eq!(first[0].window, 1);
+        // keep drifting harder: cooldown must hold windows 2, 3 and 4
+        for w in 2..5u64 {
+            feed(&mut cal, base * 3.0);
+            assert!(cal.end_window().is_empty(), "window {w} is inside the cooldown");
+        }
+        feed(&mut cal, base * 3.0);
+        let second = cal.end_window();
+        assert_eq!(second.len(), 1, "cooldown expired: sustained drift fires again");
+        assert_eq!(second[0].window, 5);
+    }
+
+    #[test]
+    fn hysteresis_holds_the_sustain_counter() {
+        // reset bound = threshold - hysteresis = 0.2, so a one-bucket
+        // wobble (drift exactly 0.25) holds the counter instead of
+        // resetting it; with sustain 3 the fire lands on window 4 only
+        // if the hold worked
+        let cfg = CalibrateConfig {
+            drift_threshold: 0.5,
+            hysteresis: 0.3,
+            sustain_windows: 3,
+            cooldown_windows: 0,
+            min_samples: 10,
+            ..Default::default()
+        };
+        let mut cal = Calibrator::new(cfg);
+        let base = bucket_bound(1e-3);
+        let feed = |cal: &mut Calibrator, v: f64| {
+            for _ in 0..50 {
+                cal.observe("t", v);
+            }
+        };
+        feed(&mut cal, base * 0.99); // window 0: baseline
+        assert!(cal.end_window().is_empty());
+        feed(&mut cal, base * 1.7); // drift 0.5625: over = 1
+        assert!(cal.end_window().is_empty());
+        feed(&mut cal, base * 1.2); // drift 0.25: inside the band, holds
+        assert!(cal.end_window().is_empty());
+        feed(&mut cal, base * 1.7); // over = 2
+        assert!(cal.end_window().is_empty());
+        feed(&mut cal, base * 1.7); // over = 3: fire
+        let fired = cal.end_window();
+        assert_eq!(fired.len(), 1, "hysteresis hold must preserve the sustain evidence");
+        assert_eq!(fired[0].window, 4);
+    }
+
+    #[test]
+    fn sparse_windows_are_skipped_not_reset() {
+        let cfg =
+            CalibrateConfig { sustain_windows: 2, min_samples: 10, ..Default::default() };
+        let mut cal = Calibrator::new(cfg);
+        let base = bucket_bound(1e-3);
+        for _ in 0..50 {
+            cal.observe("t", base * 0.99);
+        }
+        assert!(cal.end_window().is_empty()); // baseline
+        for _ in 0..50 {
+            cal.observe("t", base * 1.7);
+        }
+        assert!(cal.end_window().is_empty()); // over = 1
+        // a sparse window (below min_samples) neither fires nor resets
+        for _ in 0..3 {
+            cal.observe("t", base * 1.7);
+        }
+        assert!(cal.end_window().is_empty());
+        for _ in 0..50 {
+            cal.observe("t", base * 1.7);
+        }
+        let fired = cal.end_window();
+        assert_eq!(fired.len(), 1, "evidence must survive a sparse window");
+    }
+
+    #[test]
+    fn ledger_respects_the_per_window_budget() {
+        let cfg = CalibrateConfig {
+            sustain_windows: 1,
+            max_replans_per_window: 1,
+            min_samples: 10,
+            ..Default::default()
+        };
+        let mut cal = Calibrator::new(cfg);
+        let base = bucket_bound(1e-3);
+        for t in ["a", "b"] {
+            for _ in 0..50 {
+                cal.observe(t, base * 0.99);
+            }
+        }
+        assert!(cal.end_window().is_empty());
+        for t in ["a", "b"] {
+            for _ in 0..50 {
+                cal.observe(t, base * 1.7);
+            }
+        }
+        let w1 = cal.end_window();
+        assert_eq!(w1.len(), 1, "budget caps one re-plan per window");
+        assert_eq!(w1[0].tenant, "a", "name order decides who goes first");
+        for t in ["a", "b"] {
+            for _ in 0..50 {
+                cal.observe(t, base * 1.7);
+            }
+        }
+        let w2 = cal.end_window();
+        assert_eq!(w2.len(), 1, "the deferred tenant fires next window");
+        assert_eq!(w2[0].tenant, "b");
+    }
+
+    #[test]
+    fn lifetime_ingestion_matches_direct_observation() {
+        let mut direct = Calibrator::new(CalibrateConfig { min_samples: 5, ..Default::default() });
+        let mut live = Calibrator::new(CalibrateConfig { min_samples: 5, ..Default::default() });
+        let mut hist = LatencyHistogram::new();
+        for w in 0..3 {
+            let v = if w < 1 { 1e-3 } else { 4e-3 };
+            for _ in 0..20 {
+                direct.observe("t", v);
+                hist.record(v);
+            }
+            live.ingest_lifetime("t", &hist);
+            let (a, b) = (direct.end_window(), live.end_window());
+            assert_eq!(a, b, "window {w}: both ingestion paths must agree");
+            assert_eq!(direct.last_drift("t"), live.last_drift("t"), "window {w}");
+        }
+        assert_eq!(direct.scale("t"), live.scale("t"));
+        assert!(direct.scale("t") > 1.0, "the drift above must have fired");
+    }
+
+    #[test]
+    fn calibration_csv_is_byte_identical_per_seed() {
+        let (reg, sys, alloc) = pool(&["fc_small", "conv_a"], 4);
+        let mut scenario = CalibrateScenario::new(11);
+        scenario.drifted = vec!["fc_small".to_string()];
+        let a = calibration_csv(&simulate_calibration(&reg, &sys, &alloc, &scenario).unwrap());
+        let b = calibration_csv(&simulate_calibration(&reg, &sys, &alloc, &scenario).unwrap());
+        assert_eq!(a, b, "same scenario must render byte-identically");
+        assert!(a.starts_with("window,model,samples,predicted_p99_ms,observed_p99_ms,"));
+        scenario.seed = 12;
+        let c = calibration_csv(&simulate_calibration(&reg, &sys, &alloc, &scenario).unwrap());
+        assert_ne!(a, c, "the seed must matter");
+    }
+
+    #[test]
+    fn config_validation_pins_error_messages() {
+        let bad = CalibrateConfig { drift_threshold: f64::NAN, ..Default::default() };
+        let err = format!("{:#}", bad.validate().unwrap_err());
+        assert!(err.contains("finite"), "{err}");
+        let bad = CalibrateConfig { hysteresis: -0.1, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = CalibrateConfig { sustain_windows: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = CalibrateConfig { max_replans_per_window: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        let bad = CalibrateConfig { min_samples: 0, ..Default::default() };
+        assert!(bad.validate().is_err());
+        assert!(CalibrateConfig::default().validate().is_ok());
+    }
+}

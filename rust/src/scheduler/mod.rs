@@ -34,6 +34,8 @@
 //!                             v
 //!                    pool.submit("model", request) -> TenantClient::done
 //!                    pool.register / pool.deregister  (online re-plan)
+//!                    pool.calibrate_tick  (drift-triggered recalibration,
+//!                                          calibrate module / DESIGN.md §16)
 //! ```
 //!
 //! Entry points: `repro schedule` (plan only, prints the admission table),
@@ -44,6 +46,7 @@
 //! mid-run registration churn).
 
 pub mod allocator;
+pub mod calibrate;
 pub mod paramcache;
 pub mod pool;
 pub mod registry;
@@ -53,8 +56,17 @@ pub use allocator::{
     allocate, candidates_for, AllocatorConfig, Assignment, Candidate, DeviceGrant, PoolPlan,
     Rejection,
 };
+pub use calibrate::{
+    calibration_csv, simulate_calibration, CalibrateConfig, CalibrateScenario, CalibrationRun,
+    Calibrator, Recalibration,
+};
 pub use paramcache::{CacheEffect, ParamCache};
-pub use pool::{Admission, OpenOptions, ReplanReport, ServingPool, TenantClient};
+pub use pool::{
+    spawn_calibration_ticker, Admission, CalibrationTicker, DeployOptions, ReplanReport,
+    ServingPool, TenantClient,
+};
+#[allow(deprecated)]
+pub use pool::OpenOptions;
 pub use registry::{resolve_model, ModelRegistry, Tenant};
 pub use router::{
     synthetic_reference, synthetic_transform, synthetic_transform_into, tenant_salt,
@@ -99,9 +111,9 @@ impl PoolScheduler {
     }
 
     /// Plan, then spawn the live closed-batch deployments.
-    pub fn deploy(&self, backend: &BackendKind, queue_capacity: usize) -> Result<PoolRouter> {
+    pub fn deploy(&self, backend: &BackendKind, opts: DeployOptions) -> Result<PoolRouter> {
         let plan = self.plan()?;
-        PoolRouter::deploy(&plan, &self.registry, &self.system, backend, queue_capacity)
+        PoolRouter::deploy(&plan, &self.registry, &self.system, backend, opts)
     }
 
     /// Plan, then spawn the **open-loop** serving pool: per-tenant ingress
@@ -109,7 +121,7 @@ impl PoolScheduler {
     /// change.  The pool takes a snapshot of the current registry;
     /// subsequent membership changes go through
     /// [`ServingPool::register`] / [`ServingPool::deregister`].
-    pub fn deploy_open(&self, backend: BackendKind, opts: OpenOptions) -> Result<ServingPool> {
+    pub fn deploy_open(&self, backend: BackendKind, opts: DeployOptions) -> Result<ServingPool> {
         ServingPool::deploy(
             self.registry.clone(),
             self.system.clone(),
@@ -221,7 +233,9 @@ mod tests {
         s.registry.register_named("conv_b").unwrap();
         let plan = s.plan().unwrap();
         assert_eq!(plan.assignments.len(), 3);
-        let router = s.deploy(&BackendKind::Synthetic, 8).unwrap();
+        let router = s
+            .deploy(&BackendKind::Synthetic, DeployOptions::new().with_queue_capacity(8))
+            .unwrap();
         assert_eq!(router.len(), 3);
         router.wait_ready().unwrap();
         router.shutdown();
@@ -235,7 +249,7 @@ mod tests {
         );
         s.registry.register_named("fc_small").unwrap();
         s.registry.register_named("conv_a").unwrap();
-        let pool = s.deploy_open(BackendKind::Synthetic, OpenOptions::default()).unwrap();
+        let pool = s.deploy_open(BackendKind::Synthetic, DeployOptions::default()).unwrap();
         assert_eq!(pool.names(), vec!["conv_a".to_string(), "fc_small".to_string()]);
         let client = pool.client("conv_a").unwrap();
         for r in client.synth_requests(4, 1) {

@@ -67,6 +67,7 @@ use crate::obs::{SpanKind, SpanSink, Tracer};
 use crate::runtime::Manifest;
 
 use super::allocator::{allocate, AllocatorConfig, Assignment, PoolPlan};
+use super::calibrate::{CalibrateConfig, Calibrator, Recalibration};
 use super::paramcache::CacheEffect;
 use super::registry::{ModelRegistry, Tenant};
 use super::router::{build_deployment, name_tenant_tracks, BackendKind, Deployment, TenantShape};
@@ -81,9 +82,19 @@ const DONE_QUEUE_CAPACITY: usize = 4096;
 /// named lane in Perfetto instead of overprinting a tenant's stages.
 const CHAOS_TRACK: u32 = 1023 * 64;
 
-/// Knobs of the open-loop serving path.
+/// Knobs of the open-loop serving path — the one options type every
+/// deployment entry point consumes ([`ServingPool::deploy`] and
+/// [`PoolRouter::deploy`](super::router::PoolRouter::deploy)).  Build it
+/// with the field literal + `..Default::default()`, or fluently:
+///
+/// ```ignore
+/// let opts = DeployOptions::new()
+///     .with_queue_capacity(128)
+///     .with_hedge(HedgeConfig { p99_factor: 2.0, min_samples: 4 })
+///     .with_calibration(CalibrateConfig::default());
+/// ```
 #[derive(Debug, Clone)]
-pub struct OpenOptions {
+pub struct DeployOptions {
     /// Per-tenant dynamic batching policy (size/wait flush).
     pub policy: BatchPolicy,
     /// Capacity of each tenant's ingress queue (requests) and of the host
@@ -96,18 +107,67 @@ pub struct OpenOptions {
     /// Hedged-dispatch policy for replicated deployments (DESIGN.md §14).
     /// `None` (the default) disables hedging.
     pub hedge: Option<HedgeConfig>,
+    /// Online cost-model calibration (DESIGN.md §16).  `None` (the
+    /// default) disables the calibrator entirely:
+    /// [`ServingPool::calibrate_tick`] becomes a no-op and every output
+    /// stays byte-identical to an uncalibrated pool.
+    pub calibrate: Option<CalibrateConfig>,
 }
 
-impl Default for OpenOptions {
+impl Default for DeployOptions {
     fn default() -> Self {
-        OpenOptions {
+        DeployOptions {
             policy: BatchPolicy::default(),
             queue_capacity: 64,
             tracer: None,
             hedge: None,
+            calibrate: None,
         }
     }
 }
+
+impl DeployOptions {
+    /// The defaults: pool batching policy, capacity 64, no tracing, no
+    /// hedging, no calibration.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Set the dynamic batching policy.
+    pub fn with_policy(mut self, policy: BatchPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    /// Set the ingress/stage queue capacity (must be at least 1).
+    pub fn with_queue_capacity(mut self, capacity: usize) -> Self {
+        assert!(capacity >= 1, "queue capacity must be at least 1");
+        self.queue_capacity = capacity;
+        self
+    }
+
+    /// Attach a span tracer (DESIGN.md §13).
+    pub fn with_tracer(mut self, tracer: Arc<Tracer>) -> Self {
+        self.tracer = Some(tracer);
+        self
+    }
+
+    /// Enable hedged dispatch for replicated deployments (DESIGN.md §14).
+    pub fn with_hedge(mut self, hedge: HedgeConfig) -> Self {
+        self.hedge = Some(hedge);
+        self
+    }
+
+    /// Enable online cost-model calibration (DESIGN.md §16).
+    pub fn with_calibration(mut self, cfg: CalibrateConfig) -> Self {
+        self.calibrate = Some(cfg);
+        self
+    }
+}
+
+/// Former name of [`DeployOptions`], kept as a migration shim.
+#[deprecated(note = "renamed to DeployOptions; `deploy` entry points now share one options type")]
+pub type OpenOptions = DeployOptions;
 
 /// Outcome of a prioritized submission: either the request entered the
 /// tenant's ingress queue, or admission control turned it away because the
@@ -214,6 +274,10 @@ struct PoolState {
     /// Devices lost to injected (or real) faults: excluded from every
     /// subsequent allocation until the pool is rebuilt.
     dead: BTreeSet<usize>,
+    /// The online calibrator (`None` unless
+    /// [`DeployOptions::calibrate`] was set): windowed drift state fed by
+    /// [`ServingPool::calibrate_tick`].
+    calibrator: Option<Calibrator>,
 }
 
 /// The open-loop multi-tenant serving pool (see the module docs for the
@@ -222,7 +286,7 @@ pub struct ServingPool {
     system: SystemConfig,
     alloc: AllocatorConfig,
     backend: BackendKind,
-    opts: OpenOptions,
+    opts: DeployOptions,
     manifest: Option<Manifest>,
     /// Pool-wide slab arena: shared by every deployment, surviving
     /// re-plans, so recycled buffers cross tenants and redeployments.
@@ -368,7 +432,7 @@ impl ServingPool {
         system: SystemConfig,
         alloc: AllocatorConfig,
         backend: BackendKind,
-        opts: OpenOptions,
+        opts: DeployOptions,
     ) -> Result<ServingPool> {
         let manifest = match &backend {
             BackendKind::Pjrt { artifact_dir } => {
@@ -376,6 +440,10 @@ impl ServingPool {
             }
             BackendKind::Synthetic => None,
         };
+        if let Some(cfg) = &opts.calibrate {
+            cfg.validate()?;
+        }
+        let calibrator = opts.calibrate.clone().map(Calibrator::new);
         let total_tpus = alloc.total_tpus;
         let allow_sharing = alloc.allow_sharing;
         let cache_enabled = allow_sharing && alloc.cache_budget_bytes > 0;
@@ -394,6 +462,7 @@ impl ServingPool {
                 done: BTreeMap::new(),
                 tenant_metrics: BTreeMap::new(),
                 dead: BTreeSet::new(),
+                calibrator,
                 plan: Arc::new(PoolPlan {
                     total_tpus,
                     assignments: Vec::new(),
@@ -669,12 +738,94 @@ impl ServingPool {
         self.state.lock().unwrap().dead.iter().copied().collect()
     }
 
+    /// Close one calibration window (DESIGN.md §16): diff every live
+    /// tenant's lifetime sim-latency histogram into the calibrator's
+    /// windowed banks (no hot-path instrumentation — the worker already
+    /// records the histogram), evaluate drift, publish the per-tenant
+    /// `drift` gauge, and — if any recalibration fired — write the
+    /// corrected [`cost_scale`](Tenant::cost_scale) back into the
+    /// registry and re-plan through the drain/redeploy path, so no
+    /// in-flight request is lost.  Records a [`SpanKind::Recalibrate`]
+    /// span per fired tenant on the chaos/control track.
+    ///
+    /// A no-op returning an empty ledger when the pool was deployed
+    /// without [`DeployOptions::calibrate`], keeping uncalibrated pools
+    /// byte-identical to before.
+    pub fn calibrate_tick(&self) -> Result<Vec<Recalibration>> {
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        if st.calibrator.is_none() {
+            return Ok(Vec::new());
+        }
+        let fired = {
+            let cal = st.calibrator.as_mut().expect("checked above");
+            for (name, lt) in &st.live {
+                cal.ingest_lifetime(name, &lt.metrics.sim_latency_hist());
+            }
+            let fired = cal.end_window();
+            for (name, m) in &st.tenant_metrics {
+                m.record_drift(cal.last_drift(name));
+            }
+            fired
+        };
+        if fired.is_empty() {
+            return Ok(fired);
+        }
+        let t0 = std::time::Instant::now();
+        for f in &fired {
+            if let Some(t) = st.registry.get_mut(&f.tenant) {
+                t.cost_scale = f.scale;
+            }
+        }
+        let drained = self.apply_plan(st)?;
+        self.metrics.record_replan(drained);
+        self.metrics.record_replan_calibration(fired.len() as u64);
+        if let Some(tracer) = self.opts.tracer.as_ref() {
+            tracer.name_track(CHAOS_TRACK, "chaos/faults".to_string());
+            let sink = tracer.handle();
+            // span the write-back + re-plan window, one span per tenant
+            let end_us = sink.now_us();
+            let dur_us = (t0.elapsed().as_secs_f64() * 1e6) as u64;
+            for f in &fired {
+                sink.record(
+                    SpanKind::Recalibrate,
+                    CHAOS_TRACK,
+                    f.window,
+                    end_us.saturating_sub(dur_us),
+                    dur_us,
+                );
+            }
+        }
+        Ok(fired)
+    }
+
+    /// Operator path of the calibration loop: write `scale` into the
+    /// named tenant's profiled cost model directly and re-plan through
+    /// the same drain/redeploy path the drift detector uses.  `scale` is
+    /// the observed/predicted service-time ratio (must be positive and
+    /// finite); `1.0` restores the un-drifted profile.
+    pub fn recalibrate_tenant(&self, name: &str, scale: f64) -> Result<ReplanReport> {
+        anyhow::ensure!(
+            scale.is_finite() && scale > 0.0,
+            "cost scale must be positive and finite (got {scale})"
+        );
+        let mut st = self.state.lock().unwrap();
+        st.registry
+            .get_mut(name)
+            .with_context(|| format!("model {name:?} not registered"))?
+            .cost_scale = scale;
+        let drained = self.apply_plan(&mut st)?;
+        self.metrics.record_replan(drained);
+        self.metrics.record_replan_calibration(1);
+        Ok(ReplanReport::of(&st.plan, drained))
+    }
+
     /// Inject an artificial dispatch delay on one replica of `model`'s
     /// deployment — the chaos suite's straggler fault.  Every batch shard
     /// routed to that replica is delayed by `delay` until
     /// [`clear_straggler`](ServingPool::clear_straggler) removes it,
     /// inflating its recorded latency exactly as a contended device
-    /// would (and, with [`OpenOptions::hedge`] set, eventually tripping
+    /// would (and, with [`DeployOptions::hedge`] set, eventually tripping
     /// hedged dispatch).  Errors if the tenant is not replicated: a
     /// single-pipeline deployment has no alternate replica to observe the
     /// straggle from.
@@ -790,6 +941,49 @@ impl ServingPool {
     }
 }
 
+/// Handle to a background calibration thread started by
+/// [`spawn_calibration_ticker`].  Dropping it (or calling
+/// [`stop`](CalibrationTicker::stop)) signals the thread and joins it, so
+/// a ticker can never outlive the scope that owns it.
+pub struct CalibrationTicker {
+    stop: Arc<std::sync::atomic::AtomicBool>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl CalibrationTicker {
+    /// Signal the ticker thread and wait for it to exit.
+    pub fn stop(self) {
+        // Drop does the work; `stop` exists so call sites read as intent.
+    }
+}
+
+impl Drop for CalibrationTicker {
+    fn drop(&mut self) {
+        self.stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Drive [`ServingPool::calibrate_tick`] every `period` from a background
+/// thread until the returned [`CalibrationTicker`] is stopped or dropped.
+/// The live counterpart of the sim driver's per-window loop: each tick
+/// closes one calibration window.  Tick errors are swallowed — a failed
+/// re-plan leaves the previous plan serving, and the next window retries.
+pub fn spawn_calibration_ticker(pool: Arc<ServingPool>, period: Duration) -> CalibrationTicker {
+    let stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let flag = stop.clone();
+    let handle = std::thread::spawn(move || loop {
+        std::thread::sleep(period);
+        if flag.load(std::sync::atomic::Ordering::SeqCst) {
+            return;
+        }
+        let _ = pool.calibrate_tick();
+    });
+    CalibrationTicker { stop, handle: Some(handle) }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -805,7 +999,7 @@ mod tests {
             SystemConfig::default(),
             AllocatorConfig { total_tpus: tpus, ..Default::default() },
             BackendKind::Synthetic,
-            OpenOptions::default(),
+            DeployOptions::default(),
         )
         .unwrap()
     }
@@ -921,7 +1115,7 @@ mod tests {
             SystemConfig::default(),
             AllocatorConfig { total_tpus: 1, allow_sharing: true, ..Default::default() },
             BackendKind::Synthetic,
-            OpenOptions::default(),
+            DeployOptions::default(),
         )
         .unwrap();
         let plan = p.plan();
@@ -972,7 +1166,7 @@ mod tests {
                 ..Default::default()
             },
             BackendKind::Synthetic,
-            OpenOptions::default(),
+            DeployOptions::default(),
         )
         .unwrap();
         let report = p.kill_device(0).unwrap();
@@ -1144,7 +1338,7 @@ mod tests {
             SystemConfig::default(),
             AllocatorConfig { total_tpus: 3, ..Default::default() },
             BackendKind::Synthetic,
-            OpenOptions { queue_capacity: 4, ..Default::default() },
+            DeployOptions { queue_capacity: 4, ..Default::default() },
         )
         .unwrap();
         assert!(p.plan().assignment("fc_small").unwrap().replicas > 1);
@@ -1203,7 +1397,7 @@ mod tests {
             SystemConfig::default(),
             AllocatorConfig { total_tpus: 3, ..Default::default() },
             BackendKind::Synthetic,
-            OpenOptions {
+            DeployOptions {
                 hedge: Some(crate::coordinator::HedgeConfig {
                     p99_factor: 2.0,
                     min_samples: 4,
@@ -1227,5 +1421,130 @@ mod tests {
         // hedge merge never double-delivers or cross-delivers
         assert_eq!(s.completed, 90);
         p.shutdown();
+    }
+
+    #[test]
+    fn manual_recalibration_replans_and_scales_the_prediction() {
+        let p = pool(&["fc_small"], 2);
+        let before = p.plan().assignment("fc_small").unwrap().effective_p99_s;
+        run_and_verify(&p, "fc_small", 10, 61);
+        let report = p.recalibrate_tenant("fc_small", 1.7).unwrap();
+        assert!(report.admitted.contains(&"fc_small".to_string()), "{report:?}");
+        let after = p.plan().assignment("fc_small").unwrap().effective_p99_s;
+        assert!(
+            (after / before - 1.7).abs() < 1e-12,
+            "re-plan must carry the written-back scale: {before} -> {after}"
+        );
+        // the pool keeps serving bit-exact through the recalibration re-plan
+        run_and_verify(&p, "fc_small", 10, 62);
+        let s = p.metrics.snapshot();
+        assert_eq!(s.replans_calibration, 1);
+        assert!(s.replans >= 1);
+        // bad inputs are rejected with pinned messages, without re-planning
+        let err = p.recalibrate_tenant("ghost", 1.2).unwrap_err().to_string();
+        assert!(err.contains("not registered"), "{err}");
+        for bad in [0.0, -1.0, f64::NAN, f64::INFINITY] {
+            let err = p.recalibrate_tenant("fc_small", bad).unwrap_err().to_string();
+            assert!(err.contains("cost scale must be positive and finite"), "{err}");
+        }
+        assert_eq!(p.metrics.snapshot().replans_calibration, 1);
+        p.shutdown();
+    }
+
+    #[test]
+    fn kill_during_recalibration_keeps_every_in_flight_request() {
+        // a chaos kill racing a drift recalibration must serialize on the
+        // pool's state lock: both re-plans land, nothing in flight is
+        // lost, and the final plan reflects both the dead device and the
+        // rewritten cost model — with exactly one live deployment
+        let p = pool(&["fc_small"], 3);
+        assert_eq!(p.plan().assignment("fc_small").unwrap().replicas, 3);
+        let client = p.client("fc_small").unwrap();
+        let reqs = client.synth_requests(30, 71);
+        let expected: Vec<Vec<i8>> = reqs.iter().map(|r| client.reference(&r.data)).collect();
+        for r in reqs {
+            p.submit("fc_small", r).unwrap();
+        }
+        std::thread::scope(|scope| {
+            let kill = scope.spawn(|| p.kill_device(0).unwrap());
+            let recal = scope.spawn(|| p.recalibrate_tenant("fc_small", 1.7).unwrap());
+            kill.join().unwrap();
+            recal.join().unwrap();
+        });
+        let mut got = 0;
+        while got < 30 {
+            let r = client.done.recv().expect("stream closed early");
+            assert_eq!(r.data, expected[r.id as usize], "in-flight request corrupted");
+            got += 1;
+        }
+        let plan = p.plan();
+        let deployed: Vec<&Assignment> =
+            plan.assignments.iter().filter(|a| a.name == "fc_small").collect();
+        assert_eq!(deployed.len(), 1, "double-deploy after racing re-plans: {plan:?}");
+        assert!(!deployed[0].devices.contains(&0), "dead device still granted");
+        let s = p.metrics.snapshot();
+        assert!(s.replans >= 2, "{s:?}");
+        assert_eq!(s.replans_calibration, 1);
+        assert_eq!(s.device_kills, 1);
+        run_and_verify(&p, "fc_small", 10, 72);
+        p.shutdown();
+    }
+
+    #[test]
+    fn calibrate_tick_without_drift_never_replans() {
+        // a pool deployed without calibration: the tick is a pure no-op
+        let p = pool(&["fc_small"], 1);
+        run_and_verify(&p, "fc_small", 10, 81);
+        assert!(p.calibrate_tick().unwrap().is_empty());
+        assert_eq!(p.metrics.snapshot().replans, 0);
+        p.shutdown();
+
+        // a calibrated pool under steady traffic: the first window is the
+        // self-baseline, later windows match it, so drift stays inside the
+        // threshold and the detector never re-plans
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        let p = ServingPool::deploy(
+            reg,
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: 1, ..Default::default() },
+            BackendKind::Synthetic,
+            DeployOptions::new()
+                .with_calibration(CalibrateConfig { min_samples: 5, ..Default::default() }),
+        )
+        .unwrap();
+        for w in 0..3u64 {
+            run_and_verify(&p, "fc_small", 40, 90 + w);
+            let fired = p.calibrate_tick().unwrap();
+            assert!(fired.is_empty(), "steady traffic must not fire: {fired:?}");
+        }
+        let s = p.metrics.snapshot();
+        assert_eq!(s.replans, 0, "{s:?}");
+        assert_eq!(s.replans_calibration, 0);
+        p.shutdown();
+    }
+
+    #[test]
+    fn calibration_ticker_starts_and_stops_cleanly() {
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        let p = Arc::new(
+            ServingPool::deploy(
+                reg,
+                SystemConfig::default(),
+                AllocatorConfig { total_tpus: 1, ..Default::default() },
+                BackendKind::Synthetic,
+                DeployOptions::new().with_calibration(CalibrateConfig::default()),
+            )
+            .unwrap(),
+        );
+        let ticker = spawn_calibration_ticker(p.clone(), Duration::from_millis(5));
+        run_and_verify(&p, "fc_small", 20, 95);
+        std::thread::sleep(Duration::from_millis(25));
+        ticker.stop(); // joins the thread: no tick is mid-flight past here
+        assert_eq!(p.metrics.snapshot().replans, 0, "steady traffic must not re-plan");
+        if let Ok(pool) = Arc::try_unwrap(p) {
+            pool.shutdown();
+        }
     }
 }

@@ -28,12 +28,18 @@ pub struct Tenant {
     /// Optional p99 latency SLO in seconds (predicted violations are
     /// penalized by the allocator and flagged in reports).
     pub slo_p99_s: Option<f64>,
+    /// Calibration scale on the profiled cost model: the
+    /// observed/predicted service-time ratio the online calibrator
+    /// (`scheduler::calibrate`) writes back when live drift sustains
+    /// past its threshold.  `1.0` (the default) leaves every profiled
+    /// prediction untouched, so uncalibrated plans stay bit-identical.
+    pub cost_scale: f64,
 }
 
 impl Tenant {
-    /// A tenant with weight 1 and no SLO.
+    /// A tenant with weight 1, no SLO and an uncalibrated cost model.
     pub fn new(name: impl Into<String>, model: Model) -> Self {
-        Tenant { name: name.into(), model, weight: 1.0, slo_p99_s: None }
+        Tenant { name: name.into(), model, weight: 1.0, slo_p99_s: None, cost_scale: 1.0 }
     }
 
     /// Set the scheduling weight (must be positive).
@@ -46,6 +52,14 @@ impl Tenant {
     /// Declare a p99 latency SLO in seconds.
     pub fn with_slo_p99_s(mut self, slo_s: f64) -> Self {
         self.slo_p99_s = Some(slo_s);
+        self
+    }
+
+    /// Scale the profiled cost model (observed/predicted ratio; must be
+    /// positive and finite).  The calibrator's write-back path.
+    pub fn with_cost_scale(mut self, scale: f64) -> Self {
+        assert!(scale.is_finite() && scale > 0.0, "cost scale must be positive and finite");
+        self.cost_scale = scale;
         self
     }
 }
@@ -232,5 +246,8 @@ mod tests {
         let t = Tenant::new("t", fc_model(512)).with_weight(2.5).with_slo_p99_s(0.02);
         assert_eq!(t.weight, 2.5);
         assert_eq!(t.slo_p99_s, Some(0.02));
+        assert_eq!(t.cost_scale, 1.0, "tenants start uncalibrated");
+        let t = t.with_cost_scale(1.4);
+        assert_eq!(t.cost_scale, 1.4);
     }
 }

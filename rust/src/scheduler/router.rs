@@ -47,6 +47,7 @@ use crate::serving::stage_sims_for_grant;
 use crate::util::rng::Rng;
 
 use super::allocator::{Assignment, DeviceGrant, PoolPlan};
+use super::pool::DeployOptions;
 use super::registry::ModelRegistry;
 
 /// How deployed stages execute.
@@ -494,27 +495,22 @@ impl PoolRouter {
     /// Spawn every admitted assignment of `plan` and index the deployments
     /// by model name.  All deployments share one buffer arena, so slabs
     /// recycle across tenants.
+    ///
+    /// The single deployment entry point: `opts` carries every serving
+    /// knob ([`DeployOptions::queue_capacity`], an optional tracer — stage
+    /// workers then record one `Stage` span per served batch on per-tenant
+    /// track runs laid out by `obs::span::track_base` (DESIGN.md §13) —
+    /// and an optional hedge policy).  The former `deploy_traced` fork is
+    /// gone; pass [`DeployOptions::with_tracer`] instead.
     pub fn deploy(
         plan: &PoolPlan,
         registry: &ModelRegistry,
         cfg: &SystemConfig,
         backend: &BackendKind,
-        queue_capacity: usize,
+        opts: DeployOptions,
     ) -> Result<PoolRouter> {
-        PoolRouter::deploy_traced(plan, registry, cfg, backend, queue_capacity, None)
-    }
-
-    /// [`deploy`](PoolRouter::deploy) with an optional span tracer: stage
-    /// workers record one `Stage` span per served batch, on per-tenant
-    /// track runs laid out by `obs::span::track_base` (see DESIGN.md §13).
-    pub fn deploy_traced(
-        plan: &PoolPlan,
-        registry: &ModelRegistry,
-        cfg: &SystemConfig,
-        backend: &BackendKind,
-        queue_capacity: usize,
-        tracer: Option<Arc<Tracer>>,
-    ) -> Result<PoolRouter> {
+        let queue_capacity = opts.queue_capacity;
+        let tracer = opts.tracer.clone();
         // PJRT deployments resolve segments through the artifact manifest
         let manifest: Option<Manifest> = match backend {
             BackendKind::Pjrt { artifact_dir } => {
@@ -546,7 +542,7 @@ impl PoolRouter {
                 backend,
                 manifest.as_ref(),
                 &tenant_pipe,
-                None,
+                opts.hedge.as_ref(),
             )?;
             tenants.insert(
                 a.name.clone(),
@@ -707,7 +703,14 @@ mod tests {
         let alloc = AllocatorConfig { total_tpus: tpus, ..Default::default() };
         let plan = allocate(&reg, &cfg, &alloc).unwrap();
         let router =
-            PoolRouter::deploy(&plan, &reg, &cfg, &BackendKind::Synthetic, 16).unwrap();
+            PoolRouter::deploy(
+                &plan,
+                &reg,
+                &cfg,
+                &BackendKind::Synthetic,
+                DeployOptions::new().with_queue_capacity(16),
+            )
+            .unwrap();
         (router, plan)
     }
 
@@ -875,7 +878,14 @@ mod tests {
         let plan = allocate(&reg, &cfg, &alloc).unwrap();
         assert_eq!(plan.assignments.len(), 2, "queued={:?}", plan.queued);
         let router =
-            PoolRouter::deploy(&plan, &reg, &cfg, &BackendKind::Synthetic, 16).unwrap();
+            PoolRouter::deploy(
+                &plan,
+                &reg,
+                &cfg,
+                &BackendKind::Synthetic,
+                DeployOptions::new().with_queue_capacity(16),
+            )
+            .unwrap();
         router.wait_ready().unwrap();
         let reqs = router.tenant("fc_small").unwrap().synth_requests(24, 5);
         drop(router.serve("fc_small", reqs).unwrap());

@@ -612,15 +612,23 @@ mod tests {
 
     #[test]
     fn serve_pool_serves_multiple_tenants_concurrently() {
-        use crate::scheduler::{allocate, AllocatorConfig, BackendKind, ModelRegistry, PoolRouter};
+        use crate::scheduler::{
+            allocate, AllocatorConfig, BackendKind, DeployOptions, ModelRegistry, PoolRouter,
+        };
         let mut reg = ModelRegistry::new();
         reg.register_named("fc_small").unwrap();
         reg.register_named("conv_a").unwrap();
         let cfg = SystemConfig::default();
         let alloc = AllocatorConfig { total_tpus: 2, ..Default::default() };
         let plan = allocate(&reg, &cfg, &alloc).unwrap();
-        let router =
-            PoolRouter::deploy(&plan, &reg, &cfg, &BackendKind::Synthetic, 8).unwrap();
+        let router = PoolRouter::deploy(
+            &plan,
+            &reg,
+            &cfg,
+            &BackendKind::Synthetic,
+            DeployOptions::new().with_queue_capacity(8),
+        )
+        .unwrap();
         let reports = serve_pool(&router, 10, 1, true).unwrap();
         assert_eq!(reports.len(), 2);
         assert_eq!(reports[0].name, "conv_a");
@@ -638,7 +646,7 @@ mod tests {
 
     #[test]
     fn open_loop_driver_serves_and_verifies_every_process() {
-        use crate::scheduler::{AllocatorConfig, BackendKind, ModelRegistry, OpenOptions};
+        use crate::scheduler::{AllocatorConfig, BackendKind, DeployOptions, ModelRegistry};
         use crate::workload::{Arrivals, TenantLoad};
         let mut reg = ModelRegistry::new();
         reg.register_named("fc_small").unwrap();
@@ -648,7 +656,7 @@ mod tests {
             SystemConfig::default(),
             AllocatorConfig { total_tpus: 2, ..Default::default() },
             BackendKind::Synthetic,
-            OpenOptions::default(),
+            DeployOptions::default(),
         )
         .unwrap();
         let loads = vec![

@@ -156,6 +156,103 @@ impl LatencyHistogram {
         self.sum_s += other.sum_s;
         self.max_s = self.max_s.max(other.max_s);
     }
+
+    /// The histogram of samples recorded since `earlier` was cloned off
+    /// this same stream: per-bucket saturating subtraction.  Lets the
+    /// online calibrator window a lifetime histogram by diffing
+    /// successive snapshots instead of instrumenting the hot path.
+    /// `max` is carried from `self` (an upper bound for the window —
+    /// the per-window maximum is not recoverable from two snapshots).
+    pub fn delta_since(&self, earlier: &LatencyHistogram) -> LatencyHistogram {
+        let counts: Vec<u64> = self
+            .counts
+            .iter()
+            .zip(&earlier.counts)
+            .map(|(a, b)| a.saturating_sub(*b))
+            .collect();
+        LatencyHistogram {
+            total: self.total.saturating_sub(earlier.total),
+            sum_s: (self.sum_s - earlier.sum_s).max(0.0),
+            max_s: self.max_s,
+            counts,
+        }
+    }
+}
+
+/// Two-bank windowed variant of [`LatencyHistogram`] for online
+/// calibration: `record` feeds the hot bank, `reset_window` retires the
+/// hot bank into the warm slot (dropping the bank before it), and
+/// `recent` reads the merge of the two newest banks.  A lifetime
+/// histogram averages a mid-run service-time shift away under its old
+/// counts; this one forgets everything older than two windows, so a
+/// drifted stage's p99 shows up after at most two `reset_window` calls.
+#[derive(Debug, Clone, Default)]
+pub struct WindowedHistogram {
+    /// In-progress window, receiving live samples.
+    hot: LatencyHistogram,
+    /// The last completed window (the decayed history: one bank deep).
+    warm: LatencyHistogram,
+    /// Completed windows so far (`reset_window` calls).
+    windows: u64,
+}
+
+impl WindowedHistogram {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record one sample into the current window.
+    pub fn record(&mut self, v_s: f64) {
+        self.hot.record(v_s);
+    }
+
+    /// Fold a pre-bucketed batch of samples (e.g. a [`delta_since`]
+    /// window of a lifetime histogram) into the current window — O(1)
+    /// in the number of samples.
+    ///
+    /// [`delta_since`]: LatencyHistogram::delta_since
+    pub fn absorb(&mut self, batch: &LatencyHistogram) {
+        self.hot.merge(batch);
+    }
+
+    /// Close the current window: the hot bank becomes the warm bank and
+    /// the previous warm bank is dropped (samples age out after two
+    /// windows).  O(1) bank swap, no per-sample work.
+    pub fn reset_window(&mut self) {
+        self.warm = std::mem::take(&mut self.hot);
+        self.windows += 1;
+    }
+
+    /// The recent view: last completed window merged with the
+    /// in-progress one.  Percentiles over this never include samples
+    /// older than two windows.
+    pub fn recent(&self) -> LatencyHistogram {
+        let mut merged = self.warm.clone();
+        merged.merge(&self.hot);
+        merged
+    }
+
+    /// Samples visible in the recent view.
+    pub fn recent_count(&self) -> u64 {
+        self.warm.count() + self.hot.count()
+    }
+
+    /// Samples recorded in the in-progress window only (excludes the
+    /// warm bank) — the calibrator's per-window traffic gate, so a
+    /// sparse window is skipped even when the previous window was busy.
+    pub fn window_count(&self) -> u64 {
+        self.hot.count()
+    }
+
+    /// Percentile over the recent view (NaN while empty).
+    pub fn recent_percentile(&self, q: f64) -> f64 {
+        self.recent().percentile(q)
+    }
+
+    /// Completed windows so far.
+    pub fn windows(&self) -> u64 {
+        self.windows
+    }
 }
 
 #[cfg(test)]
@@ -345,5 +442,86 @@ mod tests {
         a.merge(&b);
         assert_eq!(a.count(), 2);
         assert!(a.max() == 2e-3);
+    }
+
+    #[test]
+    fn histogram_delta_since_windows_a_lifetime_stream() {
+        let mut life = LatencyHistogram::new();
+        for _ in 0..500 {
+            life.record(1e-3);
+        }
+        let snap = life.clone();
+        for _ in 0..50 {
+            life.record(1e-2);
+        }
+        let delta = life.delta_since(&snap);
+        assert_eq!(delta.count(), 50);
+        assert!(delta.percentile(50.0) > 5e-3, "delta sees only the new samples");
+        assert!((delta.mean() - 1e-2).abs() < 1e-9);
+        // absorbing the delta into a windowed histogram feeds its hot bank
+        let mut w = WindowedHistogram::new();
+        w.absorb(&delta);
+        assert_eq!(w.recent_count(), 50);
+        assert!(w.recent_percentile(99.0) > 5e-3);
+        // identical snapshots diff to an empty window
+        assert_eq!(life.delta_since(&life).count(), 0);
+    }
+
+    #[test]
+    fn windowed_histogram_detects_drift_a_lifetime_histogram_averages_away() {
+        // regression: a stage that served 1 ms for its whole life and
+        // then drifts to 10 ms must surface the new p99 within two
+        // windows.  The lifetime histogram keeps reporting the old p99
+        // (the drifted tail is outvoted by history); the two-bank
+        // windowed histogram forgets that history.
+        let mut lifetime = LatencyHistogram::new();
+        let mut windowed = WindowedHistogram::new();
+        for _ in 0..10_000 {
+            lifetime.record(1e-3);
+            windowed.record(1e-3);
+        }
+        // drift hits: 100-sample windows of 10 ms service time
+        let mut detected_after = None;
+        for w in 1..=4u64 {
+            windowed.reset_window();
+            for _ in 0..100 {
+                lifetime.record(1e-2);
+                windowed.record(1e-2);
+            }
+            if detected_after.is_none() && windowed.recent_percentile(99.0) > 5e-3 {
+                detected_after = Some(w);
+            }
+        }
+        // the windowed view sees the drift within two windows...
+        assert!(
+            matches!(detected_after, Some(w) if w <= 2),
+            "drift not detected: {detected_after:?}"
+        );
+        // ...while the lifetime histogram still reports the stale p99
+        assert!(
+            lifetime.percentile(99.0) < 2e-3,
+            "lifetime p99 {} should be dominated by pre-drift history",
+            lifetime.percentile(99.0)
+        );
+    }
+
+    #[test]
+    fn windowed_histogram_reset_ages_out_after_two_banks() {
+        let mut w = WindowedHistogram::new();
+        w.record(1e-3);
+        assert_eq!(w.recent_count(), 1);
+        w.reset_window(); // sample now in the warm bank: still visible
+        assert_eq!(w.recent_count(), 1);
+        assert_eq!(w.windows(), 1);
+        w.reset_window(); // two windows old: gone
+        assert_eq!(w.recent_count(), 0);
+        assert!(w.recent_percentile(99.0).is_nan());
+        // recent() merges both banks
+        w.record(1e-3);
+        w.reset_window();
+        w.record(4e-3);
+        let r = w.recent();
+        assert_eq!(r.count(), 2);
+        assert_eq!(r.max(), 4e-3);
     }
 }

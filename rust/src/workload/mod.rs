@@ -151,6 +151,30 @@ pub fn arrival_seed(run_seed: u64, model: &str) -> u64 {
     run_seed ^ crate::scheduler::tenant_salt(model) ^ ARRIVAL_STREAM_SALT
 }
 
+/// Salt separating the drift-injection stream from the arrival and
+/// payload streams (all three derive from the same user-facing seed).
+pub const DRIFT_STREAM_SALT: u64 = 0xD21F_7D21_F7D2_1F7D;
+
+/// Seeded true-cost drift factor for one tenant: the hidden
+/// observed/profiled service-time ratio a `repro loadgen --calibrate` /
+/// `repro calibrate` run injects, deterministic in `(run_seed, model)`
+/// and uniform in `[1.8, 2.5)`.  The floor is chosen against the
+/// calibrator's histogram quantization: `LatencyHistogram` buckets grow
+/// by 1.25x, so a factor >= 1.8 always moves the observed p99 at least
+/// two buckets (a measured ratio >= 1.5625), safely past the default
+/// 0.5 drift threshold — a drifted tenant provably recalibrates, and
+/// the band is tight enough that one corrective re-plan converges.
+pub fn drift_factor(run_seed: u64, model: &str) -> f64 {
+    // splitmix64-style finalizer over the salted seed: any bit of the
+    // seed or name flips the factor, and the result is platform-stable
+    let mut z = run_seed ^ crate::scheduler::tenant_salt(model) ^ DRIFT_STREAM_SALT;
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^= z >> 31;
+    let frac = (z >> 11) as f64 / (1u64 << 53) as f64; // [0, 1)
+    1.8 + 0.7 * frac
+}
+
 /// One tenant's offered load in a `repro loadgen` run.
 #[derive(Debug, Clone)]
 pub struct TenantLoad {
@@ -598,6 +622,20 @@ mod tests {
         for spec in ["poisson:400", "bursty:800:0.05:0.1", "closed:4:0.001"] {
             let a = Arrivals::parse(spec).unwrap();
             assert_eq!(Arrivals::parse(&a.label()).unwrap(), a);
+        }
+    }
+
+    #[test]
+    fn drift_factor_is_seeded_bounded_and_tenant_dependent() {
+        let a = drift_factor(7, "fc_small");
+        assert_eq!(a, drift_factor(7, "fc_small"), "same (seed, model) => same factor");
+        assert_ne!(a, drift_factor(8, "fc_small"), "seed must matter");
+        assert_ne!(a, drift_factor(7, "conv_a"), "tenant must matter");
+        for seed in 0..64u64 {
+            for model in ["fc_small", "conv_a", "fc_big", "pyramid"] {
+                let f = drift_factor(seed, model);
+                assert!((1.8..2.5).contains(&f), "factor {f} out of band for {model}@{seed}");
+            }
         }
     }
 

@@ -13,7 +13,7 @@ use tpu_pipeline::cli::{self, Args};
 use tpu_pipeline::config::SystemConfig;
 use tpu_pipeline::coordinator::HedgeConfig;
 use tpu_pipeline::scheduler::{
-    Admission, AllocatorConfig, BackendKind, ModelRegistry, OpenOptions, ServingPool,
+    Admission, AllocatorConfig, BackendKind, DeployOptions, ModelRegistry, ServingPool,
     TenantClient,
 };
 
@@ -22,7 +22,7 @@ fn run(cmd: &str) -> String {
     cli::run(&Args::parse(&argv).unwrap()).unwrap()
 }
 
-fn pool(models: &[&str], tpus: usize, opts: OpenOptions) -> ServingPool {
+fn pool(models: &[&str], tpus: usize, opts: DeployOptions) -> ServingPool {
     let mut registry = ModelRegistry::new();
     for m in models {
         registry.register_named(m).unwrap();
@@ -86,7 +86,7 @@ fn chaos_csv_is_a_per_seed_golden_artifact() {
 /// request — drained or fresh — verifies bit-exact.  Nothing is lost.
 #[test]
 fn device_kill_mid_run_recovers_bit_exact() {
-    let p = pool(&["fc_small", "conv_a"], 4, OpenOptions::default());
+    let p = pool(&["fc_small", "conv_a"], 4, DeployOptions::default());
     let names = p.names();
     let n = 40usize;
     let mut pending = Vec::new();
@@ -136,7 +136,7 @@ fn hedge_fires_on_injected_straggler() {
     let p = pool(
         &["fc_small"],
         3,
-        OpenOptions {
+        DeployOptions {
             hedge: Some(HedgeConfig { p99_factor: 2.0, min_samples: 4 }),
             ..Default::default()
         },
@@ -166,7 +166,7 @@ fn shedding_turns_low_tiers_away_before_the_backlog_breaches() {
     let p = pool(
         &["fc_small"],
         3,
-        OpenOptions { queue_capacity: 4, ..Default::default() },
+        DeployOptions { queue_capacity: 4, ..Default::default() },
     );
     let replicas = p.plan().assignment("fc_small").unwrap().replicas;
     assert_eq!(replicas, 3);

@@ -10,7 +10,7 @@ use tpu_pipeline::config::SystemConfig;
 use tpu_pipeline::coordinator::batcher::BatchPolicy;
 use tpu_pipeline::scheduler::{
     allocate, synthetic_reference, tenant_salt, AllocatorConfig, BackendKind, ModelRegistry,
-    OpenOptions, PoolRouter, ServingPool, TenantShape,
+    DeployOptions, PoolRouter, ServingPool, TenantShape,
 };
 use tpu_pipeline::util::rng::Rng;
 
@@ -86,7 +86,14 @@ fn closed_batches_are_byte_identical_across_grant_shapes() {
             _ => assert!(plan.assignments.iter().all(|a| !a.grant.is_shared())),
         }
         let router =
-            PoolRouter::deploy(&plan, &reg, &cfg, &BackendKind::Synthetic, 16).unwrap();
+            PoolRouter::deploy(
+                &plan,
+                &reg,
+                &cfg,
+                &BackendKind::Synthetic,
+                DeployOptions::new().with_queue_capacity(16),
+            )
+            .unwrap();
         router.wait_ready().unwrap();
         for name in &names {
             let t = router.tenant(name).unwrap();
@@ -116,7 +123,7 @@ fn open_loop_responses_are_byte_identical_under_sharing() {
         SystemConfig::default(),
         AllocatorConfig { total_tpus: 1, allow_sharing: true, ..Default::default() },
         BackendKind::Synthetic,
-        OpenOptions {
+        DeployOptions {
             policy: BatchPolicy {
                 max_batch: 8,
                 max_wait: std::time::Duration::from_millis(1),

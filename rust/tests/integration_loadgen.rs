@@ -6,7 +6,7 @@
 use tpu_pipeline::cli::{self, Args};
 use tpu_pipeline::config::SystemConfig;
 use tpu_pipeline::scheduler::{
-    resolve_model, AllocatorConfig, BackendKind, ModelRegistry, OpenOptions, ServingPool,
+    resolve_model, AllocatorConfig, BackendKind, DeployOptions, ModelRegistry, ServingPool,
     Tenant,
 };
 use tpu_pipeline::serving;
@@ -60,7 +60,7 @@ fn open_loop_with_mid_run_churn_loses_nothing() {
         SystemConfig::default(),
         AllocatorConfig { total_tpus: 4, ..Default::default() },
         BackendKind::Synthetic,
-        OpenOptions::default(),
+        DeployOptions::default(),
     )
     .unwrap();
 
@@ -144,7 +144,7 @@ fn loadgen_shared_deployment_reproducible_and_serves_live() {
         SystemConfig::default(),
         alloc,
         BackendKind::Synthetic,
-        OpenOptions { policy: spec.policy, queue_capacity: 32, ..Default::default() },
+        DeployOptions { policy: spec.policy, queue_capacity: 32, ..Default::default() },
     )
     .unwrap();
     let reports = serving::serve_open_loop(&pool, &spec.loads, spec.seed, true).unwrap();
@@ -244,7 +244,7 @@ fn loadgen_replicated_deployment_reproducible_and_serves_live() {
         SystemConfig::default(),
         alloc,
         BackendKind::Synthetic,
-        OpenOptions { policy: spec.policy, queue_capacity: 32, ..Default::default() },
+        DeployOptions { policy: spec.policy, queue_capacity: 32, ..Default::default() },
     )
     .unwrap();
     assert_eq!(pool.plan().assignment("fc_small").unwrap().replicas, 2);
@@ -278,7 +278,7 @@ fn loadgen_cli_live_smoke() {
         cfg,
         alloc,
         BackendKind::Synthetic,
-        OpenOptions { policy: spec.policy, queue_capacity: 16, ..Default::default() },
+        DeployOptions { policy: spec.policy, queue_capacity: 16, ..Default::default() },
     )
     .unwrap();
     let reports = serving::serve_open_loop(&pool, &spec.loads, spec.seed, true).unwrap();

@@ -6,7 +6,7 @@
 use tpu_pipeline::cli::{self, Args};
 use tpu_pipeline::config::SystemConfig;
 use tpu_pipeline::scheduler::{
-    allocate, AllocatorConfig, BackendKind, ModelRegistry, OpenOptions, PoolRouter,
+    allocate, AllocatorConfig, BackendKind, DeployOptions, ModelRegistry, PoolRouter,
     ServingPool,
 };
 use tpu_pipeline::serving;
@@ -47,7 +47,14 @@ fn pool_serves_two_tenants_end_to_end() {
     assert_eq!(plan.assignments.len(), 2, "queued={:?}", plan.queued);
 
     let router =
-        PoolRouter::deploy(&plan, &registry, &cfg, &BackendKind::Synthetic, 32).unwrap();
+        PoolRouter::deploy(
+            &plan,
+            &registry,
+            &cfg,
+            &BackendKind::Synthetic,
+            DeployOptions::new().with_queue_capacity(32),
+        )
+        .unwrap();
     let reports = serving::serve_pool(&router, 25, 0xBEEF, true).unwrap();
     assert_eq!(reports.len(), 2);
     for r in &reports {
@@ -104,7 +111,14 @@ fn co_resident_tenants_serve_end_to_end() {
     }
 
     let router =
-        PoolRouter::deploy(&plan, &registry, &cfg, &BackendKind::Synthetic, 16).unwrap();
+        PoolRouter::deploy(
+            &plan,
+            &registry,
+            &cfg,
+            &BackendKind::Synthetic,
+            DeployOptions::new().with_queue_capacity(16),
+        )
+        .unwrap();
     let reports = serving::serve_pool(&router, 20, 0xFEED, true).unwrap();
     assert_eq!(reports.len(), 2);
     for r in &reports {
@@ -133,7 +147,14 @@ fn replicated_tenant_round_trips() {
     assert_eq!(plan.tpus_used(), 3);
 
     let router =
-        PoolRouter::deploy(&plan, &registry, &cfg, &BackendKind::Synthetic, 16).unwrap();
+        PoolRouter::deploy(
+            &plan,
+            &registry,
+            &cfg,
+            &BackendKind::Synthetic,
+            DeployOptions::new().with_queue_capacity(16),
+        )
+        .unwrap();
     let reports = serving::serve_pool(&router, 30, 1, true).unwrap();
     assert_eq!(reports.len(), 1);
     assert_eq!(reports[0].tpu_count * reports[0].replicas, 3);
@@ -150,7 +171,7 @@ fn open_pool(models: &[&str], tpus: usize) -> ServingPool {
         SystemConfig::default(),
         AllocatorConfig { total_tpus: tpus, ..Default::default() },
         BackendKind::Synthetic,
-        OpenOptions::default(),
+        DeployOptions::default(),
     )
     .unwrap()
 }
