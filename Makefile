@@ -20,7 +20,7 @@ SMOKE_OUT ?= smoke-out
 
 .PHONY: all build test check artifacts python-test clean \
         smoke smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane \
-        smoke-trace smoke-chaos smoke-cache smoke-calibrate \
+        smoke-trace smoke-chaos smoke-cache smoke-calibrate smoke-recover \
         bench-quick bench-check bench-baseline
 
 all: build
@@ -54,7 +54,7 @@ python-test:
 
 # ---- CI smoke (identical commands locally and in .github/workflows/ci.yml)
 
-smoke: smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane smoke-trace smoke-chaos smoke-cache smoke-calibrate
+smoke: smoke-scheduler smoke-loadgen smoke-sharing smoke-dataplane smoke-trace smoke-chaos smoke-cache smoke-calibrate smoke-recover
 
 smoke-scheduler:
 	$(CARGO) run --release --bin repro -- schedule --models fc_big,conv_a,conv_b --tpus 4
@@ -206,6 +206,33 @@ smoke-calibrate:
 		$(SMOKE_OUT)/calibrate_lg_on.csv \
 		| diff $(SMOKE_OUT)/calibrate_lg_off.csv -
 	grep -q "observed_p99_ms" $(SMOKE_OUT)/calibrate_lg_on.csv
+
+# Crash-recovery gate (DESIGN.md §17): write a recovery journal, "crash"
+# (exit without deregistering), warm-restart via `repro recover` — the
+# recovered pool's deterministic loadgen CSV must be byte-identical to an
+# uninterrupted same-seed `repro loadgen` run, and the live warm-restart
+# (plan-fingerprint check + bit-exact verification wave) runs inside the
+# recover invocation itself.
+smoke-recover:
+	mkdir -p $(SMOKE_OUT)
+	$(CARGO) run --release --bin repro -- loadgen --seed 7 --models fc_small,conv_a \
+		--tpus 4 --requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/recover_base.csv
+	$(CARGO) run --release --bin repro -- recover --journal $(SMOKE_OUT)/recover.journal \
+		--write --seed 7 --models fc_small,conv_a \
+		--tpus 4 --requests 120 --arrivals poisson:700
+	$(CARGO) run --release --bin repro -- recover --journal $(SMOKE_OUT)/recover.journal \
+		--seed 7 --models fc_small,conv_a \
+		--tpus 4 --requests 120 --arrivals poisson:700 --csv > $(SMOKE_OUT)/recover_after.csv
+	diff $(SMOKE_OUT)/recover_base.csv $(SMOKE_OUT)/recover_after.csv
+	# the reliability chaos columns stay seed-deterministic too
+	$(CARGO) run --release --bin repro -- chaos --seed 7 --models fc_small \
+		--tpus 3 --max-tpus-per-model 1 --requests 120 --arrivals poisson:900 \
+		--crashes 1 --deadline-ms 50 --csv > $(SMOKE_OUT)/chaos_rel_a.csv
+	$(CARGO) run --release --bin repro -- chaos --seed 7 --models fc_small \
+		--tpus 3 --max-tpus-per-model 1 --requests 120 --arrivals poisson:900 \
+		--crashes 1 --deadline-ms 50 --csv > $(SMOKE_OUT)/chaos_rel_b.csv
+	diff $(SMOKE_OUT)/chaos_rel_a.csv $(SMOKE_OUT)/chaos_rel_b.csv
+	grep -q "expired,recoveries" $(SMOKE_OUT)/chaos_rel_a.csv
 
 # ---- CI bench pipeline (DESIGN.md §11)
 

@@ -20,7 +20,8 @@ use std::time::{Duration, Instant};
 use anyhow::Result;
 use tpu_pipeline::coordinator::queue::bounded;
 use tpu_pipeline::coordinator::{
-    Arena, Pipeline, PipelineConfig, Request, StageBackend, StageFactory, StageSim, Tensor,
+    Arena, BreakerConfig, Pipeline, PipelineConfig, ReplicaRouter, Request, StageBackend,
+    StageFactory, StageSim, Tensor,
 };
 use tpu_pipeline::metrics::DataPlaneMetrics;
 use tpu_pipeline::obs::{SpanKind, Tracer};
@@ -92,7 +93,7 @@ fn spawn_pipeline(batched: bool) -> Pipeline {
 
 fn requests() -> Vec<Request> {
     let mut rng = Rng::new(0xDA7A);
-    (0..BATCH as u64).map(|id| Request { id, data: rng.i8_vec(ELEMS) }).collect()
+    (0..BATCH as u64).map(|id| Request::new(id, rng.i8_vec(ELEMS))).collect()
 }
 
 fn main() {
@@ -152,6 +153,46 @@ fn main() {
         Tensor::slice(&slab, 0, ELEMS)
     });
 
+    // ---- reliability off-paths (DESIGN.md §17): deadline checks and the
+    // replica watchdog ride the regression gate so their cost when *unused*
+    // stays one branch.  `deadline_check/none_1k` is the per-handoff check
+    // on deadline-free requests; `deadline_check/stamped_1k` the stamped
+    // (unexpired) variant; the router pair measures a healthy 2-replica
+    // dispatch with the breaker absent vs armed — the watchdog's off-path.
+    let now = Instant::now();
+    let free = Request::new(0, vec![0i8; 8]);
+    let stamped = Request::new(1, vec![0i8; 8]).with_deadline(now + Duration::from_secs(3600));
+    b.bench("deadline_check/none_1k", || {
+        let mut n = 0u32;
+        for _ in 0..1000 {
+            if !black_box(&free).expired_at(now) {
+                n += 1;
+            }
+        }
+        n
+    });
+    b.bench("deadline_check/stamped_1k", || {
+        let mut n = 0u32;
+        for _ in 0..1000 {
+            if !black_box(&stamped).expired_at(now) {
+                n += 1;
+            }
+        }
+        n
+    });
+
+    let no_breaker = ReplicaRouter::new(vec![spawn_pipeline(true), spawn_pipeline(true)]);
+    let armed = ReplicaRouter::new(vec![spawn_pipeline(true), spawn_pipeline(true)])
+        .with_breaker(BreakerConfig::default());
+    drop(no_breaker.serve_batch(reqs.clone()).unwrap()); // warm the arenas
+    drop(armed.serve_batch(reqs.clone()).unwrap());
+    b.bench("router2/no_breaker_b50", || {
+        no_breaker.serve_batch(black_box(reqs.clone())).unwrap()
+    });
+    b.bench("router2/breaker_healthy_b50", || {
+        armed.serve_batch(black_box(reqs.clone())).unwrap()
+    });
+
     // ---- tracer overhead (DESIGN.md §13): the disabled path must be one
     // branch on a None option; the enabled path one lock-free ring store
     // (degrading to the counted-drop path once the bounded ring fills —
@@ -202,6 +243,8 @@ fn main() {
 
     p_batched.shutdown();
     p_legacy.shutdown();
+    no_breaker.shutdown();
+    armed.shutdown();
 
     // enforce the bar, not just print it: a regression below 2x fails the
     // bench binary (and therefore the CI bench job)

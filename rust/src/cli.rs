@@ -402,6 +402,7 @@ pub fn run(args: &Args) -> Result<String> {
         "loadgen" => loadgen(args)?,
         "dataplane" => dataplane(args)?,
         "chaos" => chaos(args)?,
+        "recover" => recover_cmd(args)?,
         "calibrate" => calibrate(args)?,
         "trace" => trace_cmd(args)?,
         "" | "help" | "--help" => USAGE.to_string(),
@@ -1181,33 +1182,67 @@ pub fn chaos(args: &Args) -> Result<String> {
         kills: args.usize_flag("kills", 1)?,
         stragglers: args.usize_flag("stragglers", 1)?,
         overloads: args.usize_flag("overloads", 1)?,
+        crashes: args.usize_flag("crashes", 0)?,
     };
     anyhow::ensure!(fspec.horizon_s > 0.0, "--horizon-s must be positive");
     let drain_ms = args.f64_flag("drain-ms", 2.0)?;
     anyhow::ensure!(drain_ms >= 0.0, "--drain-ms must be non-negative");
+    let deadline_s = match args.flags.get("deadline-ms") {
+        None => None,
+        Some(v) => {
+            let deadline_ms: f64 = v.parse().with_context(|| format!("bad --deadline-ms {v:?}"))?;
+            anyhow::ensure!(
+                deadline_ms.is_finite() && deadline_ms > 0.0,
+                "--deadline-ms must be positive and finite (got {deadline_ms})"
+            );
+            Some(deadline_ms / 1e3)
+        }
+    };
     let ccfg = ChaosConfig {
         queue_capacity: args.usize_flag("queue-capacity", 64)?.max(1),
         drain_s: drain_ms / 1e3,
         hedge: !args.bool_flag("no-hedge"),
+        deadline_s,
     };
+    // the reliability columns (expired / recoveries) appear only when a
+    // §17 knob is in play, so legacy chaos CSVs stay byte-identical
+    let reliability = fspec.crashes > 0 || ccfg.deadline_s.is_some();
 
     let plan = allocate(&registry, &cfg, &alloc)?;
+    let mut headers = vec![
+        "model", "arrivals", "replicas", "events", "submitted", "admitted", "shed",
+        "completed",
+    ];
+    if reliability {
+        headers.extend(["expired", "recoveries"]);
+    }
+    headers.extend([
+        "replayed", "hedged", "kills", "p50_ms", "p99_ms", "makespan_ms", "status",
+    ]);
     let mut t = Table::new(
         format!(
             "Chaos sim — seed {} | horizon {:.2}s | {} kill(s) {} straggler(s) \
-             {} overload spike(s) | hedge {}",
+             {} overload spike(s) | hedge {}{}",
             spec.seed,
             fspec.horizon_s,
             fspec.kills,
             fspec.stragglers,
             fspec.overloads,
             if ccfg.hedge { "on" } else { "off" },
+            if reliability {
+                format!(
+                    " | {} crash(es), deadline {}",
+                    fspec.crashes,
+                    match ccfg.deadline_s {
+                        Some(d) => format!("{:.1} ms", d * 1e3),
+                        None => "off".to_string(),
+                    },
+                )
+            } else {
+                String::new()
+            },
         ),
-        &[
-            "model", "arrivals", "replicas", "events", "submitted", "admitted", "shed",
-            "completed", "replayed", "hedged", "kills", "p50_ms", "p99_ms",
-            "makespan_ms", "status",
-        ],
+        &headers,
     );
     for load in &spec.loads {
         anyhow::ensure!(
@@ -1221,7 +1256,7 @@ pub fn chaos(args: &Args) -> Result<String> {
                 "queued"
             };
             let mut row = vec![load.model.clone(), load.arrivals.label()];
-            row.extend(vec!["-".to_string(); 12]);
+            row.extend(vec!["-".to_string(); if reliability { 14 } else { 12 }]);
             row.push(status.into());
             t.row(row);
             continue;
@@ -1239,24 +1274,36 @@ pub fn chaos(args: &Args) -> Result<String> {
             &ccfg,
         );
         anyhow::ensure!(
-            run.submitted == run.admitted + run.shed && run.completed == run.admitted,
+            run.submitted == run.admitted + run.shed
+                && run.admitted == run.completed + run.expired
+                && run.submitted == run.completed + run.shed + run.expired,
             "{}: chaos accounting broke: {run:?}",
             load.model
         );
-        t.row(vec![
+        let mut events = format!(
+            "k{}/s{}/o{}",
+            fplan.count("kill"),
+            fplan.count("straggler"),
+            fplan.count("overload")
+        );
+        if fspec.crashes > 0 {
+            events.push_str(&format!("/c{}", fplan.count("crash")));
+        }
+        let mut row = vec![
             load.model.clone(),
             load.arrivals.label(),
             a.replicas.to_string(),
-            format!(
-                "k{}/s{}/o{}",
-                fplan.count("kill"),
-                fplan.count("straggler"),
-                fplan.count("overload")
-            ),
+            events,
             run.submitted.to_string(),
             run.admitted.to_string(),
             run.shed.to_string(),
             run.completed.to_string(),
+        ];
+        if reliability {
+            row.push(run.expired.to_string());
+            row.push(run.recoveries.to_string());
+        }
+        row.extend([
             run.replayed.to_string(),
             run.hedged.to_string(),
             run.kills.to_string(),
@@ -1265,13 +1312,17 @@ pub fn chaos(args: &Args) -> Result<String> {
             ms(run.makespan_s),
             "admitted".into(),
         ]);
+        t.row(row);
     }
     let mut out = emit(t, args.csv());
     if !args.csv() {
-        out.push_str(
+        out.push_str(if reliability {
             "chaos sim: same --seed => bit-identical table | \
-             shed is accounted, admitted work always completes\n",
-        );
+             submitted == completed + shed + expired, nothing is silent\n"
+        } else {
+            "chaos sim: same --seed => bit-identical table | \
+             shed is accounted, admitted work always completes\n"
+        });
     }
     if args.bool_flag("live") {
         out.push_str(&chaos_live(args, &cfg)?);
@@ -1313,6 +1364,15 @@ fn chaos_live(args: &Args, cfg: &SystemConfig) -> Result<String> {
         Ok(())
     }
 
+    // hedge knobs are validated here, at CLI parse time, with the same
+    // pinned messages HedgeConfig::validate pins at construction — a bad
+    // flag fails fast instead of mid-drill
+    let hedge = HedgeConfig {
+        p99_factor: args.f64_flag("hedge-p99-factor", 2.0)?,
+        min_samples: args.u64_flag("hedge-min-samples", 4)?,
+    };
+    hedge.validate()?;
+
     let (registry, alloc, spec) = loadgen_spec(args)?;
     let requests = args.usize_flag("live-requests", 40)?.max(1);
     let queue_capacity = args.usize_flag("live-queue-capacity", 8)?.max(2);
@@ -1327,8 +1387,8 @@ fn chaos_live(args: &Args, cfg: &SystemConfig) -> Result<String> {
             policy: spec.policy,
             queue_capacity,
             tracer: tracer.clone(),
-            hedge: Some(HedgeConfig { p99_factor: 2.0, min_samples: 4 }),
-            calibrate: None,
+            hedge: Some(hedge),
+            ..Default::default()
         },
     )?;
     let mut out = String::from("\nchaos live (synthetic backend):\n");
@@ -1411,6 +1471,9 @@ fn chaos_live(args: &Args, cfg: &SystemConfig) -> Result<String> {
                     Admission::Shed => {
                         anyhow::ensure!(tier != 0, "tier 0 must never be shed");
                         shed += 1;
+                    }
+                    Admission::Expired => {
+                        anyhow::bail!("no deadlines configured, yet a request expired")
                     }
                 }
             }
@@ -1501,6 +1564,62 @@ fn chaos_live(args: &Args, cfg: &SystemConfig) -> Result<String> {
         _ => out.push_str("  kill: pool too small for a device-kill drill; skipped\n"),
     }
 
+    // ---- phase 5: controller crash -> journal warm-restart (§17).
+    // A second, journaled pool serves a wave, "crashes" (shutdown leaves
+    // the WAL's register events in place), and recover() must rebuild the
+    // exact pre-crash plan and keep serving bit-exact.
+    {
+        let drill = (|| -> Result<String> {
+            let (reg2, alloc2, spec2) = loadgen_spec(args)?;
+            let jpath = std::env::temp_dir()
+                .join(format!("repro-chaos-recover-{}.journal", std::process::id()));
+            let _ = std::fs::remove_file(&jpath);
+            let opts = DeployOptions {
+                policy: spec2.policy,
+                queue_capacity,
+                ..Default::default()
+            };
+            let crashed = ServingPool::deploy(
+                reg2,
+                cfg.clone(),
+                alloc2.clone(),
+                BackendKind::Synthetic,
+                opts.clone().with_journal(&jpath),
+            )?;
+            for name in crashed.names() {
+                wave(&crashed, &name, requests, spec2.seed ^ 0x0C7)?;
+            }
+            let before = format!("{:?}", crashed.plan().assignments);
+            let tenants = crashed.names().len();
+            crashed.shutdown(); // the "crash": nothing is deregistered
+            let recovered = ServingPool::recover(
+                cfg.clone(),
+                alloc2,
+                BackendKind::Synthetic,
+                opts,
+                &jpath,
+            )?;
+            anyhow::ensure!(
+                format!("{:?}", recovered.plan().assignments) == before,
+                "recovered plan diverged from the pre-crash plan"
+            );
+            for name in recovered.names() {
+                wave(&recovered, &name, requests, spec2.seed ^ 0x0C8)?;
+            }
+            recovered.shutdown();
+            let _ = std::fs::remove_file(&jpath);
+            Ok(format!(
+                "  recover: controller crashed with {tenants} journaled tenant(s) -> \
+                 warm-restart rebuilt the exact plan; post-recovery responses \
+                 bit-exact\n"
+            ))
+        })();
+        match drill {
+            Ok(line) => out.push_str(&line),
+            Err(e) => failures.push(format!("recover: {e}")),
+        }
+    }
+
     // ---- exports (written even on failure: the trace is the diagnosis)
     let mut metrics_out: Vec<(String, String, Json)> = Vec::new();
     for name in pool.names() {
@@ -1534,6 +1653,183 @@ fn chaos_live(args: &Args, cfg: &SystemConfig) -> Result<String> {
         print!("{out}");
         anyhow::bail!("chaos live drills failed: {}", failures.join("; "))
     }
+}
+
+/// `repro recover`: the crash-recovery drill (DESIGN.md §17).
+///
+/// `--write` is the drill's first half: start a fresh journal at
+/// `--journal`, deploy a *journaled* pool from the usual pool/loadgen
+/// flags, serve a seeded wave bit-exact, and exit without deregistering
+/// anything — exactly what a crashed controller leaves behind.  A later
+/// plain invocation replays the WAL, rebuilds the registry from the
+/// journal (not from `--models`), warm-restarts a live pool via
+/// `ServingPool::recover` (plan-fingerprint check + generation fencing),
+/// serves a verification wave, and renders the deterministic loadgen
+/// table for the recovered tenants.  That table is a pure function of
+/// (journal, flags): its `--csv` form is byte-identical to what an
+/// uninterrupted `repro loadgen --csv` prints with the same flags — the
+/// golden contract `make smoke-recover` diffs.  The live warm-restart
+/// runs even under `--csv` (only the table is printed); `--no-live`
+/// skips it.
+pub fn recover_cmd(args: &Args) -> Result<String> {
+    use crate::coordinator::batcher::BatchPolicy;
+    use crate::scheduler::{replay_journal, BackendKind, DeployOptions, Journal, ServingPool};
+    use crate::workload::{Arrivals, TenantLoad};
+    use std::path::PathBuf;
+
+    // one seeded wave: submit, drain, verify every byte against the
+    // serial reference
+    fn wave(pool: &ServingPool, name: &str, n: usize, seed: u64) -> Result<()> {
+        let client = pool.client(name)?;
+        let reqs = client.synth_requests(n, seed);
+        let expected: Vec<Vec<i8>> = reqs.iter().map(|r| client.reference(&r.data)).collect();
+        for r in reqs {
+            pool.submit(name, r)?;
+        }
+        for _ in 0..n {
+            let r = client.done.recv().context("completion stream closed early")?;
+            anyhow::ensure!(
+                r.data == expected[r.id as usize],
+                "byte drift on request {}",
+                r.id
+            );
+        }
+        Ok(())
+    }
+
+    let cfg = args.config()?;
+    let path = PathBuf::from(
+        args.flags
+            .get("journal")
+            .ok_or_else(|| anyhow::anyhow!("repro recover needs --journal FILE"))?,
+    );
+
+    if args.bool_flag("write") {
+        // drill half 1: a journaled pool that "crashes" after serving
+        let _ = std::fs::remove_file(&path); // --write starts a fresh drill
+        let (registry, alloc, spec) = loadgen_spec(args)?;
+        let pool = ServingPool::deploy(
+            registry,
+            cfg,
+            alloc,
+            BackendKind::Synthetic,
+            DeployOptions { policy: spec.policy, ..Default::default() }.with_journal(&path),
+        )?;
+        let names = pool.names();
+        for name in &names {
+            wave(&pool, name, spec.loads[0].requests.min(20), spec.seed)?;
+        }
+        // shutdown() deregisters nothing in the WAL: the file now holds
+        // exactly what a controller crash would leave behind
+        pool.shutdown();
+        return Ok(format!(
+            "journal written: {} tenant(s) registered, plan fingerprint \
+             snapshotted at {}\ncrash simulated (nothing deregistered); run \
+             `repro recover --journal {}` to warm-restart\n",
+            names.len(),
+            path.display(),
+            path.display(),
+        ));
+    }
+
+    // drill half 2: replay the WAL and warm-restart
+    let log = Journal::load(&path)?;
+    anyhow::ensure!(
+        log.generation > 0,
+        "no journal to recover from at {}",
+        path.display()
+    );
+    let (registry, dead) = replay_journal(&log)?;
+
+    // sizing/load flags must match the crashed deployment's invocation;
+    // the tenancy itself comes from the journal, not from --models
+    let (_, alloc) = pool_spec(args, "fc_small")?;
+    let seed = args.u64_flag("seed", 7)?;
+    let requests = args.usize_flag("requests", 200)?;
+    anyhow::ensure!(requests >= 1, "--requests must be at least 1");
+    let arrivals = Arrivals::parse(&args.str_flag("arrivals", "poisson:400"))?;
+    let max_wait_ms = args.f64_flag("max-wait-ms", 2.0)?;
+    anyhow::ensure!(max_wait_ms >= 0.0, "--max-wait-ms must be non-negative");
+    let policy = BatchPolicy {
+        max_batch: args.usize_flag("max-batch", 8)?,
+        max_wait: std::time::Duration::from_secs_f64(max_wait_ms / 1e3),
+    };
+    // loads in --models order when given (byte-identity with the
+    // uninterrupted loadgen run), sorted registry order otherwise
+    let order: Vec<String> = match args.flags.get("models") {
+        Some(models) => {
+            let names: Vec<String> = models
+                .split(',')
+                .map(|s| s.trim().to_string())
+                .filter(|s| !s.is_empty())
+                .collect();
+            for n in &names {
+                anyhow::ensure!(
+                    registry.get(n).is_ok(),
+                    "--models lists {n:?}, which the journal never registered"
+                );
+            }
+            anyhow::ensure!(
+                names.len() == registry.len(),
+                "--models must list every journaled tenant (journal has {})",
+                registry.len()
+            );
+            names
+        }
+        None => registry.iter().map(|t| t.name.clone()).collect(),
+    };
+    let loads: Vec<TenantLoad> = order
+        .iter()
+        .map(|name| TenantLoad {
+            model: name.clone(),
+            arrivals: arrivals.clone(),
+            requests,
+        })
+        .collect();
+    let spec = LoadgenSpec { loads, seed, policy };
+    let (table, plan) = loadgen_table(&registry, &cfg, &alloc, &spec)?;
+
+    // warm-restart the live pool from the journal: recover() re-plans,
+    // verifies the snapshot fingerprint, and fences the generation
+    let live = if args.bool_flag("no-live") {
+        None
+    } else {
+        let pool = ServingPool::recover(
+            cfg.clone(),
+            alloc.clone(),
+            BackendKind::Synthetic,
+            DeployOptions { policy: spec.policy, ..Default::default() },
+            &path,
+        )?;
+        for name in pool.names() {
+            wave(&pool, &name, requests.min(20), seed ^ 0x9E)?;
+        }
+        let n = pool.names().len();
+        pool.shutdown();
+        Some(n)
+    };
+
+    let mut out = emit(table, args.csv());
+    if !args.csv() {
+        out.push_str(&format!(
+            "recover: journal generation {} replayed -> {} tenant(s) admitted, \
+             {} dead device(s) | plan fingerprint {}",
+            log.generation,
+            plan.assignments.len(),
+            dead.len(),
+            match log.last_fingerprint() {
+                Some(f) => format!("{f:016x}"),
+                None => "absent".to_string(),
+            },
+        ));
+        out.push_str(&match live {
+            Some(n) => {
+                format!(" | live warm-restart served {n} tenant(s) bit-exact\n")
+            }
+            None => " | live warm-restart skipped (--no-live)\n".to_string(),
+        });
+    }
+    Ok(out)
 }
 
 /// Parse the calibration-scenario flags — `--windows`,
@@ -1897,20 +2193,46 @@ chaos & failure testing (DESIGN.md §14; `make smoke-chaos` runs this):
             seeded fault schedule: device deaths (drain + re-plan replay),
             straggler windows (hedged dispatch), overload spikes
             (priority-tiered shedding)
+        [--crashes 0]        controller crash/warm-restart outages in the
+            sim (DESIGN.md §17): ingress sheds at the door while the
+            control plane is down, replays survive; adds the expired +
+            recoveries columns (and /cN in events).  0 keeps legacy CSVs
+            byte-identical
+        [--deadline-ms MS]   dispatch-start deadline in the sim: requests
+            whose queueing delay exceeds MS expire before consuming any
+            server time (submitted == completed + shed + expired)
         [--queue-capacity 64] [--drain-ms 2] [--no-hedge]
         [--csv]      CSV table only — byte-identical across runs of one
             seed (the golden artifact the smoke target diffs)
         [--live]     then drill the same fault kinds against a real
             ServingPool (synthetic backend): baseline round trip, injected
             replica straggler -> hedges, tiered overload burst -> shed
-            with exact accounting, and a mid-run kill_device -> drained
-            in-flight work replays and verifies bit-exact.  FAILS if any
-            admitted request is lost or corrupted; shed is never silent
+            with exact accounting, a mid-run kill_device -> drained
+            in-flight work replays and verifies bit-exact, and a
+            controller crash -> journal warm-restart rebuilding the exact
+            plan.  FAILS if any admitted request is lost or corrupted;
+            shed is never silent
         [--live-requests 40] [--live-queue-capacity 8]
+        [--hedge-p99-factor 2] [--hedge-min-samples 4]   (--live) hedge
+            knobs, validated at parse with the constructor's messages
         [--trace-out FILE]    (--live) save the live span trace, including
             the chaos/faults track with one span per device kill
         [--metrics-out FILE]  (--live) end-of-run snapshots as JSONL
             (hedges, shed, device_kills ride the metric schema)
+
+crash recovery (DESIGN.md §17; `make smoke-recover` runs this):
+  recover --journal FILE [pool/loadgen flags] [--csv] [--no-live]
+        warm-restart a crashed pool from its recovery journal: replay
+        the WAL (registry rebuilt from the journal, not --models),
+        ServingPool::recover re-plans, verifies the snapshot plan
+        fingerprint, fences the generation, serves a verification wave
+        bit-exact (skipped by --no-live), and renders the deterministic
+        loadgen table for the recovered tenants — with the same flags,
+        byte-identical to an uninterrupted `repro loadgen --csv` run
+  recover --journal FILE --write [pool/loadgen flags]
+        the drill's first half: start a fresh journal, deploy a
+        journaled pool, serve a wave, exit WITHOUT deregistering —
+        leaving exactly what a controller crash leaves behind
 
 online cost-model calibration (DESIGN.md §16; `make smoke-calibrate`):
   calibrate --models fc_big,fc_small --tpus 4 --seed 7
@@ -2321,6 +2643,108 @@ mod tests {
         let out = run(&a).unwrap();
         assert!(out.contains("rejected"), "{out}");
         assert!(out.contains("admitted"), "{out}");
+    }
+
+    #[test]
+    fn chaos_reliability_columns_are_gated_off_by_default() {
+        // flags off: the legacy header, byte-for-byte
+        let legacy = run(&Args::parse(&argv(
+            "chaos --models fc_small --tpus 2 --seed 7 --requests 40 \
+             --arrivals poisson:900 --csv",
+        ))
+        .unwrap())
+        .unwrap();
+        let header = legacy.lines().next().unwrap();
+        assert!(!header.contains("expired"), "{header}");
+        assert!(!header.contains("recoveries"), "{header}");
+
+        // flags on: expired + recoveries columns, /cN in events, exact
+        // accounting, still bit-identical per seed
+        let cmd = "chaos --models fc_small --tpus 2 --seed 7 --requests 40 \
+                   --arrivals poisson:900 --crashes 1 --deadline-ms 50 --csv";
+        let a = Args::parse(&argv(cmd)).unwrap();
+        let first = run(&a).unwrap();
+        assert_eq!(first, run(&a).unwrap(), "reliability CSV must be byte-identical");
+        let header: Vec<&str> = first.lines().next().unwrap().split(',').collect();
+        let row: Vec<&str> = first.lines().nth(1).unwrap().split(',').collect();
+        let col = |name: &str| {
+            row[header.iter().position(|c| *c == name).unwrap_or_else(|| panic!("{name}"))]
+        };
+        assert!(col("events").ends_with("/c1"), "{first}");
+        let n = |name: &str| col(name).parse::<u64>().unwrap();
+        assert_eq!(n("submitted"), n("completed") + n("shed") + n("expired"), "{first}");
+        assert_eq!(n("admitted"), n("completed") + n("expired"), "{first}");
+        assert_eq!(n("recoveries"), 1, "{first}");
+    }
+
+    #[test]
+    fn chaos_live_hedge_flags_are_validated_at_parse() {
+        let a = Args::parse(&argv(
+            "chaos --models fc_small --tpus 1 --requests 10 --live \
+             --hedge-p99-factor 0.5",
+        ))
+        .unwrap();
+        let err = format!("{:#}", run(&a).unwrap_err());
+        assert!(
+            err.contains("hedge p99 factor must be finite and >= 1 (got 0.5)"),
+            "{err}"
+        );
+        let b = Args::parse(&argv(
+            "chaos --models fc_small --tpus 1 --requests 10 --live \
+             --hedge-min-samples 0",
+        ))
+        .unwrap();
+        let err = format!("{:#}", run(&b).unwrap_err());
+        assert!(
+            err.contains("hedge window must cover at least 1 sample (got 0)"),
+            "{err}"
+        );
+    }
+
+    #[test]
+    fn recover_roundtrip_matches_uninterrupted_loadgen_csv() {
+        let jpath = std::env::temp_dir()
+            .join(format!("repro-cli-recover-{}.journal", std::process::id()));
+        let _ = std::fs::remove_file(&jpath);
+        let flags = "--models fc_small,conv_a --tpus 2 --seed 7 --requests 40 \
+                     --arrivals poisson:900 --slo-ms 50,-";
+        let baseline = run(&Args::parse(&argv(&format!("loadgen {flags} --csv"))).unwrap())
+            .unwrap();
+        run(&Args::parse(&argv(&format!(
+            "recover --journal {} --write {flags}",
+            jpath.display()
+        )))
+        .unwrap())
+        .unwrap();
+        let recovered = run(&Args::parse(&argv(&format!(
+            "recover --journal {} {flags} --csv",
+            jpath.display()
+        )))
+        .unwrap())
+        .unwrap();
+        assert_eq!(
+            recovered, baseline,
+            "the recovered table must be byte-identical to the uninterrupted run"
+        );
+        let _ = std::fs::remove_file(&jpath);
+    }
+
+    #[test]
+    fn recover_needs_an_existing_journal() {
+        let a = Args::parse(&argv("recover --models fc_small --tpus 1")).unwrap();
+        let err = format!("{:#}", run(&a).unwrap_err());
+        assert!(err.contains("repro recover needs --journal FILE"), "{err}");
+
+        let missing = std::env::temp_dir()
+            .join(format!("repro-cli-no-such-{}.journal", std::process::id()));
+        let _ = std::fs::remove_file(&missing);
+        let b = Args::parse(&argv(&format!(
+            "recover --journal {} --models fc_small --tpus 1",
+            missing.display()
+        )))
+        .unwrap();
+        let err = format!("{:#}", run(&b).unwrap_err());
+        assert!(err.contains("no journal to recover from"), "{err}");
     }
 
     #[test]

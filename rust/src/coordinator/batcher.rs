@@ -118,7 +118,7 @@ mod tests {
     use std::time::Duration;
 
     fn reqs(n: usize) -> Vec<Request> {
-        (0..n).map(|i| Request { id: i as u64, data: vec![0; 4] }).collect()
+        (0..n).map(|i| Request::new(i as u64, vec![0; 4])).collect()
     }
 
     #[test]
@@ -136,7 +136,7 @@ mod tests {
     #[test]
     fn flushes_at_deadline_with_partial_batch() {
         let (tx, rx) = bounded(16);
-        tx.send(Request { id: 0, data: vec![] }).unwrap();
+        tx.send(Request::new(0, vec![])).unwrap();
         let b = Batcher::new(
             rx,
             BatchPolicy { max_batch: 100, max_wait: Duration::from_millis(10) },
@@ -213,7 +213,7 @@ mod tests {
         assert_eq!(reason, FlushKind::Deadline);
         // ...and the flush never blocks on future arrivals
         assert!(t0.elapsed() < Duration::from_millis(100));
-        tx.send(Request { id: 9, data: vec![] }).unwrap();
+        tx.send(Request::new(9, vec![])).unwrap();
         let (batch, _) = b.next_batch_with_reason().unwrap();
         assert_eq!(batch.len(), 1);
     }

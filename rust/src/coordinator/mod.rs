@@ -183,6 +183,31 @@ pub struct Request {
     /// Input activation tensor (int8, row-major).  Copied **once** into
     /// an arena slab at pipeline ingress; stages never see this vector.
     pub data: Vec<i8>,
+    /// Absolute wall-clock deadline.  `None` (the default) never expires.
+    /// The serving pool stamps it from the tenant SLO at submit (a caller
+    /// deadline takes precedence), and every handoff — batcher flush,
+    /// router dispatch, pool worker — checks it *before* doing work, so
+    /// an expired request is shed instead of burning a TPU quantum.
+    pub deadline: Option<Instant>,
+}
+
+impl Request {
+    /// A request with no deadline (never expires).
+    pub fn new(id: u64, data: Vec<i8>) -> Request {
+        Request { id, data, deadline: None }
+    }
+
+    /// Attach an absolute deadline (builder style).
+    pub fn with_deadline(mut self, deadline: Instant) -> Request {
+        self.deadline = Some(deadline);
+        self
+    }
+
+    /// Whether the deadline has passed at `now` (deadline-free requests
+    /// never expire; the off-path cost is one `Option` compare).
+    pub fn expired_at(&self, now: Instant) -> bool {
+        matches!(self.deadline, Some(d) if now >= d)
+    }
 }
 
 /// One completed inference.
@@ -368,7 +393,13 @@ impl Pipeline {
         }
         let max_chunk = max_chunk.max(1);
         let elem_len = requests[0].data.len();
+        let now = Instant::now();
         for r in &requests {
+            anyhow::ensure!(
+                !r.expired_at(now),
+                "request {} deadline expired before dispatch",
+                r.id
+            );
             anyhow::ensure!(
                 r.data.len() == elem_len,
                 "request {} carries {} elems, batch expects {elem_len}",
@@ -599,6 +630,76 @@ impl Default for HedgeConfig {
     }
 }
 
+impl HedgeConfig {
+    /// Reject nonsensical hedge policies with pinned messages.  A factor
+    /// below 1 (or NaN/inf) would hedge the *healthiest* replica; a zero
+    /// sample window would trust a p99 computed from nothing.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.p99_factor.is_finite() && self.p99_factor >= 1.0,
+            "hedge p99 factor must be finite and >= 1 (got {})",
+            self.p99_factor
+        );
+        anyhow::ensure!(
+            self.min_samples >= 1,
+            "hedge window must cover at least 1 sample (got 0)"
+        );
+        Ok(())
+    }
+}
+
+/// Watchdog + circuit-breaker policy for [`ReplicaRouter`] replicas
+/// (DESIGN.md §17).  A replica dispatch that errors or outlives the
+/// `watchdog` deadline counts as a breach; `trip_after` *consecutive*
+/// breaches trip the replica's breaker Closed → Open, excluding it from
+/// round-robin sharding and from hedged dispatch.  Once `cooldown` has
+/// elapsed the breaker turns HalfOpen and the replica receives its next
+/// shard as a probe: a clean probe closes the breaker, another breach
+/// re-opens it.
+#[derive(Debug, Clone, Copy)]
+pub struct BreakerConfig {
+    /// Watchdog deadline around one replica dispatch (pack → serve →
+    /// drain); a slower dispatch is a breach even if it succeeds.
+    pub watchdog: Duration,
+    /// Consecutive breaches that trip the breaker Closed → Open.
+    pub trip_after: u32,
+    /// Time a tripped replica stays Open before the HalfOpen probe.
+    pub cooldown: Duration,
+}
+
+impl Default for BreakerConfig {
+    fn default() -> Self {
+        BreakerConfig {
+            watchdog: Duration::from_millis(250),
+            trip_after: 3,
+            cooldown: Duration::from_millis(50),
+        }
+    }
+}
+
+impl BreakerConfig {
+    /// Reject degenerate breaker policies with pinned messages.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(!self.watchdog.is_zero(), "breaker watchdog must be non-zero");
+        anyhow::ensure!(
+            self.trip_after >= 1,
+            "breaker trip threshold must be >= 1 (got 0)"
+        );
+        Ok(())
+    }
+}
+
+/// Per-replica breaker state (Closed → Open → HalfOpen → Closed).
+#[derive(Debug, Clone, Copy)]
+enum BreakerState {
+    /// Healthy; counts consecutive watchdog breaches.
+    Closed { breaches: u32 },
+    /// Quarantined since the recorded instant; excluded from dispatch.
+    Open { since: Instant },
+    /// Cooldown elapsed; the next dispatch is a probe.
+    HalfOpen,
+}
+
 /// Shared handle for injecting artificial per-replica dispatch delays —
 /// the chaos suite's straggler fault.  Clones reach into the same map,
 /// so a delay can be injected after the router has moved into a pool
@@ -638,6 +739,14 @@ pub struct ReplicaRouter {
     hedged: AtomicU64,
     /// Injected per-replica dispatch delays (chaos straggler faults).
     injector: DelayInjector,
+    /// Watchdog/circuit-breaker policy; `None` (the default) disables it.
+    breaker: Option<BreakerConfig>,
+    /// Per-replica breaker state (sized only when the breaker is on).
+    breaker_state: std::sync::Mutex<Vec<BreakerState>>,
+    /// Closed→Open and HalfOpen→Open transitions so far.
+    trips: AtomicU64,
+    /// Open→HalfOpen probe grants so far.
+    probes: AtomicU64,
 }
 
 impl ReplicaRouter {
@@ -649,12 +758,26 @@ impl ReplicaRouter {
             hedge: None,
             hedged: AtomicU64::new(0),
             injector: DelayInjector::default(),
+            breaker: None,
+            breaker_state: std::sync::Mutex::new(Vec::new()),
+            trips: AtomicU64::new(0),
+            probes: AtomicU64::new(0),
         }
     }
 
     /// Enable hedged dispatch with the given policy (builder style).
     pub fn with_hedging(mut self, cfg: HedgeConfig) -> Self {
         self.hedge = Some(cfg);
+        self
+    }
+
+    /// Enable the replica watchdog + circuit breaker (builder style).
+    /// Callers validate the config first ([`BreakerConfig::validate`]).
+    pub fn with_breaker(mut self, cfg: BreakerConfig) -> Self {
+        let k = self.replicas.len();
+        self.breaker = Some(cfg);
+        *self.breaker_state.lock().unwrap() =
+            vec![BreakerState::Closed { breaches: 0 }; k];
         self
     }
 
@@ -669,20 +792,109 @@ impl ReplicaRouter {
         self.hedged.load(Ordering::Relaxed)
     }
 
+    /// Breaker trips so far (Closed→Open and failed-probe re-opens).
+    pub fn breaker_trips_total(&self) -> u64 {
+        self.trips.load(Ordering::Relaxed)
+    }
+
+    /// HalfOpen probe grants so far (Open replicas re-admitted for one
+    /// trial dispatch after their cooldown).
+    pub fn breaker_probes_total(&self) -> u64 {
+        self.probes.load(Ordering::Relaxed)
+    }
+
+    /// Indices of replicas currently quarantined (breaker Open).
+    pub fn open_replicas(&self) -> Vec<usize> {
+        self.breaker_state
+            .lock()
+            .unwrap()
+            .iter()
+            .enumerate()
+            .filter_map(|(i, s)| matches!(s, BreakerState::Open { .. }).then_some(i))
+            .collect()
+    }
+
+    /// Replicas eligible for dispatch at `now`.  Open replicas whose
+    /// cooldown elapsed transition to HalfOpen here (counted as probes);
+    /// still-Open replicas are excluded.  If *every* replica is Open the
+    /// router serves on all of them anyway — total quarantine must
+    /// degrade to best-effort dispatch, not a refused batch.  With the
+    /// breaker off this is the identity permutation, so default
+    /// round-robin placement is unchanged.
+    fn available(&self, now: Instant) -> Vec<usize> {
+        let k = self.replicas.len();
+        let Some(cfg) = self.breaker else {
+            return (0..k).collect();
+        };
+        let mut st = self.breaker_state.lock().unwrap();
+        let mut avail = Vec::with_capacity(k);
+        for (i, s) in st.iter_mut().enumerate() {
+            match *s {
+                BreakerState::Open { since }
+                    if now.duration_since(since) >= cfg.cooldown =>
+                {
+                    *s = BreakerState::HalfOpen;
+                    self.probes.fetch_add(1, Ordering::Relaxed);
+                    avail.push(i);
+                }
+                BreakerState::Open { .. } => {}
+                _ => avail.push(i),
+            }
+        }
+        if avail.is_empty() {
+            (0..k).collect()
+        } else {
+            avail
+        }
+    }
+
+    /// Feed one dispatch outcome into the breaker state machine.
+    fn observe(&self, replica: usize, ok: bool, elapsed: Duration) {
+        let Some(cfg) = self.breaker else { return };
+        let breach = !ok || elapsed > cfg.watchdog;
+        let mut st = self.breaker_state.lock().unwrap();
+        st[replica] = match (st[replica], breach) {
+            (BreakerState::Closed { breaches }, true) => {
+                let b = breaches + 1;
+                if b >= cfg.trip_after {
+                    self.trips.fetch_add(1, Ordering::Relaxed);
+                    BreakerState::Open { since: Instant::now() }
+                } else {
+                    BreakerState::Closed { breaches: b }
+                }
+            }
+            (BreakerState::Closed { .. }, false) => BreakerState::Closed { breaches: 0 },
+            (BreakerState::HalfOpen, true) => {
+                self.trips.fetch_add(1, Ordering::Relaxed);
+                BreakerState::Open { since: Instant::now() }
+            }
+            (BreakerState::HalfOpen, false) => BreakerState::Closed { breaches: 0 },
+            // a shard lands on an Open replica only in the everyone-
+            // tripped fallback; it stays quarantined regardless
+            (s @ BreakerState::Open { .. }, _) => s,
+        };
+    }
+
     /// For each replica, the backup its shard should also go to —
     /// `Some(best)` iff hedging is on, the replica's recorded p99
     /// breached the threshold, and a healthier replica exists.  Based on
     /// history up to the previous call: the decision must be made before
     /// dispatch, exactly like a production hedger working from the last
-    /// metrics scrape.
-    fn hedge_targets(&self) -> Vec<Option<usize>> {
+    /// metrics scrape.  Only replicas in `avail` participate — a
+    /// quarantined (breaker-Open) replica is neither hedged around nor
+    /// used as a hedge target.
+    fn hedge_targets(&self, avail: &[usize]) -> Vec<Option<usize>> {
         let k = self.replicas.len();
         let mut out = vec![None; k];
         let Some(cfg) = self.hedge else {
             return out;
         };
-        if k < 2 {
+        if avail.len() < 2 {
             return out;
+        }
+        let mut eligible = vec![false; k];
+        for &i in avail {
+            eligible[i] = true;
         }
         let stats: Vec<(u64, f64)> = self
             .replicas
@@ -695,7 +907,7 @@ impl ReplicaRouter {
         // healthiest replica with enough history (ties -> lowest index)
         let mut best: Option<(usize, f64)> = None;
         for (i, &(n, p99)) in stats.iter().enumerate() {
-            if n >= cfg.min_samples && p99.is_finite() {
+            if eligible[i] && n >= cfg.min_samples && p99.is_finite() {
                 let better = match best {
                     Some((_, b)) => p99 < b,
                     None => true,
@@ -710,6 +922,7 @@ impl ReplicaRouter {
         };
         for (i, &(n, p99)) in stats.iter().enumerate() {
             if i != best_i
+                && eligible[i]
                 && n >= cfg.min_samples
                 && p99.is_finite()
                 && p99 > cfg.p99_factor * best_p99
@@ -735,7 +948,13 @@ impl ReplicaRouter {
             return Ok(Vec::new());
         }
         let elem_len = requests[0].data.len();
+        let now = Instant::now();
         for r in &requests {
+            anyhow::ensure!(
+                !r.expired_at(now),
+                "request {} deadline expired before dispatch",
+                r.id
+            );
             anyhow::ensure!(
                 r.data.len() == elem_len,
                 "request {} carries {} elems, batch expects {elem_len}",
@@ -744,11 +963,16 @@ impl ReplicaRouter {
             );
         }
         let k = self.replicas.len();
+        // round-robin only across currently-available replicas; with the
+        // breaker off `avail` is the identity permutation, so placement
+        // is byte-for-byte what it always was
+        let avail = self.available(now);
+        let m = avail.len();
         let mut shards: Vec<Vec<Request>> = (0..k).map(|_| Vec::new()).collect();
         for (i, r) in requests.into_iter().enumerate() {
-            shards[i % k].push(r);
+            shards[avail[i % m]].push(r);
         }
-        let targets = self.hedge_targets();
+        let targets = self.hedge_targets(&avail);
         let start = Instant::now();
         // per-replica dispatch queues: a replica's own shard plus any
         // hedged copies routed to it.  One thread serves each queue
@@ -767,6 +991,9 @@ impl ReplicaRouter {
             }
         }
         let mut all = Vec::new();
+        // replicas whose dispatch errored under the breaker; their own
+        // shards are replayed on a healthy replica below
+        let mut failed: Vec<usize> = Vec::new();
         std::thread::scope(|scope| -> Result<()> {
             let mut handles = Vec::new();
             for (i, batches) in per_rep.into_iter().enumerate() {
@@ -775,22 +1002,67 @@ impl ReplicaRouter {
                 }
                 let rep = &self.replicas[i];
                 let delay = self.injector.get(i);
-                handles.push(scope.spawn(move || -> Result<Vec<Response>> {
-                    if let Some(d) = delay {
-                        std::thread::sleep(d);
-                    }
-                    let mut got = Vec::new();
-                    for batch in batches {
-                        got.extend(rep.serve_prepacked(batch)?);
-                    }
-                    Ok(got)
-                }));
+                handles.push((
+                    i,
+                    scope.spawn(move || -> (Result<Vec<Response>>, Duration) {
+                        let t0 = Instant::now();
+                        if let Some(d) = delay {
+                            std::thread::sleep(d);
+                        }
+                        let mut got = Vec::new();
+                        for batch in batches {
+                            match rep.serve_prepacked(batch) {
+                                Ok(r) => got.extend(r),
+                                Err(e) => return (Err(e), t0.elapsed()),
+                            }
+                        }
+                        (Ok(got), t0.elapsed())
+                    }),
+                ));
             }
-            for h in handles {
-                all.extend(h.join().expect("replica thread panicked")?);
+            for (i, h) in handles {
+                let (res, elapsed) = h.join().expect("replica thread panicked");
+                match res {
+                    Ok(got) => {
+                        self.observe(i, true, elapsed);
+                        all.extend(got);
+                    }
+                    Err(e) => {
+                        self.observe(i, false, elapsed);
+                        // without a breaker the error propagates exactly
+                        // as before; with one, the failed replica's own
+                        // shard is replayed after the fan-in
+                        if self.breaker.is_none() {
+                            return Err(e);
+                        }
+                        failed.push(i);
+                    }
+                }
             }
             Ok(())
         })?;
+        // replay: re-dispatch each failed replica's own shard on a
+        // healthy replica.  Hedged *copies* lost with a failed replica
+        // need no replay — their primaries either succeeded or sit in
+        // `failed` themselves.  The dedup below keeps exactly one
+        // response per id, so a replay can never double-complete.
+        for &i in &failed {
+            if shards[i].is_empty() {
+                continue;
+            }
+            let target = self
+                .available(Instant::now())
+                .into_iter()
+                .find(|j| !failed.contains(j))
+                .ok_or_else(|| {
+                    anyhow::anyhow!("no healthy replica to replay shard of replica {i}")
+                })?;
+            let batch = self.replicas[target].pack(&shards[i], elem_len, start);
+            let t0 = Instant::now();
+            let got = self.replicas[target].serve_prepacked(batch);
+            self.observe(target, got.is_ok(), t0.elapsed());
+            all.extend(got?);
+        }
         // hedged ids come back twice with identical bytes; keep the
         // faster copy of each
         all.sort_by(|a, b| {
@@ -883,7 +1155,7 @@ mod tests {
     }
 
     fn reqs(n: usize) -> Vec<Request> {
-        (0..n).map(|i| Request { id: i as u64, data: vec![i as i8; 8] }).collect()
+        (0..n).map(|i| Request::new(i as u64, vec![i as i8; 8])).collect()
     }
 
     #[test]
@@ -989,8 +1261,8 @@ mod tests {
         let p = Pipeline::spawn(factories(1), sims(1, 1e-5), &PipelineConfig::default())
             .unwrap();
         let bad = vec![
-            Request { id: 0, data: vec![0; 8] },
-            Request { id: 1, data: vec![0; 4] },
+            Request::new(0, vec![0; 8]),
+            Request::new(1, vec![0; 4]),
         ];
         let err = p.serve_batch(bad).unwrap_err();
         assert!(err.to_string().contains("carries"), "{err}");
@@ -1164,6 +1436,184 @@ mod tests {
             );
         }
         injector.clear(0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn hedge_and_breaker_validation_pin_messages() {
+        let err = HedgeConfig { p99_factor: 0.5, min_samples: 4 }.validate().unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "hedge p99 factor must be finite and >= 1 (got 0.5)"
+        );
+        let err =
+            HedgeConfig { p99_factor: f64::NAN, min_samples: 4 }.validate().unwrap_err();
+        assert!(err.to_string().contains("hedge p99 factor"), "{err}");
+        let err = HedgeConfig { p99_factor: 2.0, min_samples: 0 }.validate().unwrap_err();
+        assert_eq!(err.to_string(), "hedge window must cover at least 1 sample (got 0)");
+        HedgeConfig::default().validate().unwrap();
+
+        let err = BreakerConfig { watchdog: Duration::ZERO, ..Default::default() }
+            .validate()
+            .unwrap_err();
+        assert_eq!(err.to_string(), "breaker watchdog must be non-zero");
+        let err = BreakerConfig { trip_after: 0, ..Default::default() }
+            .validate()
+            .unwrap_err();
+        assert_eq!(err.to_string(), "breaker trip threshold must be >= 1 (got 0)");
+        BreakerConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn expired_request_is_rejected_before_dispatch() {
+        let p = Pipeline::spawn(factories(1), sims(1, 1e-5), &PipelineConfig::default())
+            .unwrap();
+        // a deadline of "now" is in the past by dispatch time
+        let expired = Request::new(7, vec![0; 8]).with_deadline(Instant::now());
+        let err = p.serve_batch(vec![expired]).unwrap_err();
+        assert!(err.to_string().contains("deadline expired before dispatch"), "{err}");
+        // a generous deadline sails through untouched
+        let live = Request::new(8, vec![1; 8])
+            .with_deadline(Instant::now() + Duration::from_secs(60));
+        let out = p.serve_batch(vec![live]).unwrap();
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].id, 8);
+        p.shutdown();
+
+        // the router guards the same invariant before sharding
+        let mk = || {
+            Pipeline::spawn(factories(1), sims(1, 1e-5), &PipelineConfig::default()).unwrap()
+        };
+        let router = ReplicaRouter::new(vec![mk(), mk()]);
+        let expired = Request::new(9, vec![0; 8]).with_deadline(Instant::now());
+        let err = router.serve_batch(vec![expired]).unwrap_err();
+        assert!(err.to_string().contains("deadline expired before dispatch"), "{err}");
+        router.shutdown();
+    }
+
+    #[test]
+    fn breaker_trips_quarantines_and_reprobes() {
+        let mk = || {
+            Pipeline::spawn(factories(1), sims(1, 1e-5), &PipelineConfig::default()).unwrap()
+        };
+        let router = ReplicaRouter::new(vec![mk(), mk()]).with_breaker(BreakerConfig {
+            watchdog: Duration::from_millis(50),
+            trip_after: 2,
+            cooldown: Duration::from_millis(100),
+        });
+        let injector = router.injector();
+        injector.set(0, Duration::from_millis(150)); // breach every dispatch
+        for _ in 0..2 {
+            assert_eq!(router.serve_batch(reqs(8)).unwrap().len(), 8);
+        }
+        assert_eq!(router.breaker_trips_total(), 1, "two breaches trip once");
+        assert_eq!(router.open_replicas(), vec![0]);
+        // while Open (cooldown not yet elapsed) replica 0 receives nothing
+        injector.clear(0);
+        let before = router.replicas[0].serve_metrics.snapshot().completed;
+        assert_eq!(router.serve_batch(reqs(6)).unwrap().len(), 6);
+        assert_eq!(
+            router.replicas[0].serve_metrics.snapshot().completed,
+            before,
+            "open replica must be excluded from dispatch"
+        );
+        // after the cooldown the replica gets a probe; healthy now, so
+        // the probe closes the breaker and it rejoins the rotation
+        std::thread::sleep(Duration::from_millis(150));
+        assert_eq!(router.serve_batch(reqs(6)).unwrap().len(), 6);
+        assert_eq!(router.breaker_probes_total(), 1, "one HalfOpen probe granted");
+        assert!(router.open_replicas().is_empty(), "clean probe closes the breaker");
+        assert!(
+            router.replicas[0].serve_metrics.snapshot().completed > before,
+            "probed replica served its shard"
+        );
+        router.shutdown();
+    }
+
+    #[test]
+    fn breaker_replays_failed_shard_without_leaks_or_double_completion() {
+        struct Boom;
+        impl StageBackend for Boom {
+            fn run(&mut self, _input: &[i8]) -> Result<Vec<i8>> {
+                anyhow::bail!("boom")
+            }
+        }
+        let bad = Pipeline::spawn(
+            vec![Box::new(|| Ok(Box::new(Boom) as Box<dyn StageBackend>)) as StageFactory],
+            sims(1, 1e-5),
+            &PipelineConfig::default(),
+        )
+        .unwrap();
+        let good =
+            Pipeline::spawn(factories(1), sims(1, 1e-5), &PipelineConfig::default()).unwrap();
+        // trip threshold high enough that the bad replica stays Closed and
+        // keeps receiving (and failing) shards: every call exercises the
+        // fail -> replay path, which must neither leak slabs nor complete
+        // any id twice
+        let router = ReplicaRouter::new(vec![bad, good]).with_breaker(BreakerConfig {
+            watchdog: Duration::from_secs(5),
+            trip_after: u32::MAX,
+            cooldown: Duration::from_secs(60),
+        });
+        drop(router.serve_batch(reqs(10)).unwrap()); // warm both arenas
+        let warm: Vec<u64> = router
+            .replicas
+            .iter()
+            .map(|p| p.data_plane.snapshot().slab_allocs)
+            .collect();
+        for round in 1..=4u64 {
+            let out = router.serve_batch(reqs(10)).unwrap();
+            assert_eq!(out.len(), 10, "round {round}");
+            for (i, r) in out.iter().enumerate() {
+                assert_eq!(r.id, i as u64, "round {round}: exactly one response per id");
+                assert_eq!(r.data[0], (i as i8).saturating_add(1));
+            }
+        }
+        let after: Vec<u64> = router
+            .replicas
+            .iter()
+            .map(|p| p.data_plane.snapshot().slab_allocs)
+            .collect();
+        assert_eq!(
+            after, warm,
+            "failed + replayed batches must return every slab to the arena"
+        );
+        // every request completed exactly once, all on the healthy replica
+        assert_eq!(router.replicas[1].serve_metrics.snapshot().completed, 5 * 10);
+        assert_eq!(router.replicas[0].serve_metrics.snapshot().completed, 0);
+        router.shutdown();
+    }
+
+    #[test]
+    fn breaker_open_replica_excluded_after_error_trip() {
+        struct Boom;
+        impl StageBackend for Boom {
+            fn run(&mut self, _input: &[i8]) -> Result<Vec<i8>> {
+                anyhow::bail!("boom")
+            }
+        }
+        let bad = Pipeline::spawn(
+            vec![Box::new(|| Ok(Box::new(Boom) as Box<dyn StageBackend>)) as StageFactory],
+            sims(1, 1e-5),
+            &PipelineConfig::default(),
+        )
+        .unwrap();
+        let good =
+            Pipeline::spawn(factories(1), sims(1, 1e-5), &PipelineConfig::default()).unwrap();
+        let router = ReplicaRouter::new(vec![bad, good]).with_breaker(BreakerConfig {
+            watchdog: Duration::from_secs(5),
+            trip_after: 1,
+            cooldown: Duration::from_secs(60),
+        });
+        // first call: replica 0 errors, trips immediately, shard replays
+        let out = router.serve_batch(reqs(10)).unwrap();
+        assert_eq!(out.len(), 10);
+        assert_eq!(router.breaker_trips_total(), 1);
+        assert_eq!(router.open_replicas(), vec![0]);
+        // second call: the Open replica is excluded entirely, no new trips
+        let out = router.serve_batch(reqs(4)).unwrap();
+        assert_eq!(out.len(), 4);
+        assert_eq!(router.breaker_trips_total(), 1, "no dispatch, no further trips");
         router.shutdown();
     }
 }

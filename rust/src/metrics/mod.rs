@@ -228,6 +228,7 @@ struct TenantCounters {
     prefetches: u64,
     hedges: u64,
     shed: u64,
+    deadline_shed: u64,
     drift: f64,
 }
 
@@ -327,6 +328,14 @@ impl TenantMetrics {
         self.bump();
     }
 
+    /// Count `n` requests shed because their deadline expired before
+    /// dispatch (the caller still receives a typed `Expired` outcome —
+    /// deadline sheds are accounted, never silently dropped).
+    pub fn record_deadline_shed(&self, n: u64) {
+        self.extra.lock().unwrap().deadline_shed += n;
+        self.bump();
+    }
+
     /// Publish the calibrator's latest predicted-vs-observed p99 drift
     /// for this tenant — a gauge, overwritten at every calibration
     /// window (`scheduler::calibrate`), not an accumulating counter.
@@ -386,6 +395,7 @@ impl TenantMetrics {
             prefetches: e.prefetches,
             hedges: e.hedges,
             shed: e.shed,
+            deadline_shed: e.deadline_shed,
             drift: e.drift,
             real_p50_s: c.real_p50_s,
             real_p99_s: c.real_p99_s,
@@ -430,6 +440,11 @@ impl MetricSource for TenantMetrics {
             fields.push(("cache_hits", uint(s.cache_hits)));
             fields.push(("cache_misses", uint(s.cache_misses)));
             fields.push(("prefetches", uint(s.prefetches)));
+        }
+        // deadline sheds only happen on deadline-enabled pools; omit the
+        // field at zero so deadline-off exports stay byte-identical
+        if s.deadline_shed > 0 {
+            fields.push(("deadline_shed", uint(s.deadline_shed)));
         }
         // the drift gauge only moves when online calibration is enabled;
         // omit it at rest so calibration-off exports stay byte-identical
@@ -481,6 +496,10 @@ pub struct TenantSnapshot {
     pub hedges: u64,
     /// Requests turned away by priority-tiered load shedding.
     pub shed: u64,
+    /// Requests shed because their deadline expired before dispatch
+    /// (callers received typed `Expired` outcomes; 0 unless deadlines
+    /// are enabled).
+    pub deadline_shed: u64,
     /// Latest calibration-window p99 drift (observed/expected − 1); 0
     /// until the online calibrator publishes a window for this tenant.
     pub drift: f64,
@@ -652,7 +671,11 @@ struct SchedulerInner {
     replans: u64,
     drained_deployments: u64,
     device_kills: u64,
+    kill_repeats: u64,
     replans_calibration: u64,
+    breaker_trips: u64,
+    breaker_probes: u64,
+    recoveries: u64,
 }
 
 impl SchedulerMetrics {
@@ -700,6 +723,31 @@ impl SchedulerMetrics {
         self.inner.lock().unwrap().device_kills += 1;
     }
 
+    /// Count one rejected kill of a device that was already dead — a
+    /// repeated kill is a typed error, not a silent no-op, and this
+    /// counter is how operators see retry storms.
+    pub fn record_kill_repeat(&self) {
+        self.inner.lock().unwrap().kill_repeats += 1;
+    }
+
+    /// Count one replica circuit breaker tripping open (consecutive
+    /// watchdog breaches quarantined the replica from dispatch/hedging).
+    pub fn record_breaker_trip(&self) {
+        self.inner.lock().unwrap().breaker_trips += 1;
+    }
+
+    /// Count one half-open probe sent to a tripped replica after its
+    /// cooldown (success closes the breaker, failure re-opens it).
+    pub fn record_breaker_probe(&self) {
+        self.inner.lock().unwrap().breaker_probes += 1;
+    }
+
+    /// Count one control-plane warm restart from the recovery journal
+    /// (`ServingPool::recover`).
+    pub fn record_recovery(&self) {
+        self.inner.lock().unwrap().recoveries += 1;
+    }
+
     /// Count `n` tenants recalibrated by a drift-triggered re-plan (the
     /// online calibrator's write-back path; the re-plan itself is also
     /// counted in `replans` by the caller).
@@ -722,7 +770,11 @@ impl SchedulerMetrics {
             replans: g.replans,
             drained_deployments: g.drained_deployments,
             device_kills: g.device_kills,
+            kill_repeats: g.kill_repeats,
             replans_calibration: g.replans_calibration,
+            breaker_trips: g.breaker_trips,
+            breaker_probes: g.breaker_probes,
+            recoveries: g.recoveries,
         }
     }
 }
@@ -751,6 +803,18 @@ impl MetricSource for SchedulerMetrics {
         // at zero so calibration-off exports stay byte-identical
         if s.replans_calibration > 0 {
             fields.push(("replans_calibration", uint(s.replans_calibration)));
+        }
+        // reliability counters only move under faults/recovery drills;
+        // omit them at zero so existing exports stay byte-identical
+        if s.kill_repeats > 0 {
+            fields.push(("kill_repeats", uint(s.kill_repeats)));
+        }
+        if s.breaker_trips + s.breaker_probes > 0 {
+            fields.push(("breaker_probes", uint(s.breaker_probes)));
+            fields.push(("breaker_trips", uint(s.breaker_trips)));
+        }
+        if s.recoveries > 0 {
+            fields.push(("recoveries", uint(s.recoveries)));
         }
         obj(fields)
     }
@@ -781,8 +845,16 @@ pub struct SchedulerSnapshot {
     pub drained_deployments: u64,
     /// Device deaths the pool re-planned around (chaos or operator).
     pub device_kills: u64,
+    /// Rejected kills of already-dead devices (typed error, metered).
+    pub kill_repeats: u64,
     /// Tenants recalibrated by drift-triggered re-plans (also in `replans`).
     pub replans_calibration: u64,
+    /// Replica circuit breakers tripped open by watchdog breaches.
+    pub breaker_trips: u64,
+    /// Half-open probes dispatched to cooled-down tripped replicas.
+    pub breaker_probes: u64,
+    /// Control-plane warm restarts from the recovery journal.
+    pub recoveries: u64,
 }
 
 #[cfg(test)]
@@ -874,6 +946,44 @@ mod tests {
         let line = crate::obs::metric_line(&m, "fc_small");
         assert!(line.contains("\"hedges\":5"), "{line}");
         assert!(line.contains("\"shed\":1"), "{line}");
+    }
+
+    #[test]
+    fn tenant_deadline_shed_accumulates_and_gates_the_export() {
+        let m = TenantMetrics::default();
+        // deadline-off runs never move the counter: it stays out of the
+        // export entirely, keeping today's metric lines byte-identical
+        let off = crate::obs::metric_line(&m, "fc_small");
+        assert!(!off.contains("deadline_shed"), "{off}");
+        m.record_deadline_shed(3);
+        m.record_deadline_shed(1);
+        let s = m.snapshot();
+        assert_eq!(s.deadline_shed, 4);
+        let line = crate::obs::metric_line(&m, "fc_small");
+        assert!(line.contains("\"deadline_shed\":4"), "{line}");
+    }
+
+    #[test]
+    fn scheduler_reliability_counters_gate_the_export() {
+        let m = SchedulerMetrics::default();
+        let off = crate::obs::metric_line(&m, "pool");
+        for field in ["kill_repeats", "breaker_trips", "breaker_probes", "recoveries"] {
+            assert!(!off.contains(field), "{field} must gate at zero: {off}");
+        }
+        m.record_kill_repeat();
+        m.record_breaker_trip();
+        m.record_breaker_probe();
+        m.record_recovery();
+        let s = m.snapshot();
+        assert_eq!(s.kill_repeats, 1);
+        assert_eq!(s.breaker_trips, 1);
+        assert_eq!(s.breaker_probes, 1);
+        assert_eq!(s.recoveries, 1);
+        let line = crate::obs::metric_line(&m, "pool");
+        assert!(line.contains("\"kill_repeats\":1"), "{line}");
+        assert!(line.contains("\"breaker_trips\":1"), "{line}");
+        assert!(line.contains("\"breaker_probes\":1"), "{line}");
+        assert!(line.contains("\"recoveries\":1"), "{line}");
     }
 
     #[test]

@@ -42,6 +42,16 @@ pub enum SpanKind {
     /// A drift-triggered online recalibration: cost-model write-back plus
     /// the re-plan that followed, recorded on the chaos/control track.
     Recalibrate,
+    /// A request shed because its deadline expired before it could be
+    /// dispatched (instant, recorded on the tenant's request track).
+    /// Expired requests never start a [`SpanKind::Stage`] span.
+    Deadline,
+    /// A replica circuit breaker tripping open (consecutive watchdog
+    /// breaches), recorded on the chaos/control track.
+    Trip,
+    /// The control plane warm-restarting from its recovery journal
+    /// (journal replay to pool ready), recorded on the chaos track.
+    Recover,
 }
 
 impl SpanKind {
@@ -57,6 +67,9 @@ impl SpanKind {
             SpanKind::Fault => "fault",
             SpanKind::Prefetch => "prefetch",
             SpanKind::Recalibrate => "recalibrate",
+            SpanKind::Deadline => "deadline",
+            SpanKind::Trip => "trip",
+            SpanKind::Recover => "recover",
         }
     }
 
@@ -72,6 +85,9 @@ impl SpanKind {
             "fault" => SpanKind::Fault,
             "prefetch" => SpanKind::Prefetch,
             "recalibrate" => SpanKind::Recalibrate,
+            "deadline" => SpanKind::Deadline,
+            "trip" => SpanKind::Trip,
+            "recover" => SpanKind::Recover,
             _ => return None,
         })
     }
@@ -87,6 +103,9 @@ impl SpanKind {
             SpanKind::Fault => 6,
             SpanKind::Prefetch => 7,
             SpanKind::Recalibrate => 8,
+            SpanKind::Deadline => 9,
+            SpanKind::Trip => 10,
+            SpanKind::Recover => 11,
         }
     }
 
@@ -100,6 +119,9 @@ impl SpanKind {
             6 => SpanKind::Fault,
             7 => SpanKind::Prefetch,
             8 => SpanKind::Recalibrate,
+            9 => SpanKind::Deadline,
+            10 => SpanKind::Trip,
+            11 => SpanKind::Recover,
             _ => SpanKind::Response,
         }
     }
@@ -415,6 +437,9 @@ mod tests {
             SpanKind::Fault,
             SpanKind::Prefetch,
             SpanKind::Recalibrate,
+            SpanKind::Deadline,
+            SpanKind::Trip,
+            SpanKind::Recover,
         ] {
             assert_eq!(SpanKind::from_label(k.label()), Some(k));
             assert_eq!(SpanKind::from_code(k.code()), k);

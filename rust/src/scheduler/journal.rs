@@ -1,0 +1,423 @@
+//! Crash-recoverable control plane: an append-only, fsync-gated recovery
+//! journal (DESIGN.md §17).
+//!
+//! The journal is a plain-text write-ahead log of every control-plane
+//! decision a [`ServingPool`](super::pool::ServingPool) makes — tenant
+//! register/deregister, device kills, cost-model recalibrations — plus a
+//! fingerprint snapshot of each applied plan.  Replaying the log through
+//! the deterministic allocator reconstructs the exact pre-crash plan
+//! without re-profiling or re-solving anything beyond one allocator run,
+//! which is what lets `ServingPool::recover` warm-restart a pool whose
+//! controller died mid-flight.
+//!
+//! ## Record format
+//!
+//! One record per line, space-separated, hand-rolled like every other
+//! artifact in this repo (no serde).  Floats are written with Rust's
+//! round-trip `{:?}` formatting, so a load parses back the exact bits:
+//!
+//! ```text
+//! open 1
+//! register 1 fc_small fc_small 2.0 0.02 1.0
+//! kill 1 0
+//! plan 1 a1b2c3d4e5f60789
+//! open 2
+//! ```
+//!
+//! Every record is appended with [`File::sync_data`] before the caller's
+//! mutation is acknowledged — the fsync gate — so an acknowledged event
+//! is never lost to a crash.
+//!
+//! ## Generation fencing
+//!
+//! Each [`Journal::open`] scans the existing log, takes the highest
+//! `open` generation seen, and appends `open gen+1`: opening the journal
+//! *is* taking over the pool.  A handle stamps its generation on every
+//! record and, before each append, checks that the file still ends where
+//! its own last write left it.  A stale controller — one whose journal
+//! was re-opened by its successor — therefore fails its next append with
+//! a typed error instead of corrupting the log, and can never
+//! double-deploy: the recovered pool's plan fingerprint is checked
+//! against the journal's last snapshot before serving resumes.
+
+use std::fs::{File, OpenOptions};
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use anyhow::{Context, Result};
+
+/// One journaled control-plane event.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JournalEvent {
+    /// A tenant joined the pool.  `model` must resolve through
+    /// [`resolve_model`](super::registry::resolve_model) at replay time
+    /// (journaled pools register tenants by model name).
+    Register {
+        /// Registry/routing key.
+        name: String,
+        /// Resolvable model name (alias or parametric form).
+        model: String,
+        /// Scheduling weight.
+        weight: f64,
+        /// Optional p99 SLO in seconds.
+        slo_p99_s: Option<f64>,
+        /// Calibration scale on the profiled cost model.
+        cost_scale: f64,
+    },
+    /// A tenant left the pool.
+    Deregister { name: String },
+    /// A device was taken out of service.
+    Kill { device: usize },
+    /// A tenant's cost model was recalibrated.
+    Recalibrate { name: String, scale: f64 },
+    /// Fingerprint snapshot of the plan applied after the events so far.
+    PlanFingerprint { fingerprint: u64 },
+}
+
+/// FNV-1a over a deterministic rendering — the plan snapshot fingerprint.
+/// The allocator is deterministic, so a faithful WAL replay reproduces
+/// the exact assignment set and with it the exact fingerprint.
+pub fn fingerprint_str(s: &str) -> u64 {
+    let mut h = 0xcbf29ce484222325u64;
+    for b in s.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn fmt_f64(v: f64) -> String {
+    format!("{v:?}")
+}
+
+fn parse_f64(s: &str) -> Result<f64> {
+    s.parse::<f64>().with_context(|| format!("bad float {s:?} in journal"))
+}
+
+/// A token must survive space-separated round-tripping.
+fn check_token(kind: &str, tok: &str) -> Result<()> {
+    anyhow::ensure!(
+        !tok.is_empty() && !tok.contains(char::is_whitespace),
+        "journal {kind} {tok:?} must be a non-empty whitespace-free token"
+    );
+    Ok(())
+}
+
+fn encode(generation: u64, ev: &JournalEvent) -> Result<String> {
+    Ok(match ev {
+        JournalEvent::Register { name, model, weight, slo_p99_s, cost_scale } => {
+            check_token("tenant name", name)?;
+            check_token("model name", model)?;
+            let slo = match slo_p99_s {
+                Some(s) => fmt_f64(*s),
+                None => "-".to_string(),
+            };
+            format!(
+                "register {generation} {name} {model} {} {slo} {}",
+                fmt_f64(*weight),
+                fmt_f64(*cost_scale)
+            )
+        }
+        JournalEvent::Deregister { name } => {
+            check_token("tenant name", name)?;
+            format!("deregister {generation} {name}")
+        }
+        JournalEvent::Kill { device } => format!("kill {generation} {device}"),
+        JournalEvent::Recalibrate { name, scale } => {
+            check_token("tenant name", name)?;
+            format!("recalibrate {generation} {name} {}", fmt_f64(*scale))
+        }
+        JournalEvent::PlanFingerprint { fingerprint } => {
+            format!("plan {generation} {fingerprint:016x}")
+        }
+    })
+}
+
+/// `(generation, None)` for an `open` record, `(generation, Some(event))`
+/// otherwise.
+fn decode(line: &str) -> Result<(u64, Option<JournalEvent>)> {
+    let fields: Vec<&str> = line.split(' ').collect();
+    let bad = || anyhow::anyhow!("malformed journal record {line:?}");
+    let generation: u64 = fields.get(1).ok_or_else(bad)?.parse().map_err(|_| bad())?;
+    let ev = match fields[0] {
+        "open" => {
+            anyhow::ensure!(fields.len() == 2, bad());
+            None
+        }
+        "register" => {
+            anyhow::ensure!(fields.len() == 7, bad());
+            Some(JournalEvent::Register {
+                name: fields[2].to_string(),
+                model: fields[3].to_string(),
+                weight: parse_f64(fields[4])?,
+                slo_p99_s: if fields[5] == "-" { None } else { Some(parse_f64(fields[5])?) },
+                cost_scale: parse_f64(fields[6])?,
+            })
+        }
+        "deregister" => {
+            anyhow::ensure!(fields.len() == 3, bad());
+            Some(JournalEvent::Deregister { name: fields[2].to_string() })
+        }
+        "kill" => {
+            anyhow::ensure!(fields.len() == 3, bad());
+            Some(JournalEvent::Kill {
+                device: fields[2].parse().map_err(|_| bad())?,
+            })
+        }
+        "recalibrate" => {
+            anyhow::ensure!(fields.len() == 4, bad());
+            Some(JournalEvent::Recalibrate {
+                name: fields[2].to_string(),
+                scale: parse_f64(fields[3])?,
+            })
+        }
+        "plan" => {
+            anyhow::ensure!(fields.len() == 3, bad());
+            Some(JournalEvent::PlanFingerprint {
+                fingerprint: u64::from_str_radix(fields[2], 16).map_err(|_| bad())?,
+            })
+        }
+        _ => anyhow::bail!("unknown journal record kind in {line:?}"),
+    };
+    Ok((generation, ev))
+}
+
+/// The full readable state of a journal file.
+#[derive(Debug, Default)]
+pub struct JournalLog {
+    /// Highest `open` generation recorded (0 for an empty/missing file).
+    pub generation: u64,
+    /// Every event, in append order, across all generations — the WAL a
+    /// recovery replays.
+    pub events: Vec<JournalEvent>,
+}
+
+impl JournalLog {
+    /// The fingerprint of the last `plan` snapshot, if any.
+    pub fn last_fingerprint(&self) -> Option<u64> {
+        self.events.iter().rev().find_map(|e| match e {
+            JournalEvent::PlanFingerprint { fingerprint } => Some(*fingerprint),
+            _ => None,
+        })
+    }
+}
+
+/// An open (writing) handle on the recovery journal.  Creating one bumps
+/// the generation, fencing every earlier handle (see module docs).
+#[derive(Debug)]
+pub struct Journal {
+    path: PathBuf,
+    file: File,
+    generation: u64,
+    /// File length after our last acknowledged write: a longer file at
+    /// the next append means another controller took over.
+    expected_len: u64,
+}
+
+impl Journal {
+    /// Read a journal file without taking it over (missing file = empty
+    /// log at generation 0).
+    pub fn load(path: &Path) -> Result<JournalLog> {
+        let mut log = JournalLog::default();
+        let text = match std::fs::read_to_string(path) {
+            Ok(t) => t,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(log),
+            Err(e) => {
+                return Err(e).with_context(|| format!("reading journal {}", path.display()))
+            }
+        };
+        for line in text.lines() {
+            if line.is_empty() {
+                continue;
+            }
+            let (generation, ev) = decode(line)?;
+            match ev {
+                None => log.generation = log.generation.max(generation),
+                Some(ev) => log.events.push(ev),
+            }
+        }
+        Ok(log)
+    }
+
+    /// Open the journal for writing, becoming the current controller:
+    /// appends (fsync-gated) an `open` record one generation above the
+    /// highest on disk, which fences every older handle.
+    pub fn open(path: &Path) -> Result<Journal> {
+        let log = Self::load(path)?;
+        let generation = log.generation + 1;
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)
+                    .with_context(|| format!("creating journal dir {}", dir.display()))?;
+            }
+        }
+        let mut file = OpenOptions::new()
+            .create(true)
+            .append(true)
+            .open(path)
+            .with_context(|| format!("opening journal {}", path.display()))?;
+        writeln!(file, "open {generation}")?;
+        file.sync_data()?;
+        let expected_len = file.metadata()?.len();
+        Ok(Journal { path: path.to_path_buf(), file, generation, expected_len })
+    }
+
+    /// This handle's generation (the one stamped on its records).
+    pub fn generation(&self) -> u64 {
+        self.generation
+    }
+
+    /// Append one event, fsync-gated.  Fails with a typed error if a
+    /// newer controller has opened the journal since our last write — a
+    /// stale controller can never extend the log.
+    pub fn append(&mut self, ev: &JournalEvent) -> Result<()> {
+        let len = std::fs::metadata(&self.path)
+            .with_context(|| format!("statting journal {}", self.path.display()))?
+            .len();
+        anyhow::ensure!(
+            len == self.expected_len,
+            "stale controller write fenced: journal advanced past generation {}",
+            self.generation
+        );
+        let line = encode(self.generation, ev)?;
+        writeln!(self.file, "{line}")?;
+        self.file.sync_data()?;
+        self.expected_len = self.file.metadata()?.len();
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "repro-journal-{name}-{}",
+            std::process::id()
+        ));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("pool.journal")
+    }
+
+    fn sample_events() -> Vec<JournalEvent> {
+        vec![
+            JournalEvent::Register {
+                name: "fc_small".into(),
+                model: "fc_small".into(),
+                weight: 2.0,
+                slo_p99_s: Some(0.02),
+                cost_scale: 1.0,
+            },
+            JournalEvent::Register {
+                name: "conv_a".into(),
+                model: "conv_a".into(),
+                weight: 1.0,
+                slo_p99_s: None,
+                cost_scale: 1.0,
+            },
+            JournalEvent::Kill { device: 0 },
+            JournalEvent::Recalibrate { name: "fc_small".into(), scale: 1.7 },
+            JournalEvent::Deregister { name: "conv_a".into() },
+            JournalEvent::PlanFingerprint { fingerprint: 0xdead_beef_0badcafe },
+        ]
+    }
+
+    #[test]
+    fn events_round_trip_through_the_file() {
+        let path = tmp("roundtrip");
+        let mut j = Journal::open(&path).unwrap();
+        assert_eq!(j.generation(), 1);
+        for ev in sample_events() {
+            j.append(&ev).unwrap();
+        }
+        let log = Journal::load(&path).unwrap();
+        assert_eq!(log.generation, 1);
+        assert_eq!(log.events, sample_events());
+        assert_eq!(log.last_fingerprint(), Some(0xdead_beef_0badcafe));
+    }
+
+    #[test]
+    fn missing_file_is_an_empty_log() {
+        let path = tmp("missing");
+        let log = Journal::load(&path).unwrap();
+        assert_eq!(log.generation, 0);
+        assert!(log.events.is_empty());
+        assert_eq!(log.last_fingerprint(), None);
+    }
+
+    #[test]
+    fn reopen_bumps_the_generation_and_keeps_the_wal() {
+        let path = tmp("reopen");
+        let mut j1 = Journal::open(&path).unwrap();
+        j1.append(&JournalEvent::Kill { device: 2 }).unwrap();
+        drop(j1);
+        let mut j2 = Journal::open(&path).unwrap();
+        assert_eq!(j2.generation(), 2, "each takeover bumps the generation");
+        j2.append(&JournalEvent::Kill { device: 3 }).unwrap();
+        let log = Journal::load(&path).unwrap();
+        assert_eq!(log.generation, 2);
+        assert_eq!(
+            log.events,
+            vec![JournalEvent::Kill { device: 2 }, JournalEvent::Kill { device: 3 }],
+            "the WAL spans generations"
+        );
+    }
+
+    #[test]
+    fn stale_controller_append_is_fenced() {
+        let path = tmp("fence");
+        let mut stale = Journal::open(&path).unwrap();
+        stale.append(&JournalEvent::Kill { device: 0 }).unwrap();
+        // a successor takes over the journal...
+        let mut fresh = Journal::open(&path).unwrap();
+        assert_eq!(fresh.generation(), 2);
+        // ...so the stale handle's next write must be refused
+        let err = stale.append(&JournalEvent::Kill { device: 1 }).unwrap_err();
+        assert_eq!(
+            err.to_string(),
+            "stale controller write fenced: journal advanced past generation 1"
+        );
+        // the successor writes on unhindered
+        fresh.append(&JournalEvent::Kill { device: 1 }).unwrap();
+        let log = Journal::load(&path).unwrap();
+        assert_eq!(log.events.len(), 2, "the fenced write never landed");
+    }
+
+    #[test]
+    fn tokens_with_whitespace_are_rejected_at_append() {
+        let path = tmp("tokens");
+        let mut j = Journal::open(&path).unwrap();
+        let err = j
+            .append(&JournalEvent::Deregister { name: "two words".into() })
+            .unwrap_err();
+        assert!(err.to_string().contains("whitespace-free token"), "{err}");
+    }
+
+    #[test]
+    fn floats_round_trip_bit_exact() {
+        let path = tmp("floats");
+        let mut j = Journal::open(&path).unwrap();
+        let scale = 1.699_999_999_999_99;
+        j.append(&JournalEvent::Recalibrate { name: "t".into(), scale }).unwrap();
+        let log = Journal::load(&path).unwrap();
+        match &log.events[0] {
+            JournalEvent::Recalibrate { scale: got, .. } => {
+                assert_eq!(got.to_bits(), scale.to_bits(), "round-trip must be bit-exact");
+            }
+            other => panic!("wrong event {other:?}"),
+        }
+    }
+
+    #[test]
+    fn malformed_records_error_with_context() {
+        let path = tmp("malformed");
+        std::fs::write(&path, "open 1\nwat 1 2\n").unwrap();
+        let err = Journal::load(&path).unwrap_err();
+        assert!(err.to_string().contains("unknown journal record"), "{err}");
+        std::fs::write(&path, "register 1 a b notafloat - 1.0\n").unwrap();
+        let err = Journal::load(&path).unwrap_err();
+        assert!(err.to_string().contains("bad float"), "{err}");
+    }
+}

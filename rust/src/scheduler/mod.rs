@@ -47,6 +47,7 @@
 
 pub mod allocator;
 pub mod calibrate;
+pub mod journal;
 pub mod paramcache;
 pub mod pool;
 pub mod registry;
@@ -60,10 +61,11 @@ pub use calibrate::{
     calibration_csv, simulate_calibration, CalibrateConfig, CalibrateScenario, CalibrationRun,
     Calibrator, Recalibration,
 };
+pub use journal::{Journal, JournalEvent, JournalLog};
 pub use paramcache::{CacheEffect, ParamCache};
 pub use pool::{
-    spawn_calibration_ticker, Admission, CalibrationTicker, DeployOptions, ReplanReport,
-    ServingPool, TenantClient,
+    plan_fingerprint, replay_journal, spawn_calibration_ticker, Admission, CalibrationTicker,
+    DeadlineConfig, DeployOptions, ReplanReport, ServingPool, TenantClient,
 };
 #[allow(deprecated)]
 pub use pool::OpenOptions;

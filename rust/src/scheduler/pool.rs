@@ -50,16 +50,19 @@
 //! segmentation mid-run.
 
 use std::collections::{BTreeMap, BTreeSet};
+use std::path::{Path, PathBuf};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{Context, Result};
 
 use crate::config::SystemConfig;
 use crate::coordinator::batcher::{BatchPolicy, Batcher};
 use crate::coordinator::queue::{bounded, Receiver, SendError, Sender};
-use crate::coordinator::{Arena, DelayInjector, HedgeConfig, PipelineConfig, Request, Response};
+use crate::coordinator::{
+    Arena, BreakerConfig, DelayInjector, HedgeConfig, PipelineConfig, Request, Response,
+};
 use crate::metrics::{DataPlaneMetrics, SchedulerMetrics, TenantMetrics};
 use crate::workload::faults::shed_threshold;
 use crate::obs::span::{track_base, CACHE_TRACK};
@@ -68,8 +71,9 @@ use crate::runtime::Manifest;
 
 use super::allocator::{allocate, AllocatorConfig, Assignment, PoolPlan};
 use super::calibrate::{CalibrateConfig, Calibrator, Recalibration};
+use super::journal::{fingerprint_str, Journal, JournalEvent, JournalLog};
 use super::paramcache::CacheEffect;
-use super::registry::{ModelRegistry, Tenant};
+use super::registry::{resolve_model, ModelRegistry, Tenant};
 use super::router::{build_deployment, name_tenant_tracks, BackendKind, Deployment, TenantShape};
 
 /// Completion-queue capacity per tenant: bounds how many responses may sit
@@ -112,6 +116,19 @@ pub struct DeployOptions {
     /// [`ServingPool::calibrate_tick`] becomes a no-op and every output
     /// stays byte-identical to an uncalibrated pool.
     pub calibrate: Option<CalibrateConfig>,
+    /// Per-replica circuit breaker + stage watchdog for replicated
+    /// deployments (DESIGN.md §17).  `None` (the default) disables the
+    /// breaker; sharding and hedging behave exactly as before.
+    pub breaker: Option<BreakerConfig>,
+    /// SLO-derived deadlines for submitted requests (DESIGN.md §17).
+    /// `None` (the default) stamps nothing: only deadlines the caller
+    /// set explicitly via [`Request::with_deadline`] apply.
+    pub deadline: Option<DeadlineConfig>,
+    /// Path of the crash-recovery journal (DESIGN.md §17).  `None` (the
+    /// default) disables journaling; with a path set, every control-plane
+    /// mutation is fsync-journaled before it deploys, and
+    /// [`ServingPool::recover`] can warm-restart the pool from the file.
+    pub journal: Option<PathBuf>,
 }
 
 impl Default for DeployOptions {
@@ -122,13 +139,16 @@ impl Default for DeployOptions {
             tracer: None,
             hedge: None,
             calibrate: None,
+            breaker: None,
+            deadline: None,
+            journal: None,
         }
     }
 }
 
 impl DeployOptions {
     /// The defaults: pool batching policy, capacity 64, no tracing, no
-    /// hedging, no calibration.
+    /// hedging, no calibration, no breaker, no deadlines, no journal.
     pub fn new() -> Self {
         Self::default()
     }
@@ -163,6 +183,55 @@ impl DeployOptions {
         self.calibrate = Some(cfg);
         self
     }
+
+    /// Enable the per-replica circuit breaker + watchdog (DESIGN.md §17).
+    pub fn with_breaker(mut self, cfg: BreakerConfig) -> Self {
+        self.breaker = Some(cfg);
+        self
+    }
+
+    /// Derive request deadlines from tenant SLOs (DESIGN.md §17).
+    pub fn with_deadlines(mut self, cfg: DeadlineConfig) -> Self {
+        self.deadline = Some(cfg);
+        self
+    }
+
+    /// Journal every control-plane mutation to `path` (DESIGN.md §17).
+    pub fn with_journal(mut self, path: impl Into<PathBuf>) -> Self {
+        self.journal = Some(path.into());
+        self
+    }
+}
+
+/// How submitted requests get their deadline when the caller did not
+/// stamp one: `deadline = submit instant + slo_factor x tenant p99 SLO`.
+/// Tenants without an SLO stay deadline-free.  The factor leaves slack
+/// above the SLO itself — a request is only shed once it is *hopelessly*
+/// late, not merely at risk.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct DeadlineConfig {
+    /// Multiple of the tenant's `slo_p99_s` granted before expiry
+    /// (finite, at least 1).
+    pub slo_factor: f64,
+}
+
+impl Default for DeadlineConfig {
+    fn default() -> Self {
+        DeadlineConfig { slo_factor: 4.0 }
+    }
+}
+
+impl DeadlineConfig {
+    /// Reject factors that would expire requests at (or before) their
+    /// SLO, or never.
+    pub fn validate(&self) -> Result<()> {
+        anyhow::ensure!(
+            self.slo_factor.is_finite() && self.slo_factor >= 1.0,
+            "deadline slo factor must be finite and >= 1 (got {})",
+            self.slo_factor
+        );
+        Ok(())
+    }
 }
 
 /// Former name of [`DeployOptions`], kept as a migration shim.
@@ -179,6 +248,11 @@ pub enum Admission {
     Accepted,
     /// The request was turned away by tiered load shedding.
     Shed,
+    /// The request's deadline had already passed at submit time: it was
+    /// never enqueued, its id was pushed onto the tenant's
+    /// [`TenantClient::expired`] stream, and it counts toward the
+    /// tenant's `deadline_shed` metric.
+    Expired,
 }
 
 /// Outcome of one online re-plan.
@@ -234,6 +308,12 @@ pub struct TenantClient {
     pub shape: Arc<TenantShape>,
     /// The tenant's completion stream (cloneable receiver).
     pub done: Receiver<Response>,
+    /// Ids of requests whose deadline expired before they reached a TPU
+    /// (DESIGN.md §17).  Expired requests are *reported* here, never
+    /// silently dropped: every submitted id eventually shows up on
+    /// exactly one of `done` and `expired`.  Like `done`, the stream
+    /// persists across re-plans.
+    pub expired: Receiver<u64>,
     /// The tenant's serving counters (persist across re-plans).
     pub metrics: Arc<TenantMetrics>,
 }
@@ -263,11 +343,17 @@ impl TenantClient {
 /// Both ends of a tenant's persistent completion queue.
 type DoneChannel = (Sender<Response>, Receiver<Response>);
 
+/// Both ends of a tenant's persistent expired-id queue.
+type ExpiredChannel = (Sender<u64>, Receiver<u64>);
+
 struct PoolState {
     registry: ModelRegistry,
     live: BTreeMap<String, LiveTenant>,
     /// name -> (producer, consumer) of the persistent completion queue.
     done: BTreeMap<String, DoneChannel>,
+    /// name -> (producer, consumer) of the persistent expired-id queue:
+    /// where deadline-shed request ids surface (DESIGN.md §17).
+    expired: BTreeMap<String, ExpiredChannel>,
     /// Per-tenant counters, persistent across re-plans.
     tenant_metrics: BTreeMap<String, Arc<TenantMetrics>>,
     plan: Arc<PoolPlan>,
@@ -293,8 +379,76 @@ pub struct ServingPool {
     arena: Arena,
     data_plane: Arc<DataPlaneMetrics>,
     state: Mutex<PoolState>,
+    /// The open crash-recovery journal (`None` unless
+    /// [`DeployOptions::journal`] was set).  Separate from the state lock
+    /// so a slow fsync never blocks submits; mutations append *while
+    /// holding the state lock*, so journal order always matches apply
+    /// order.
+    journal: Mutex<Option<Journal>>,
     /// Pool-level admission/routing/re-plan counters.
     pub metrics: Arc<SchedulerMetrics>,
+}
+
+/// Deterministic fingerprint of a plan's assignment set: FNV-1a over the
+/// Debug rendering (f64 Debug is round-trip exact, the allocator is
+/// deterministic — so a faithful journal replay reproduces this exactly).
+pub fn plan_fingerprint(plan: &PoolPlan) -> u64 {
+    fingerprint_str(&format!("{:?}", plan.assignments))
+}
+
+/// Replay a recovery journal into the registry + dead-device set it
+/// describes — the pure half of [`ServingPool::recover`], shared with
+/// `repro recover` (which also renders the deterministic loadgen table
+/// from the recovered registry).
+pub fn replay_journal(log: &JournalLog) -> Result<(ModelRegistry, BTreeSet<usize>)> {
+    let mut registry = ModelRegistry::new();
+    let mut dead: BTreeSet<usize> = BTreeSet::new();
+    for ev in &log.events {
+        match ev {
+            JournalEvent::Register { name, model, weight, slo_p99_s, cost_scale } => {
+                let mut t = Tenant::new(name.clone(), resolve_model(model)?)
+                    .with_weight(*weight)
+                    .with_cost_scale(*cost_scale);
+                if let Some(s) = slo_p99_s {
+                    t = t.with_slo_p99_s(*s);
+                }
+                registry.register(t)?;
+            }
+            JournalEvent::Deregister { name } => {
+                registry.deregister(name)?;
+            }
+            JournalEvent::Kill { device } => {
+                dead.insert(*device);
+            }
+            JournalEvent::Recalibrate { name, scale } => {
+                registry
+                    .get_mut(name)
+                    .with_context(|| format!("journal recalibrates unknown tenant {name:?}"))?
+                    .cost_scale = *scale;
+            }
+            JournalEvent::PlanFingerprint { .. } => {}
+        }
+    }
+    Ok((registry, dead))
+}
+
+/// The journal record of one tenant registration.  Journaled pools
+/// register tenants by model *name*, so the model must resolve at replay
+/// time.
+fn register_event(t: &Tenant) -> Result<JournalEvent> {
+    anyhow::ensure!(
+        resolve_model(&t.model.name).is_ok(),
+        "journaled pools need resolvable model names (tenant {:?} has model {:?})",
+        t.name,
+        t.model.name
+    );
+    Ok(JournalEvent::Register {
+        name: t.name.clone(),
+        model: t.model.name.clone(),
+        weight: t.weight,
+        slo_p99_s: t.slo_p99_s,
+        cost_scale: t.cost_scale,
+    })
 }
 
 /// Per-tenant batcher worker: pull batches off the ingress queue under the
@@ -305,7 +459,9 @@ fn tenant_worker(
     deployment: Deployment,
     batcher: Batcher,
     done: Sender<Response>,
+    expired_tx: Sender<u64>,
     metrics: Arc<TenantMetrics>,
+    pool_metrics: Arc<SchedulerMetrics>,
     swap_s: f64,
     quantum_s: f64,
     cache: Option<CacheEffect>,
@@ -328,11 +484,47 @@ fn tenant_worker(
     // hedged-dispatch high-water mark: the router counts cumulatively,
     // the tenant metric wants per-batch deltas
     let mut hedged_seen = 0u64;
+    // breaker trip/probe high-water marks, same delta scheme
+    let mut trips_seen = 0u64;
+    let mut probes_seen = 0u64;
     while let Some((batch, kind)) = batcher.next_batch_with_reason() {
         metrics.record_batch(batch.len() as u64, batcher.queue_depth() as u64, kind);
         if let Some((sink, base)) = &obs {
             // flush instant on the tenant's batcher track
             sink.record(SpanKind::Flush, base + 1, batch_idx, sink.now_us(), 0);
+        }
+        // deadline shedding (DESIGN.md §17): drop expired requests *here*,
+        // after the flush but before the swap/serve path, so they never
+        // occupy a TPU quantum and never open a Stage span.  The whole
+        // check is gated on any deadline being present, keeping the
+        // deadline-free hot path allocation-free and byte-identical.
+        let mut batch = batch;
+        if batch.iter().any(|r| r.deadline.is_some()) {
+            let now = Instant::now();
+            let mut expired_ids: Vec<u64> = Vec::new();
+            batch.retain(|r| {
+                if r.expired_at(now) {
+                    expired_ids.push(r.id);
+                    false
+                } else {
+                    true
+                }
+            });
+            if !expired_ids.is_empty() {
+                metrics.record_deadline_shed(expired_ids.len() as u64);
+                if let Some((sink, base)) = &obs {
+                    for id in &expired_ids {
+                        // expiry instant on the tenant's request track
+                        sink.record(SpanKind::Deadline, *base, *id, sink.now_us(), 0);
+                    }
+                }
+                // surface the ids — shed requests are reported, not lost
+                let _ = expired_tx.send_many(expired_ids);
+                if batch.is_empty() {
+                    batch_idx += 1;
+                    continue;
+                }
+            }
         }
         let batch_swap_s = if swap_s > 0.0 {
             let now_s = started.elapsed().as_secs_f64();
@@ -418,6 +610,21 @@ fn tenant_worker(
             metrics.record_hedges(hedged - hedged_seen);
             hedged_seen = hedged;
         }
+        // breaker activity, same cumulative->delta scheme as hedges; each
+        // trip gets an instant marker on the chaos track
+        let trips = deployment.breaker_trips_total();
+        for t in trips_seen..trips {
+            pool_metrics.record_breaker_trip();
+            if let Some((sink, _base)) = &obs {
+                sink.record(SpanKind::Trip, CHAOS_TRACK, t, sink.now_us(), 0);
+            }
+        }
+        trips_seen = trips.max(trips_seen);
+        let probes = deployment.breaker_probes_total();
+        for _ in probes_seen..probes {
+            pool_metrics.record_breaker_probe();
+        }
+        probes_seen = probes.max(probes_seen);
         batch_idx += 1;
     }
     deployment.shutdown();
@@ -434,6 +641,59 @@ impl ServingPool {
         backend: BackendKind,
         opts: DeployOptions,
     ) -> Result<ServingPool> {
+        Self::deploy_inner(registry, system, alloc, backend, opts, BTreeSet::new(), None)
+    }
+
+    /// Warm-restart a pool from its recovery journal (DESIGN.md §17):
+    /// replay the WAL into a fresh registry + fault record, re-open the
+    /// journal (which bumps the generation, fencing the crashed
+    /// controller for good), deploy, and verify the recovered plan's
+    /// fingerprint against the journal's last snapshot — so a recovered
+    /// pool provably serves the exact pre-crash plan, or refuses to
+    /// serve at all.  `opts.journal` is overwritten with `journal_path`;
+    /// the other options should match the crashed deployment's.
+    pub fn recover(
+        system: SystemConfig,
+        alloc: AllocatorConfig,
+        backend: BackendKind,
+        opts: DeployOptions,
+        journal_path: &Path,
+    ) -> Result<ServingPool> {
+        let log = Journal::load(journal_path)?;
+        anyhow::ensure!(
+            log.generation > 0,
+            "no journal to recover from at {}",
+            journal_path.display()
+        );
+        let (registry, dead) = replay_journal(&log)?;
+        let mut opts = opts;
+        opts.journal = Some(journal_path.to_path_buf());
+        Self::deploy_inner(
+            registry,
+            system,
+            alloc,
+            backend,
+            opts,
+            dead,
+            Some(log.last_fingerprint()),
+        )
+    }
+
+    /// Shared tail of [`deploy`](ServingPool::deploy) and
+    /// [`recover`](ServingPool::recover).  `recovering` is `None` for a
+    /// fresh deploy (the journal, if any, is bootstrapped with the
+    /// registry) and `Some(expected fingerprint)` for a recovery (the
+    /// journal already holds the WAL; the recovered plan must match its
+    /// last snapshot).
+    fn deploy_inner(
+        registry: ModelRegistry,
+        system: SystemConfig,
+        alloc: AllocatorConfig,
+        backend: BackendKind,
+        opts: DeployOptions,
+        dead: BTreeSet<usize>,
+        recovering: Option<Option<u64>>,
+    ) -> Result<ServingPool> {
         let manifest = match &backend {
             BackendKind::Pjrt { artifact_dir } => {
                 Some(Manifest::load(&artifact_dir.join("manifest.json"))?)
@@ -443,6 +703,27 @@ impl ServingPool {
         if let Some(cfg) = &opts.calibrate {
             cfg.validate()?;
         }
+        if let Some(cfg) = &opts.deadline {
+            cfg.validate()?;
+        }
+        // opening the journal *is* becoming the controller: the
+        // generation bump fences whoever held it before (crashed or not)
+        let journal = match &opts.journal {
+            Some(path) => {
+                let mut j = Journal::open(path)?;
+                if recovering.is_none() {
+                    // fresh deploy: seed the WAL with the initial registry
+                    for t in registry.iter() {
+                        j.append(&register_event(t)?)?;
+                    }
+                    for d in &dead {
+                        j.append(&JournalEvent::Kill { device: *d })?;
+                    }
+                }
+                Some(j)
+            }
+            None => None,
+        };
         let calibrator = opts.calibrate.clone().map(Calibrator::new);
         let total_tpus = alloc.total_tpus;
         let allow_sharing = alloc.allow_sharing;
@@ -460,8 +741,9 @@ impl ServingPool {
                 registry,
                 live: BTreeMap::new(),
                 done: BTreeMap::new(),
+                expired: BTreeMap::new(),
                 tenant_metrics: BTreeMap::new(),
-                dead: BTreeSet::new(),
+                dead,
                 calibrator,
                 plan: Arc::new(PoolPlan {
                     total_tpus,
@@ -473,13 +755,49 @@ impl ServingPool {
                     cache_enabled,
                 }),
             }),
+            journal: Mutex::new(journal),
             metrics: Arc::new(SchedulerMetrics::default()),
         };
         {
             let mut st = pool.state.lock().unwrap();
             pool.apply_plan(&mut st)?;
+            if let Some(expected) = recovering {
+                let got = plan_fingerprint(&st.plan);
+                if let Some(expected) = expected {
+                    anyhow::ensure!(
+                        got == expected,
+                        "recovered plan diverges from journal snapshot \
+                         ({got:016x} != {expected:016x})"
+                    );
+                }
+                pool.metrics.record_recovery();
+                if let Some(t) = &pool.opts.tracer {
+                    t.name_track(CHAOS_TRACK, "chaos/faults".to_string());
+                    let sink = t.handle();
+                    let generation =
+                        pool.journal.lock().unwrap().as_ref().map_or(0, Journal::generation);
+                    sink.record(SpanKind::Recover, CHAOS_TRACK, generation, sink.now_us(), 0);
+                }
+            }
+            pool.journal_plan(&st)?;
         }
         Ok(pool)
+    }
+
+    /// Append one event to the journal, if one is open.  Called while the
+    /// caller holds the state lock, so journal order matches apply order.
+    fn journal_append(&self, ev: &JournalEvent) -> Result<()> {
+        if let Some(j) = self.journal.lock().unwrap().as_mut() {
+            j.append(ev)?;
+        }
+        Ok(())
+    }
+
+    /// Journal the fingerprint snapshot of the plan just applied.
+    fn journal_plan(&self, st: &PoolState) -> Result<()> {
+        self.journal_append(&JournalEvent::PlanFingerprint {
+            fingerprint: plan_fingerprint(&st.plan),
+        })
     }
 
     /// Re-run the allocator over the state's registry, drain deployments
@@ -567,12 +885,26 @@ impl ServingPool {
                 self.manifest.as_ref(),
                 &tenant_pipe,
                 self.opts.hedge.as_ref(),
+                self.opts.breaker.as_ref(),
             )?;
             built.deployment.wait_ready()?;
+            if self.opts.breaker.is_some() {
+                if let Some(t) = &self.opts.tracer {
+                    // breaker trips render on the chaos lane (named here,
+                    // once, so the worker only needs the sink handle)
+                    t.name_track(CHAOS_TRACK, "chaos/faults".to_string());
+                }
+            }
             let (ingress, ingress_rx) = bounded(self.opts.queue_capacity);
             let depth = ingress_rx.clone();
             let done_tx = st
                 .done
+                .entry(a.name.clone())
+                .or_insert_with(|| bounded(DONE_QUEUE_CAPACITY))
+                .0
+                .clone();
+            let expired_tx = st
+                .expired
                 .entry(a.name.clone())
                 .or_insert_with(|| bounded(DONE_QUEUE_CAPACITY))
                 .0
@@ -589,6 +921,7 @@ impl ServingPool {
                 Batcher::new(ingress_rx, self.opts.policy.for_slo(a.slo_p99_s));
             let deployment = built.deployment;
             let worker_metrics = metrics.clone();
+            let pool_metrics = self.metrics.clone();
             let swap_s = a.grant.switch_s();
             let quantum_s = a.grant.quantum_s();
             let cache = a.grant.cache();
@@ -598,7 +931,9 @@ impl ServingPool {
                     deployment,
                     batcher,
                     done_tx,
+                    expired_tx,
                     worker_metrics,
+                    pool_metrics,
                     swap_s,
                     quantum_s,
                     cache,
@@ -660,7 +995,7 @@ impl ServingPool {
     ) -> Result<Admission> {
         let mut request = request;
         loop {
-            let (ingress, depth, metrics) = {
+            let (ingress, depth, metrics, expired_tx, slo) = {
                 let st = self.state.lock().unwrap();
                 let lt = st.live.get(model).with_context(|| {
                     format!(
@@ -668,8 +1003,31 @@ impl ServingPool {
                         st.live.keys().collect::<Vec<_>>()
                     )
                 })?;
-                (lt.ingress.clone(), lt.depth.len(), lt.metrics.clone())
+                let expired_tx =
+                    st.expired.get(model).expect("live tenant has an expired channel").0.clone();
+                (
+                    lt.ingress.clone(),
+                    lt.depth.len(),
+                    lt.metrics.clone(),
+                    expired_tx,
+                    lt.assignment.slo_p99_s,
+                )
             };
+            // stamp the SLO-derived deadline once (a caller-set deadline,
+            // or one stamped before a re-plan retry, is kept)
+            if request.deadline.is_none() {
+                if let (Some(cfg), Some(slo)) = (&self.opts.deadline, slo) {
+                    request.deadline =
+                        Some(Instant::now() + Duration::from_secs_f64(cfg.slo_factor * slo));
+                }
+            }
+            if request.expired_at(Instant::now()) {
+                // already hopeless at the door: typed, accounted, and
+                // reported on the expired stream — never enqueued
+                metrics.record_deadline_shed(1);
+                let _ = expired_tx.send(request.id);
+                return Ok(Admission::Expired);
+            }
             if depth >= shed_threshold(tier, self.opts.queue_capacity) {
                 metrics.record_shed();
                 return Ok(Admission::Shed);
@@ -703,19 +1061,25 @@ impl ServingPool {
             self.alloc.total_tpus
         );
         let mut st = self.state.lock().unwrap();
-        if !st.dead.contains(&device) {
-            anyhow::ensure!(
-                st.dead.len() + 1 < self.alloc.total_tpus,
-                "killing device {device} would leave the pool with no live devices"
-            );
-            st.dead.insert(device);
+        if st.dead.contains(&device) {
+            // a repeated kill is an operator error, not a no-op: surface
+            // it typed and meter it, so runbooks notice the double-fire
+            self.metrics.record_kill_repeat();
+            anyhow::bail!("device {device} is already dead");
         }
+        anyhow::ensure!(
+            st.dead.len() + 1 < self.alloc.total_tpus,
+            "killing device {device} would leave the pool with no live devices"
+        );
+        st.dead.insert(device);
+        self.journal_append(&JournalEvent::Kill { device })?;
         let t0 = std::time::Instant::now();
         let obs = self.opts.tracer.as_ref().map(|t| {
             t.name_track(CHAOS_TRACK, "chaos/faults".to_string());
             t.handle()
         });
         let drained = self.apply_plan(&mut st)?;
+        self.journal_plan(&st)?;
         self.metrics.record_device_kill();
         self.metrics.record_replan(drained);
         if let Some(sink) = obs {
@@ -775,9 +1139,14 @@ impl ServingPool {
         for f in &fired {
             if let Some(t) = st.registry.get_mut(&f.tenant) {
                 t.cost_scale = f.scale;
+                self.journal_append(&JournalEvent::Recalibrate {
+                    name: f.tenant.clone(),
+                    scale: f.scale,
+                })?;
             }
         }
         let drained = self.apply_plan(st)?;
+        self.journal_plan(st)?;
         self.metrics.record_replan(drained);
         self.metrics.record_replan_calibration(fired.len() as u64);
         if let Some(tracer) = self.opts.tracer.as_ref() {
@@ -814,7 +1183,9 @@ impl ServingPool {
             .get_mut(name)
             .with_context(|| format!("model {name:?} not registered"))?
             .cost_scale = scale;
+        self.journal_append(&JournalEvent::Recalibrate { name: name.to_string(), scale })?;
         let drained = self.apply_plan(&mut st)?;
+        self.journal_plan(&st)?;
         self.metrics.record_replan(drained);
         self.metrics.record_replan_calibration(1);
         Ok(ReplanReport::of(&st.plan, drained))
@@ -865,10 +1236,13 @@ impl ServingPool {
             .get(model)
             .with_context(|| format!("model {model:?} has no live deployment"))?;
         let done = st.done.get(model).expect("live tenant has a done channel").1.clone();
+        let expired =
+            st.expired.get(model).expect("live tenant has an expired channel").1.clone();
         Ok(TenantClient {
             name: model.to_string(),
             shape: lt.shape.clone(),
             done,
+            expired,
             metrics: lt.metrics.clone(),
         })
     }
@@ -878,8 +1252,20 @@ impl ServingPool {
     /// are drained (in-flight requests complete) and redeployed.
     pub fn register(&self, tenant: Tenant) -> Result<ReplanReport> {
         let mut st = self.state.lock().unwrap();
+        // only journaled pools need a resolvable model name — check (and
+        // encode) before mutating, so a bad tenant changes nothing
+        let ev = match self.journal.lock().unwrap().is_some() {
+            true => Some(register_event(&tenant)?),
+            false => None,
+        };
         st.registry.register(tenant)?;
+        // write-ahead: the event lands (fsynced) before the deployment
+        // changes, so a crash in between recovers to the post-event plan
+        if let Some(ev) = &ev {
+            self.journal_append(ev)?;
+        }
         let drained = self.apply_plan(&mut st)?;
+        self.journal_plan(&st)?;
         self.metrics.record_replan(drained);
         Ok(ReplanReport::of(&st.plan, drained))
     }
@@ -890,10 +1276,15 @@ impl ServingPool {
     pub fn deregister(&self, name: &str) -> Result<ReplanReport> {
         let mut st = self.state.lock().unwrap();
         st.registry.deregister(name)?;
+        self.journal_append(&JournalEvent::Deregister { name: name.to_string() })?;
         let drained = self.apply_plan(&mut st)?;
+        self.journal_plan(&st)?;
         // the drain above already flushed every accepted request's
         // response into the completion queue; now end the stream
         if let Some((tx, _rx)) = st.done.remove(name) {
+            tx.close();
+        }
+        if let Some((tx, _rx)) = st.expired.remove(name) {
             tx.close();
         }
         st.tenant_metrics.remove(name);
@@ -936,6 +1327,9 @@ impl ServingPool {
             }
         }
         for (_name, (tx, _rx)) in st.done {
+            tx.close();
+        }
+        for (_name, (tx, _rx)) in st.expired {
             tx.close();
         }
     }
@@ -1222,7 +1616,7 @@ mod tests {
         }
         assert_eq!(got, 12, "deregister must not drop in-flight requests");
         // submitting to the gone tenant errors; the survivor still serves
-        assert!(p.submit("fc_small", Request { id: 0, data: vec![0; 4] }).is_err());
+        assert!(p.submit("fc_small", Request::new(0, vec![0; 4])).is_err());
         run_and_verify(&p, "conv_a", 8, 4);
         p.shutdown();
     }
@@ -1325,7 +1719,7 @@ mod tests {
         run_and_verify(&p, admitted, 6, 22);
         let queued: &str =
             if admitted == "fc_small" { "conv_a" } else { "fc_small" };
-        assert!(p.submit(queued, Request { id: 0, data: vec![0; 4] }).is_err());
+        assert!(p.submit(queued, Request::new(0, vec![0; 4])).is_err());
         p.shutdown();
     }
 
@@ -1369,6 +1763,7 @@ mod tests {
             match p.submit_with_priority("fc_small", r2, 2).unwrap() {
                 Admission::Accepted => accepted.push(id2),
                 Admission::Shed => shed += 1,
+                Admission::Expired => unreachable!("no deadlines in this test"),
             }
         }
         assert!(shed >= 1, "tier 2 must shed under a saturated queue");
@@ -1521,6 +1916,303 @@ mod tests {
         let s = p.metrics.snapshot();
         assert_eq!(s.replans, 0, "{s:?}");
         assert_eq!(s.replans_calibration, 0);
+        p.shutdown();
+    }
+
+    #[test]
+    fn repeated_kill_is_a_typed_error_and_metered() {
+        let p = pool(&["fc_small"], 3);
+        p.kill_device(0).unwrap();
+        let err = p.kill_device(0).unwrap_err().to_string();
+        assert_eq!(err, "device 0 is already dead");
+        assert_eq!(p.metrics.snapshot().kill_repeats, 1);
+        // the repeat changed nothing: fault record intact, pool serving
+        assert_eq!(p.dead_devices(), vec![0]);
+        assert_eq!(p.metrics.snapshot().device_kills, 1);
+        run_and_verify(&p, "fc_small", 8, 33);
+        // an out-of-range kill is a different error, not a "repeat"
+        assert!(p.kill_device(9).is_err());
+        assert_eq!(p.metrics.snapshot().kill_repeats, 1);
+        p.shutdown();
+    }
+
+    #[test]
+    fn expired_at_submit_is_typed_reported_and_never_served() {
+        let p = pool(&["fc_small"], 1);
+        let client = p.client("fc_small").unwrap();
+        let mut reqs = client.synth_requests(4, 17);
+        // a deadline of "now" is already expired by the admission check
+        let past = Instant::now();
+        let mut expired_ids = Vec::new();
+        for r in reqs.drain(..2) {
+            expired_ids.push(r.id);
+            let adm =
+                p.submit_with_priority("fc_small", r.with_deadline(past), 0).unwrap();
+            assert_eq!(adm, Admission::Expired);
+        }
+        // generous deadlines sail through untouched
+        let future = Instant::now() + Duration::from_secs(60);
+        for r in reqs {
+            assert_eq!(
+                p.submit_with_priority("fc_small", r.with_deadline(future), 0).unwrap(),
+                Admission::Accepted
+            );
+        }
+        for _ in 0..2 {
+            let r = client.done.recv().expect("stream closed early");
+            assert!(!expired_ids.contains(&r.id), "an expired request was served");
+        }
+        // the expired ids surfaced on the typed stream, in submit order
+        for id in &expired_ids {
+            assert_eq!(client.expired.recv(), Some(*id));
+        }
+        let s = client.metrics.snapshot();
+        assert_eq!(s.deadline_shed, 2);
+        assert_eq!(s.submitted, 2, "expired-at-submit is not an accepted submission");
+        assert_eq!(s.completed, 2);
+        p.shutdown();
+    }
+
+    #[test]
+    fn queued_expiry_sheds_before_the_tpu_and_opens_no_stage_span() {
+        // the batcher is told to wait 150 ms for a fuller batch while
+        // every request expires at 20 ms: the whole batch must be shed at
+        // the flush — before the swap/serve path — so the TPU never runs,
+        // no slab is ever packed, and the trace shows Deadline markers
+        // but not a single Stage/Response/Swap span
+        let tracer = Arc::new(Tracer::new());
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        let p = ServingPool::deploy(
+            reg,
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: 1, ..Default::default() },
+            BackendKind::Synthetic,
+            DeployOptions::new()
+                .with_policy(BatchPolicy {
+                    max_batch: 1000,
+                    max_wait: Duration::from_millis(150),
+                })
+                .with_tracer(tracer.clone()),
+        )
+        .unwrap();
+        let client = p.client("fc_small").unwrap();
+        let deadline = Instant::now() + Duration::from_millis(20);
+        for r in client.synth_requests(10, 23) {
+            assert_eq!(
+                p.submit_with_priority("fc_small", r.with_deadline(deadline), 0).unwrap(),
+                Admission::Accepted
+            );
+        }
+        let mut ids: Vec<u64> = (0..10)
+            .map(|_| client.expired.recv().expect("expired stream closed early"))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..10).collect::<Vec<u64>>(), "every id must be reported");
+        let s = client.metrics.snapshot();
+        assert_eq!(s.deadline_shed, 10);
+        assert_eq!(s.submitted, 10);
+        assert_eq!(s.completed, 0);
+        // provably no leak: a shed batch never packs an arena slab at all
+        let dp = p.data_plane().snapshot();
+        assert_eq!(dp.slab_allocs, 0, "shed batches must never touch the arena: {dp:?}");
+        p.shutdown();
+        let (events, _dropped) = tracer.drain();
+        assert!(
+            events.iter().any(|e| matches!(e.kind, SpanKind::Deadline)),
+            "expiries must be visible in the trace"
+        );
+        assert!(
+            !events
+                .iter()
+                .any(|e| matches!(e.kind, SpanKind::Stage | SpanKind::Response | SpanKind::Swap)),
+            "an expired batch must never reach a TPU stage"
+        );
+    }
+
+    #[test]
+    fn pool_breaker_trips_on_straggler_and_keeps_serving() {
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        let p = ServingPool::deploy(
+            reg,
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: 3, ..Default::default() },
+            BackendKind::Synthetic,
+            DeployOptions::new().with_breaker(BreakerConfig {
+                watchdog: Duration::from_millis(30),
+                trip_after: 1,
+                cooldown: Duration::from_secs(600),
+            }),
+        )
+        .unwrap();
+        assert_eq!(p.plan().assignment("fc_small").unwrap().replicas, 3);
+        p.inject_straggler("fc_small", 0, Duration::from_millis(100)).unwrap();
+        run_and_verify(&p, "fc_small", 30, 44); // replica 0 breaches its watchdog
+        run_and_verify(&p, "fc_small", 30, 45); // ...and later shards route around it
+        // responses ship before the worker books the trip delta; let it settle
+        std::thread::sleep(Duration::from_millis(50));
+        let s = p.metrics.snapshot();
+        assert!(s.breaker_trips >= 1, "straggling replica must trip its breaker: {s:?}");
+        // run_and_verify proved every response bit-exact: quarantining a
+        // replica loses nothing
+        assert_eq!(p.tenant_metrics("fc_small").unwrap().snapshot().completed, 60);
+        p.shutdown();
+    }
+
+    fn journal_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir()
+            .join(format!("repro-pool-{name}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn recover_rebuilds_the_exact_precrash_plan_from_the_journal() {
+        let path = journal_dir("recover").join("pool.journal");
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        let alloc = AllocatorConfig { total_tpus: 3, ..Default::default() };
+        let p = ServingPool::deploy(
+            reg,
+            SystemConfig::default(),
+            alloc.clone(),
+            BackendKind::Synthetic,
+            DeployOptions::new().with_journal(&path),
+        )
+        .unwrap();
+        run_and_verify(&p, "fc_small", 10, 81);
+        // a busy control-plane life: register, recalibrate, kill
+        p.register(
+            Tenant::new("conv_a", resolve_model("conv_a").unwrap())
+                .with_weight(2.0)
+                .with_slo_p99_s(0.05),
+        )
+        .unwrap();
+        p.recalibrate_tenant("fc_small", 1.3).unwrap();
+        p.kill_device(0).unwrap();
+        let before = format!("{:?}", p.plan().assignments);
+        p.shutdown(); // crash stand-in: append-only journals need no clean close
+        let p2 = ServingPool::recover(
+            SystemConfig::default(),
+            alloc,
+            BackendKind::Synthetic,
+            DeployOptions::new(),
+            &path,
+        )
+        .unwrap();
+        assert_eq!(
+            format!("{:?}", p2.plan().assignments),
+            before,
+            "recovery must restore the exact pre-crash plan"
+        );
+        assert_eq!(p2.dead_devices(), vec![0], "the fault record must survive the crash");
+        assert_eq!(p2.metrics.snapshot().recoveries, 1);
+        run_and_verify(&p2, "fc_small", 10, 82);
+        run_and_verify(&p2, "conv_a", 10, 83);
+        p2.shutdown();
+    }
+
+    #[test]
+    fn recovery_fences_the_stale_controller() {
+        let path = journal_dir("fence").join("pool.journal");
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        let alloc = AllocatorConfig { total_tpus: 2, ..Default::default() };
+        let p = ServingPool::deploy(
+            reg,
+            SystemConfig::default(),
+            alloc.clone(),
+            BackendKind::Synthetic,
+            DeployOptions::new().with_journal(&path),
+        )
+        .unwrap();
+        // a successor recovers from the same journal while the original
+        // controller still lives — the original is now stale
+        let p2 = ServingPool::recover(
+            SystemConfig::default(),
+            alloc,
+            BackendKind::Synthetic,
+            DeployOptions::new(),
+            &path,
+        )
+        .unwrap();
+        let err = p.recalibrate_tenant("fc_small", 1.5).unwrap_err().to_string();
+        assert!(err.contains("stale controller write fenced"), "{err}");
+        // the successor mutates (and journals) freely: no double-deploy
+        p2.recalibrate_tenant("fc_small", 1.5).unwrap();
+        run_and_verify(&p2, "fc_small", 8, 84);
+        p.shutdown();
+        p2.shutdown();
+    }
+
+    #[test]
+    fn recover_without_a_journal_is_a_typed_error() {
+        let path = journal_dir("missing").join("pool.journal");
+        let err = ServingPool::recover(
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: 1, ..Default::default() },
+            BackendKind::Synthetic,
+            DeployOptions::new(),
+            &path,
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("no journal to recover from"), "{err}");
+    }
+
+    #[test]
+    fn deadline_config_validation_pins_messages() {
+        for bad in [0.0, 0.5, -1.0, f64::NAN, f64::INFINITY] {
+            let err = DeadlineConfig { slo_factor: bad }.validate().unwrap_err().to_string();
+            assert!(
+                err.contains("deadline slo factor must be finite and >= 1"),
+                "{err}"
+            );
+        }
+        DeadlineConfig::default().validate().unwrap();
+        // deploy refuses a bad factor up front
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        let err = ServingPool::deploy(
+            reg,
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: 1, ..Default::default() },
+            BackendKind::Synthetic,
+            DeployOptions::new().with_deadlines(DeadlineConfig { slo_factor: 0.0 }),
+        )
+        .unwrap_err()
+        .to_string();
+        assert!(err.contains("deadline slo factor"), "{err}");
+    }
+
+    #[test]
+    fn slo_derived_deadlines_stamp_only_slo_tenants() {
+        // one tenant with an SLO, one without, deadlines on: only the SLO
+        // tenant's requests get stamped — and a generous factor means
+        // nothing expires under light traffic
+        let mut reg = ModelRegistry::new();
+        reg.register_named("fc_small").unwrap();
+        reg.register(
+            Tenant::new("slo", resolve_model("conv_a").unwrap()).with_slo_p99_s(30.0),
+        )
+        .unwrap();
+        let p = ServingPool::deploy(
+            reg,
+            SystemConfig::default(),
+            AllocatorConfig { total_tpus: 2, ..Default::default() },
+            BackendKind::Synthetic,
+            DeployOptions::new().with_deadlines(DeadlineConfig::default()),
+        )
+        .unwrap();
+        run_and_verify(&p, "fc_small", 10, 86);
+        run_and_verify(&p, "slo", 10, 87);
+        for name in ["fc_small", "slo"] {
+            let s = p.tenant_metrics(name).unwrap().snapshot();
+            assert_eq!(s.deadline_shed, 0, "{name}: generous deadlines must not shed");
+            assert_eq!(s.completed, 10, "{name}");
+        }
         p.shutdown();
     }
 

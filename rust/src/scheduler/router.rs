@@ -34,8 +34,8 @@ use anyhow::{Context, Result};
 
 use crate::config::SystemConfig;
 use crate::coordinator::{
-    Arena, DelayInjector, HedgeConfig, Pipeline, PipelineConfig, ReplicaRouter, Request,
-    Response, StageBackend, StageFactory,
+    Arena, BreakerConfig, DelayInjector, HedgeConfig, Pipeline, PipelineConfig,
+    ReplicaRouter, Request, Response, StageBackend, StageFactory,
 };
 use crate::metrics::{DataPlaneMetrics, SchedulerMetrics, TenantMetrics};
 use crate::model::Model;
@@ -255,7 +255,7 @@ impl TenantShape {
     /// Deterministic random request batch shaped for this tenant.
     pub fn synth_requests(&self, n: usize, seed: u64) -> Vec<Request> {
         let mut rng = Rng::new(seed ^ self.salt);
-        (0..n as u64).map(|id| Request { id, data: rng.i8_vec(self.in_elems) }).collect()
+        (0..n as u64).map(|id| Request::new(id, rng.i8_vec(self.in_elems))).collect()
     }
 
     /// The serial reference output for one request (synthetic backend).
@@ -307,6 +307,23 @@ impl Deployment {
             Deployment::Replicated(r) => r.hedged_total(),
         }
     }
+
+    /// Circuit-breaker trips so far (0 for a single-pipeline deployment,
+    /// which has no replica set to quarantine within).
+    pub(crate) fn breaker_trips_total(&self) -> u64 {
+        match self {
+            Deployment::Single(_) => 0,
+            Deployment::Replicated(r) => r.breaker_trips_total(),
+        }
+    }
+
+    /// HalfOpen probe grants so far (0 for a single-pipeline deployment).
+    pub(crate) fn breaker_probes_total(&self) -> u64 {
+        match self {
+            Deployment::Single(_) => 0,
+            Deployment::Replicated(r) => r.breaker_probes_total(),
+        }
+    }
 }
 
 /// A freshly spawned deployment plus the shared shape/verification info
@@ -333,7 +350,15 @@ pub(crate) fn build_deployment(
     manifest: Option<&Manifest>,
     pipe: &PipelineConfig,
     hedge: Option<&HedgeConfig>,
+    breaker: Option<&BreakerConfig>,
 ) -> Result<BuiltTenant> {
+    // reject nonsensical policies before any pipeline thread spawns
+    if let Some(h) = hedge {
+        h.validate()?;
+    }
+    if let Some(b) = breaker {
+        b.validate()?;
+    }
     let tenant = registry.get(&a.name)?;
     let model = &tenant.model;
     let partition = &a.candidate.partition;
@@ -383,6 +408,9 @@ pub(crate) fn build_deployment(
         let mut router = ReplicaRouter::new(pipelines);
         if let Some(h) = hedge {
             router = router.with_hedging(h.clone());
+        }
+        if let Some(b) = breaker {
+            router = router.with_breaker(*b);
         }
         let injector = Some(router.injector());
         Ok(BuiltTenant { deployment: Deployment::Replicated(router), shape, injector })
@@ -543,6 +571,7 @@ impl PoolRouter {
                 manifest.as_ref(),
                 &tenant_pipe,
                 opts.hedge.as_ref(),
+                opts.breaker.as_ref(),
             )?;
             tenants.insert(
                 a.name.clone(),

@@ -225,7 +225,7 @@ pub fn synth_requests(plan: &ServePlan, batch: usize, seed: u64) -> Vec<Request>
     let elems: usize = plan.input_shape.iter().product();
     let mut rng = Rng::new(seed);
     (0..batch as u64)
-        .map(|id| Request { id, data: rng.i8_vec(elems) })
+        .map(|id| Request::new(id, rng.i8_vec(elems)))
         .collect()
 }
 

@@ -60,15 +60,27 @@ pub enum FaultKind {
         /// Window length in seconds.
         duration_s: f64,
     },
+    /// The control plane crashes and warm-restarts from its recovery
+    /// journal after `outage_s` seconds (DESIGN.md §17).  During the
+    /// outage no new submission is admitted (the ingress is gone — they
+    /// are turned away, counted as shed) and dispatch pauses: every
+    /// surviving replica resumes, on the *same* plan, once the restart
+    /// completes.
+    CrashRestart {
+        /// Control-plane downtime in seconds.
+        outage_s: f64,
+    },
 }
 
 impl FaultKind {
-    /// Stable label for tables / CSV (`kill` / `straggler` / `overload`).
+    /// Stable label for tables / CSV
+    /// (`kill` / `straggler` / `overload` / `crash`).
     pub fn label(&self) -> &'static str {
         match self {
             FaultKind::DeviceKill { .. } => "kill",
             FaultKind::Straggler { .. } => "straggler",
             FaultKind::OverloadSpike { .. } => "overload",
+            FaultKind::CrashRestart { .. } => "crash",
         }
     }
 
@@ -78,6 +90,7 @@ impl FaultKind {
             FaultKind::DeviceKill { .. } => 0,
             FaultKind::Straggler { .. } => 1,
             FaultKind::OverloadSpike { .. } => 2,
+            FaultKind::CrashRestart { .. } => 3,
         }
     }
 }
@@ -101,11 +114,16 @@ pub struct FaultSpec {
     pub stragglers: usize,
     /// Overload spikes to schedule.
     pub overloads: usize,
+    /// Control-plane crash/restart drills to schedule (DESIGN.md §17).
+    /// Defaults to 0, and crash draws come *after* every other kind, so
+    /// crash-free plans are byte-identical to plans generated before the
+    /// kind existed.
+    pub crashes: usize,
 }
 
 impl Default for FaultSpec {
     fn default() -> Self {
-        FaultSpec { horizon_s: 1.0, kills: 1, stragglers: 1, overloads: 1 }
+        FaultSpec { horizon_s: 1.0, kills: 1, stragglers: 1, overloads: 1, crashes: 0 }
     }
 }
 
@@ -153,6 +171,13 @@ impl FaultPlan {
             let duration_s = rng.f64_range(0.05, 0.2) * h;
             events.push(FaultEvent { t_s, kind: FaultKind::OverloadSpike { rate_mult, duration_s } });
         }
+        // crashes draw LAST: a crash-free spec consumes exactly the same
+        // PRNG stream as before the kind existed (seeded goldens hold)
+        for _ in 0..spec.crashes {
+            let t_s = rng.f64_range(0.3, 0.7) * h;
+            let outage_s = rng.f64_range(0.05, 0.15) * h;
+            events.push(FaultEvent { t_s, kind: FaultKind::CrashRestart { outage_s } });
+        }
         events.sort_by(|a, b| {
             a.t_s
                 .partial_cmp(&b.t_s)
@@ -162,7 +187,8 @@ impl FaultPlan {
         FaultPlan { seed, events }
     }
 
-    /// Count of events of the given label (`kill`/`straggler`/`overload`).
+    /// Count of events of the given label
+    /// (`kill`/`straggler`/`overload`/`crash`).
     pub fn count(&self, label: &str) -> usize {
         self.events.iter().filter(|e| e.kind.label() == label).count()
     }
@@ -179,11 +205,17 @@ pub struct ChaosConfig {
     pub drain_s: f64,
     /// When false, stragglers slow requests down but nothing hedges.
     pub hedge: bool,
+    /// Relative deadline per request: a request whose dispatch would start
+    /// more than this many seconds after its arrival expires instead of
+    /// occupying a server — the sim analogue of the live pool's
+    /// flush-time deadline shed (DESIGN.md §17).  `None` (the default)
+    /// disables expiry and keeps deadline-free runs byte-identical.
+    pub deadline_s: Option<f64>,
 }
 
 impl Default for ChaosConfig {
     fn default() -> Self {
-        ChaosConfig { queue_capacity: 64, drain_s: 2e-3, hedge: true }
+        ChaosConfig { queue_capacity: 64, drain_s: 2e-3, hedge: true, deadline_s: None }
     }
 }
 
@@ -209,25 +241,34 @@ pub fn shed_threshold(tier: u8, queue_capacity: usize) -> usize {
 }
 
 /// Outcome of one [`simulate_chaos`] run.  `submitted == admitted + shed`
-/// and `completed == admitted` always hold: shed requests are counted,
-/// admitted requests are never lost — the accounting invariant the live
-/// chaos smoke enforces bit-exactly.
+/// and `completed == admitted - expired` always hold — equivalently
+/// `submitted == completed + shed + expired`: every offered request gets
+/// exactly one verdict (served, turned away, or expired), none is lost
+/// silently — the accounting invariant the live chaos smoke enforces
+/// bit-exactly.  Without deadlines `expired == 0` and the pre-§17
+/// `completed == admitted` form still holds.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ChaosRun {
     /// Total requests offered (base schedule + overload extras).
     pub submitted: usize,
     /// Requests past admission.
     pub admitted: usize,
-    /// Requests turned away by tiered shedding.
+    /// Requests turned away — by tiered shedding, or at the door while
+    /// the control plane was down during a crash outage.
     pub shed: usize,
-    /// Requests completed (== admitted).
+    /// Requests completed (== admitted - expired).
     pub completed: usize,
+    /// Admitted requests that expired past their deadline before their
+    /// dispatch could start (0 unless [`ChaosConfig::deadline_s`] is set).
+    pub expired: usize,
     /// Dispatches replayed onto survivors after a device kill.
     pub replayed: usize,
     /// Requests duplicated onto a healthy replica by hedged dispatch.
     pub hedged: usize,
     /// Device kills that actually removed a replica.
     pub kills: usize,
+    /// Control-plane crash/restart cycles the run survived.
+    pub recoveries: usize,
     /// Final per-request latency (offered instant to completion, across
     /// any kill replays), ordered by request id.
     pub latencies_s: Vec<f64>,
@@ -364,6 +405,9 @@ pub fn simulate_chaos(
     let mut finished: Vec<(usize, f64, f64)> = Vec::new();
     let mut replays: VecDeque<Item> = VecDeque::new();
     let (mut shed, mut replayed, mut hedged, mut kills) = (0usize, 0usize, 0usize, 0usize);
+    let (mut expired, mut recoveries) = (0usize, 0usize);
+    // control plane down until this instant (crash/restart outages)
+    let mut down_until = f64::NEG_INFINITY;
     let mut rr = 0usize; // round-robin cursor over live replicas
     let mut makespan = 0.0f64;
     let mut cursor = 0usize;
@@ -420,6 +464,19 @@ pub fn simulate_chaos(
                     replicas[r].slow_factor = factor;
                 }
                 FaultKind::OverloadSpike { .. } => {} // folded into arrivals
+                FaultKind::CrashRestart { outage_s } => {
+                    // controller crash: the ingress is gone for the outage
+                    // (arrivals in the window are turned away below) and
+                    // the workers are torn down — dispatch resumes on the
+                    // journal-recovered plan once the restart completes
+                    down_until = down_until.max(ev.t_s + outage_s);
+                    recoveries += 1;
+                    for r in replicas.iter_mut() {
+                        if r.alive {
+                            r.free_t = r.free_t.max(down_until);
+                        }
+                    }
+                }
             }
             continue;
         }
@@ -434,6 +491,12 @@ pub fn simulate_chaos(
             (None, None) => break,
         };
 
+        // crash outage: the ingress is down, arrivals are turned away at
+        // the door (replays were admitted before the crash and survive it)
+        if !item.replay && item.t_s < down_until {
+            shed += 1;
+            continue;
+        }
         // tiered admission: backlog = admitted work not yet complete
         if !item.replay {
             let depth = ledgers
@@ -455,6 +518,15 @@ pub fn simulate_chaos(
         rr += 1;
 
         let start_p = item.t_s.max(replicas[primary].free_t);
+        // deadline check at the moment dispatch would start — the sim
+        // analogue of the flush-time shed: an expired request never
+        // occupies a server, it is counted and dropped (typed, not silent)
+        if let Some(d) = cfg.deadline_s {
+            if start_p - item.arrival_s > d {
+                expired += 1;
+                continue;
+            }
+        }
         let slow_p = replicas[primary].slowdown(start_p);
         let hedge = cfg.hedge && slow_p > 1.0 && live.len() > 1;
         let (winner, done) = if hedge {
@@ -504,7 +576,11 @@ pub fn simulate_chaos(
     }
     samples.sort_by(|a, b| a.0.cmp(&b.0));
     let admitted = submitted - shed;
-    debug_assert_eq!(samples.len(), admitted, "one final completion per admitted id");
+    debug_assert_eq!(
+        samples.len() + expired,
+        admitted,
+        "every admitted id either completes or expires"
+    );
     let latencies_s: Vec<f64> = samples.iter().map(|&(_, a, d)| d - a).collect();
 
     ChaosRun {
@@ -512,9 +588,11 @@ pub fn simulate_chaos(
         admitted,
         shed,
         completed: samples.len(),
+        expired,
         replayed,
         hedged,
         kills,
+        recoveries,
         latencies_s,
         makespan_s: makespan,
     }
@@ -541,7 +619,7 @@ mod tests {
 
     #[test]
     fn plan_is_seed_deterministic_and_sorted() {
-        let spec = FaultSpec { horizon_s: 2.0, kills: 3, stragglers: 3, overloads: 3 };
+        let spec = FaultSpec { horizon_s: 2.0, kills: 3, stragglers: 3, overloads: 3, crashes: 0 };
         let a = FaultPlan::generate(7, &spec, 4, 2);
         let b = FaultPlan::generate(7, &spec, 4, 2);
         assert_eq!(a, b, "same seed must give the identical plan");
@@ -561,7 +639,7 @@ mod tests {
 
     #[test]
     fn plan_skips_infeasible_faults() {
-        let spec = FaultSpec { horizon_s: 1.0, kills: 2, stragglers: 2, overloads: 1 };
+        let spec = FaultSpec { horizon_s: 1.0, kills: 2, stragglers: 2, overloads: 1, crashes: 0 };
         let p = FaultPlan::generate(3, &spec, 0, 0);
         assert_eq!(p.count("kill"), 0, "no devices, no kills");
         assert_eq!(p.count("straggler"), 0, "no replicas, no stragglers");
@@ -570,7 +648,7 @@ mod tests {
 
     #[test]
     fn chaos_sim_is_bit_deterministic() {
-        let spec = FaultSpec { horizon_s: 0.5, kills: 1, stragglers: 1, overloads: 1 };
+        let spec = FaultSpec { horizon_s: 0.5, kills: 1, stragglers: 1, overloads: 1, crashes: 0 };
         let plan = FaultPlan::generate(7, &spec, 4, 3);
         let d = dep(3);
         let cfg = ChaosConfig::default();
@@ -585,11 +663,18 @@ mod tests {
     #[test]
     fn accounting_never_loses_admitted_work() {
         for seed in [1u64, 7, 42, 1234] {
-            let spec = FaultSpec { horizon_s: 0.5, kills: 2, stragglers: 1, overloads: 2 };
+            let spec = FaultSpec { horizon_s: 0.5, kills: 2, stragglers: 1, overloads: 2, crashes: 1 };
             let plan = FaultPlan::generate(seed, &spec, 4, 2);
             let run = simulate_chaos(&dep(2), &arr(), 250, seed, &plan, &ChaosConfig::default());
             assert_eq!(run.submitted, run.admitted + run.shed, "seed {seed}: {run:?}");
             assert_eq!(run.completed, run.admitted, "seed {seed}: admitted work must finish");
+            assert_eq!(
+                run.submitted,
+                run.completed + run.shed + run.expired,
+                "seed {seed}: every offered request needs a verdict: {run:?}"
+            );
+            assert_eq!(run.expired, 0, "seed {seed}: no deadlines, no expiry");
+            assert_eq!(run.recoveries, plan.count("crash"), "seed {seed}: {run:?}");
             assert_eq!(run.latencies_s.len(), run.completed, "seed {seed}");
             assert!(run.latencies_s.iter().all(|&l| l > 0.0), "seed {seed}");
         }
@@ -675,6 +760,109 @@ mod tests {
         assert!(run.shed > 0, "an 8-deep queue under a 6x spike must shed: {run:?}");
         assert_eq!(run.submitted, run.admitted + run.shed);
         assert_eq!(run.completed, run.admitted, "shed is accounted, admitted completes");
+    }
+
+    #[test]
+    fn crash_free_plans_keep_their_prng_stream() {
+        // crash draws come last, so asking for crashes must not perturb
+        // the kills/stragglers/overloads any seed generated before the
+        // kind existed — seeded golden schedules stay byte-identical
+        let base = FaultSpec { horizon_s: 1.5, kills: 2, stragglers: 2, overloads: 2, crashes: 0 };
+        let with = FaultSpec { crashes: 2, ..base };
+        let a = FaultPlan::generate(7, &base, 4, 3);
+        let b = FaultPlan::generate(7, &with, 4, 3);
+        assert_eq!(b.count("crash"), 2);
+        let b_sans_crash: Vec<FaultEvent> =
+            b.events.iter().copied().filter(|e| e.kind.label() != "crash").collect();
+        assert_eq!(a.events, b_sans_crash, "crash draws must ride after the legacy stream");
+        for e in &b.events {
+            if let FaultKind::CrashRestart { outage_s } = e.kind {
+                assert!(e.t_s >= 0.3 * 1.5 && e.t_s < 0.7 * 1.5, "{e:?}");
+                assert!(outage_s > 0.0, "{e:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn crash_outage_sheds_at_the_door_and_recovery_resumes() {
+        // a controller crash mid-run: arrivals during the outage are
+        // turned away (counted, never lost), drained state survives, and
+        // the recovered pool serves everything admitted afterwards
+        let plan = FaultPlan {
+            seed: 0,
+            events: vec![FaultEvent {
+                t_s: 0.05,
+                kind: FaultKind::CrashRestart { outage_s: 0.1 },
+            }],
+        };
+        let cfg = ChaosConfig::default();
+        let run = simulate_chaos(&dep(2), &arr(), 300, 13, &plan, &cfg);
+        assert_eq!(run.recoveries, 1, "{run:?}");
+        assert!(run.shed > 0, "a 100 ms outage under 900 Hz must turn arrivals away: {run:?}");
+        assert_eq!(run.submitted, run.completed + run.shed + run.expired, "{run:?}");
+        assert_eq!(run.completed, run.admitted, "no deadlines: admitted work must finish");
+        let quiet = FaultPlan { seed: 0, events: Vec::new() };
+        let baseline = simulate_chaos(&dep(2), &arr(), 300, 13, &quiet, &cfg);
+        assert!(
+            run.completed < baseline.completed,
+            "the outage must cost throughput: {} vs {}",
+            run.completed,
+            baseline.completed
+        );
+        // byte-reproducible per seed — the smoke-drill contract
+        let again = simulate_chaos(&dep(2), &arr(), 300, 13, &plan, &cfg);
+        assert_eq!(run, again, "crash/restart runs must be bit-deterministic");
+    }
+
+    #[test]
+    fn deadline_expiry_is_monotone_and_accounted() {
+        // tighter deadlines shed more at the flush point, never fewer —
+        // and the verdict accounting stays exact at every setting
+        let quiet = FaultPlan { seed: 0, events: Vec::new() };
+        let overload = Arrivals::Poisson { rate_hz: 2000.0 };
+        // queue deep enough that tiered shedding never engages: expiry is
+        // the only loss channel under test
+        let base = ChaosConfig { queue_capacity: 1_000_000, ..ChaosConfig::default() };
+        let run_with = |deadline_s: Option<f64>| {
+            simulate_chaos(&dep(1), &overload, 400, 17, &quiet, &ChaosConfig {
+                deadline_s,
+                ..base
+            })
+        };
+        let unbounded = run_with(None);
+        assert_eq!(unbounded.expired, 0);
+        let generous = run_with(Some(10.0));
+        assert_eq!(generous.expired, 0, "a 10 s deadline never binds here");
+        assert_eq!(
+            generous.latencies_s, unbounded.latencies_s,
+            "an unbinding deadline must not perturb the run"
+        );
+        let mut last_expired = 0usize;
+        for d in [0.2, 0.05, 0.01] {
+            let run = run_with(Some(d));
+            assert_eq!(run.shed, 0, "deadline {d}: queue never fills: {run:?}");
+            assert_eq!(
+                run.submitted,
+                run.completed + run.shed + run.expired,
+                "deadline {d}: {run:?}"
+            );
+            assert_eq!(
+                run.completed,
+                run.admitted - run.expired,
+                "deadline {d}: never fewer completions than admitted - expired: {run:?}"
+            );
+            assert!(
+                run.expired >= last_expired,
+                "deadline {d}: tighter deadlines must never expire less ({} < {last_expired})",
+                run.expired
+            );
+            assert!(
+                run.latencies_s.iter().all(|&l| l <= d + 1e-9 + 2.6e-3),
+                "deadline {d}: a served request waited past its deadline"
+            );
+            last_expired = run.expired;
+        }
+        assert!(last_expired > 0, "a 10 ms deadline under 2.4x overload must expire work");
     }
 
     #[test]

@@ -192,6 +192,7 @@ fn shedding_turns_low_tiers_away_before_the_backlog_breaches() {
                 assert_ne!(tier, 0, "tier 0 must never be shed");
                 shed_by_tier[tier as usize] += 1;
             }
+            Admission::Expired => unreachable!("no deadlines in this test"),
         }
     }
     let shed: u64 = shed_by_tier.iter().sum();

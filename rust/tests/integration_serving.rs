@@ -75,7 +75,7 @@ fn conv_model_serves_correctly() {
     let plan = serving::plan(entry, 4, Strategy::Uniform, &cfg).unwrap();
     let pipeline = serving::spawn_pipeline(&dir, entry, &plan, 8).unwrap();
     // golden input through the pipeline equals the golden output
-    let req = vec![Request { id: 0, data: entry.golden.input.clone() }];
+    let req = vec![Request::new(0, entry.golden.input.clone())];
     let resp = pipeline.serve_batch(req).unwrap();
     assert_eq!(resp[0].data, entry.golden.output);
     pipeline.shutdown();
